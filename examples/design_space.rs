@@ -1,0 +1,117 @@
+//! Design-space exploration: the knobs a deployer would actually sweep.
+//!
+//! * duplication area budget (Fig. 10's axis, extended),
+//! * crossbar group size (64 default; what if crossbars were 32 or 128
+//!   rows tall?),
+//! * dynamic-switch ADC read-path width (3-bit default),
+//! * bus channel count (the peripheral bandwidth wall).
+//!
+//! ```bash
+//! cargo run --release --example design_space
+//! ```
+
+use recross::config::Config;
+use recross::engine::{Engine, Scheme};
+use recross::graph::CoGraph;
+use recross::workload::{generate, DatasetSpec};
+use recross::xbar::CircuitParams;
+
+fn main() {
+    let spec = DatasetSpec::by_name("automotive").unwrap().scaled(0.1);
+    let (history, eval) = generate(&spec, 4_000, 512, 42);
+    let graph = CoGraph::build(&history);
+    let base_cfg = Config::paper_default();
+
+    let naive = Engine::prepare(Scheme::Naive, &graph, &history, &base_cfg);
+    let base = naive.run_trace(&eval, base_cfg.scheme.batch_size);
+    println!(
+        "baseline (naive): {:.1} µs, {:.1} nJ on automotive@0.1\n",
+        base.completion_ns / 1e3,
+        base.energy_pj / 1e3
+    );
+
+    // --- sweep 1: duplication budget ---------------------------------------
+    println!("== duplication budget (Fig. 10 extended) ==");
+    println!("{:>8} {:>10} {:>10} {:>8}", "dup%", "speedup", "energy-eff", "xbars");
+    for ratio in [0.0, 0.025, 0.05, 0.10, 0.20, 0.40] {
+        let mut cfg = base_cfg.clone();
+        cfg.scheme.dup_ratio = ratio;
+        let e = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let s = e.run_trace(&eval, cfg.scheme.batch_size);
+        println!(
+            "{:>7.1}% {:>9.2}x {:>9.2}x {:>8}",
+            ratio * 100.0,
+            base.completion_ns / s.completion_ns,
+            base.energy_pj / s.energy_pj,
+            e.physical_crossbars()
+        );
+    }
+
+    // --- sweep 2: group size (crossbar height) ------------------------------
+    println!("\n== crossbar group size ==");
+    println!("{:>8} {:>12} {:>10} {:>10}", "rows", "activations", "speedup", "energy-eff");
+    for rows in [16usize, 32, 64, 128] {
+        let mut cfg = base_cfg.clone();
+        cfg.hardware.xbar_rows = rows;
+        cfg.scheme.group_size = rows;
+        let e = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let nv = Engine::prepare(Scheme::Naive, &graph, &history, &cfg);
+        let s = e.run_trace(&eval, cfg.scheme.batch_size);
+        let b = nv.run_trace(&eval, cfg.scheme.batch_size);
+        println!(
+            "{:>8} {:>12} {:>9.2}x {:>9.2}x",
+            rows,
+            s.activations,
+            b.completion_ns / s.completion_ns,
+            b.energy_pj / s.energy_pj
+        );
+    }
+
+    // --- sweep 3: read-path resolution --------------------------------------
+    println!("\n== dynamic-switch read-path width (energy of full ReCross) ==");
+    println!("{:>8} {:>12} {:>14}", "bits", "energy nJ", "vs 6-bit MAC");
+    let mut cfg = base_cfg.clone();
+    cfg.hardware.dynamic_switch = false;
+    let no_switch = Engine::prepare(Scheme::ReCrossNoSwitch, &graph, &history, &cfg)
+        .run_trace(&eval, cfg.scheme.batch_size);
+    for bits in [1u32, 2, 3, 4, 6] {
+        let mut cfg = base_cfg.clone();
+        cfg.hardware.read_mode_bits = bits;
+        let e = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let s = e.run_trace(&eval, cfg.scheme.batch_size);
+        println!(
+            "{:>8} {:>12.1} {:>13.2}x",
+            bits,
+            s.energy_pj / 1e3,
+            no_switch.energy_pj / s.energy_pj
+        );
+    }
+
+    // --- sweep 4: bus channels ----------------------------------------------
+    println!("\n== global bus channels (completion time, full ReCross) ==");
+    println!("{:>8} {:>12} {:>10}", "chans", "time µs", "speedup");
+    for chans in [1usize, 4, 16, 64] {
+        let mut cfg = base_cfg.clone();
+        cfg.hardware.bus_channels = chans;
+        let e = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let nv = Engine::prepare(Scheme::Naive, &graph, &history, &cfg);
+        let s = e.run_trace(&eval, cfg.scheme.batch_size);
+        let b = nv.run_trace(&eval, cfg.scheme.batch_size);
+        println!(
+            "{:>8} {:>12.1} {:>9.2}x",
+            chans,
+            s.completion_ns / 1e3,
+            b.completion_ns / s.completion_ns
+        );
+    }
+
+    let params = CircuitParams::default();
+    println!(
+        "\n(cost model: MAC {} ns / read {} ns array settle, {} comparators full vs {} gated)",
+        params.array_mac_ns,
+        params.array_read_ns,
+        63,
+        7
+    );
+    println!("\ndesign_space example OK");
+}

@@ -1,0 +1,100 @@
+//! Quickstart: the whole ReCross pipeline in ~60 lines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Generate a synthetic Amazon-like workload (Table I's "software").
+//! 2. Offline phase: co-occurrence graph → Algorithm 1 grouping → Eq. 1
+//!    duplication.
+//! 3. Online phase: simulate a batch on the crossbar pool and compare
+//!    against the naive baseline.
+//! 4. If AOT artifacts are present, run one real embedding reduction
+//!    through the PJRT runtime and check it against the reference.
+
+use recross::config::Config;
+use recross::coordinator;
+use recross::engine::{Engine, Scheme};
+use recross::graph::CoGraph;
+use recross::workload::{generate, DatasetSpec, Query};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. workload -----------------------------------------------------
+    let mut cfg = Config::paper_default();
+    cfg.workload.history_queries = 2_000;
+    cfg.workload.eval_queries = 512;
+    let spec = DatasetSpec::by_name("software").unwrap().scaled(0.25);
+    let (history, eval) = generate(
+        &spec,
+        cfg.workload.history_queries,
+        cfg.workload.eval_queries,
+        42,
+    );
+    println!(
+        "workload: {} embeddings, {} history / {} eval queries, {:.1} lookups/query",
+        spec.num_embeddings,
+        history.queries.len(),
+        eval.queries.len(),
+        eval.mean_lookups()
+    );
+
+    // --- 2. offline phase ------------------------------------------------
+    let graph = CoGraph::build(&history);
+    println!(
+        "co-occurrence graph: {} nodes, {} edges",
+        graph.num_nodes(),
+        graph.num_edges()
+    );
+    let recross = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+    let naive = Engine::prepare(Scheme::Naive, &graph, &history, &cfg);
+    println!(
+        "mapping: {} groups, {} physical crossbars after Eq. 1 duplication",
+        recross.mapping().num_groups(),
+        recross.physical_crossbars()
+    );
+
+    // --- 3. online phase (circuit simulation) -----------------------------
+    let s_re = recross.run_trace(&eval, cfg.scheme.batch_size);
+    let s_nv = naive.run_trace(&eval, cfg.scheme.batch_size);
+    println!("\ncircuit simulation over the eval trace:");
+    println!(
+        "  naive  : {:>10.1} µs, {:>8.1} nJ, {} activations",
+        s_nv.completion_ns / 1e3,
+        s_nv.energy_pj / 1e3,
+        s_nv.activations
+    );
+    println!(
+        "  recross: {:>10.1} µs, {:>8.1} nJ, {} activations ({} in read mode)",
+        s_re.completion_ns / 1e3,
+        s_re.energy_pj / 1e3,
+        s_re.activations,
+        s_re.read_activations
+    );
+    println!(
+        "  -> {:.2}x faster, {:.2}x more energy-efficient",
+        s_nv.completion_ns / s_re.completion_ns,
+        s_nv.energy_pj / s_re.energy_pj
+    );
+
+    // --- 4. real numerics through PJRT ------------------------------------
+    if recross::runtime::artifacts_available(&cfg.artifacts_dir) {
+        let mut pipeline = coordinator::build_pipeline(&cfg, Scheme::ReCross, 0.25)?;
+        let q = Query::new(eval.queries[0].items.clone());
+        let got = pipeline.reduce_query(&q)?;
+        let expect = pipeline.store().reduce_reference(&q.items);
+        let max_err = got
+            .iter()
+            .zip(&expect)
+            .map(|(g, e)| (g - e).abs())
+            .fold(0.0f32, f32::max);
+        println!(
+            "\nPJRT check: reduced a {}-lookup query through the crossbar artifact, max |err| = {max_err:.2e}",
+            q.len()
+        );
+        assert!(max_err < 1e-3);
+    } else {
+        println!("\n(artifacts missing — run `make artifacts` to exercise the PJRT path)");
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

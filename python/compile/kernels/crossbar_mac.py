@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: crossbar-tiled embedding reduction.
+
+The kernel mirrors the ReRAM dataflow exactly (DESIGN.md
+§Hardware-Adaptation): the grid iterates over (batch, crossbar-tile); each
+grid step applies one query's multi-hot wordline vector to one 64xD
+crossbar tile — `mask @ tile` is the column-wise bitline current sum — and
+accumulates the partial result into the query's output row, which is what
+the digital partial-sum merger does across crossbars.
+
+BlockSpec = crossbar geometry:
+  * one `tiles` block is one crossbar array (R x D cells) resident in VMEM,
+  * one `masks` block is one query's wordline vector for that crossbar,
+  * the output block is the query's D-wide accumulator, revisited across
+    the T grid steps (accumulation in place).
+
+VMEM footprint per grid step (defaults R=64, D=16, f32):
+  tile 64x16x4 B = 4 KiB + mask 64x4 B + acc 16x4 B ≈ 4.3 KiB — far below
+  the ~16 MiB VMEM of a TPU core, leaving headroom for double-buffering
+  the HBM->VMEM tile stream. The contraction is a 1x64 @ 64xD product per
+  step; on a real TPU the batch dimension would be widened to feed the
+  128x128 MXU (see DESIGN.md §Perf for the estimate).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO with identical numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(mask_ref, tile_ref, out_ref):
+    """One grid step: accumulate mask @ tile into the output row.
+
+    Shapes (leading singleton dims are the blocked batch/tile axes):
+      mask_ref: [1, 1, R]  — wordline activations of query b on tile t
+      tile_ref: [1, R, D]  — crossbar contents of tile t
+      out_ref:  [1, D]     — accumulator for query b
+    """
+    t = pl.program_id(1)
+
+    mask = mask_ref[0, 0, :]          # [R]
+    tile = tile_ref[0, :, :]          # [R, D]
+    # Bitline current sum: 1xR @ RxD. dot keeps it on the MXU path.
+    partial = jnp.dot(mask[None, :], tile)[0]  # [D]
+
+    # First visit to this output block initialises, later visits accumulate.
+    @pl.when(t == 0)
+    def _init():
+        out_ref[0, :] = partial
+
+    @pl.when(t != 0)
+    def _accum():
+        out_ref[0, :] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def crossbar_reduce(masks, tiles, *, interpret=True):
+    """Crossbar-tiled embedding reduction.
+
+    Args:
+      masks: [B, T, R] float32 multi-hot wordline activations.
+      tiles: [T, R, D] float32 crossbar contents.
+      interpret: lower in interpret mode (required on CPU PJRT).
+
+    Returns:
+      [B, D] float32 reduced embeddings, == ref.crossbar_reduce_ref.
+    """
+    b, t, r = masks.shape
+    t2, r2, d = tiles.shape
+    assert (t, r) == (t2, r2), f"masks {masks.shape} vs tiles {tiles.shape}"
+    masks = masks.astype(jnp.float32)
+    tiles = tiles.astype(jnp.float32)
+
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=(b, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, r), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, r, d), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=interpret,
+    )(masks, tiles)

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: fused two-layer ReLU MLP.
+
+The DLRM bottom/top MLPs are small (dozens of units), so the whole layer
+pair fits in VMEM at once; the win is fusing `x@w1+b1 -> relu -> @w2+b2`
+into a single kernel so the intermediate activation never round-trips
+through HBM. The grid tiles the batch dimension only.
+
+VMEM per grid step (defaults: block_b=32, dims <= 64, f32): inputs
+32x64 + both weight matrices 64x64 + hidden 32x64 + out 32x64 ≈ 50 KiB.
+
+interpret=True for CPU-PJRT execution, as everywhere in this repo.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    """One batch tile through both layers, fused in VMEM."""
+    x = x_ref[...]                      # [Bb, F]
+    h = jnp.dot(x, w1_ref[...]) + b1_ref[...]   # [Bb, H]
+    h = jnp.maximum(h, 0.0)
+    out_ref[...] = jnp.dot(h, w2_ref[...]) + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def mlp(x, w1, b1, w2, b2, *, block_b=32, interpret=True):
+    """Fused relu(x @ w1 + b1) @ w2 + b2.
+
+    Args:
+      x:  [B, F] float32 inputs. B must be divisible by block_b (the
+          callers pad batches to the AOT batch size anyway).
+      w1: [F, H]; b1: [H]; w2: [H, O]; b2: [O].
+      block_b: batch rows per grid step.
+
+    Returns:
+      [B, O] float32, == ref.mlp_ref.
+    """
+    b, f = x.shape
+    f2, h = w1.shape
+    h2, o = w2.shape
+    assert f == f2 and h == h2, f"shape mismatch: {x.shape} {w1.shape} {w2.shape}"
+    assert b1.shape == (h,) and b2.shape == (o,)
+    block_b = min(block_b, b)
+    assert b % block_b == 0, f"batch {b} not divisible by block {block_b}"
+
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, o), lambda i: (0, 0)),
+            pl.BlockSpec((o,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, o), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), w1, b1, w2, b2)

@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are tested against (pytest +
+hypothesis). They are deliberately written in the most obvious way —
+no tiling, no fusion — so a bug in the kernel cannot be mirrored here.
+"""
+
+import jax.numpy as jnp
+
+
+def crossbar_reduce_ref(masks, tiles):
+    """Crossbar-tiled embedding reduction, the analog MAC's numerics.
+
+    Args:
+      masks: [B, T, R] multi-hot wordline activations (0/1), float or int.
+      tiles: [T, R, D] crossbar contents (R embeddings of dim D per tile).
+
+    Returns:
+      [B, D] — for each query b: sum over tiles t of masks[b,t] @ tiles[t],
+      i.e. the summed bitline currents of every activated crossbar.
+    """
+    masks = masks.astype(tiles.dtype)
+    # einsum is the single-line spec of the whole reduction.
+    return jnp.einsum("btr,trd->bd", masks, tiles)
+
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """Two-layer ReLU MLP: relu(x @ w1 + b1) @ w2 + b2."""
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return h @ w2 + b2
+
+
+def dlrm_forward_ref(dense, masks, tiles, params):
+    """Reference DLRM forward pass (mirrors model.dlrm_forward).
+
+    Args:
+      dense: [B, F_dense] dense features.
+      masks: [B, T, R] wordline activations.
+      tiles: [T, R, D] embedding crossbar contents.
+      params: dict with bottom/top MLP weights (see model.init_params).
+
+    Returns:
+      [B, 1] click logits.
+    """
+    bottom = mlp_ref(dense, params["w_bot1"], params["b_bot1"],
+                     params["w_bot2"], params["b_bot2"])
+    reduced = crossbar_reduce_ref(masks, tiles)
+    inter = jnp.concatenate([bottom, reduced, bottom * reduced], axis=-1)
+    return mlp_ref(inter, params["w_top1"], params["b_top1"],
+                   params["w_top2"], params["b_top2"])

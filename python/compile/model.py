@@ -1,0 +1,119 @@
+"""L2: DLRM forward pass in JAX, calling the L1 Pallas kernels.
+
+Architecture (Fig. 1a of the paper):
+
+    dense features --[bottom MLP]--+
+                                   +--[feature interaction]--[top MLP]--> logit
+    sparse lookups --[embedding    |
+                      reduction]---+
+
+The embedding reduction runs through the crossbar-tiled Pallas kernel
+(`kernels.crossbar_mac.crossbar_reduce`), so the AOT-lowered HLO contains
+the exact dataflow the rust coordinator schedules: the coordinator decides
+*which* crossbars to activate (masks) and the kernel computes the summed
+bitline currents.
+
+This module is build-time only: `aot.py` lowers `dlrm_forward` to HLO text
+once, and the rust runtime executes the artifact. Python never serves a
+request.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.crossbar_mac import crossbar_reduce
+from .kernels.mlp import mlp
+
+# Model dimensions (kept in sync with rust/src/runtime — see
+# artifacts/manifest.toml written by aot.py).
+DENSE_FEATURES = 13   # dense-feature width (Criteo-style)
+EMBED_DIM = 16        # features per embedding (Table I geometry: 16x8bit)
+BOTTOM_HIDDEN = 64
+TOP_HIDDEN = 64
+XBAR_ROWS = 64        # wordlines per crossbar tile
+
+
+def init_params(key, dense_features=DENSE_FEATURES, embed_dim=EMBED_DIM,
+                bottom_hidden=BOTTOM_HIDDEN, top_hidden=TOP_HIDDEN):
+    """He-initialised MLP weights as a flat dict of jnp arrays."""
+    ks = jax.random.split(key, 4)
+    inter_dim = 3 * embed_dim  # [bottom, reduced, bottom*reduced]
+
+    def he(k, shape):
+        fan_in = shape[0]
+        return jax.random.normal(k, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+    return {
+        "w_bot1": he(ks[0], (dense_features, bottom_hidden)),
+        "b_bot1": jnp.zeros((bottom_hidden,), jnp.float32),
+        "w_bot2": he(ks[1], (bottom_hidden, embed_dim)),
+        "b_bot2": jnp.zeros((embed_dim,), jnp.float32),
+        "w_top1": he(ks[2], (inter_dim, top_hidden)),
+        "b_top1": jnp.zeros((top_hidden,), jnp.float32),
+        "w_top2": he(ks[3], (top_hidden, 1)),
+        "b_top2": jnp.zeros((1,), jnp.float32),
+    }
+
+
+# Parameter order for the flattened AOT signature (rust passes weights as
+# positional literals; a stable order is part of the artifact ABI).
+PARAM_ORDER = (
+    "w_bot1", "b_bot1", "w_bot2", "b_bot2",
+    "w_top1", "b_top1", "w_top2", "b_top2",
+)
+
+
+def params_to_args(params):
+    """Flatten a param dict to the positional ABI tuple."""
+    return tuple(params[name] for name in PARAM_ORDER)
+
+
+def dlrm_forward(dense, masks, tiles, *params_flat, interpret=True):
+    """DLRM forward pass.
+
+    Args:
+      dense: [B, DENSE_FEATURES] float32 dense features.
+      masks: [B, T, XBAR_ROWS] float32 multi-hot wordline activations —
+        the rust coordinator's crossbar schedule for each query.
+      tiles: [T, XBAR_ROWS, EMBED_DIM] float32 crossbar contents.
+      *params_flat: MLP weights in PARAM_ORDER.
+
+    Returns:
+      [B, 1] float32 click logits.
+    """
+    p = dict(zip(PARAM_ORDER, params_flat))
+    bottom = mlp(dense, p["w_bot1"], p["b_bot1"], p["w_bot2"], p["b_bot2"],
+                 interpret=interpret)                       # [B, E]
+    reduced = crossbar_reduce(masks, tiles, interpret=interpret)  # [B, E]
+    inter = jnp.concatenate([bottom, reduced, bottom * reduced], axis=-1)
+    return mlp(inter, p["w_top1"], p["b_top1"], p["w_top2"], p["b_top2"],
+               interpret=interpret)                         # [B, 1]
+
+
+def dlrm_head(dense, reduced, *params_flat, interpret=True):
+    """DLRM head: bottom MLP + interaction + top MLP over a pre-reduced
+    embedding vector (the serving-path split — the rust coordinator
+    computes `reduced` through the crossbar artifact, then batches heads).
+
+    Args:
+      dense: [B, DENSE_FEATURES] float32.
+      reduced: [B, EMBED_DIM] float32 reduced embeddings.
+      *params_flat: MLP weights in PARAM_ORDER.
+
+    Returns:
+      [B, 1] float32 click logits. dlrm_forward == dlrm_head on the output
+      of embedding_reduce (tested in tests/test_model.py).
+    """
+    p = dict(zip(PARAM_ORDER, params_flat))
+    bottom = mlp(dense, p["w_bot1"], p["b_bot1"], p["w_bot2"], p["b_bot2"],
+                 interpret=interpret)
+    inter = jnp.concatenate([bottom, reduced, bottom * reduced], axis=-1)
+    return mlp(inter, p["w_top1"], p["b_top1"], p["w_top2"], p["b_top2"],
+               interpret=interpret)
+
+
+def embedding_reduce(masks, tiles, *, interpret=True):
+    """Standalone embedding reduction (the paper's core op), for the
+    dedicated artifact the rust hot path uses when only the reduction is
+    needed."""
+    return crossbar_reduce(masks, tiles, interpret=interpret)

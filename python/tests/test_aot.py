@@ -1,0 +1,64 @@
+"""AOT artifact tests: lowering produces parseable HLO text with the
+expected entry signature, and the manifest matches the model constants."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def hlo_texts():
+    """Lower once per test session (lowering is the slow part)."""
+    return {
+        "dlrm": aot.to_hlo_text(aot.lower_dlrm(batch=2, tiles=2)),
+        "reduce": aot.to_hlo_text(aot.lower_reduce(batch=2, tiles=2)),
+    }
+
+
+class TestLowering:
+    def test_hlo_text_is_hlo(self, hlo_texts):
+        for name, text in hlo_texts.items():
+            assert text.startswith("HloModule"), f"{name}: {text[:40]!r}"
+            assert "ENTRY" in text, name
+
+    def test_dlrm_signature_arity(self, hlo_texts):
+        # dense + masks + tiles + 8 params = 11 parameters.
+        entry = hlo_texts["dlrm"][hlo_texts["dlrm"].index("ENTRY"):]
+        entry = entry[:entry.index("\n}")]
+        assert entry.count("parameter(") == 3 + len(model.PARAM_ORDER), entry
+
+    def test_reduce_signature_shapes(self, hlo_texts):
+        entry = hlo_texts["reduce"][hlo_texts["reduce"].index("ENTRY"):]
+        entry = entry[:entry.index("\n}")]
+        # masks [2,2,64], tiles [2,64,16]
+        assert "f32[2,2,64]" in entry
+        assert "f32[2,64,16]" in entry
+
+    def test_outputs_are_tuples(self, hlo_texts):
+        # return_tuple=True: rust unwraps with to_tuple1().
+        for name, text in hlo_texts.items():
+            entry = text[text.index("ENTRY"):]
+            entry = entry[:entry.index("\n}")]
+            root = [l for l in entry.splitlines() if "ROOT" in l]
+            assert len(root) == 1, name
+            assert "tuple(" in root[0], f"{name}: {root[0]!r}"
+
+    def test_no_mosaic_custom_calls(self, hlo_texts):
+        # interpret=True must lower to plain HLO the CPU client can run.
+        for name, text in hlo_texts.items():
+            assert "mosaic" not in text.lower(), name
+
+
+class TestManifest:
+    def test_manifest_roundtrip(self, tmp_path):
+        path = os.path.join(tmp_path, "manifest.toml")
+        aot.write_manifest(path, [1, 8], tiles=4)
+        text = open(path).read()
+        assert f"embed_dim = {model.EMBED_DIM}" in text
+        assert f"xbar_rows = {model.XBAR_ROWS}" in text
+        assert "batches = [1, 8]" in text
+        assert "tiles = 4" in text
+        for name in model.PARAM_ORDER:
+            assert f'"{name}"' in text  # double-quoted (TOML-parseable)

@@ -1,0 +1,147 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is the
+core correctness signal of the whole stack (the rust side executes exactly
+this lowered computation).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.crossbar_mac import crossbar_reduce
+from compile.kernels.mlp import mlp
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------- crossbar
+
+
+class TestCrossbarReduce:
+    def test_matches_ref_basic(self):
+        key = jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(key)
+        masks = (jax.random.uniform(k1, (4, 3, 64)) < 0.2).astype(jnp.float32)
+        tiles = rand(k2, (3, 64, 16))
+        got = crossbar_reduce(masks, tiles)
+        want = ref.crossbar_reduce_ref(masks, tiles)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_mask_gives_zero(self):
+        masks = jnp.zeros((2, 2, 64))
+        tiles = rand(jax.random.PRNGKey(1), (2, 64, 16))
+        np.testing.assert_allclose(crossbar_reduce(masks, tiles),
+                                   jnp.zeros((2, 16)), atol=0)
+
+    def test_single_row_is_plain_read(self):
+        # popcount==1: the reduction must return exactly the stored row —
+        # the invariant behind the paper's read-mode switch.
+        tiles = rand(jax.random.PRNGKey(2), (2, 64, 16))
+        masks = jnp.zeros((1, 2, 64)).at[0, 1, 37].set(1.0)
+        got = crossbar_reduce(masks, tiles)
+        np.testing.assert_allclose(got[0], tiles[1, 37], rtol=1e-6)
+
+    def test_linearity_in_masks(self):
+        # reduce(m1 + m2) == reduce(m1) + reduce(m2) for disjoint masks —
+        # the analog current sum is linear.
+        key = jax.random.PRNGKey(3)
+        tiles = rand(key, (2, 64, 16))
+        m1 = jnp.zeros((1, 2, 64)).at[0, 0, 5].set(1.0)
+        m2 = jnp.zeros((1, 2, 64)).at[0, 1, 9].set(1.0)
+        lhs = crossbar_reduce(m1 + m2, tiles)
+        rhs = crossbar_reduce(m1, tiles) + crossbar_reduce(m2, tiles)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 6),
+        t=st.integers(1, 5),
+        r=st.sampled_from([8, 16, 64]),
+        d=st.sampled_from([4, 16, 32]),
+        density=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, b, t, r, d, density, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        masks = (jax.random.uniform(k1, (b, t, r)) < density).astype(jnp.float32)
+        tiles = rand(k2, (t, r, d))
+        got = crossbar_reduce(masks, tiles)
+        want = ref.crossbar_reduce_ref(masks, tiles)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16, jnp.int8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_mask_dtypes_accepted(self, dtype, seed):
+        # Masks arrive as whatever the coordinator packs; the kernel casts.
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        masks = (jax.random.uniform(k1, (2, 2, 16)) < 0.3).astype(dtype)
+        tiles = rand(k2, (2, 16, 8))
+        got = crossbar_reduce(masks, tiles)
+        want = ref.crossbar_reduce_ref(masks.astype(jnp.float32), tiles)
+        np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+
+    def test_shape_mismatch_rejected(self):
+        with pytest.raises(AssertionError):
+            crossbar_reduce(jnp.zeros((1, 2, 64)), jnp.zeros((3, 64, 16)))
+
+
+# --------------------------------------------------------------------- mlp
+
+
+class TestMlp:
+    def test_matches_ref_basic(self):
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 5)
+        x = rand(ks[0], (32, 13))
+        w1, b1 = rand(ks[1], (13, 64)), rand(ks[2], (64,))
+        w2, b2 = rand(ks[3], (64, 16)), rand(ks[4], (16,))
+        got = mlp(x, w1, b1, w2, b2)
+        want = ref.mlp_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_relu_actually_clips(self):
+        # With all-negative first-layer output, result must be b2 exactly.
+        x = jnp.ones((4, 4))
+        w1 = -jnp.eye(4)
+        b1 = jnp.zeros((4,))
+        w2 = rand(jax.random.PRNGKey(1), (4, 3))
+        b2 = jnp.array([1.0, 2.0, 3.0])
+        got = mlp(x, w1, b1, w2, b2, block_b=4)
+        np.testing.assert_allclose(got, jnp.tile(b2, (4, 1)), atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4, 8, 32]),
+        f=st.integers(1, 20),
+        h=st.integers(1, 40),
+        o=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, b, f, h, o, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+        x = rand(ks[0], (b, f))
+        w1, b1 = rand(ks[1], (f, h)), rand(ks[2], (h,))
+        w2, b2 = rand(ks[3], (h, o)), rand(ks[4], (o,))
+        got = mlp(x, w1, b1, w2, b2)
+        want = ref.mlp_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_indivisible_batch_rejected(self):
+        x = jnp.zeros((5, 3))
+        w1, b1 = jnp.zeros((3, 4)), jnp.zeros((4,))
+        w2, b2 = jnp.zeros((4, 2)), jnp.zeros((2,))
+        with pytest.raises(AssertionError):
+            mlp(x, w1, b1, w2, b2, block_b=2)

@@ -1,0 +1,33 @@
+//! Bench for paper Fig. 10: the duplication-ratio sweep (0/5/10/20% area
+//! overhead) — effectiveness of access-aware crossbar allocation.
+
+use recross::report::{self, Workbench};
+use recross::util::bench::{black_box, Bench, BenchConfig};
+use std::time::Duration;
+
+fn scale() -> f64 {
+    std::env::var("RECROSS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1)
+}
+
+fn main() {
+    let scale = scale();
+    println!("== fig10 duplication bench (scale {scale}) ==\n");
+    let mut wb = Workbench::at_scale(scale);
+
+    let mut bench = Bench::with_config(BenchConfig {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_secs(1),
+        max_iters: 20,
+        min_iters: 3,
+    });
+    bench.run("dup-sweep/automotive(4 ratios)", || {
+        black_box(wb.dup_sweep("automotive", &[0.0, 0.05, 0.10, 0.20]))
+    });
+
+    println!("\n{}", report::fig10(&mut wb));
+    println!("\n{}", report::ablation(&mut wb, "automotive"));
+    let _ = bench.write_tsv("target/bench_fig10.tsv");
+}

@@ -1,0 +1,42 @@
+//! Bench for paper Fig. 11: energy efficiency of ReCross versus the
+//! CPU-only and CPU+GPU host platforms (analytical models; see DESIGN.md
+//! §Substitutions).
+
+use recross::energy::{HostModel, HostPlatform};
+use recross::report::{self, Workbench};
+use recross::util::bench::{black_box, Bench, BenchConfig};
+use recross::workload::{generate, DatasetSpec};
+use recross::xbar::HostParams;
+use std::time::Duration;
+
+fn scale() -> f64 {
+    std::env::var("RECROSS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1)
+}
+
+fn main() {
+    let scale = scale();
+    println!("== fig11 host-platform bench (scale {scale}) ==\n");
+
+    let spec = DatasetSpec::by_name("electronics").unwrap().scaled(scale);
+    let (_, eval) = generate(&spec, 1_000, 2_048, 42);
+    let host = HostModel::new(&HostParams::default(), 16);
+    let mut bench = Bench::with_config(BenchConfig {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_millis(500),
+        max_iters: 1000,
+        min_iters: 5,
+    });
+    bench.run("host-model/cpu", || {
+        black_box(host.run_trace(&eval, HostPlatform::CpuOnly))
+    });
+    bench.run("host-model/cpu+gpu", || {
+        black_box(host.run_trace(&eval, HostPlatform::CpuGpu))
+    });
+
+    let mut wb = Workbench::at_scale(scale);
+    println!("\n{}", report::fig11(&mut wb));
+    let _ = bench.write_tsv("target/bench_fig11.tsv");
+}

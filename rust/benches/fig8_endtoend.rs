@@ -1,0 +1,45 @@
+//! Bench for paper Fig. 8: end-to-end completion time + energy of
+//! ReCross vs naive vs nMARS on all five workloads.
+//!
+//! Prints (a) criterion-style wall-clock timings of the simulator itself
+//! and (b) the regenerated Fig. 8 table (the paper's metric). Scale is
+//! set by RECROSS_BENCH_SCALE (default 0.1).
+
+use recross::engine::Scheme;
+use recross::report::{self, Workbench};
+use recross::util::bench::{black_box, Bench, BenchConfig};
+use std::time::Duration;
+
+fn scale() -> f64 {
+    std::env::var("RECROSS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1)
+}
+
+fn main() {
+    let scale = scale();
+    println!("== fig8 end-to-end bench (scale {scale}) ==\n");
+    let mut wb = Workbench::at_scale(scale);
+
+    // Prepare everything once (offline phase), then measure the online
+    // phase (run_trace) — the paper's completion-time metric comes from
+    // exactly this code path.
+    let mut bench = Bench::with_config(BenchConfig {
+        warmup: Duration::from_millis(200),
+        measure: Duration::from_secs(1),
+        max_iters: 50,
+        min_iters: 3,
+    });
+    for ds in ["software", "automotive"] {
+        for scheme in Scheme::fig8_set() {
+            // compare() caches engines; re-running measures the simulator.
+            bench.run(&format!("sim/{ds}/{}", scheme.name()), || {
+                black_box(wb.compare(ds, [scheme]))
+            });
+        }
+    }
+
+    println!("\n{}", report::fig8(&mut wb));
+    let _ = bench.write_tsv("target/bench_fig8.tsv");
+}

@@ -1,0 +1,50 @@
+//! Bench for paper Fig. 9: crossbar activation counts of naive /
+//! frequency-based / ReCross mappings on all five workloads, plus the
+//! wall-clock cost of the offline phase (graph build + Algorithm 1) that
+//! produces them.
+
+use recross::config::Config;
+use recross::engine::{Engine, Scheme};
+use recross::graph::CoGraph;
+use recross::report::{self, Workbench};
+use recross::util::bench::{black_box, Bench, BenchConfig};
+use recross::workload::{generate, DatasetSpec};
+use std::time::Duration;
+
+fn scale() -> f64 {
+    std::env::var("RECROSS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1)
+}
+
+fn main() {
+    let scale = scale();
+    println!("== fig9 activation bench (scale {scale}) ==\n");
+
+    // Offline-phase cost on one mid-size dataset.
+    let spec = DatasetSpec::by_name("software").unwrap().scaled(scale);
+    let (history, eval) = generate(&spec, 4_000, 1_024, 42);
+    let cfg = Config::paper_default();
+    let mut bench = Bench::with_config(BenchConfig {
+        warmup: Duration::from_millis(200),
+        measure: Duration::from_secs(1),
+        max_iters: 20,
+        min_iters: 3,
+    });
+    bench.run("offline/cograph-build", || {
+        black_box(CoGraph::build(&history))
+    });
+    let graph = CoGraph::build(&history);
+    bench.run("offline/algorithm1-grouping", || {
+        black_box(Engine::prepare(Scheme::ReCross, &graph, &history, &cfg))
+    });
+    let engine = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+    bench.run("online/count-activations", || {
+        black_box(engine.count_activations(&eval))
+    });
+
+    let mut wb = Workbench::at_scale(scale);
+    println!("\n{}", report::fig9(&mut wb));
+    let _ = bench.write_tsv("target/bench_fig9.tsv");
+}

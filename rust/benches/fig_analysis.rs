@@ -1,0 +1,39 @@
+//! Bench for the paper's analysis figures: Fig. 2 (co-occurrence power
+//! law), Fig. 4 (post-grouping access distribution), Fig. 5 (log-scaling
+//! copy distribution), Fig. 6 (single-embedding activation share).
+
+use recross::report::{self, Workbench};
+use recross::util::bench::{black_box, Bench, BenchConfig};
+use std::time::Duration;
+
+fn scale() -> f64 {
+    std::env::var("RECROSS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1)
+}
+
+fn main() {
+    let scale = scale();
+    println!("== analysis figures bench (scale {scale}) ==\n");
+    let mut wb = Workbench::at_scale(scale);
+
+    // Warm the caches (dataset generation dominates otherwise).
+    let _ = wb.dataset("software");
+    let _ = wb.dataset("automotive");
+
+    let mut bench = Bench::with_config(BenchConfig {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_secs(1),
+        max_iters: 10,
+        min_iters: 2,
+    });
+    bench.run("report/fig4", || black_box(report::fig4(&mut wb)));
+    bench.run("report/fig5", || black_box(report::fig5(&mut wb)));
+
+    println!("\n{}", report::fig2(&mut wb));
+    println!("{}", report::fig4(&mut wb));
+    println!("{}", report::fig5(&mut wb));
+    println!("{}", report::fig6(&mut wb));
+    let _ = bench.write_tsv("target/bench_analysis.tsv");
+}

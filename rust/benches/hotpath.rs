@@ -1,0 +1,91 @@
+//! Hot-path microbenchmarks — the targets of the §Perf optimization pass
+//! (EXPERIMENTS.md §Perf records before/after for each).
+//!
+//! * offline: co-occurrence graph build, Algorithm 1 grouping
+//! * online:  per-batch scheduling (the simulator's inner loop),
+//!            activation-set computation, replica selection
+//! * serving: planner pass construction, tile gathering, and (when
+//!            artifacts exist) a real PJRT reduce invocation
+
+use recross::config::Config;
+use recross::coordinator::{EmbeddingStore, Planner};
+use recross::engine::{Engine, Scheme};
+use recross::graph::CoGraph;
+use recross::sched::Scratch;
+use recross::util::bench::{black_box, Bench, BenchConfig};
+use recross::util::Rng;
+use recross::workload::{generate, DatasetSpec, Query};
+use std::time::Duration;
+
+fn main() {
+    let spec = DatasetSpec::by_name("software").unwrap().scaled(0.2);
+    let (history, eval) = generate(&spec, 4_000, 512, 42);
+    let cfg = Config::paper_default();
+
+    let mut bench = Bench::with_config(BenchConfig {
+        warmup: Duration::from_millis(200),
+        measure: Duration::from_secs(1),
+        max_iters: 10_000,
+        min_iters: 3,
+    });
+
+    // --- offline phase -----------------------------------------------------
+    bench.run("offline/cograph(4k queries)", || {
+        black_box(CoGraph::build(&history))
+    });
+    let graph = CoGraph::build(&history);
+    bench.run("offline/alg1(5.4k nodes)", || {
+        black_box(Engine::prepare(Scheme::ReCross, &graph, &history, &cfg))
+    });
+
+    // --- online phase ------------------------------------------------------
+    let engine = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+    let mut scratch = Scratch::default();
+    let batch: Vec<Query> = eval.queries[..256].to_vec();
+    bench.run("online/run_batch(256 queries)", || {
+        black_box(engine.run_batch(&batch, &mut scratch))
+    });
+    bench.run("online/count_activations(512q)", || {
+        black_box(engine.count_activations(&eval))
+    });
+    let mut gscratch = Vec::new();
+    bench.run("online/groups_touched(1 query)", || {
+        black_box(
+            engine
+                .mapping()
+                .groups_touched(&eval.queries[0].items, &mut gscratch),
+        )
+    });
+
+    // --- serving path --------------------------------------------------------
+    let store = EmbeddingStore::random(engine.mapping(), 16, 64, 1);
+    let planner = Planner::new(engine.mapping(), &store, 8);
+    let q = &eval.queries[0];
+    bench.run("serve/plan(1 query)", || black_box(planner.plan(q)));
+    let passes = planner.plan(q);
+    let mut tiles = Vec::new();
+    bench.run("serve/gather_tiles(1 pass)", || {
+        planner.gather_tiles(&passes[0], &mut tiles);
+        black_box(tiles.len())
+    });
+
+    // --- PJRT reduce (needs artifacts) ---------------------------------------
+    if recross::runtime::artifacts_available("artifacts") {
+        let rt = recross::runtime::Runtime::load("artifacts").expect("runtime");
+        let m = rt.manifest().clone();
+        let mut rng = Rng::new(3);
+        let masks: Vec<f32> = (0..m.tiles * m.xbar_rows)
+            .map(|_| if rng.chance(0.1) { 1.0 } else { 0.0 })
+            .collect();
+        let tiles_buf: Vec<f32> = (0..m.tiles * m.xbar_rows * m.embed_dim)
+            .map(|_| rng.normal() as f32 * 0.1)
+            .collect();
+        bench.run("pjrt/reduce_b1", || {
+            black_box(rt.reduce(1, &masks, &tiles_buf).unwrap())
+        });
+    } else {
+        println!("(skipping pjrt/reduce_b1 — run `make artifacts`)");
+    }
+
+    let _ = bench.write_tsv("target/bench_hotpath.tsv");
+}

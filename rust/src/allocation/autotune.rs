@@ -1,0 +1,132 @@
+//! Duplication-ratio auto-tuner — the "research opportunity" the paper
+//! flags in §IV-B: the right area budget depends on the workload's access
+//! density, so pick it from the measured time/area curve instead of a
+//! global constant.
+//!
+//! Strategy: sweep candidate ratios, simulate the engine on a held-out
+//! slice of the history, and choose the **knee** — the smallest ratio
+//! whose marginal speedup over the previous candidate falls below
+//! `min_gain` (Fig. 10's convergence point). This mirrors how a deployer
+//! would size ReRAM area against tail latency.
+
+use crate::config::Config;
+use crate::engine::{Engine, Scheme};
+use crate::graph::CoGraph;
+use crate::workload::Trace;
+
+/// One sweep point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunePoint {
+    pub dup_ratio: f64,
+    pub completion_ns: f64,
+    pub physical_crossbars: usize,
+    /// Speedup over the dup-0 baseline.
+    pub speedup: f64,
+}
+
+/// Auto-tune result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneResult {
+    /// Chosen ratio (the knee).
+    pub chosen: f64,
+    /// The full sweep, ascending ratio.
+    pub sweep: Vec<TunePoint>,
+}
+
+/// Sweep `ratios` (must be ascending) and pick the knee.
+///
+/// `min_gain` is the marginal-speedup threshold: once an extra budget step
+/// improves completion time by less than this factor, the previous step
+/// is chosen. Typical value 1.05 (5%).
+pub fn tune_dup_ratio(
+    graph: &CoGraph,
+    history: &Trace,
+    validation: &Trace,
+    cfg: &Config,
+    ratios: &[f64],
+    min_gain: f64,
+) -> TuneResult {
+    assert!(!ratios.is_empty(), "empty ratio sweep");
+    assert!(
+        ratios.windows(2).all(|w| w[0] < w[1]),
+        "ratios must be strictly ascending"
+    );
+    assert!(min_gain >= 1.0, "min_gain is a ratio >= 1.0");
+
+    let mut sweep = Vec::with_capacity(ratios.len());
+    let mut base_ns = None;
+    for &r in ratios {
+        let mut c = cfg.clone();
+        c.scheme.dup_ratio = r;
+        let engine = Engine::prepare(Scheme::ReCross, graph, history, &c);
+        let stats = engine.run_trace(validation, c.scheme.batch_size);
+        let base = *base_ns.get_or_insert(stats.completion_ns);
+        sweep.push(TunePoint {
+            dup_ratio: r,
+            completion_ns: stats.completion_ns,
+            physical_crossbars: engine.physical_crossbars(),
+            speedup: base / stats.completion_ns,
+        });
+    }
+
+    // Knee: first point whose successor improves by < min_gain.
+    let mut chosen = sweep.last().unwrap().dup_ratio;
+    for w in sweep.windows(2) {
+        let marginal = w[0].completion_ns / w[1].completion_ns;
+        if marginal < min_gain {
+            chosen = w[0].dup_ratio;
+            break;
+        }
+    }
+    TuneResult { chosen, sweep }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, DatasetSpec};
+
+    fn setup() -> (CoGraph, Trace, Trace, Config) {
+        let spec = DatasetSpec::by_name("automotive").unwrap().scaled(0.03);
+        let (history, eval) = generate(&spec, 1_500, 400, 42);
+        let graph = CoGraph::build(&history);
+        (graph, history, eval, Config::paper_default())
+    }
+
+    #[test]
+    fn picks_a_swept_ratio_at_the_knee() {
+        let (graph, history, eval, cfg) = setup();
+        let ratios = [0.0, 0.05, 0.10, 0.20];
+        let r = tune_dup_ratio(&graph, &history, &eval, &cfg, &ratios, 1.05);
+        assert!(ratios.contains(&r.chosen));
+        assert_eq!(r.sweep.len(), 4);
+        // Completion must be non-increasing in budget.
+        for w in r.sweep.windows(2) {
+            assert!(w[1].completion_ns <= w[0].completion_ns * 1.001);
+        }
+        // The chosen point's successor (if any) gains < 5%.
+        let idx = r.sweep.iter().position(|p| p.dup_ratio == r.chosen).unwrap();
+        if idx + 1 < r.sweep.len() {
+            let marginal = r.sweep[idx].completion_ns / r.sweep[idx + 1].completion_ns;
+            assert!(marginal < 1.05, "knee misplaced: marginal {marginal}");
+        }
+    }
+
+    #[test]
+    fn duplication_actually_helps_before_knee() {
+        let (graph, history, eval, cfg) = setup();
+        let r = tune_dup_ratio(&graph, &history, &eval, &cfg, &[0.0, 0.10], 1.0);
+        assert!(
+            r.sweep[1].speedup > 1.0,
+            "dup-10% should beat dup-0%: {:?}",
+            r.sweep
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending")]
+    fn rejects_unsorted_ratios() {
+        let (graph, history, eval, cfg) = setup();
+        tune_dup_ratio(&graph, &history, &eval, &cfg, &[0.1, 0.05], 1.05);
+    }
+}

@@ -1,0 +1,265 @@
+//! Access-aware crossbar allocation — paper §III-C.
+//!
+//! Even after correlation-aware grouping, crossbar access counts stay
+//! power-law (Fig. 4): a few crossbars serve most of the batch and become
+//! serial bottlenecks. ReCross replicates hot crossbars, choosing copy
+//! counts by **log scaling** (Eq. 1):
+//!
+//! ```text
+//! num_copies = floor( log(freq) / log(freq_total) * log(batch_size) )
+//! ```
+//!
+//! which compresses the power-law head (no crossbar needs ~batch_size
+//! copies — observed peak concurrent demand is far lower, Fig. 4b) while
+//! still granting the warm middle of the distribution a copy or two
+//! (Fig. 5's "after" pie chart).
+//!
+//! A `dup_ratio` area budget (Fig. 10 sweeps 0/5/10/20%) caps the total
+//! number of extra crossbars; budget is spent on the hottest groups first.
+
+pub mod autotune;
+
+pub use autotune::{tune_dup_ratio, TunePoint, TuneResult};
+
+use crate::grouping::Mapping;
+use crate::workload::Trace;
+
+/// Replication plan layered on top of a [`Mapping`].
+#[derive(Debug, Clone)]
+pub struct Replication {
+    /// Copies per group (>= 1; 1 means not duplicated).
+    pub copies: Vec<u32>,
+    /// Total physical crossbars (sum of copies).
+    pub total_crossbars: usize,
+    /// The batch size the plan was computed for.
+    pub batch_size: usize,
+}
+
+impl Replication {
+    /// A trivial plan: one copy per group (duplication disabled).
+    pub fn identity(num_groups: usize, batch_size: usize) -> Self {
+        Self {
+            copies: vec![1; num_groups],
+            total_crossbars: num_groups,
+            batch_size,
+        }
+    }
+
+    /// Copies of group `g`.
+    #[inline]
+    pub fn copies_of(&self, g: u32) -> u32 {
+        self.copies[g as usize]
+    }
+
+    /// Area overhead versus the unreplicated baseline (0.0 = none).
+    pub fn area_overhead(&self) -> f64 {
+        let base = self.copies.len();
+        if base == 0 {
+            return 0.0;
+        }
+        (self.total_crossbars as f64 - base as f64) / base as f64
+    }
+
+    /// Number of duplicated groups (copies > 1).
+    pub fn duplicated_groups(&self) -> usize {
+        self.copies.iter().filter(|&&c| c > 1).count()
+    }
+}
+
+/// Per-group access frequency over a trace: how many *activations* each
+/// group would receive (one per query that touches it).
+pub fn group_frequencies(mapping: &Mapping, trace: &Trace) -> Vec<u64> {
+    let mut freq = vec![0u64; mapping.num_groups()];
+    let mut scratch: Vec<u32> = Vec::new();
+    for q in &trace.queries {
+        scratch.clear();
+        scratch.extend(q.items.iter().map(|&e| mapping.slot_of(e).group));
+        scratch.sort_unstable();
+        scratch.dedup();
+        for &g in scratch.iter() {
+            freq[g as usize] += 1;
+        }
+    }
+    freq
+}
+
+/// Eq. 1: desired copies for one group given its access frequency.
+///
+/// `freq_total` is the summed frequency over all groups, `batch_size` the
+/// inference batch. Returns the *desired* number of copies, at least 1.
+pub fn log_scaled_copies(freq: u64, freq_total: u64, batch_size: usize) -> u32 {
+    if freq == 0 || freq_total <= 1 || batch_size <= 1 {
+        return 1;
+    }
+    let ratio = (freq as f64).ln() / (freq_total as f64).ln();
+    let desired = (ratio * (batch_size as f64).ln()).floor() as i64;
+    desired.clamp(1, batch_size as i64) as u32
+}
+
+/// Naive (linear) copy rule the paper argues against (left pie of Fig. 5):
+/// copies proportional to the frequency share, `ceil(freq/freq_max *
+/// max_copies)`. Kept as an ablation baseline.
+pub fn linear_copies(freq: u64, freq_max: u64, max_copies: u32) -> u32 {
+    if freq == 0 || freq_max == 0 {
+        return 1;
+    }
+    ((freq as f64 / freq_max as f64) * max_copies as f64).ceil().max(1.0) as u32
+}
+
+/// Compute the ReCross replication plan.
+///
+/// * `freqs` — per-group activation frequency from [`group_frequencies`].
+/// * `batch_size` — Eq. 1's `batch_size`.
+/// * `dup_ratio` — area budget: extra crossbars <= `dup_ratio * groups`.
+///
+/// Budget is granted in descending frequency order, one copy at a time
+/// round-robin over the eligible groups, so a tight budget replicates the
+/// hottest groups first rather than fully replicating one group.
+pub fn plan_replication(freqs: &[u64], batch_size: usize, dup_ratio: f64) -> Replication {
+    let num_groups = freqs.len();
+    let freq_total: u64 = freqs.iter().sum();
+    let budget = ((num_groups as f64) * dup_ratio).floor() as usize;
+    let mut copies = vec![1u32; num_groups];
+    if budget == 0 || freq_total == 0 {
+        return Replication {
+            copies,
+            total_crossbars: num_groups,
+            batch_size,
+        };
+    }
+
+    // Desired copies per Eq. 1.
+    let desired: Vec<u32> = freqs
+        .iter()
+        .map(|&f| log_scaled_copies(f, freq_total, batch_size))
+        .collect();
+
+    // Hottest groups first.
+    let mut order: Vec<usize> = (0..num_groups).collect();
+    order.sort_by_key(|&g| std::cmp::Reverse(freqs[g]));
+
+    // Round-robin grant: every pass gives one extra copy to each group that
+    // still wants one, until the budget runs out. This matches the paper's
+    // "balanced distribution of duplicated embeddings across crossbars".
+    let mut remaining = budget;
+    'outer: loop {
+        let mut granted_any = false;
+        for &g in &order {
+            if copies[g] < desired[g] {
+                copies[g] += 1;
+                granted_any = true;
+                remaining -= 1;
+                if remaining == 0 {
+                    break 'outer;
+                }
+            }
+        }
+        if !granted_any {
+            break;
+        }
+    }
+
+    let total = copies.iter().map(|&c| c as usize).sum();
+    Replication {
+        copies,
+        total_crossbars: total,
+        batch_size,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grouping::Mapping;
+    use crate::workload::{Query, Trace};
+
+    #[test]
+    fn eq1_matches_paper_formula() {
+        // Hand-checked: freq=1000, total=100000, batch=256
+        // ln(1000)/ln(100000) * ln(256) = 6.9078/11.5129 * 5.5452 = 3.327 -> 3
+        assert_eq!(log_scaled_copies(1000, 100_000, 256), 3);
+        // freq == total -> ratio 1 -> floor(ln 256) = 5
+        assert_eq!(log_scaled_copies(100_000, 100_000, 256), 5);
+        // tiny freq -> 1 (never 0: the group must exist)
+        assert_eq!(log_scaled_copies(1, 100_000, 256), 1);
+        assert_eq!(log_scaled_copies(0, 100_000, 256), 1);
+    }
+
+    #[test]
+    fn eq1_compresses_head() {
+        // A 100x hotter group gets far fewer than 100x the copies.
+        let c_hot = log_scaled_copies(100_000, 1_000_000, 256);
+        let c_warm = log_scaled_copies(1_000, 1_000_000, 256);
+        assert!(c_hot <= c_warm * 3, "hot {c_hot} vs warm {c_warm}");
+        assert!(c_hot > c_warm);
+    }
+
+    #[test]
+    fn linear_rule_is_head_heavy() {
+        // The ablation baseline gives the head nearly everything.
+        assert_eq!(linear_copies(1000, 1000, 32), 32);
+        assert_eq!(linear_copies(10, 1000, 32), 1);
+    }
+
+    #[test]
+    fn budget_zero_means_identity() {
+        let r = plan_replication(&[100, 50, 1], 256, 0.0);
+        assert_eq!(r.copies, vec![1, 1, 1]);
+        assert_eq!(r.area_overhead(), 0.0);
+        assert_eq!(r.duplicated_groups(), 0);
+    }
+
+    #[test]
+    fn budget_respected() {
+        let freqs: Vec<u64> = (0..100).map(|i| 1000 / (i + 1)).collect();
+        for &ratio in &[0.05, 0.10, 0.20] {
+            let r = plan_replication(&freqs, 256, ratio);
+            let extra = r.total_crossbars - freqs.len();
+            assert!(
+                extra <= (freqs.len() as f64 * ratio) as usize,
+                "ratio {ratio}: extra {extra}"
+            );
+            assert!(r.area_overhead() <= ratio + 1e-9);
+        }
+    }
+
+    #[test]
+    fn hottest_groups_replicated_first() {
+        let freqs = vec![1000, 900, 10, 5, 1, 1, 1, 1, 1, 1];
+        let r = plan_replication(&freqs, 256, 0.2); // budget = 2
+        assert!(r.copies[0] > 1);
+        assert!(r.copies[1] > 1);
+        assert!(r.copies[4..].iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn round_robin_spreads_budget() {
+        // With budget 3 and two equally-desiring hot groups, the grant must
+        // split 2/1, not 3/0.
+        let freqs = vec![1_000_000, 1_000_000, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1];
+        let r = plan_replication(&freqs, 256, 0.2); // budget = 3
+        assert!(r.copies[0] >= 2 && r.copies[1] >= 2);
+        assert_eq!((r.copies[0] + r.copies[1]) as usize, 2 + 3);
+    }
+
+    #[test]
+    fn group_frequencies_count_touches() {
+        let m = Mapping::from_groups(vec![vec![0, 1], vec![2, 3]], 2, 4);
+        let t = Trace {
+            num_embeddings: 4,
+            queries: vec![
+                Query::new(vec![0, 1]),    // touches group 0 once
+                Query::new(vec![0, 2]),    // touches both
+                Query::new(vec![3]),       // touches group 1
+            ],
+        };
+        assert_eq!(group_frequencies(&m, &t), vec![2, 2]);
+    }
+
+    #[test]
+    fn identity_plan() {
+        let r = Replication::identity(5, 64);
+        assert_eq!(r.total_crossbars, 5);
+        assert_eq!(r.copies_of(3), 1);
+    }
+}

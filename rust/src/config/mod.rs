@@ -1,0 +1,311 @@
+//! Typed configuration for the whole system.
+//!
+//! Configuration is layered: built-in defaults reproduce the paper's
+//! Table I setup exactly; a TOML file (parsed by the in-tree
+//! [`toml`] subset parser) can override any field; the CLI can override a
+//! handful of common knobs on top.
+
+pub mod toml;
+
+use crate::Result;
+use anyhow::Context;
+
+/// Crossbar / tile / ADC hardware configuration (paper Table I).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareConfig {
+    /// Crossbar rows (= wordlines = embeddings per crossbar). Paper: 64.
+    pub xbar_rows: usize,
+    /// Crossbar columns (= bitlines). Paper: 64.
+    pub xbar_cols: usize,
+    /// Storage bits per ReRAM cell. Paper: 2.
+    pub bits_per_cell: u32,
+    /// Crossbars per tile edge: a tile is `tile_dim x tile_dim` crossbars
+    /// sharing peripheral circuitry. Paper tile: 256x256 cells = 4x4
+    /// crossbars of 64x64.
+    pub tile_xbars: usize,
+    /// ADC resolution in bits. Paper: 6 (quantized down from 8).
+    pub adc_bits: u32,
+    /// Number of columns multiplexed onto one ADC (ISAAC-style sharing).
+    pub adc_share: usize,
+    /// Bits resolved per cycle by the read-mode sense path of the
+    /// dynamic-switch ADC (paper §IV-B: read mode uses 3 of the 6 bits).
+    pub read_mode_bits: u32,
+    /// Global bus width in bits. Paper: 512.
+    pub bus_width_bits: usize,
+    /// Independent global-bus/NoC channels carrying activation results to
+    /// the accumulation units. Activation results contend for these — the
+    /// peripheral bandwidth wall that makes "fewer activations" the
+    /// paper's headline lever.
+    pub bus_channels: usize,
+    /// Core clock in MHz for the digital periphery.
+    pub clock_mhz: f64,
+    /// Whether the dynamic-switch ADC (read/MAC switching) is enabled.
+    pub dynamic_switch: bool,
+    /// Embedding feature dimension (learned features per embedding).
+    /// 16 features x 8-bit at 2 bits/cell = 64 cells = one 64-col row.
+    pub embedding_dim: usize,
+    /// Fixed-point bits per embedding element as stored in cells.
+    pub weight_bits: u32,
+}
+
+impl Default for HardwareConfig {
+    fn default() -> Self {
+        Self {
+            xbar_rows: 64,
+            xbar_cols: 64,
+            bits_per_cell: 2,
+            tile_xbars: 4,
+            adc_bits: 6,
+            adc_share: 8,
+            read_mode_bits: 3,
+            bus_width_bits: 512,
+            bus_channels: 16,
+            clock_mhz: 1000.0,
+            dynamic_switch: true,
+            embedding_dim: 16,
+            weight_bits: 8,
+        }
+    }
+}
+
+impl HardwareConfig {
+    /// Cells needed to store one embedding vector.
+    pub fn cells_per_embedding(&self) -> usize {
+        (self.embedding_dim * self.weight_bits as usize).div_ceil(self.bits_per_cell as usize)
+    }
+
+    /// Embeddings that fit in one crossbar (a.k.a. the grouping size).
+    /// With the default config each embedding occupies exactly one row.
+    pub fn embeddings_per_xbar(&self) -> usize {
+        let rows_per_emb = self.cells_per_embedding().div_ceil(self.xbar_cols);
+        self.xbar_rows / rows_per_emb.max(1)
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.xbar_rows > 0 && self.xbar_cols > 0, "zero crossbar dims");
+        anyhow::ensure!(
+            (1..=4).contains(&self.bits_per_cell),
+            "bits_per_cell {} outside 1..=4",
+            self.bits_per_cell
+        );
+        anyhow::ensure!(
+            self.read_mode_bits <= self.adc_bits,
+            "read-mode bits {} exceed ADC resolution {}",
+            self.read_mode_bits,
+            self.adc_bits
+        );
+        anyhow::ensure!(
+            self.adc_share >= 1 && self.adc_share <= self.xbar_cols,
+            "adc_share {} outside 1..=cols",
+            self.adc_share
+        );
+        anyhow::ensure!(self.embeddings_per_xbar() >= 1, "embedding too large for crossbar");
+        anyhow::ensure!(self.bus_channels >= 1, "need at least one bus channel");
+        Ok(())
+    }
+}
+
+/// ReCross scheme configuration (§III).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchemeConfig {
+    /// Group size for Algorithm 1; defaults to embeddings-per-crossbar.
+    pub group_size: usize,
+    /// Duplication area budget as a fraction of baseline crossbar count
+    /// (Fig. 10 sweeps 0 / 0.05 / 0.10 / 0.20).
+    pub dup_ratio: f64,
+    /// Inference batch size (paper evaluates batch 256).
+    pub batch_size: usize,
+    /// Enable access-aware duplication (§III-C).
+    pub duplication: bool,
+    /// Enable energy-aware dynamic switching (§III-D).
+    pub dynamic_switching: bool,
+}
+
+impl Default for SchemeConfig {
+    fn default() -> Self {
+        Self {
+            group_size: 64,
+            dup_ratio: 0.10,
+            batch_size: 256,
+            duplication: true,
+            dynamic_switching: true,
+        }
+    }
+}
+
+impl SchemeConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.group_size > 0, "zero group size");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.dup_ratio),
+            "dup_ratio {} outside [0,1]",
+            self.dup_ratio
+        );
+        anyhow::ensure!(self.batch_size > 0, "zero batch size");
+        Ok(())
+    }
+}
+
+/// Workload generation configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    /// Dataset name (one of the five Amazon categories, or "custom").
+    pub dataset: String,
+    /// Queries in the history trace used for the offline phase.
+    pub history_queries: usize,
+    /// Queries in the evaluation trace.
+    pub eval_queries: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "software".to_string(),
+            history_queries: 20_000,
+            eval_queries: 4_096,
+            seed: 42,
+        }
+    }
+}
+
+/// Top-level configuration bundle.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub hardware: HardwareConfig,
+    pub scheme: SchemeConfig,
+    pub workload: WorkloadConfig,
+    /// Directory with AOT artifacts for the PJRT runtime.
+    pub artifacts_dir: String,
+}
+
+impl Config {
+    /// Paper-default configuration.
+    pub fn paper_default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Load from a TOML file, overriding defaults.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text, overriding defaults.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml::Doc::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = Self::paper_default();
+        let hw = &mut cfg.hardware;
+        hw.xbar_rows = doc.usize_or("hardware.xbar_rows", hw.xbar_rows);
+        hw.xbar_cols = doc.usize_or("hardware.xbar_cols", hw.xbar_cols);
+        hw.bits_per_cell = doc.i64_or("hardware.bits_per_cell", hw.bits_per_cell as i64) as u32;
+        hw.tile_xbars = doc.usize_or("hardware.tile_xbars", hw.tile_xbars);
+        hw.adc_bits = doc.i64_or("hardware.adc_bits", hw.adc_bits as i64) as u32;
+        hw.adc_share = doc.usize_or("hardware.adc_share", hw.adc_share);
+        hw.read_mode_bits = doc.i64_or("hardware.read_mode_bits", hw.read_mode_bits as i64) as u32;
+        hw.bus_width_bits = doc.usize_or("hardware.bus_width_bits", hw.bus_width_bits);
+        hw.bus_channels = doc.usize_or("hardware.bus_channels", hw.bus_channels);
+        hw.clock_mhz = doc.f64_or("hardware.clock_mhz", hw.clock_mhz);
+        hw.dynamic_switch = doc.bool_or("hardware.dynamic_switch", hw.dynamic_switch);
+        hw.embedding_dim = doc.usize_or("hardware.embedding_dim", hw.embedding_dim);
+        hw.weight_bits = doc.i64_or("hardware.weight_bits", hw.weight_bits as i64) as u32;
+
+        let sc = &mut cfg.scheme;
+        sc.group_size = doc.usize_or("scheme.group_size", sc.group_size);
+        sc.dup_ratio = doc.f64_or("scheme.dup_ratio", sc.dup_ratio);
+        sc.batch_size = doc.usize_or("scheme.batch_size", sc.batch_size);
+        sc.duplication = doc.bool_or("scheme.duplication", sc.duplication);
+        sc.dynamic_switching = doc.bool_or("scheme.dynamic_switching", sc.dynamic_switching);
+
+        let wl = &mut cfg.workload;
+        wl.dataset = doc.str_or("workload.dataset", &wl.dataset);
+        wl.history_queries = doc.usize_or("workload.history_queries", wl.history_queries);
+        wl.eval_queries = doc.usize_or("workload.eval_queries", wl.eval_queries);
+        wl.seed = doc.i64_or("workload.seed", wl.seed as i64) as u64;
+
+        cfg.artifacts_dir = doc.str_or("artifacts_dir", &cfg.artifacts_dir);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate all sections.
+    pub fn validate(&self) -> Result<()> {
+        self.hardware.validate()?;
+        self.scheme.validate()?;
+        anyhow::ensure!(self.workload.history_queries > 0, "empty history");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = Config::paper_default();
+        assert_eq!(c.hardware.xbar_rows, 64);
+        assert_eq!(c.hardware.xbar_cols, 64);
+        assert_eq!(c.hardware.bits_per_cell, 2);
+        assert_eq!(c.hardware.adc_bits, 6);
+        assert_eq!(c.hardware.bus_width_bits, 512);
+        assert_eq!(c.scheme.batch_size, 256);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn one_embedding_per_row_by_default() {
+        let hw = HardwareConfig::default();
+        // 16 features * 8 bits / 2 bits-per-cell = 64 cells = 1 row.
+        assert_eq!(hw.cells_per_embedding(), 64);
+        assert_eq!(hw.embeddings_per_xbar(), 64);
+    }
+
+    #[test]
+    fn wide_embedding_spans_rows() {
+        let hw = HardwareConfig {
+            embedding_dim: 32,
+            ..Default::default()
+        };
+        // 32*8/2 = 128 cells = 2 rows -> 32 embeddings per crossbar.
+        assert_eq!(hw.embeddings_per_xbar(), 32);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let c = Config::from_toml(
+            r#"
+            [hardware]
+            adc_bits = 8
+            dynamic_switch = false
+            [scheme]
+            dup_ratio = 0.2
+            batch_size = 128
+            [workload]
+            dataset = "automotive"
+            seed = 7
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.hardware.adc_bits, 8);
+        assert!(!c.hardware.dynamic_switch);
+        assert_eq!(c.scheme.dup_ratio, 0.2);
+        assert_eq!(c.scheme.batch_size, 128);
+        assert_eq!(c.workload.dataset, "automotive");
+        assert_eq!(c.workload.seed, 7);
+        // untouched fields keep defaults
+        assert_eq!(c.hardware.xbar_rows, 64);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(Config::from_toml("[scheme]\ndup_ratio = 1.5").is_err());
+        assert!(Config::from_toml("[hardware]\nbits_per_cell = 9").is_err());
+        assert!(Config::from_toml("[hardware]\nread_mode_bits = 7").is_err());
+    }
+}

@@ -1,0 +1,401 @@
+//! A TOML-subset parser (offline stand-in for the `toml` crate).
+//!
+//! Supports the subset the ReCross config files use:
+//! `[section]` / `[section.sub]` headers, `key = value` pairs with string,
+//! integer, float, boolean, and flat array values, `#` comments, and basic
+//! escape sequences in strings. No dotted keys, no inline tables, no
+//! multi-line strings — config files here don't need them.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// A parsed document: `"section.key" -> Value` with dotted full paths.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Doc {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: String| ParseError {
+                line: lineno + 1,
+                msg,
+            };
+            if let Some(inner) = line.strip_prefix('[') {
+                let inner = inner
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header".into()))?
+                    .trim();
+                if inner.is_empty() {
+                    return Err(err("empty section name".into()));
+                }
+                if !inner
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-')
+                {
+                    return Err(err(format!("invalid section name {inner:?}")));
+                }
+                section = inner.to_string();
+                continue;
+            }
+            let (key, rest) = line
+                .split_once('=')
+                .ok_or_else(|| err(format!("expected `key = value`, got {line:?}")))?;
+            let key = key.trim();
+            if key.is_empty()
+                || !key
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                return Err(err(format!("invalid key {key:?}")));
+            }
+            let value = parse_value(rest.trim()).map_err(|m| err(m))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if entries.insert(full.clone(), value).is_some() {
+                return Err(err(format!("duplicate key {full:?}")));
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    /// Look up a value by full dotted path.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    /// Typed getters with defaults (config ergonomics).
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+    pub fn i64_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.i64_or(path, default as i64).max(0) as usize
+    }
+
+    /// All keys under a section prefix (e.g. `"datasets"`).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let pat = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(&pat))
+            .map(|k| k.as_str())
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a string literal must not start a comment.
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str && !escaped => {
+                escaped = true;
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        escaped = false;
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        return parse_string(rest).map(Value::Str);
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut out = Vec::new();
+        for part in split_array_items(inner)? {
+            let part = part.trim();
+            if !part.is_empty() {
+                out.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Array(out));
+    }
+    // Numbers: underscores allowed as separators.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        cleaned
+            .parse::<f64>()
+            .map(Value::Float)
+            .map_err(|_| format!("invalid float {s:?}"))
+    } else {
+        cleaned
+            .parse::<i64>()
+            .map(Value::Int)
+            .map_err(|_| format!("invalid value {s:?}"))
+    }
+}
+
+fn parse_string(rest: &str) -> Result<String, String> {
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                let tail: String = chars.collect();
+                if !tail.trim().is_empty() {
+                    return Err(format!("trailing garbage after string: {tail:?}"));
+                }
+                return Ok(out);
+            }
+            '\\' => match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => return Err(format!("bad escape \\{other:?}")),
+            },
+            c => out.push(c),
+        }
+    }
+    Err("unterminated string".into())
+}
+
+/// Split array items on top-level commas (strings may contain commas).
+fn split_array_items(s: &str) -> Result<Vec<&str>, String> {
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\\' if in_str && !escaped => {
+                escaped = true;
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+        escaped = false;
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    items.push(&s[start..]);
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Doc::parse(
+            r#"
+            # top comment
+            name = "recross"
+            [hardware]
+            rows = 64
+            freq_mhz = 1000.0
+            dynamic_switch = true
+            [hardware.adc]
+            bits = 6
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "recross");
+        assert_eq!(doc.i64_or("hardware.rows", 0), 64);
+        assert_eq!(doc.f64_or("hardware.freq_mhz", 0.0), 1000.0);
+        assert!(doc.bool_or("hardware.dynamic_switch", false));
+        assert_eq!(doc.i64_or("hardware.adc.bits", 0), 6);
+    }
+
+    #[test]
+    fn arrays_and_inline_comments() {
+        let doc = Doc::parse("ratios = [0.0, 0.05, 0.1, 0.2] # sweep\nnames = [\"a\", \"b,c\"]")
+            .unwrap();
+        let r = doc.get("ratios").unwrap().as_array().unwrap();
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[1].as_f64(), Some(0.05));
+        let n = doc.get("names").unwrap().as_array().unwrap();
+        assert_eq!(n[1].as_str(), Some("b,c"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = Doc::parse(r#"s = "a\"b\n\tc\\d""#).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a\"b\n\tc\\d");
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = Doc::parse(r##"s = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = Doc::parse("n = 26_815").unwrap();
+        assert_eq!(doc.i64_or("n", 0), 26_815);
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let doc = Doc::parse("x = 3").unwrap();
+        assert_eq!(doc.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(Doc::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn bad_section_rejected() {
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("[]").is_err());
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        assert!(Doc::parse("a = nonsense").is_err());
+        assert!(Doc::parse("a = \"unterminated").is_err());
+        assert!(Doc::parse("a =").is_err());
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = Doc::parse("[d]\nx = 1\ny = 2\n[e]\nz = 3").unwrap();
+        let ks: Vec<_> = doc.keys_under("d").collect();
+        assert_eq!(ks, vec!["d.x", "d.y"]);
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let e = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+}

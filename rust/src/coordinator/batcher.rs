@@ -1,0 +1,153 @@
+//! Dynamic batcher: collects single inference requests into batches.
+//!
+//! Policy (vLLM-router-style, sized for this model's artifact batches):
+//! a batch closes when it reaches `max_batch` requests OR the oldest
+//! queued request has waited `max_wait`. The serving loop then pads the
+//! batch up to the nearest compiled batch size.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Close a batch at this many requests.
+    pub max_batch: usize,
+    /// ... or when the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// An accumulating batch former. Generic over the request type so it is
+/// testable without the serving stack.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: VecDeque<(T, Instant)>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch > 0);
+        Self {
+            policy,
+            queue: VecDeque::new(),
+        }
+    }
+
+    /// Enqueue one request (records arrival time).
+    pub fn push(&mut self, req: T) {
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    /// Enqueue with an explicit arrival instant (deterministic tests).
+    pub fn push_at(&mut self, req: T, at: Instant) {
+        self.queue.push_back((req, at));
+    }
+
+    /// Queued requests.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch close *now*?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some((_, t0)) => now.duration_since(*t0) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the wait deadline would fire (None when empty).
+    pub fn deadline_in(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|(_, t0)| {
+            self.policy
+                .max_wait
+                .saturating_sub(now.duration_since(*t0))
+        })
+    }
+
+    /// Pop up to `max_batch` requests as one batch (empty vec if none).
+    pub fn take_batch(&mut self) -> Vec<T> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).map(|(r, _)| r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+        }
+    }
+
+    #[test]
+    fn closes_on_size() {
+        let mut b = Batcher::new(policy(3, 1000));
+        let now = Instant::now();
+        for i in 0..3 {
+            b.push_at(i, now);
+        }
+        assert!(b.ready(now));
+        assert_eq!(b.take_batch(), vec![0, 1, 2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn closes_on_deadline() {
+        let mut b = Batcher::new(policy(100, 5));
+        let t0 = Instant::now();
+        b.push_at(7, t0);
+        assert!(!b.ready(t0));
+        assert!(b.ready(t0 + Duration::from_millis(6)));
+        assert_eq!(b.take_batch(), vec![7]);
+    }
+
+    #[test]
+    fn empty_never_ready() {
+        let b: Batcher<u32> = Batcher::new(policy(1, 0));
+        assert!(!b.ready(Instant::now()));
+        assert!(b.deadline_in(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn take_batch_caps_at_max() {
+        let mut b = Batcher::new(policy(2, 0));
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push_at(i, now);
+        }
+        assert_eq!(b.take_batch(), vec![0, 1]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.take_batch(), vec![2, 3]);
+        assert_eq!(b.take_batch(), vec![4]);
+    }
+
+    #[test]
+    fn deadline_counts_down() {
+        let mut b = Batcher::new(policy(10, 10));
+        let t0 = Instant::now();
+        b.push_at(1, t0);
+        let d = b.deadline_in(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+}

@@ -1,0 +1,109 @@
+//! L3 serving coordinator.
+//!
+//! The paper's system contribution wired as a serving stack:
+//!
+//! * [`store`] — the embedding table in its crossbar layout (the offline
+//!   phase's ③/④ output materialised),
+//! * [`planner`] — query → crossbar reduce passes (the online phase's Ⓑ
+//!   operation selection, numerically),
+//! * [`batcher`] — dynamic batching policy,
+//! * [`server`] — executor thread owning the PJRT runtime + engine;
+//!   request router and response fan-out.
+//!
+//! [`build_pipeline`] assembles everything from a [`Config`]: generate /
+//! load the workload history, run the offline phase (graph → Algorithm 1 →
+//! Eq. 1), lay out the store, load the artifacts.
+
+pub mod batcher;
+pub mod drift;
+pub mod planner;
+pub mod server;
+pub mod store;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use drift::DriftMonitor;
+pub use planner::{Planner, ReducePass};
+pub use server::{Pipeline, Request, Response, Server, ServerHandle};
+pub use store::EmbeddingStore;
+
+use crate::config::Config;
+use crate::engine::{Engine, Scheme};
+use crate::graph::CoGraph;
+use crate::runtime::Runtime;
+use crate::workload::{generate, DatasetSpec, Trace};
+use crate::Result;
+use anyhow::Context;
+
+/// Offline phase bundle: everything the serving pipeline needs that does
+/// not depend on PJRT (so it can be prepared on any thread).
+#[derive(Debug)]
+pub struct OfflinePhase {
+    pub engine: Engine,
+    pub history: Trace,
+    pub eval: Trace,
+}
+
+impl OfflinePhase {
+    /// Run the offline phase for `scheme` per the config's workload.
+    /// `scale` shrinks the dataset (1.0 = paper scale).
+    pub fn run(cfg: &Config, scheme: Scheme, scale: f64) -> Result<Self> {
+        let spec = DatasetSpec::by_name(&cfg.workload.dataset)
+            .with_context(|| format!("unknown dataset {:?}", cfg.workload.dataset))?
+            .scaled(scale);
+        let (history, eval) = generate(
+            &spec,
+            cfg.workload.history_queries,
+            cfg.workload.eval_queries,
+            cfg.workload.seed,
+        );
+        let graph = CoGraph::build(&history);
+        let engine = Engine::prepare(scheme, &graph, &history, cfg);
+        Ok(Self {
+            engine,
+            history,
+            eval,
+        })
+    }
+}
+
+/// Build a full pipeline on the current thread (PJRT runtime included).
+pub fn build_pipeline(cfg: &Config, scheme: Scheme, scale: f64) -> Result<Pipeline> {
+    let offline = OfflinePhase::run(cfg, scheme, scale)?;
+    build_pipeline_from(cfg, offline)
+}
+
+/// Build a pipeline from an already-run offline phase.
+pub fn build_pipeline_from(cfg: &Config, offline: OfflinePhase) -> Result<Pipeline> {
+    let runtime = Runtime::load(&cfg.artifacts_dir)?;
+    let m = runtime.manifest();
+    let store = EmbeddingStore::random(
+        offline.engine.mapping(),
+        m.embed_dim,
+        m.xbar_rows,
+        cfg.workload.seed,
+    );
+    Pipeline::new(runtime, offline.engine, store, cfg.workload.seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offline_phase_builds_engine() {
+        let mut cfg = Config::paper_default();
+        cfg.workload.history_queries = 200;
+        cfg.workload.eval_queries = 50;
+        let off = OfflinePhase::run(&cfg, Scheme::ReCross, 0.02).unwrap();
+        assert_eq!(off.engine.name(), "recross");
+        assert_eq!(off.history.queries.len(), 200);
+        assert!(off.engine.mapping().num_groups() > 0);
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        let mut cfg = Config::paper_default();
+        cfg.workload.dataset = "books".into();
+        assert!(OfflinePhase::run(&cfg, Scheme::Naive, 0.1).is_err());
+    }
+}

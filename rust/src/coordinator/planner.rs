@@ -1,0 +1,188 @@
+//! Reduction planner: turns a query into concrete PJRT reduce calls.
+//!
+//! The `reduce_b{B}` artifact has a fixed tile capacity `T` (crossbars per
+//! call). A query touching `k` crossbars is planned as `ceil(k/T)` *passes*;
+//! each pass gathers up to `T` tile contents plus the matching wordline
+//! masks, and the pass results are summed (the reduction is linear, so
+//! splitting is exact — verified in the integration tests).
+//!
+//! This is the numeric twin of the scheduler's activation sets: the same
+//! `(group, rows)` decomposition drives both the circuit-cost simulation
+//! and the actual PJRT execution.
+
+use super::store::EmbeddingStore;
+use crate::grouping::Mapping;
+use crate::workload::Query;
+
+/// One reduce-artifact invocation worth of work for one query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReducePass {
+    /// Groups gathered into this pass's tile slots (<= T of them).
+    pub groups: Vec<u32>,
+    /// Wordline mask per tile slot, `[T, R]` flattened; zero-padded slots.
+    pub masks: Vec<f32>,
+}
+
+/// Planner bound to a mapping + store + artifact tile capacity.
+#[derive(Debug)]
+pub struct Planner<'a> {
+    mapping: &'a Mapping,
+    store: &'a EmbeddingStore,
+    /// Tile slots per reduce call (artifact `T`).
+    tiles_per_call: usize,
+}
+
+impl<'a> Planner<'a> {
+    pub fn new(mapping: &'a Mapping, store: &'a EmbeddingStore, tiles_per_call: usize) -> Self {
+        assert!(tiles_per_call > 0);
+        Self {
+            mapping,
+            store,
+            tiles_per_call,
+        }
+    }
+
+    /// Plan one query into passes.
+    pub fn plan(&self, query: &Query) -> Vec<ReducePass> {
+        let rows = self.store.rows();
+        // (group, row) pairs, grouped.
+        let mut slots: Vec<(u32, u16)> = query
+            .items
+            .iter()
+            .map(|&e| {
+                let s = self.mapping.slot_of(e);
+                (s.group, s.row)
+            })
+            .collect();
+        slots.sort_unstable();
+
+        let mut passes = Vec::new();
+        let mut i = 0;
+        while i < slots.len() {
+            let mut groups = Vec::with_capacity(self.tiles_per_call);
+            let mut masks = vec![0.0f32; self.tiles_per_call * rows];
+            while i < slots.len() && groups.len() < self.tiles_per_call {
+                let g = slots[i].0;
+                let slot_idx = groups.len();
+                groups.push(g);
+                while i < slots.len() && slots[i].0 == g {
+                    masks[slot_idx * rows + slots[i].1 as usize] = 1.0;
+                    i += 1;
+                }
+            }
+            passes.push(ReducePass { groups, masks });
+        }
+        passes
+    }
+
+    /// Gather the tile contents for a pass, `[T, R, D]` flattened with
+    /// zero padding for unused slots. `out` is resized as needed so the
+    /// hot loop can reuse one buffer.
+    pub fn gather_tiles(&self, pass: &ReducePass, out: &mut Vec<f32>) {
+        let rows = self.store.rows();
+        let dim = self.store.dim();
+        let tile_elems = rows * dim;
+        out.clear();
+        out.resize(self.tiles_per_call * tile_elems, 0.0);
+        for (slot, &g) in pass.groups.iter().enumerate() {
+            out[slot * tile_elems..(slot + 1) * tile_elems].copy_from_slice(self.store.tile(g));
+        }
+    }
+
+    /// Total crossbar activations this query costs (== number of gathered
+    /// tile slots across passes; the scheduler counts the same quantity).
+    pub fn activations(&self, query: &Query) -> usize {
+        let mut scratch = Vec::new();
+        self.mapping.groups_touched(&query.items, &mut scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grouping::Mapping;
+
+    fn setup() -> (Mapping, EmbeddingStore) {
+        // 8 embeddings, 4 groups of 2, D=2, R=4 (padded rows).
+        let m = Mapping::from_groups(
+            vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]],
+            2,
+            8,
+        );
+        let table: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let s = EmbeddingStore::from_table(&m, 2, 4, table);
+        (m, s)
+    }
+
+    #[test]
+    fn single_pass_when_fits() {
+        let (m, s) = setup();
+        let p = Planner::new(&m, &s, 2);
+        let passes = p.plan(&Query::new(vec![0, 1, 2]));
+        assert_eq!(passes.len(), 1);
+        assert_eq!(passes[0].groups, vec![0, 1]);
+        // slot 0 rows 0,1 set (emb 0,1); slot 1 row 0 set (emb 2).
+        assert_eq!(passes[0].masks[0], 1.0);
+        assert_eq!(passes[0].masks[1], 1.0);
+        assert_eq!(passes[0].masks[4], 1.0);
+        assert_eq!(passes[0].masks[5], 0.0);
+    }
+
+    #[test]
+    fn chunks_over_capacity() {
+        let (m, s) = setup();
+        let p = Planner::new(&m, &s, 2);
+        let passes = p.plan(&Query::new(vec![0, 2, 4, 6]));
+        assert_eq!(passes.len(), 2);
+        assert_eq!(passes[0].groups, vec![0, 1]);
+        assert_eq!(passes[1].groups, vec![2, 3]);
+    }
+
+    #[test]
+    fn gather_pads_unused_slots() {
+        let (m, s) = setup();
+        let p = Planner::new(&m, &s, 2);
+        let passes = p.plan(&Query::new(vec![0]));
+        let mut tiles = Vec::new();
+        p.gather_tiles(&passes[0], &mut tiles);
+        assert_eq!(tiles.len(), 2 * 4 * 2); // T*R*D
+        // slot 0 row 0 = emb 0 = [0,1]
+        assert_eq!(&tiles[0..2], &[0.0, 1.0]);
+        // slot 1 entirely zero
+        assert!(tiles[8..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn mask_weighted_sum_equals_reference() {
+        // The planned masks applied to gathered tiles must equal the
+        // reference reduction (the rust-side mirror of the PJRT path).
+        let (m, s) = setup();
+        let p = Planner::new(&m, &s, 2);
+        let q = Query::new(vec![1, 3, 4, 7]);
+        let mut total = vec![0.0f32; s.dim()];
+        let mut tiles = Vec::new();
+        for pass in p.plan(&q) {
+            p.gather_tiles(&pass, &mut tiles);
+            // manual mask @ tiles
+            for t in 0..2 {
+                for r in 0..4 {
+                    let w = pass.masks[t * 4 + r];
+                    if w != 0.0 {
+                        for d in 0..2 {
+                            total[d] += w * tiles[(t * 4 + r) * 2 + d];
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(total, s.reduce_reference(&q.items));
+    }
+
+    #[test]
+    fn activations_match_groups_touched() {
+        let (m, s) = setup();
+        let p = Planner::new(&m, &s, 2);
+        assert_eq!(p.activations(&Query::new(vec![0, 1])), 1);
+        assert_eq!(p.activations(&Query::new(vec![0, 2, 4, 6])), 4);
+    }
+}

@@ -1,0 +1,373 @@
+//! Serving front-end: request router + dynamic batcher + inference
+//! pipeline over the PJRT runtime and the crossbar cost model.
+//!
+//! Threading model: PJRT handles are not assumed `Send`, so one executor
+//! thread *creates and owns* the whole pipeline (runtime, store, mapping)
+//! and serves a `std::sync::mpsc` request channel; the dynamic batcher
+//! amortises artifact invocations. Clients talk through a cloneable
+//! [`ServerHandle`].
+//!
+//! Per batch the pipeline:
+//! 1. plans every query into crossbar reduce passes ([`super::planner`]),
+//! 2. executes the passes on the `reduce_b1` artifact and sums partials
+//!    (linearity makes chunking exact),
+//! 3. pads the batch to the nearest compiled size and runs `dlrm_head_b*`
+//!    for the dense path,
+//! 4. attaches the circuit-simulated cost of the same batch
+//!    ([`crate::engine::Engine::run_batch`]) so every response carries both
+//!    *numerics* (logit) and *hardware cost* (ns/pJ on the crossbar pool).
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::drift::DriftMonitor;
+use super::planner::Planner;
+use super::store::EmbeddingStore;
+use crate::engine::Engine;
+use crate::runtime::{DlrmParams, Runtime};
+use crate::sched::{ExecStats, Scratch};
+use crate::workload::Query;
+use crate::Result;
+use anyhow::anyhow;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Dense features, length = manifest.dense_features.
+    pub dense: Vec<f32>,
+    /// Sparse lookups (embedding ids).
+    pub items: Vec<u32>,
+}
+
+/// One inference response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Click logit from the DLRM head.
+    pub logit: f32,
+    /// The reduced embedding (exposed for verification).
+    pub reduced: Vec<f32>,
+    /// Crossbar activations this query cost on the simulated pool.
+    pub activations: u64,
+    /// Wall-clock service latency (queue + execute).
+    pub latency: Duration,
+}
+
+/// The synchronous inference pipeline (one per executor thread).
+pub struct Pipeline {
+    runtime: Runtime,
+    engine: Engine,
+    store: EmbeddingStore,
+    params: DlrmParams,
+    /// Scratch for the circuit simulation.
+    scratch: Scratch,
+    /// Reusable tile gather buffer.
+    tile_buf: Vec<f32>,
+    /// Batch-level circuit stats accumulated since start.
+    pub sim_stats: ExecStats,
+    /// Online staleness monitor (activations-per-lookup EMA vs the
+    /// offline-phase baseline); `drift().regroup_due()` tells the operator
+    /// the mapping has gone stale and the offline phase should re-run.
+    drift: DriftMonitor,
+}
+
+impl std::fmt::Debug for Pipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Pipeline")
+            .field("engine", &self.engine.name())
+            .field("groups", &self.store.num_groups())
+            .finish()
+    }
+}
+
+impl Pipeline {
+    /// Assemble a pipeline. `engine` carries the offline-phase mapping;
+    /// the store is laid out to match it.
+    pub fn new(runtime: Runtime, engine: Engine, store: EmbeddingStore, seed: u64) -> Result<Self> {
+        let manifest = runtime.manifest().clone();
+        anyhow::ensure!(
+            store.dim() == manifest.embed_dim,
+            "store dim {} != artifact embed_dim {}",
+            store.dim(),
+            manifest.embed_dim
+        );
+        anyhow::ensure!(
+            store.rows() == manifest.xbar_rows,
+            "store rows {} != artifact xbar_rows {}",
+            store.rows(),
+            manifest.xbar_rows
+        );
+        let params = DlrmParams::init(&manifest, seed);
+        params.validate(&manifest)?;
+        Ok(Self {
+            runtime,
+            engine,
+            store,
+            params,
+            scratch: Scratch::default(),
+            tile_buf: Vec::new(),
+            sim_stats: ExecStats::default(),
+            // Baseline = the mapping's ideal activations-per-lookup is not
+            // known until traffic flows; seed with 1 activation per ~8
+            // lookups (a healthy grouped mapping) and let rebaseline()
+            // correct it after the offline validation run.
+            drift: DriftMonitor::with_baseline(0.125),
+        })
+    }
+
+    /// The drift monitor (read-only view for operators/metrics).
+    pub fn drift(&self) -> &DriftMonitor {
+        &self.drift
+    }
+
+    /// Re-arm the drift monitor with a measured baseline
+    /// (activations per lookup from an offline validation run).
+    pub fn set_drift_baseline(&mut self, activations_per_lookup: f64) {
+        self.drift = DriftMonitor::with_baseline(activations_per_lookup);
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn store(&self) -> &EmbeddingStore {
+        &self.store
+    }
+
+    /// Reduce one query through the crossbar artifact (chunked passes).
+    pub fn reduce_query(&mut self, query: &Query) -> Result<Vec<f32>> {
+        let m = self.runtime.manifest();
+        let dim = m.embed_dim;
+        let planner = Planner::new(self.engine.mapping(), &self.store, m.tiles);
+        let mut total = vec![0.0f32; dim];
+        for pass in planner.plan(query) {
+            planner.gather_tiles(&pass, &mut self.tile_buf);
+            let out = self.runtime.reduce(1, &pass.masks, &self.tile_buf)?;
+            anyhow::ensure!(out.len() == dim, "reduce output {} != {dim}", out.len());
+            for (t, &v) in total.iter_mut().zip(&out) {
+                *t += v;
+            }
+        }
+        Ok(total)
+    }
+
+    /// Serve one batch end-to-end. Returns responses in request order.
+    pub fn infer_batch(&mut self, requests: &[Request], queued_since: &[Instant]) -> Result<Vec<Response>> {
+        anyhow::ensure!(!requests.is_empty(), "empty batch");
+        let m = self.runtime.manifest().clone();
+        let n = requests.len();
+
+        // 1+2: per-query crossbar reduction.
+        let queries: Vec<Query> = requests.iter().map(|r| Query::new(r.items.clone())).collect();
+        let mut reduced_flat = Vec::with_capacity(n * m.embed_dim);
+        for q in &queries {
+            reduced_flat.extend(self.reduce_query(q)?);
+        }
+
+        // 3: batched DLRM head, padded to the nearest compiled size.
+        let exec_b = self.runtime.pick_batch(n);
+        let mut dense_flat = vec![0.0f32; exec_b * m.dense_features];
+        for (i, r) in requests.iter().enumerate() {
+            anyhow::ensure!(
+                r.dense.len() == m.dense_features,
+                "request {} dense len {} != {}",
+                r.id,
+                r.dense.len(),
+                m.dense_features
+            );
+            dense_flat[i * m.dense_features..(i + 1) * m.dense_features].copy_from_slice(&r.dense);
+        }
+        reduced_flat.resize(exec_b * m.embed_dim, 0.0);
+        let logits = self
+            .runtime
+            .dlrm_head(exec_b, &dense_flat, &reduced_flat, &self.params)?;
+        anyhow::ensure!(logits.len() >= n, "head returned {} logits", logits.len());
+
+        // 4: circuit-level cost of this batch on the crossbar pool.
+        let sim = self.engine.run_batch(&queries, &mut self.scratch);
+        self.sim_stats.accumulate(&sim);
+
+        // 5: feed the drift monitor (mapping staleness signal).
+        let mut drift_scratch = Vec::new();
+        for q in &queries {
+            let acts = self
+                .engine
+                .mapping()
+                .groups_touched(&q.items, &mut drift_scratch) as u64;
+            self.drift.observe(acts, q.len());
+        }
+
+        let now = Instant::now();
+        let mut scratch = Vec::new();
+        Ok(requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| Response {
+                id: r.id,
+                logit: logits[i],
+                reduced: reduced_flat[i * m.embed_dim..(i + 1) * m.embed_dim].to_vec(),
+                activations: self
+                    .engine
+                    .mapping()
+                    .groups_touched(&queries[i].items, &mut scratch) as u64,
+                latency: now.duration_since(queued_since.get(i).copied().unwrap_or(now)),
+            })
+            .collect())
+    }
+}
+
+enum Msg {
+    Infer(Request, Instant, mpsc::Sender<Result<Response>>),
+    Shutdown,
+}
+
+/// Handle to a running server; cloneable across client threads.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl ServerHandle {
+    /// Blocking single-request inference.
+    pub fn infer(&self, req: Request) -> Result<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer(req, Instant::now(), tx))
+            .map_err(|_| anyhow!("server is down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    /// Fire-and-collect: submit many requests, wait for all responses.
+    pub fn infer_many(&self, reqs: Vec<Request>) -> Result<Vec<Response>> {
+        let mut rxs = Vec::with_capacity(reqs.len());
+        let now = Instant::now();
+        for r in reqs {
+            let (tx, rx) = mpsc::channel();
+            self.tx
+                .send(Msg::Infer(r, now, tx))
+                .map_err(|_| anyhow!("server is down"))?;
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow!("server dropped request"))?)
+            .collect()
+    }
+}
+
+/// A running server: executor thread + handle.
+pub struct Server {
+    handle: ServerHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+    shutdown_tx: mpsc::Sender<Msg>,
+}
+
+impl Server {
+    /// Spawn the executor thread. `make_pipeline` runs *on* that thread
+    /// (PJRT handles never cross threads).
+    pub fn spawn<F>(policy: BatchPolicy, make_pipeline: F) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Pipeline> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("recross-executor".into())
+            .spawn(move || {
+                let mut pipeline = match make_pipeline() {
+                    Ok(p) => {
+                        let _ = ready_tx.send(Ok(()));
+                        p
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                executor_loop(&mut pipeline, rx, policy);
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(Self {
+            handle: ServerHandle { tx: tx.clone() },
+            join: Some(join),
+            shutdown_tx: tx,
+        })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.shutdown_tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The executor loop: drain the channel through the dynamic batcher.
+fn executor_loop(pipeline: &mut Pipeline, rx: mpsc::Receiver<Msg>, policy: BatchPolicy) {
+    type Pending = (Request, Instant, mpsc::Sender<Result<Response>>);
+    let mut batcher: Batcher<Pending> = Batcher::new(policy);
+    loop {
+        // Wait for work (or a deadline if requests are queued).
+        let msg = match batcher.deadline_in(Instant::now()) {
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return, // all senders gone
+            },
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            },
+        };
+        match msg {
+            Some(Msg::Shutdown) => return,
+            Some(Msg::Infer(req, at, resp_tx)) => batcher.push_at((req, at, resp_tx), at),
+            None => {}
+        }
+        // Serve every ready batch.
+        while batcher.ready(Instant::now()) {
+            let batch = batcher.take_batch();
+            serve_batch(pipeline, batch);
+        }
+    }
+}
+
+fn serve_batch(
+    pipeline: &mut Pipeline,
+    batch: Vec<(Request, Instant, mpsc::Sender<Result<Response>>)>,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let (reqs, rest): (Vec<Request>, Vec<(Instant, mpsc::Sender<Result<Response>>)>) = batch
+        .into_iter()
+        .map(|(r, t, tx)| (r, (t, tx)))
+        .unzip();
+    let since: Vec<Instant> = rest.iter().map(|(t, _)| *t).collect();
+    match pipeline.infer_batch(&reqs, &since) {
+        Ok(responses) => {
+            for (resp, (_, tx)) in responses.into_iter().zip(rest) {
+                let _ = tx.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            // Fan the error out to every caller in the batch.
+            let msg = format!("{e:#}");
+            for (_, tx) in rest {
+                let _ = tx.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Embedding store: the master embedding table and its crossbar-resident
+//! layout.
+//!
+//! The offline phase (`make artifacts` + [`crate::grouping`]) decides which
+//! embedding lives in which crossbar row; this store materialises that
+//! layout so the online path can gather the tile contents a reduce call
+//! needs with plain `memcpy`s. It also provides the pure-rust reference
+//! reduction used to verify the PJRT path end-to-end.
+
+use crate::grouping::Mapping;
+use crate::util::Rng;
+use crate::workload::EmbeddingId;
+
+/// Master table + crossbar-layout view.
+#[derive(Debug, Clone)]
+pub struct EmbeddingStore {
+    /// Embedding dimension D.
+    dim: usize,
+    /// Crossbar rows R.
+    rows: usize,
+    /// Flat master table `[n, D]`.
+    table: Vec<f32>,
+    /// Flat crossbar tiles `[num_groups, R, D]`, gathered per the mapping.
+    tiles: Vec<f32>,
+    num_groups: usize,
+}
+
+impl EmbeddingStore {
+    /// Build a deterministic random table laid out per `mapping`.
+    ///
+    /// Values are small (~N(0, 0.05)) as trained embedding tables are.
+    pub fn random(mapping: &Mapping, dim: usize, rows: usize, seed: u64) -> Self {
+        let n = mapping.num_embeddings();
+        let mut rng = Rng::new(seed ^ EMB_SEED_SALT);
+        let table: Vec<f32> = (0..n * dim).map(|_| (rng.normal() * 0.05) as f32).collect();
+        Self::from_table(mapping, dim, rows, table)
+    }
+
+    /// Build from an explicit master table (`[n, D]` row-major).
+    pub fn from_table(mapping: &Mapping, dim: usize, rows: usize, table: Vec<f32>) -> Self {
+        let n = mapping.num_embeddings();
+        assert_eq!(table.len(), n * dim, "table size mismatch");
+        assert!(
+            mapping.group_size <= rows,
+            "mapping group_size {} exceeds crossbar rows {rows}",
+            mapping.group_size
+        );
+        let num_groups = mapping.num_groups();
+        let mut tiles = vec![0.0f32; num_groups * rows * dim];
+        for (g, members) in mapping.groups.iter().enumerate() {
+            for (r, &e) in members.iter().enumerate() {
+                let src = e as usize * dim;
+                let dst = (g * rows + r) * dim;
+                tiles[dst..dst + dim].copy_from_slice(&table[src..src + dim]);
+            }
+        }
+        Self {
+            dim,
+            rows,
+            table,
+            tiles,
+            num_groups,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.num_groups
+    }
+
+    /// One embedding vector from the master table.
+    pub fn embedding(&self, e: EmbeddingId) -> &[f32] {
+        let off = e as usize * self.dim;
+        &self.table[off..off + self.dim]
+    }
+
+    /// One crossbar tile's contents, `[R, D]` row-major.
+    pub fn tile(&self, group: u32) -> &[f32] {
+        let off = group as usize * self.rows * self.dim;
+        &self.tiles[off..off + self.rows * self.dim]
+    }
+
+    /// Reference reduction: plain sum of the queried embeddings from the
+    /// master table (bypasses the crossbar layout entirely).
+    pub fn reduce_reference(&self, items: &[EmbeddingId]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        for &e in items {
+            for (o, &v) in out.iter_mut().zip(self.embedding(e)) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Quantize the store to `bits`-bit symmetric fixed point — the
+    /// precision actually programmed into the ReRAM cells (Table I: 8-bit
+    /// weights across 2-bit cells). Returns the quantized store and the
+    /// scale factor (LSB value); dequantized values are `q * scale`.
+    pub fn quantized(&self, mapping: &crate::grouping::Mapping, bits: u32) -> (Self, f32) {
+        assert!((2..=16).contains(&bits), "unsupported weight width {bits}");
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let absmax = self
+            .table
+            .iter()
+            .fold(0.0f32, |acc, &x| acc.max(x.abs()))
+            .max(f32::MIN_POSITIVE);
+        let scale = absmax / qmax;
+        let table: Vec<f32> = self
+            .table
+            .iter()
+            .map(|&x| (x / scale).round().clamp(-qmax - 1.0, qmax) * scale)
+            .collect();
+        (
+            Self::from_table(mapping, self.dim, self.rows, table),
+            scale,
+        )
+    }
+
+    /// Worst-case absolute reduction error for a `k`-lookup query at the
+    /// given quantization scale: `k * scale / 2` (each row contributes at
+    /// most half an LSB).
+    pub fn quantization_error_bound(scale: f32, lookups: usize) -> f32 {
+        0.5 * scale * lookups as f32
+    }
+}
+
+/// Seed salt so the store's RNG stream is independent of the trace RNG.
+const EMB_SEED_SALT: u64 = 0x0E1B_ED00_5EED_0001;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grouping::Mapping;
+
+    fn mapping() -> Mapping {
+        Mapping::from_groups(vec![vec![2, 0], vec![1, 3]], 2, 4)
+    }
+
+    #[test]
+    fn tiles_follow_mapping() {
+        let m = mapping();
+        let table: Vec<f32> = (0..4 * 3).map(|i| i as f32).collect(); // D=3
+        let s = EmbeddingStore::from_table(&m, 3, 2, table);
+        // group 0 row 0 = embedding 2 -> [6,7,8]
+        assert_eq!(&s.tile(0)[0..3], &[6.0, 7.0, 8.0]);
+        // group 0 row 1 = embedding 0 -> [0,1,2]
+        assert_eq!(&s.tile(0)[3..6], &[0.0, 1.0, 2.0]);
+        // group 1 row 0 = embedding 1 -> [3,4,5]
+        assert_eq!(&s.tile(1)[0..3], &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn unused_rows_zero() {
+        let m = Mapping::from_groups(vec![vec![0]], 1, 1);
+        let s = EmbeddingStore::from_table(&m, 2, 4, vec![1.0, 2.0]);
+        // rows 1..4 of the tile are zero-padded
+        assert_eq!(&s.tile(0)[2..8], &[0.0; 6]);
+    }
+
+    #[test]
+    fn reference_reduce_sums() {
+        let m = mapping();
+        let table: Vec<f32> = (0..4 * 2).map(|i| i as f32).collect(); // D=2
+        let s = EmbeddingStore::from_table(&m, 2, 2, table);
+        // emb0=[0,1], emb3=[6,7] -> [6,8]
+        assert_eq!(s.reduce_reference(&[0, 3]), vec![6.0, 8.0]);
+        assert_eq!(s.reduce_reference(&[]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn quantized_reduction_within_bound() {
+        let m = Mapping::from_groups(vec![vec![0, 1], vec![2, 3]], 2, 4);
+        let s = EmbeddingStore::random(&m, 16, 2, 7);
+        let (q, scale) = s.quantized(&m, 8);
+        assert!(scale > 0.0);
+        let items = vec![0, 1, 2, 3];
+        let exact = s.reduce_reference(&items);
+        let quant = q.reduce_reference(&items);
+        let bound = EmbeddingStore::quantization_error_bound(scale, items.len());
+        for (a, b) in exact.iter().zip(&quant) {
+            assert!(
+                (a - b).abs() <= bound + 1e-6,
+                "error {} exceeds bound {bound}",
+                (a - b).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_values_on_grid() {
+        let m = Mapping::from_groups(vec![vec![0, 1]], 2, 2);
+        let s = EmbeddingStore::from_table(&m, 2, 2, vec![0.11, -0.5, 0.37, 0.02]);
+        let (q, scale) = s.quantized(&m, 8);
+        for &v in q.embedding(0).iter().chain(q.embedding(1)) {
+            let steps = v / scale;
+            assert!((steps - steps.round()).abs() < 1e-4, "off-grid value {v}");
+        }
+    }
+
+    #[test]
+    fn coarser_quantization_larger_error() {
+        let m = Mapping::from_groups(vec![vec![0, 1], vec![2, 3]], 2, 4);
+        let s = EmbeddingStore::random(&m, 16, 2, 9);
+        let items = vec![0, 1, 2, 3];
+        let exact = s.reduce_reference(&items);
+        let err = |bits: u32| -> f32 {
+            let (q, _) = s.quantized(&m, bits);
+            q.reduce_reference(&items)
+                .iter()
+                .zip(&exact)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max)
+        };
+        assert!(err(4) >= err(8), "4-bit {} vs 8-bit {}", err(4), err(8));
+    }
+
+    #[test]
+    fn random_is_deterministic_and_small() {
+        let m = mapping();
+        let a = EmbeddingStore::random(&m, 8, 2, 1);
+        let b = EmbeddingStore::random(&m, 8, 2, 1);
+        assert_eq!(a.table, b.table);
+        let max = a.table.iter().fold(0.0f32, |acc, &x| acc.max(x.abs()));
+        assert!(max < 1.0, "embedding magnitude {max}");
+    }
+}

@@ -1,0 +1,150 @@
+//! Host-platform energy models for the Fig. 11 comparison.
+//!
+//! The paper measures a CPU-only platform (i7-10700F, MERCI's energy
+//! profiler) and a CPU+GPU platform (RTX 3090, NVML) running the same
+//! embedding reductions, and reports ReCross beating them by ~363x and
+//! ~1144x on energy. Neither machine nor profiler is available here, so
+//! both platforms are modelled analytically from first principles
+//! (DESIGN.md §Substitutions): embedding reduction is memory-bound, so
+//! energy is dominated by data movement —
+//!
+//! * **CPU-only**: every lookup moves one embedding vector over DDR4 and
+//!   accumulates it in core. `E = bits * dram_pj_per_bit + cpu_accum_pj`.
+//! * **CPU+GPU**: embeddings live in host memory (the 4 TB-scale tables of
+//!   real DLRMs do not fit in VRAM); each lookup additionally crosses
+//!   PCIe, then the GPU accumulates. The GPU's higher idle/static draw per
+//!   useful op makes the combined platform *less* efficient for this
+//!   memory-bound stage — matching the paper's CPU+GPU < CPU-only result.
+
+use crate::workload::Trace;
+use crate::xbar::HostParams;
+
+/// Energy/time estimate for a host platform run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostStats {
+    pub energy_pj: f64,
+    pub time_ns: f64,
+    pub lookups: u64,
+}
+
+impl HostStats {
+    pub fn pj_per_lookup(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.energy_pj / self.lookups as f64
+        }
+    }
+}
+
+/// Which host platform to model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostPlatform {
+    /// CPU-only (the paper's i7-10700F + MERCI profiler setup).
+    CpuOnly,
+    /// CPU + discrete GPU over PCIe (the paper's RTX 3090 setup).
+    CpuGpu,
+}
+
+impl HostPlatform {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HostPlatform::CpuOnly => "cpu",
+            HostPlatform::CpuGpu => "cpu+gpu",
+        }
+    }
+}
+
+/// Analytical host energy model.
+#[derive(Debug, Clone)]
+pub struct HostModel {
+    p: HostParams,
+    /// Bits per embedding vector as stored in host memory (fp32 elements —
+    /// hosts don't get the crossbar's 8-bit quantization for free).
+    vector_bits: f64,
+}
+
+impl HostModel {
+    /// `embedding_dim` — features per embedding (host side stores fp32).
+    pub fn new(p: &HostParams, embedding_dim: usize) -> Self {
+        Self {
+            p: p.clone(),
+            vector_bits: (embedding_dim * 32) as f64,
+        }
+    }
+
+    /// Energy of one lookup on a platform.
+    pub fn lookup_pj(&self, platform: HostPlatform) -> f64 {
+        let dram = self.vector_bits * self.p.dram_pj_per_bit;
+        match platform {
+            HostPlatform::CpuOnly => dram + self.p.cpu_accum_pj,
+            HostPlatform::CpuGpu => {
+                dram + self.vector_bits * self.p.pcie_pj_per_bit + self.p.gpu_accum_pj
+            }
+        }
+    }
+
+    /// Run a whole trace. Time model: CPU lookups are serial DRAM random
+    /// accesses with modest MLP overlap (4 in flight); the GPU path
+    /// overlaps better (16) but pays PCIe latency per batch — both remain
+    /// orders of magnitude above the crossbar, as the paper observes.
+    pub fn run_trace(&self, trace: &Trace, platform: HostPlatform) -> HostStats {
+        let lookups = trace.total_lookups() as u64;
+        let energy_pj = lookups as f64 * self.lookup_pj(platform);
+        let overlap = match platform {
+            HostPlatform::CpuOnly => 4.0,
+            HostPlatform::CpuGpu => 16.0,
+        };
+        let time_ns = lookups as f64 * self.p.dram_access_ns / overlap;
+        HostStats {
+            energy_pj,
+            time_ns,
+            lookups,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Query, Trace};
+
+    fn trace() -> Trace {
+        Trace {
+            num_embeddings: 10,
+            queries: vec![Query::new(vec![0, 1, 2]), Query::new(vec![3, 4])],
+        }
+    }
+
+    #[test]
+    fn gpu_platform_less_efficient_per_lookup() {
+        let m = HostModel::new(&HostParams::default(), 16);
+        assert!(m.lookup_pj(HostPlatform::CpuGpu) > m.lookup_pj(HostPlatform::CpuOnly));
+    }
+
+    #[test]
+    fn energy_scales_with_lookups() {
+        let m = HostModel::new(&HostParams::default(), 16);
+        let s = m.run_trace(&trace(), HostPlatform::CpuOnly);
+        assert_eq!(s.lookups, 5);
+        assert!((s.energy_pj - 5.0 * m.lookup_pj(HostPlatform::CpuOnly)).abs() < 1e-9);
+        assert!(s.pj_per_lookup() > 0.0);
+    }
+
+    #[test]
+    fn host_orders_of_magnitude_above_crossbar_cell() {
+        // Fig. 11 sanity: one host lookup must cost >> one crossbar
+        // activation (hundreds of pJ vs the ~10 nJ DDR fetch).
+        use crate::config::HardwareConfig;
+        use crate::xbar::{CircuitParams, CrossbarModel};
+        let host = HostModel::new(&HostParams::default(), 16);
+        let xbar = CrossbarModel::new(&HardwareConfig::default(), &CircuitParams::default());
+        let mac = xbar.activation(8, true); // one activation serves ~8 lookups
+        let host_8 = 8.0 * host.lookup_pj(HostPlatform::CpuOnly);
+        assert!(
+            host_8 > 20.0 * mac.energy_pj,
+            "host {host_8} pJ vs crossbar {} pJ",
+            mac.energy_pj
+        );
+    }
+}

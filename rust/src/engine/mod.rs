@@ -1,0 +1,392 @@
+//! End-to-end embedding-reduction engines.
+//!
+//! An engine bundles the **offline phase** (co-occurrence graph → mapping →
+//! replication plan, §III-A) with the **online phase** (batch scheduling on
+//! the crossbar pool). Four schemes reproduce the paper's comparisons:
+//!
+//! | scheme      | mapping            | duplication | dataflow            | ADC            |
+//! |-------------|--------------------|-------------|---------------------|----------------|
+//! | `naive`     | itemID order       | none        | in-crossbar MAC     | always MAC     |
+//! | `frequency` | frequency order    | none        | in-crossbar MAC     | always MAC     |
+//! | `nmars`     | itemID order       | none        | lookup + serial add | full-res sense |
+//! | `recross`   | Algorithm 1        | Eq. 1 (log) | in-crossbar MAC     | dynamic switch |
+//!
+//! Ablation variants (`recross-nodup`, `recross-noswitch`, `recross-linear`)
+//! support Fig. 10 and the design-choice ablations in DESIGN.md.
+
+use crate::allocation::{self, Replication};
+use crate::config::Config;
+use crate::graph::CoGraph;
+use crate::grouping::{CorrelationMapper, FrequencyMapper, Mapper, Mapping, NaiveMapper};
+use crate::sched::{ExecStats, Scheduler, Scratch};
+use crate::workload::{Query, Trace};
+use crate::xbar::{CircuitParams, CrossbarModel};
+
+/// Scheme selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Baseline: itemID mapping, full-MAC ADC, no duplication.
+    Naive,
+    /// Frequency-sorted mapping (Fig. 9's comparison, cite [33]).
+    Frequency,
+    /// nMARS: parallel in-memory lookups, sequential aggregation.
+    Nmars,
+    /// Full ReCross: Alg. 1 + Eq. 1 duplication + dynamic-switch ADC.
+    ReCross,
+    /// Ablation: ReCross without duplication (Fig. 10 "w/o dup").
+    ReCrossNoDup,
+    /// Ablation: ReCross without the dynamic-switch ADC.
+    ReCrossNoSwitch,
+    /// Ablation: ReCross with naive *linear* copy scaling instead of Eq. 1
+    /// (the left pie chart of Fig. 5).
+    ReCrossLinear,
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Naive => "naive",
+            Scheme::Frequency => "frequency",
+            Scheme::Nmars => "nmars",
+            Scheme::ReCross => "recross",
+            Scheme::ReCrossNoDup => "recross-nodup",
+            Scheme::ReCrossNoSwitch => "recross-noswitch",
+            Scheme::ReCrossLinear => "recross-linear",
+        }
+    }
+
+    /// All paper-figure schemes (Fig. 8 comparison set).
+    pub fn fig8_set() -> [Scheme; 3] {
+        [Scheme::Naive, Scheme::Nmars, Scheme::ReCross]
+    }
+
+    /// Fig. 9 comparison set (activation counts).
+    pub fn fig9_set() -> [Scheme; 3] {
+        [Scheme::Naive, Scheme::Frequency, Scheme::ReCross]
+    }
+}
+
+/// Dataflow executed on the crossbar pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dataflow {
+    /// Multi-row MAC activations, partial sums merged per query.
+    Mac,
+    /// nMARS: per-row lookups + sequential external aggregation.
+    NmarsLookup,
+}
+
+/// A fully prepared engine: offline phase done, ready to serve batches.
+#[derive(Debug)]
+pub struct Engine {
+    scheme: Scheme,
+    mapping: Mapping,
+    replication: Replication,
+    model: CrossbarModel,
+    dynamic_switch: bool,
+    dataflow: Dataflow,
+}
+
+impl Engine {
+    /// Run the offline phase for `scheme` on a lookup history.
+    ///
+    /// `graph` should be built from the *history* trace; the engine is then
+    /// evaluated on a held-out trace (the paper's offline/online split).
+    pub fn prepare(scheme: Scheme, graph: &CoGraph, history: &Trace, cfg: &Config) -> Self {
+        let params = CircuitParams::default();
+        Self::prepare_with_params(scheme, graph, history, cfg, &params)
+    }
+
+    /// As [`Engine::prepare`] with explicit circuit parameters.
+    pub fn prepare_with_params(
+        scheme: Scheme,
+        graph: &CoGraph,
+        history: &Trace,
+        cfg: &Config,
+        params: &CircuitParams,
+    ) -> Self {
+        let group_size = cfg
+            .scheme
+            .group_size
+            .min(cfg.hardware.embeddings_per_xbar());
+        let model = CrossbarModel::new(&cfg.hardware, params);
+
+        let mapping: Mapping = match scheme {
+            Scheme::Naive | Scheme::Nmars => NaiveMapper.map(graph, group_size),
+            Scheme::Frequency => FrequencyMapper.map(graph, group_size),
+            Scheme::ReCross
+            | Scheme::ReCrossNoDup
+            | Scheme::ReCrossNoSwitch
+            | Scheme::ReCrossLinear => CorrelationMapper.map(graph, group_size),
+        };
+
+        let replication = match scheme {
+            Scheme::ReCross | Scheme::ReCrossNoSwitch => {
+                let freqs = allocation::group_frequencies(&mapping, history);
+                allocation::plan_replication(&freqs, cfg.scheme.batch_size, cfg.scheme.dup_ratio)
+            }
+            Scheme::ReCrossLinear => {
+                let freqs = allocation::group_frequencies(&mapping, history);
+                plan_linear(&freqs, cfg.scheme.batch_size, cfg.scheme.dup_ratio)
+            }
+            _ => Replication::identity(mapping.num_groups(), cfg.scheme.batch_size),
+        };
+
+        let dynamic_switch = matches!(
+            scheme,
+            Scheme::ReCross | Scheme::ReCrossNoDup | Scheme::ReCrossLinear
+        ) && cfg.scheme.dynamic_switching
+            && cfg.hardware.dynamic_switch;
+
+        let dataflow = if scheme == Scheme::Nmars {
+            Dataflow::NmarsLookup
+        } else {
+            Dataflow::Mac
+        };
+
+        Self {
+            scheme,
+            mapping,
+            replication,
+            model,
+            dynamic_switch,
+            dataflow,
+        }
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        self.scheme
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.scheme.name()
+    }
+
+    pub fn mapping(&self) -> &Mapping {
+        &self.mapping
+    }
+
+    pub fn replication(&self) -> &Replication {
+        &self.replication
+    }
+
+    pub fn model(&self) -> &CrossbarModel {
+        &self.model
+    }
+
+    /// Physical crossbars used (area proxy).
+    pub fn physical_crossbars(&self) -> usize {
+        self.replication.total_crossbars
+    }
+
+    /// Simulate one batch.
+    pub fn run_batch(&self, queries: &[Query], scratch: &mut Scratch) -> ExecStats {
+        let sched = Scheduler::new(&self.mapping, &self.replication, &self.model, self.dynamic_switch);
+        match self.dataflow {
+            Dataflow::Mac => sched.run_batch(queries, scratch),
+            Dataflow::NmarsLookup => sched.run_batch_nmars(queries, scratch),
+        }
+    }
+
+    /// Simulate a whole trace in `batch_size` batches, summing stats.
+    pub fn run_trace(&self, trace: &Trace, batch_size: usize) -> ExecStats {
+        let mut scratch = Scratch::default();
+        let mut total = ExecStats::default();
+        for batch in trace.batches(batch_size) {
+            let s = self.run_batch(batch, &mut scratch);
+            total.accumulate(&s);
+        }
+        total
+    }
+
+    /// Count crossbar activations for a trace without timing simulation
+    /// (Fig. 9's metric; cheaper than a full run).
+    pub fn count_activations(&self, trace: &Trace) -> u64 {
+        match self.dataflow {
+            // nMARS activates once per lookup.
+            Dataflow::NmarsLookup => trace.total_lookups() as u64,
+            Dataflow::Mac => {
+                let mut scratch = Vec::new();
+                trace
+                    .queries
+                    .iter()
+                    .map(|q| self.mapping.groups_touched(&q.items, &mut scratch) as u64)
+                    .sum()
+            }
+        }
+    }
+}
+
+/// Linear-scaling ablation plan (Fig. 5 left pie): copies proportional to
+/// frequency share, same area budget as the log plan.
+fn plan_linear(freqs: &[u64], batch_size: usize, dup_ratio: f64) -> Replication {
+    let num_groups = freqs.len();
+    let budget = ((num_groups as f64) * dup_ratio).floor() as usize;
+    let fmax = freqs.iter().copied().max().unwrap_or(0);
+    let mut copies = vec![1u32; num_groups];
+    if budget == 0 || fmax == 0 {
+        return Replication {
+            copies,
+            total_crossbars: num_groups,
+            batch_size,
+        };
+    }
+    let desired: Vec<u32> = freqs
+        .iter()
+        .map(|&f| allocation::linear_copies(f, fmax, batch_size as u32))
+        .collect();
+    let mut order: Vec<usize> = (0..num_groups).collect();
+    order.sort_by_key(|&g| std::cmp::Reverse(freqs[g]));
+    // Head-first grant (deliberately NOT round-robin: the point of the
+    // ablation is that linear scaling dumps the whole budget on the head).
+    let mut remaining = budget;
+    for &g in &order {
+        if remaining == 0 {
+            break;
+        }
+        let want = (desired[g] - 1).min(remaining as u32);
+        copies[g] += want;
+        remaining -= want as usize;
+    }
+    let total = copies.iter().map(|&c| c as usize).sum();
+    Replication {
+        copies,
+        total_crossbars: total,
+        batch_size,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate, DatasetSpec};
+
+    fn setup() -> (CoGraph, Trace, Trace, Config) {
+        let spec = DatasetSpec::by_name("software").unwrap().scaled(0.1);
+        let (history, eval) = generate(&spec, 600, 200, 42);
+        let graph = CoGraph::build(&history);
+        let mut cfg = Config::paper_default();
+        cfg.scheme.batch_size = 64;
+        (graph, history, eval, cfg)
+    }
+
+    #[test]
+    fn recross_beats_naive_on_activations() {
+        let (graph, history, eval, cfg) = setup();
+        let naive = Engine::prepare(Scheme::Naive, &graph, &history, &cfg);
+        let recross = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let a_naive = naive.count_activations(&eval);
+        let a_re = recross.count_activations(&eval);
+        assert!(
+            (a_naive as f64) / (a_re as f64) > 2.0,
+            "activation reduction only {}x ({a_naive} vs {a_re})",
+            a_naive as f64 / a_re as f64
+        );
+    }
+
+    #[test]
+    fn recross_beats_baselines_on_time_and_energy() {
+        let (graph, history, eval, cfg) = setup();
+        let naive = Engine::prepare(Scheme::Naive, &graph, &history, &cfg);
+        let nmars = Engine::prepare(Scheme::Nmars, &graph, &history, &cfg);
+        let recross = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let bs = cfg.scheme.batch_size;
+        let s_naive = naive.run_trace(&eval, bs);
+        let s_nmars = nmars.run_trace(&eval, bs);
+        let s_re = recross.run_trace(&eval, bs);
+        assert!(
+            s_re.completion_ns < s_naive.completion_ns,
+            "recross {} >= naive {}",
+            s_re.completion_ns,
+            s_naive.completion_ns
+        );
+        assert!(s_re.completion_ns < s_nmars.completion_ns);
+        assert!(s_re.energy_pj < s_naive.energy_pj);
+        assert!(s_re.energy_pj < s_nmars.energy_pj);
+    }
+
+    #[test]
+    fn frequency_between_naive_and_recross() {
+        let (graph, history, eval, cfg) = setup();
+        let naive = Engine::prepare(Scheme::Naive, &graph, &history, &cfg);
+        let freq = Engine::prepare(Scheme::Frequency, &graph, &history, &cfg);
+        let recross = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let a_naive = naive.count_activations(&eval);
+        let a_freq = freq.count_activations(&eval);
+        let a_re = recross.count_activations(&eval);
+        assert!(a_re < a_freq, "recross {a_re} !< freq {a_freq}");
+        assert!(a_freq <= a_naive, "freq {a_freq} !<= naive {a_naive}");
+    }
+
+    #[test]
+    fn duplication_helps_completion_time() {
+        let (graph, history, eval, cfg) = setup();
+        let full = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let nodup = Engine::prepare(Scheme::ReCrossNoDup, &graph, &history, &cfg);
+        let bs = cfg.scheme.batch_size;
+        let s_full = full.run_trace(&eval, bs);
+        let s_nodup = nodup.run_trace(&eval, bs);
+        assert!(full.physical_crossbars() > nodup.physical_crossbars());
+        assert!(
+            s_full.completion_ns <= s_nodup.completion_ns,
+            "duplication did not help: {} vs {}",
+            s_full.completion_ns,
+            s_nodup.completion_ns
+        );
+        // same activations & lookups — duplication changes placement only
+        assert_eq!(s_full.lookups, s_nodup.lookups);
+    }
+
+    #[test]
+    fn dynamic_switch_saves_energy_only() {
+        let (graph, history, eval, cfg) = setup();
+        let on = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let off = Engine::prepare(Scheme::ReCrossNoSwitch, &graph, &history, &cfg);
+        let bs = cfg.scheme.batch_size;
+        let s_on = on.run_trace(&eval, bs);
+        let s_off = off.run_trace(&eval, bs);
+        assert_eq!(s_on.activations, s_off.activations);
+        assert!(s_on.energy_pj < s_off.energy_pj);
+        assert_eq!(s_off.read_activations, 0);
+        assert!(s_on.read_activations > 0);
+    }
+
+    #[test]
+    fn area_budget_respected_for_all_dup_schemes() {
+        let (graph, history, _eval, mut cfg) = setup();
+        for ratio in [0.0, 0.05, 0.1, 0.2] {
+            cfg.scheme.dup_ratio = ratio;
+            for scheme in [Scheme::ReCross, Scheme::ReCrossLinear] {
+                let e = Engine::prepare(scheme, &graph, &history, &cfg);
+                assert!(
+                    e.replication().area_overhead() <= ratio + 1e-9,
+                    "{:?} at ratio {ratio}: overhead {}",
+                    scheme,
+                    e.replication().area_overhead()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn log_plan_spreads_budget_wider_than_linear() {
+        let (graph, history, _eval, cfg) = setup();
+        let log_e = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let lin_e = Engine::prepare(Scheme::ReCrossLinear, &graph, &history, &cfg);
+        // Same budget, but Eq. 1 duplicates more distinct groups (Fig. 5).
+        assert!(
+            log_e.replication().duplicated_groups() >= lin_e.replication().duplicated_groups(),
+            "log {} vs linear {}",
+            log_e.replication().duplicated_groups(),
+            lin_e.replication().duplicated_groups()
+        );
+    }
+
+    #[test]
+    fn nmars_activations_equal_lookups() {
+        let (graph, history, eval, cfg) = setup();
+        let nmars = Engine::prepare(Scheme::Nmars, &graph, &history, &cfg);
+        assert_eq!(nmars.count_activations(&eval), eval.total_lookups() as u64);
+        let stats = nmars.run_trace(&eval, cfg.scheme.batch_size);
+        assert_eq!(stats.activations, eval.total_lookups() as u64);
+    }
+}

@@ -1,0 +1,259 @@
+//! Co-occurrence list and graph (paper §III-A steps ① and ②).
+//!
+//! From the embedding-lookup history, ReCross derives
+//! * the **access frequency** of every embedding, and
+//! * a **co-occurrence graph**: nodes are embeddings, an edge `(a, b)`
+//!   weighted by how many queries accessed `a` and `b` together.
+//!
+//! The graph is materialised in CSR-like form (a sorted neighbor array per
+//! node) after a hash-map accumulation pass, so that the grouping
+//! algorithm's inner loop (`neighbors(e)`, `weight(a, b)`) is
+//! allocation-free.
+//!
+//! Long queries would contribute O(len²) pairs (Sports averages 96
+//! lookups → 4.5k pairs per query); a deterministic per-query pair cap
+//! subsamples pairs of very long queries to bound build cost, which
+//! preserves the heavy co-occurrence structure (hot pairs recur across
+//! many queries and survive sampling).
+
+use crate::util::{FxHashMap, Rng};
+use crate::workload::Trace;
+
+/// Default cap on sampled pairs per query.
+pub const DEFAULT_PAIR_CAP: usize = 1024;
+
+/// Co-occurrence graph over embeddings.
+#[derive(Debug, Clone)]
+pub struct CoGraph {
+    /// Number of nodes (embedding-table rows).
+    n: usize,
+    /// CSR offsets: neighbors of node `v` are `adj[off[v]..off[v+1]]`.
+    off: Vec<usize>,
+    /// `(neighbor, weight)` sorted by neighbor id within each node.
+    adj: Vec<(u32, u32)>,
+    /// Per-embedding access frequency over the history trace.
+    freq: Vec<u64>,
+}
+
+impl CoGraph {
+    /// Build from a history trace with the default pair cap.
+    pub fn build(trace: &Trace) -> Self {
+        Self::build_capped(trace, DEFAULT_PAIR_CAP, 0x9E3779B9)
+    }
+
+    /// Build with an explicit per-query pair cap and sampling seed.
+    pub fn build_capped(trace: &Trace, pair_cap: usize, seed: u64) -> Self {
+        let n = trace.num_embeddings as usize;
+        let mut freq = vec![0u64; n];
+        // FxHash + generous pre-size: this map sees tens of millions of
+        // ops on self-generated keys (§Perf iteration 1).
+        let mut pairs: FxHashMap<u64, u32> = FxHashMap::default();
+        pairs.reserve(trace.queries.len().saturating_mul(pair_cap / 2));
+        let mut rng = Rng::new(seed);
+
+        for q in &trace.queries {
+            for &it in &q.items {
+                freq[it as usize] += 1;
+            }
+            let len = q.items.len();
+            if len < 2 {
+                continue;
+            }
+            let total_pairs = len * (len - 1) / 2;
+            if total_pairs <= pair_cap {
+                for i in 0..len {
+                    for j in (i + 1)..len {
+                        *pairs.entry(key(q.items[i], q.items[j])).or_insert(0) += 1;
+                    }
+                }
+            } else {
+                // Deterministic subsample of `pair_cap` random pairs.
+                // Weight each sampled pair by total/cap so accumulated
+                // weights stay on the same scale as exact counting.
+                let w = (total_pairs as f64 / pair_cap as f64).round().max(1.0) as u32;
+                for _ in 0..pair_cap {
+                    let i = rng.index(len);
+                    let mut j = rng.index(len - 1);
+                    if j >= i {
+                        j += 1;
+                    }
+                    *pairs.entry(key(q.items[i], q.items[j])).or_insert(0) += w;
+                }
+            }
+        }
+
+        // Degree count -> CSR.
+        let mut deg = vec![0usize; n];
+        for k in pairs.keys() {
+            let (a, b) = unkey(*k);
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut off = vec![0usize; n + 1];
+        for v in 0..n {
+            off[v + 1] = off[v] + deg[v];
+        }
+        let mut adj = vec![(0u32, 0u32); off[n]];
+        let mut cursor = off[..n].to_vec();
+        for (&k, &w) in &pairs {
+            let (a, b) = unkey(k);
+            adj[cursor[a as usize]] = (b, w);
+            cursor[a as usize] += 1;
+            adj[cursor[b as usize]] = (a, w);
+            cursor[b as usize] += 1;
+        }
+        for v in 0..n {
+            adj[off[v]..off[v + 1]].sort_unstable_by_key(|&(nb, _)| nb);
+        }
+        Self { n, off, adj, freq }
+    }
+
+    /// Number of nodes.
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    /// Access frequency of an embedding over the history.
+    pub fn freq(&self, v: u32) -> u64 {
+        self.freq[v as usize]
+    }
+
+    /// All access frequencies.
+    pub fn freqs(&self) -> &[u64] {
+        &self.freq
+    }
+
+    /// Neighbors of `v` as `(neighbor, weight)`, sorted by neighbor id.
+    pub fn neighbors(&self, v: u32) -> &[(u32, u32)] {
+        &self.adj[self.off[v as usize]..self.off[v as usize + 1]]
+    }
+
+    /// Co-occurrence degree (number of distinct co-accessed embeddings) —
+    /// the quantity of the paper's Fig. 2.
+    pub fn degree(&self, v: u32) -> usize {
+        self.neighbors(v).len()
+    }
+
+    /// Edge weight between `a` and `b` (0 when not adjacent).
+    pub fn weight(&self, a: u32, b: u32) -> u32 {
+        let ns = self.neighbors(a);
+        match ns.binary_search_by_key(&b, |&(nb, _)| nb) {
+            Ok(i) => ns[i].1,
+            Err(_) => 0,
+        }
+    }
+
+    /// Embedding ids sorted by descending access frequency (ties by id) —
+    /// the `sorted(embeddingList)` of Algorithm 1.
+    pub fn ids_by_frequency(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = (0..self.n as u32).collect();
+        ids.sort_by_key(|&v| (std::cmp::Reverse(self.freq[v as usize]), v));
+        ids
+    }
+
+    /// Degrees of all nodes (Fig. 2's y-axis data).
+    pub fn degrees(&self) -> Vec<u64> {
+        (0..self.n as u32).map(|v| self.degree(v) as u64).collect()
+    }
+}
+
+#[inline]
+fn key(a: u32, b: u32) -> u64 {
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    ((lo as u64) << 32) | hi as u64
+}
+
+#[inline]
+fn unkey(k: u64) -> (u32, u32) {
+    ((k >> 32) as u32, k as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Query;
+
+    fn trace(queries: Vec<Vec<u32>>) -> Trace {
+        Trace {
+            num_embeddings: 16,
+            queries: queries.into_iter().map(Query::new).collect(),
+        }
+    }
+
+    #[test]
+    fn weights_count_co_access() {
+        let g = CoGraph::build(&trace(vec![vec![0, 1, 2], vec![0, 1], vec![3]]));
+        assert_eq!(g.weight(0, 1), 2);
+        assert_eq!(g.weight(1, 0), 2);
+        assert_eq!(g.weight(0, 2), 1);
+        assert_eq!(g.weight(1, 2), 1);
+        assert_eq!(g.weight(0, 3), 0);
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn freq_and_degree() {
+        let g = CoGraph::build(&trace(vec![vec![0, 1, 2], vec![0, 1], vec![0]]));
+        assert_eq!(g.freq(0), 3);
+        assert_eq!(g.freq(1), 2);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(3), 0);
+    }
+
+    #[test]
+    fn neighbors_sorted() {
+        let g = CoGraph::build(&trace(vec![vec![5, 1, 9, 3]]));
+        let ns = g.neighbors(5);
+        let ids: Vec<u32> = ns.iter().map(|&(n, _)| n).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+        assert_eq!(ids, vec![1, 3, 9]);
+    }
+
+    #[test]
+    fn ids_by_frequency_desc() {
+        let g = CoGraph::build(&trace(vec![vec![2, 3], vec![2], vec![2, 3], vec![7]]));
+        let ids = g.ids_by_frequency();
+        assert_eq!(ids[0], 2); // freq 3
+        assert_eq!(ids[1], 3); // freq 2
+        assert_eq!(ids[2], 7); // freq 1
+    }
+
+    #[test]
+    fn singleton_queries_add_no_edges() {
+        let g = CoGraph::build(&trace(vec![vec![1], vec![2], vec![3]]));
+        assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn capped_build_preserves_hot_pairs() {
+        // One very long query repeated; cap forces sampling but the hot
+        // pair (0,1) also appears in many short queries and must dominate.
+        let mut qs = vec![(0..60).collect::<Vec<u32>>(); 4];
+        for _ in 0..50 {
+            qs.push(vec![0, 1]);
+        }
+        let t = Trace {
+            num_embeddings: 64,
+            queries: qs.into_iter().map(Query::new).collect(),
+        };
+        let g = CoGraph::build_capped(&t, 100, 1);
+        assert!(g.weight(0, 1) >= 50);
+        // weight(0,1) must exceed weight between two arbitrary cold items
+        assert!(g.weight(0, 1) > g.weight(40, 41));
+    }
+
+    #[test]
+    fn deterministic_capped_build() {
+        let t = trace(vec![(0..12).collect(), (0..12).collect()]);
+        let a = CoGraph::build_capped(&t, 10, 7);
+        let b = CoGraph::build_capped(&t, 10, 7);
+        assert_eq!(a.adj, b.adj);
+    }
+}

@@ -1,0 +1,246 @@
+//! Correlation-aware embedding grouping — paper §III-B, Algorithm 1.
+//!
+//! Walks the embedding list in descending access-frequency order. Each
+//! ungrouped embedding seeds a new group; a candidate pool is maintained as
+//! the union of the neighborhoods of all current group members, and the
+//! candidate with the **highest co-occurrence weight to the group** is
+//! merged until the group reaches `group_size` ("edges connected to merged
+//! embeddings are preserved" — weights accumulate as members join).
+//!
+//! Complexity: every edge is relaxed at most once per endpoint membership,
+//! and the max-weight candidate is found with a lazy binary heap, so the
+//! whole pass is `O(E log E)` — fast enough for the ~1M-node Sports
+//! catalogue.
+//!
+//! Embeddings with no (remaining) neighbors are packed at the end in
+//! frequency order, matching the algorithm's fallthrough where
+//! `candidateList` never yields a usable candidate.
+
+use super::{Mapper, Mapping};
+use crate::graph::CoGraph;
+use crate::util::FxHashMap;
+use std::collections::BinaryHeap;
+
+/// Algorithm 1 mapper.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CorrelationMapper;
+
+impl Mapper for CorrelationMapper {
+    fn name(&self) -> &'static str {
+        "recross"
+    }
+
+    fn map(&self, graph: &CoGraph, group_size: usize) -> Mapping {
+        assert!(group_size > 0);
+        let n = graph.num_nodes();
+        let mut grouped = vec![false; n];
+        let mut groups: Vec<Vec<u32>> = Vec::with_capacity(n.div_ceil(group_size));
+
+        // Reusable per-group state (cleared between groups).
+        // candidate weight-to-group; lazy max-heap of (weight, candidate).
+        let mut cand_weight: FxHashMap<u32, u64> = FxHashMap::default();
+        let mut heap: BinaryHeap<(u64, u32)> = BinaryHeap::new();
+
+        let order = graph.ids_by_frequency();
+        for &seed in &order {
+            if grouped[seed as usize] {
+                continue;
+            }
+            // --- start a new group at `seed` ---
+            let mut group = Vec::with_capacity(group_size);
+            group.push(seed);
+            grouped[seed as usize] = true;
+            cand_weight.clear();
+            heap.clear();
+            relax_neighbors(graph, seed, &grouped, &mut cand_weight, &mut heap);
+
+            while group.len() < group_size {
+                // Pop until a live entry: current weight matches and the
+                // candidate is still ungrouped (lazy deletion).
+                let mut best: Option<u32> = None;
+                while let Some((w, c)) = heap.pop() {
+                    if !grouped[c as usize] && cand_weight.get(&c) == Some(&w) {
+                        best = Some(c);
+                        break;
+                    }
+                }
+                let Some(chosen) = best else {
+                    break; // candidate list exhausted (Alg. 1 line 10 miss)
+                };
+                group.push(chosen);
+                grouped[chosen as usize] = true;
+                cand_weight.remove(&chosen);
+                relax_neighbors(graph, chosen, &grouped, &mut cand_weight, &mut heap);
+            }
+            groups.push(group);
+        }
+
+        // Compact trailing partial groups of isolated embeddings: the loop
+        // above creates one group per isolated seed; merge them so cold
+        // singletons don't each burn a whole crossbar.
+        let groups = compact_partial_groups(groups, group_size);
+        Mapping::from_groups(groups, group_size, n)
+    }
+}
+
+/// Add/update the group's candidate pool with `v`'s neighborhood
+/// (Alg. 1 lines 6–8 and 16: `Merge(candidateList, neighbors(...))`).
+fn relax_neighbors(
+    graph: &CoGraph,
+    v: u32,
+    grouped: &[bool],
+    cand_weight: &mut FxHashMap<u32, u64>,
+    heap: &mut BinaryHeap<(u64, u32)>,
+) {
+    for &(nb, w) in graph.neighbors(v) {
+        if grouped[nb as usize] {
+            continue;
+        }
+        let entry = cand_weight.entry(nb).or_insert(0);
+        *entry += w as u64;
+        heap.push((*entry, nb));
+    }
+}
+
+/// Greedily merge under-filled groups (first-fit-decreasing) so that only
+/// the final group may be partial. Keeps full groups untouched: member
+/// order (and hence crossbar rows) of well-correlated groups is preserved.
+fn compact_partial_groups(groups: Vec<Vec<u32>>, group_size: usize) -> Vec<Vec<u32>> {
+    let (full, partial): (Vec<_>, Vec<_>) =
+        groups.into_iter().partition(|g| g.len() == group_size);
+    let mut out = full;
+    let mut members: Vec<u32> = Vec::new();
+    for g in partial {
+        members.extend(g);
+    }
+    for chunk in members.chunks(group_size) {
+        out.push(chunk.to_vec());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Query, Trace};
+
+    fn build(queries: Vec<Vec<u32>>, n: u32) -> CoGraph {
+        CoGraph::build(&Trace {
+            num_embeddings: n,
+            queries: queries.into_iter().map(Query::new).collect(),
+        })
+    }
+
+    #[test]
+    fn co_accessed_items_share_group() {
+        // Two disjoint hot cliques {0,1,2,3} and {4,5,6,7}.
+        let mut qs = Vec::new();
+        for _ in 0..10 {
+            qs.push(vec![0, 1, 2, 3]);
+            qs.push(vec![4, 5, 6, 7]);
+        }
+        let g = build(qs, 8);
+        let m = CorrelationMapper.map(&g, 4);
+        let ga = m.slot_of(0).group;
+        for e in 1..4 {
+            assert_eq!(m.slot_of(e).group, ga, "clique A split");
+        }
+        let gb = m.slot_of(4).group;
+        for e in 5..8 {
+            assert_eq!(m.slot_of(e).group, gb, "clique B split");
+        }
+        assert_ne!(ga, gb);
+    }
+
+    #[test]
+    fn stronger_edges_win() {
+        // 0 co-occurs with 1 nine times, with 2 once; group size 2 must
+        // pair 0 with 1.
+        let mut qs = vec![vec![0, 2]];
+        for _ in 0..9 {
+            qs.push(vec![0, 1]);
+        }
+        let g = build(qs, 4);
+        let m = CorrelationMapper.map(&g, 2);
+        assert_eq!(m.slot_of(0).group, m.slot_of(1).group);
+        assert_ne!(m.slot_of(0).group, m.slot_of(2).group);
+    }
+
+    #[test]
+    fn weight_to_group_accumulates() {
+        // 3 is weakly tied to 0 but strongly to {1,2} combined; after
+        // {0,1,2} are grouped, 3's accumulated weight must pull it in
+        // before the unrelated 4 (tied to 0 with the same single-edge
+        // weight as 3).
+        let mut qs = Vec::new();
+        for _ in 0..10 {
+            qs.push(vec![0, 1, 2]);
+        }
+        qs.push(vec![0, 3]);
+        qs.push(vec![1, 3]);
+        qs.push(vec![2, 3]);
+        qs.push(vec![0, 4]);
+        let g = build(qs, 6);
+        let m = CorrelationMapper.map(&g, 4);
+        let grp = m.slot_of(0).group;
+        assert_eq!(m.slot_of(3).group, grp, "3 should join via accumulated weight");
+        assert_ne!(m.slot_of(4).group, grp);
+    }
+
+    #[test]
+    fn all_embeddings_grouped_once() {
+        let mut qs = Vec::new();
+        for i in 0..20u32 {
+            qs.push(vec![i % 40, (i * 7) % 40, (i * 13) % 40]);
+        }
+        let g = build(qs, 40);
+        let m = CorrelationMapper.map(&g, 8);
+        // from_groups() already asserts coverage + uniqueness; check sizes.
+        assert!(m.groups.iter().all(|grp| grp.len() <= 8));
+        let placed: usize = m.groups.iter().map(Vec::len).sum();
+        assert_eq!(placed, 40);
+    }
+
+    #[test]
+    fn isolated_embeddings_compact() {
+        // No edges at all: groups should still be ~full, not one-per-seed.
+        let g = build(vec![vec![0], vec![1], vec![2]], 100);
+        let m = CorrelationMapper.map(&g, 10);
+        assert_eq!(m.num_groups(), 10);
+    }
+
+    #[test]
+    fn fewer_groups_touched_than_naive() {
+        // End-to-end sanity: on a clustered workload, Algorithm 1 must
+        // touch far fewer crossbars per query than naive mapping.
+        use crate::grouping::{Mapper, NaiveMapper};
+        use crate::util::Rng;
+        let mut rng = Rng::new(3);
+        let mut qs = Vec::new();
+        for _ in 0..300 {
+            // cluster c occupies ids {c, c+50, c+100, ...}: scattered in id
+            // space, coherent in co-occurrence.
+            let c = rng.below(50) as u32;
+            let items: Vec<u32> = (0..8).map(|k| c + 50 * k).collect();
+            qs.push(items);
+        }
+        let g = build(qs.clone(), 400);
+        let recross = CorrelationMapper.map(&g, 8);
+        let naive = NaiveMapper.map(&g, 8);
+        let mut scratch = Vec::new();
+        let act = |m: &Mapping, scratch: &mut Vec<u32>| -> usize {
+            qs.iter()
+                .map(|q| {
+                    let query = Query::new(q.clone());
+                    m.groups_touched(&query.items, scratch)
+                })
+                .sum()
+        };
+        let a_re = act(&recross, &mut scratch);
+        let a_nv = act(&naive, &mut scratch);
+        assert!(
+            a_re * 4 <= a_nv,
+            "recross {a_re} activations vs naive {a_nv}: expected >=4x reduction"
+        );
+    }
+}

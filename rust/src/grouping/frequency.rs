@@ -1,0 +1,66 @@
+//! Frequency-based mapping — the Fig. 9 comparison point (paper cite [33]).
+//!
+//! Embeddings are sorted by descending access frequency and packed
+//! consecutively. Hot embeddings end up co-located, which helps a little
+//! (hot items do co-occur with other hot items more than uniformly), but
+//! the strategy is blind to the actual co-occurrence structure, so most of
+//! a query still scatters.
+
+use super::{Mapper, Mapping};
+use crate::graph::CoGraph;
+
+/// Access-frequency-order mapper.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FrequencyMapper;
+
+impl Mapper for FrequencyMapper {
+    fn name(&self) -> &'static str {
+        "frequency"
+    }
+
+    fn map(&self, graph: &CoGraph, group_size: usize) -> Mapping {
+        assert!(group_size > 0);
+        let n = graph.num_nodes();
+        let ids = graph.ids_by_frequency();
+        let mut groups = Vec::with_capacity(n.div_ceil(group_size));
+        for chunk in ids.chunks(group_size) {
+            groups.push(chunk.to_vec());
+        }
+        Mapping::from_groups(groups, group_size, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Query, Trace};
+
+    #[test]
+    fn hot_embeddings_first() {
+        // item 7 hottest, then 3, then the rest.
+        let mut queries = vec![Query::new(vec![7, 3])];
+        for _ in 0..5 {
+            queries.push(Query::new(vec![7]));
+        }
+        queries.push(Query::new(vec![3]));
+        let g = CoGraph::build(&Trace {
+            num_embeddings: 10,
+            queries,
+        });
+        let m = FrequencyMapper.map(&g, 4);
+        assert_eq!(m.groups[0][0], 7);
+        assert_eq!(m.groups[0][1], 3);
+        assert_eq!(m.num_groups(), 3);
+    }
+
+    #[test]
+    fn covers_all_embeddings() {
+        let g = CoGraph::build(&Trace {
+            num_embeddings: 13,
+            queries: vec![Query::new(vec![0, 1])],
+        });
+        let m = FrequencyMapper.map(&g, 5);
+        let placed: usize = m.groups.iter().map(Vec::len).sum();
+        assert_eq!(placed, 13);
+    }
+}

@@ -1,0 +1,161 @@
+//! Embeddings-to-crossbar mapping strategies (paper §III-A step ③).
+//!
+//! A [`Mapping`] assigns every embedding to a `(group, row)` slot, where a
+//! group corresponds to one crossbar's worth of rows. Three strategies are
+//! implemented:
+//!
+//! * [`naive::NaiveMapper`] — the paper's baseline: consecutive item ids
+//!   fill consecutive crossbars.
+//! * [`frequency::FrequencyMapper`] — the frequency-based strategy the
+//!   paper compares against in Fig. 9 (cite [33]): sort by access
+//!   frequency, pack consecutively.
+//! * [`correlation::CorrelationMapper`] — ReCross's correlation-aware
+//!   grouping (Algorithm 1) over the co-occurrence graph.
+
+pub mod correlation;
+pub mod frequency;
+pub mod naive;
+
+pub use correlation::CorrelationMapper;
+pub use frequency::FrequencyMapper;
+pub use naive::NaiveMapper;
+
+use crate::graph::CoGraph;
+use crate::workload::EmbeddingId;
+
+/// Location of one embedding inside the crossbar pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slot {
+    /// Group index == logical crossbar index (before replication).
+    pub group: u32,
+    /// Row (wordline) within the crossbar.
+    pub row: u16,
+}
+
+/// A complete embeddings-to-crossbar assignment.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    /// Rows per crossbar used by this mapping.
+    pub group_size: usize,
+    /// Members of each group, in row order.
+    pub groups: Vec<Vec<EmbeddingId>>,
+    /// Slot of every embedding (indexed by embedding id).
+    pub slot: Vec<Slot>,
+}
+
+impl Mapping {
+    /// Build the reverse index from a group list (validates coverage).
+    pub fn from_groups(groups: Vec<Vec<EmbeddingId>>, group_size: usize, n: usize) -> Self {
+        let mut slot = vec![
+            Slot {
+                group: u32::MAX,
+                row: 0
+            };
+            n
+        ];
+        for (g, members) in groups.iter().enumerate() {
+            assert!(
+                members.len() <= group_size,
+                "group {g} has {} members > group_size {group_size}",
+                members.len()
+            );
+            for (r, &e) in members.iter().enumerate() {
+                let s = &mut slot[e as usize];
+                assert_eq!(s.group, u32::MAX, "embedding {e} placed twice");
+                *s = Slot {
+                    group: g as u32,
+                    row: r as u16,
+                };
+            }
+        }
+        assert!(
+            slot.iter().all(|s| s.group != u32::MAX),
+            "not all embeddings placed"
+        );
+        Self {
+            group_size,
+            groups,
+            slot,
+        }
+    }
+
+    /// Number of groups (== logical crossbars before replication).
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Number of embeddings placed.
+    pub fn num_embeddings(&self) -> usize {
+        self.slot.len()
+    }
+
+    /// Slot of an embedding.
+    #[inline]
+    pub fn slot_of(&self, e: EmbeddingId) -> Slot {
+        self.slot[e as usize]
+    }
+
+    /// Distinct groups touched by a query — the crossbar *activations* this
+    /// query costs (Fig. 9's metric), assuming one activation per touched
+    /// crossbar.
+    pub fn groups_touched(&self, items: &[EmbeddingId], scratch: &mut Vec<u32>) -> usize {
+        scratch.clear();
+        scratch.extend(items.iter().map(|&e| self.slot[e as usize].group));
+        scratch.sort_unstable();
+        scratch.dedup();
+        scratch.len()
+    }
+}
+
+/// A mapping strategy.
+pub trait Mapper {
+    /// Human-readable name used in reports.
+    fn name(&self) -> &'static str;
+
+    /// Produce a mapping for all embeddings of `graph` with `group_size`
+    /// rows per crossbar.
+    fn map(&self, graph: &CoGraph, group_size: usize) -> Mapping;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_groups_builds_reverse_index() {
+        let m = Mapping::from_groups(vec![vec![2, 0], vec![1, 3]], 2, 4);
+        assert_eq!(m.slot_of(2), Slot { group: 0, row: 0 });
+        assert_eq!(m.slot_of(0), Slot { group: 0, row: 1 });
+        assert_eq!(m.slot_of(1), Slot { group: 1, row: 0 });
+        assert_eq!(m.slot_of(3), Slot { group: 1, row: 1 });
+        assert_eq!(m.num_groups(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "placed twice")]
+    fn duplicate_placement_panics() {
+        Mapping::from_groups(vec![vec![0, 0]], 2, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not all embeddings placed")]
+    fn missing_placement_panics() {
+        Mapping::from_groups(vec![vec![0]], 2, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "group_size")]
+    fn oversized_group_panics() {
+        Mapping::from_groups(vec![vec![0, 1, 2]], 2, 3);
+    }
+
+    #[test]
+    fn groups_touched_counts_distinct() {
+        let m = Mapping::from_groups(vec![vec![0, 1], vec![2, 3]], 2, 4);
+        let mut scratch = Vec::new();
+        assert_eq!(m.groups_touched(&[0, 1], &mut scratch), 1);
+        assert_eq!(m.groups_touched(&[0, 2], &mut scratch), 2);
+        assert_eq!(m.groups_touched(&[0, 1, 2, 3], &mut scratch), 2);
+        assert_eq!(m.groups_touched(&[], &mut scratch), 0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Naive mapping — the paper's baseline.
+//!
+//! "intuitively mapping the embeddings to crossbar based on the original
+//! itemID" (§IV-B): item `i` goes to group `i / group_size`, row
+//! `i % group_size`. Because item ids carry no locality (catalogue ids are
+//! essentially hashes with respect to co-purchase structure), a query's
+//! items scatter across many crossbars.
+
+use super::{Mapper, Mapping};
+use crate::graph::CoGraph;
+
+/// ItemID-order mapper.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NaiveMapper;
+
+impl Mapper for NaiveMapper {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn map(&self, graph: &CoGraph, group_size: usize) -> Mapping {
+        assert!(group_size > 0);
+        let n = graph.num_nodes();
+        let mut groups = Vec::with_capacity(n.div_ceil(group_size));
+        let mut current = Vec::with_capacity(group_size);
+        for e in 0..n as u32 {
+            current.push(e);
+            if current.len() == group_size {
+                groups.push(std::mem::take(&mut current));
+            }
+        }
+        if !current.is_empty() {
+            groups.push(current);
+        }
+        Mapping::from_groups(groups, group_size, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Query, Trace};
+
+    fn graph(n: u32) -> CoGraph {
+        CoGraph::build(&Trace {
+            num_embeddings: n,
+            queries: vec![Query::new(vec![0])],
+        })
+    }
+
+    #[test]
+    fn packs_by_id() {
+        let m = NaiveMapper.map(&graph(10), 4);
+        assert_eq!(m.groups.len(), 3);
+        assert_eq!(m.groups[0], vec![0, 1, 2, 3]);
+        assert_eq!(m.groups[2], vec![8, 9]);
+        assert_eq!(m.slot_of(5).group, 1);
+        assert_eq!(m.slot_of(5).row, 1);
+    }
+
+    #[test]
+    fn exact_multiple_has_full_groups() {
+        let m = NaiveMapper.map(&graph(8), 4);
+        assert_eq!(m.groups.len(), 2);
+        assert!(m.groups.iter().all(|g| g.len() == 4));
+    }
+}

@@ -1,0 +1,45 @@
+//! # ReCross — efficient embedding reduction for ReRAM-crossbar in-memory computing
+//!
+//! Reproduction of *"ReCross: Efficient Embedding Reduction Scheme for In-Memory
+//! Computing using ReRAM-Based Crossbar"* (Lai et al., 2025).
+//!
+//! ReCross accelerates the DLRM embedding-reduction stage (gather + sum over a
+//! sparse set of embedding rows) by computing it *inside* ReRAM crossbar arrays
+//! as multiply-and-accumulate (MAC) operations, co-optimizing the
+//! embeddings-to-crossbar mapping against the workload's access patterns:
+//!
+//! 1. **Correlation-aware embedding grouping** ([`grouping::correlation`],
+//!    paper §III-B / Algorithm 1) — a co-occurrence graph built from lookup
+//!    history drives greedy packing of co-accessed embeddings into the same
+//!    crossbar, so one activation serves many lookups of a query.
+//! 2. **Access-aware crossbar allocation** ([`allocation`], §III-C / Eq. 1) —
+//!    hot crossbars are replicated with *log-scaled* copy counts to break
+//!    power-law contention at bounded area overhead.
+//! 3. **Energy-aware dynamic switching** ([`xbar::adc`], §III-D) — a
+//!    dynamic-switch flash ADC driven by a popcount circuit serves
+//!    single-embedding activations in cheap *read mode* instead of paying for
+//!    a full MAC conversion.
+//!
+//! The crate is organised as the L3 coordinator of a three-layer stack:
+//! the analog crossbar's *cost* is simulated by a NeuroSim-style circuit
+//! model ([`xbar`]), while the *numerics* of the reduction run as an
+//! AOT-compiled JAX/Pallas computation loaded through PJRT ([`runtime`]).
+//! See `DESIGN.md` for the full inventory and experiment index.
+
+pub mod allocation;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod engine;
+pub mod graph;
+pub mod grouping;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod util;
+pub mod workload;
+pub mod xbar;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

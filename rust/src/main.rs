@@ -1,0 +1,290 @@
+//! `recross` launcher: offline-phase tooling, report harness, and the
+//! serving demo, wired through the in-tree CLI parser.
+//!
+//! ```text
+//! recross report --figure <fig2|fig4|fig5|fig6|fig8|fig9|fig10|fig11|table1|all|ablation>
+//! recross generate   --dataset software --out trace.rxtr
+//! recross analyze    <trace.rxtr>
+//! recross serve      --dataset software --requests 256
+//! recross autotune   --dataset automotive          # pick dup ratio (knee)
+//! ```
+//!
+//! `--config configs/paper.toml` loads a TOML file; CLI flags override.
+
+use recross::config::Config;
+use recross::coordinator::{self, BatchPolicy, Request, Server};
+use recross::engine::Scheme;
+use recross::metrics::{fit_power_law, percentile};
+use recross::report::{self, Workbench};
+use recross::util::cli::ArgSpec;
+use recross::util::Rng;
+use recross::workload::{access_frequencies, DatasetSpec, Generator, Trace};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = ArgSpec::new("ReCross: ReRAM-crossbar embedding reduction (paper reproduction)")
+        .positional("command", "report | generate | analyze | serve | autotune")
+        .opt("config", "", "TOML config file (CLI flags override)")
+        .opt("figure", "all", "report figure (fig2..fig11, table1, all, ablation)")
+        .opt("dataset", "software", "dataset name (Table I)")
+        .opt("scale", "0.05", "dataset scale factor (1.0 = paper size)")
+        .opt("history", "4000", "history-trace queries (offline phase)")
+        .opt("eval", "1024", "eval-trace queries")
+        .opt("queries", "4096", "queries to generate")
+        .opt("seed", "42", "rng seed")
+        .opt("out", "trace.rxtr", "output path for generate")
+        .opt("requests", "256", "requests to serve in the demo")
+        .opt("batch", "32", "dynamic-batcher max batch")
+        .opt("scheme", "recross", "serving scheme: recross|naive|frequency|nmars")
+        .opt("artifacts", "artifacts", "AOT artifacts directory")
+        .flag("verbose", "extra logging");
+
+    let args = match spec.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+
+    let result = match args.pos(0).unwrap_or("") {
+        "report" => cmd_report(&args),
+        "generate" => cmd_generate(&args),
+        "analyze" => cmd_analyze(&args),
+        "serve" => cmd_serve(&args),
+        "autotune" => cmd_autotune(&args),
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", spec.usage("recross"));
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn workbench(args: &recross::util::cli::Args) -> Result<Workbench, String> {
+    let scale: f64 = args.get_as("scale")?;
+    let history: usize = args.get_as("history")?;
+    let eval: usize = args.get_as("eval")?;
+    let seed: u64 = args.get_as("seed")?;
+    // A --config file can override the crossbar group size (and is the
+    // hook for hardware-variant reports).
+    let group_size = match args.get("config") {
+        "" => 64,
+        path => {
+            Config::from_file(path)
+                .map_err(|e| format!("{e:#}"))?
+                .scheme
+                .group_size
+        }
+    };
+    Ok(Workbench::new(scale, history, eval, group_size, seed))
+}
+
+fn cmd_report(args: &recross::util::cli::Args) -> anyhow::Result<()> {
+    let fig = args.get("figure");
+    if fig == "table1" {
+        println!("{}", report::table1());
+        return Ok(());
+    }
+    let mut wb = workbench(args).map_err(anyhow::Error::msg)?;
+    if fig == "ablation" {
+        println!("{}", report::ablation(&mut wb, args.get("dataset")));
+        return Ok(());
+    }
+    match report::by_name(fig) {
+        Some(f) => {
+            println!("{}", f(&mut wb));
+            Ok(())
+        }
+        None => anyhow::bail!(
+            "unknown figure {fig:?} (try fig2/fig4/fig5/fig6/fig8/fig9/fig10/fig11/table1/all/ablation)"
+        ),
+    }
+}
+
+fn cmd_generate(args: &recross::util::cli::Args) -> anyhow::Result<()> {
+    let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
+    let queries: usize = args.get_as("queries").map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_as("seed").map_err(anyhow::Error::msg)?;
+    let spec = DatasetSpec::by_name(args.get("dataset"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", args.get("dataset")))?
+        .scaled(scale);
+    let g = Generator::new(&spec, seed);
+    let trace = g.trace(queries, seed.wrapping_add(1));
+    let out = args.get("out");
+    trace.save(out)?;
+    println!(
+        "wrote {out}: {} queries, {} embeddings, {:.1} mean lookups/query",
+        trace.queries.len(),
+        trace.num_embeddings,
+        trace.mean_lookups()
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &recross::util::cli::Args) -> anyhow::Result<()> {
+    let path = args
+        .pos(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: recross analyze <trace.rxtr>"))?;
+    let trace = Trace::load(path)?;
+    println!("trace: {path}");
+    println!("  embeddings:       {}", trace.num_embeddings);
+    println!("  queries:          {}", trace.queries.len());
+    println!("  total lookups:    {}", trace.total_lookups());
+    println!("  mean lookups/qry: {:.2}", trace.mean_lookups());
+    let freq = access_frequencies(&trace);
+    let accessed = freq.iter().filter(|&&f| f > 0).count();
+    println!(
+        "  accessed items:   {} ({:.1}%)",
+        accessed,
+        100.0 * accessed as f64 / freq.len().max(1) as f64
+    );
+    match fit_power_law(&freq) {
+        Some(f) => println!(
+            "  access power-law: alpha={:.2} R^2={:.3} ({})",
+            f.alpha,
+            f.r_squared,
+            if f.is_power_law() { "power-law" } else { "not power-law" }
+        ),
+        None => println!("  access power-law: insufficient data"),
+    }
+    Ok(())
+}
+
+fn base_config(args: &recross::util::cli::Args) -> anyhow::Result<Config> {
+    let path = args.get("config");
+    if path.is_empty() {
+        Ok(Config::paper_default())
+    } else {
+        Config::from_file(path)
+    }
+}
+
+fn cmd_autotune(args: &recross::util::cli::Args) -> anyhow::Result<()> {
+    use recross::allocation::tune_dup_ratio;
+    use recross::graph::CoGraph;
+    use recross::workload::generate;
+    let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_as("seed").map_err(anyhow::Error::msg)?;
+    let mut cfg = base_config(args)?;
+    cfg.workload.dataset = args.get("dataset").to_string();
+    let spec = DatasetSpec::by_name(&cfg.workload.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.workload.dataset))?
+        .scaled(scale);
+    let history_n: usize = args.get_as("history").map_err(anyhow::Error::msg)?;
+    let eval_n: usize = args.get_as("eval").map_err(anyhow::Error::msg)?;
+    let (history, eval) = generate(&spec, history_n, eval_n, seed);
+    let graph = CoGraph::build(&history);
+    println!(
+        "auto-tuning duplication ratio on {} (scale {scale})...",
+        cfg.workload.dataset
+    );
+    let result = tune_dup_ratio(
+        &graph,
+        &history,
+        &eval,
+        &cfg,
+        &[0.0, 0.025, 0.05, 0.10, 0.20, 0.40],
+        1.05,
+    );
+    println!("{:>8} {:>12} {:>10} {:>8}", "dup%", "time µs", "speedup", "xbars");
+    for p in &result.sweep {
+        let marker = if p.dup_ratio == result.chosen { "  <-- knee" } else { "" };
+        println!(
+            "{:>7.1}% {:>12.1} {:>9.2}x {:>8}{marker}",
+            p.dup_ratio * 100.0,
+            p.completion_ns / 1e3,
+            p.speedup,
+            p.physical_crossbars
+        );
+    }
+    println!("\nchosen dup_ratio = {}", result.chosen);
+    Ok(())
+}
+
+fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
+    let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_as("seed").map_err(anyhow::Error::msg)?;
+    let n_requests: usize = args.get_as("requests").map_err(anyhow::Error::msg)?;
+    let max_batch: usize = args.get_as("batch").map_err(anyhow::Error::msg)?;
+    let scheme = match args.get("scheme") {
+        "recross" => Scheme::ReCross,
+        "naive" => Scheme::Naive,
+        "frequency" => Scheme::Frequency,
+        "nmars" => Scheme::Nmars,
+        other => anyhow::bail!("unknown scheme {other:?}"),
+    };
+
+    let mut cfg = base_config(args)?;
+    cfg.workload.dataset = args.get("dataset").to_string();
+    cfg.workload.seed = seed;
+    cfg.workload.history_queries = args.get_as("history").map_err(anyhow::Error::msg)?;
+    cfg.workload.eval_queries = args.get_as("eval").map_err(anyhow::Error::msg)?;
+    cfg.artifacts_dir = args.get("artifacts").to_string();
+    recross::runtime::require_artifacts(&cfg.artifacts_dir)?;
+
+    println!(
+        "starting server: dataset={} scheme={} scale={scale}",
+        cfg.workload.dataset,
+        scheme.name()
+    );
+    let spec = DatasetSpec::by_name(&cfg.workload.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?
+        .scaled(scale);
+    let gen = Generator::new(&spec, seed);
+    let cfg2 = cfg.clone();
+    let server = Server::spawn(
+        BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        move || coordinator::build_pipeline(&cfg2, scheme, scale),
+    )?;
+    let handle = server.handle();
+
+    // Drive the demo workload.
+    let mut rng = Rng::new(seed.wrapping_add(77));
+    let reqs: Vec<Request> = (0..n_requests as u64)
+        .map(|id| {
+            let q = gen.query(&mut rng);
+            Request {
+                id,
+                dense: (0..13).map(|_| rng.normal() as f32).collect(),
+                items: q.items,
+            }
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let responses = handle.infer_many(reqs)?;
+    let wall = t0.elapsed();
+
+    let lat_ms: Vec<f64> = responses
+        .iter()
+        .map(|r| r.latency.as_secs_f64() * 1e3)
+        .collect();
+    let acts: u64 = responses.iter().map(|r| r.activations).sum();
+    println!("served {} requests in {:.2?}", responses.len(), wall);
+    println!(
+        "  throughput:  {:.0} req/s",
+        responses.len() as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "  latency ms:  p50 {:.2}  p95 {:.2}  p99 {:.2}",
+        percentile(&lat_ms, 50.0),
+        percentile(&lat_ms, 95.0),
+        percentile(&lat_ms, 99.0)
+    );
+    println!(
+        "  crossbar activations: {acts} ({:.1}/req)",
+        acts as f64 / responses.len() as f64
+    );
+    if args.flag("verbose") {
+        for r in responses.iter().take(5) {
+            println!("  req {} -> logit {:.4}", r.id, r.logit);
+        }
+    }
+    Ok(())
+}

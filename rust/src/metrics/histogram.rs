@@ -1,0 +1,206 @@
+//! Integer-valued histogram with sparse storage and ASCII rendering.
+//!
+//! Used by the report harness to print the paper's distribution figures
+//! (Fig. 2 co-occurrence degree, Fig. 4 post-grouping access counts,
+//! Fig. 5 copy counts, Fig. 6 single-access shares) directly in the
+//! terminal.
+
+use std::collections::BTreeMap;
+
+/// A histogram over `u64` values.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    counts: BTreeMap<u64, u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation of `value`.
+    pub fn add(&mut self, value: u64) {
+        *self.counts.entry(value).or_insert(0) += 1;
+        self.total += 1;
+    }
+
+    /// Record `n` observations of `value`.
+    pub fn add_n(&mut self, value: u64, n: u64) {
+        if n > 0 {
+            *self.counts.entry(value).or_insert(0) += n;
+            self.total += n;
+        }
+    }
+
+    /// Total number of observations.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Count at an exact value.
+    pub fn count(&self, value: u64) -> u64 {
+        self.counts.get(&value).copied().unwrap_or(0)
+    }
+
+    /// Number of distinct observed values.
+    pub fn distinct(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Largest observed value.
+    pub fn max_value(&self) -> u64 {
+        self.counts.keys().next_back().copied().unwrap_or(0)
+    }
+
+    /// Mean of the distribution.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let s: f64 = self.counts.iter().map(|(&v, &c)| v as f64 * c as f64).sum();
+        s / self.total as f64
+    }
+
+    /// Fraction of observations with `value <= x`.
+    pub fn cdf(&self, x: u64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let below: u64 = self
+            .counts
+            .range(..=x)
+            .map(|(_, &c)| c)
+            .sum();
+        below as f64 / self.total as f64
+    }
+
+    /// Iterate `(value, count)` in ascending value order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts.iter().map(|(&v, &c)| (v, c))
+    }
+
+    /// `(value, count)` pairs sorted by descending count — the "rank vs
+    /// frequency" view needed for power-law plots.
+    pub fn by_rank(&self) -> Vec<(u64, u64)> {
+        let mut v: Vec<(u64, u64)> = self.iter().collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v
+    }
+
+    /// Render an ASCII bar chart with up to `max_buckets` log-spaced buckets
+    /// and bars scaled to `width` characters.
+    pub fn render(&self, max_buckets: usize, width: usize) -> String {
+        if self.total == 0 {
+            return "(empty histogram)\n".to_string();
+        }
+        let max_v = self.max_value().max(1);
+        // Log-spaced bucket edges over [0, max_v].
+        let mut edges: Vec<u64> = vec![0, 1];
+        let mut e = 1u64;
+        while e < max_v && edges.len() < max_buckets {
+            e = (e as f64 * (max_v as f64).powf(1.0 / (max_buckets as f64 - 1.0)))
+                .ceil()
+                .max(e as f64 + 1.0) as u64;
+            edges.push(e.min(max_v));
+        }
+        edges.dedup();
+        let mut buckets: Vec<(String, u64)> = Vec::new();
+        for w in edges.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let c: u64 = self
+                .counts
+                .range((
+                    std::ops::Bound::Excluded(lo.wrapping_sub(1).min(lo)),
+                    std::ops::Bound::Included(hi),
+                ))
+                .filter(|(&v, _)| v > lo || (lo == 0 && v == 0))
+                .map(|(_, &c)| c)
+                .sum();
+            let label = if hi - lo <= 1 {
+                format!("{hi}")
+            } else {
+                format!("{}-{}", lo + 1, hi)
+            };
+            buckets.push((label, c));
+        }
+        // include zero bucket if present
+        if self.count(0) > 0 {
+            buckets.insert(0, ("0".to_string(), self.count(0)));
+        }
+        let peak = buckets.iter().map(|b| b.1).max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (label, c) in buckets {
+            let bar = "#".repeat(((c as f64 / peak as f64) * width as f64).round() as usize);
+            out.push_str(&format!("{label:>12} | {bar:<width$} {c}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_count() {
+        let mut h = Histogram::new();
+        h.add(3);
+        h.add(3);
+        h.add(7);
+        h.add_n(1, 5);
+        assert_eq!(h.total(), 8);
+        assert_eq!(h.count(3), 2);
+        assert_eq!(h.count(1), 5);
+        assert_eq!(h.count(99), 0);
+        assert_eq!(h.distinct(), 3);
+        assert_eq!(h.max_value(), 7);
+    }
+
+    #[test]
+    fn mean_and_cdf() {
+        let mut h = Histogram::new();
+        h.add_n(1, 2);
+        h.add_n(2, 2);
+        assert!((h.mean() - 1.5).abs() < 1e-12);
+        assert!((h.cdf(1) - 0.5).abs() < 1e-12);
+        assert!((h.cdf(2) - 1.0).abs() < 1e-12);
+        assert_eq!(h.cdf(0), 0.0);
+    }
+
+    #[test]
+    fn by_rank_sorted_descending() {
+        let mut h = Histogram::new();
+        h.add_n(10, 1);
+        h.add_n(20, 5);
+        h.add_n(30, 3);
+        let r = h.by_rank();
+        assert_eq!(r[0], (20, 5));
+        assert_eq!(r[1], (30, 3));
+        assert_eq!(r[2], (10, 1));
+    }
+
+    #[test]
+    fn render_nonempty() {
+        let mut h = Histogram::new();
+        for v in 1..100 {
+            h.add_n(v, 100 / v);
+        }
+        let s = h.render(8, 40);
+        assert!(s.lines().count() >= 2);
+        assert!(s.contains('#'));
+    }
+
+    #[test]
+    fn render_empty() {
+        assert!(Histogram::new().render(8, 40).contains("empty"));
+    }
+
+    #[test]
+    fn add_n_zero_is_noop() {
+        let mut h = Histogram::new();
+        h.add_n(5, 0);
+        assert_eq!(h.total(), 0);
+        assert_eq!(h.distinct(), 0);
+    }
+}

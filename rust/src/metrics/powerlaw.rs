@@ -1,0 +1,125 @@
+//! Power-law (Zipf) fit on rank–frequency data.
+//!
+//! The paper's Fig. 2 and Fig. 4 claim that embedding access frequency and
+//! co-occurrence degree follow a power law, and that the power law
+//! *persists after grouping*. We verify this quantitatively with a
+//! least-squares fit of `log(freq) = c - alpha * log(rank)` plus the R² of
+//! the fit, rather than eyeballing a plot.
+
+/// Result of a rank–frequency power-law fit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerLawFit {
+    /// Fitted exponent α (positive for a decaying power law).
+    pub alpha: f64,
+    /// Intercept `c` of the log-log linear model.
+    pub intercept: f64,
+    /// Coefficient of determination of the log-log fit.
+    pub r_squared: f64,
+    /// Number of (rank, freq) points used.
+    pub points: usize,
+}
+
+impl PowerLawFit {
+    /// A pragmatic "is this power-law-ish" predicate: decaying exponent and
+    /// a good linear fit in log-log space.
+    pub fn is_power_law(&self) -> bool {
+        self.alpha > 0.3 && self.r_squared > 0.8 && self.points >= 10
+    }
+}
+
+/// Fit a power law to frequency counts. `freqs` need not be sorted; zero
+/// entries are ignored. Returns `None` when fewer than 3 positive points.
+pub fn fit_power_law(freqs: &[u64]) -> Option<PowerLawFit> {
+    let mut v: Vec<u64> = freqs.iter().copied().filter(|&f| f > 0).collect();
+    if v.len() < 3 {
+        return None;
+    }
+    v.sort_unstable_by(|a, b| b.cmp(a));
+    let pts: Vec<(f64, f64)> = v
+        .iter()
+        .enumerate()
+        .map(|(i, &f)| (((i + 1) as f64).ln(), (f as f64).ln()))
+        .collect();
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    // R^2
+    let mean_y = sy / n;
+    let ss_tot: f64 = pts.iter().map(|p| (p.1 - mean_y) * (p.1 - mean_y)).sum();
+    let ss_res: f64 = pts
+        .iter()
+        .map(|p| {
+            let pred = intercept + slope * p.0;
+            (p.1 - pred) * (p.1 - pred)
+        })
+        .sum();
+    let r_squared = if ss_tot < 1e-12 {
+        // A constant distribution (all frequencies equal) is perfectly
+        // explained by a zero-slope line but is NOT a power law.
+        0.0
+    } else {
+        1.0 - ss_res / ss_tot
+    };
+    Some(PowerLawFit {
+        alpha: -slope,
+        intercept,
+        r_squared,
+        points: pts.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Rng, Zipf};
+
+    #[test]
+    fn recovers_zipf_exponent() {
+        let z = Zipf::new(5_000, 1.1);
+        let mut r = Rng::new(1);
+        let mut counts = vec![0u64; 5_000];
+        for _ in 0..1_000_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        let fit = fit_power_law(&counts).unwrap();
+        assert!(fit.is_power_law(), "fit: {fit:?}");
+        // Sampled tail flattens the global fit a bit; accept a window.
+        assert!(
+            (0.7..=1.3).contains(&fit.alpha),
+            "alpha {} not near 1.1",
+            fit.alpha
+        );
+    }
+
+    #[test]
+    fn uniform_is_not_power_law() {
+        let counts = vec![100u64; 1000];
+        let fit = fit_power_law(&counts).unwrap();
+        assert!(!fit.is_power_law(), "uniform misdetected: {fit:?}");
+    }
+
+    #[test]
+    fn too_few_points_none() {
+        assert!(fit_power_law(&[5, 3]).is_none());
+        assert!(fit_power_law(&[0, 0, 0]).is_none());
+    }
+
+    #[test]
+    fn zeros_ignored() {
+        let mut counts = vec![0u64; 100];
+        for (i, c) in counts.iter_mut().enumerate().take(50) {
+            *c = (1000 / (i + 1)) as u64;
+        }
+        let fit = fit_power_law(&counts).unwrap();
+        assert_eq!(fit.points, 50);
+        assert!(fit.alpha > 0.5);
+    }
+}

@@ -1,0 +1,493 @@
+//! Report harness: regenerates every table and figure of the paper's
+//! evaluation (§IV) as terminal tables.
+//!
+//! Each `fig*` function returns the formatted report string (so tests can
+//! assert on content) and is wired to both the `recross report` CLI
+//! subcommand and a criterion-style bench target. The DESIGN.md experiment
+//! index maps figure ↔ function ↔ bench.
+//!
+//! Scale: `scale=1.0` reproduces Table I sizes (~1M embeddings). Reports
+//! default to a documented sub-scale so a laptop run finishes in minutes;
+//! the *ratios* (who wins, by how much) are stable across scale, which is
+//! what the reproduction must preserve.
+
+mod workbench;
+
+pub use workbench::Workbench;
+
+use crate::allocation::{self, group_frequencies};
+use crate::energy::{HostModel, HostPlatform};
+use crate::engine::Scheme;
+use crate::grouping::{CorrelationMapper, Mapper};
+use crate::metrics::{fit_power_law, gini, Histogram};
+use crate::workload::{DatasetSpec, AMAZON_DATASETS};
+use crate::xbar::HostParams;
+
+/// Table I: hardware + dataset configuration.
+pub fn table1() -> String {
+    let mut s = String::new();
+    s.push_str("TABLE I — Hardware and dataset configurations\n\n");
+    s.push_str("  Component          Specification\n");
+    s.push_str("  -----------------  -------------------\n");
+    s.push_str("  Crossbar           64 x 64; 2-bit/cell\n");
+    s.push_str("  Tile               256 x 256\n");
+    s.push_str("  ADC                6 bits (dynamic-switch, 3-bit read path)\n");
+    s.push_str("  Global Bus Width   512b\n\n");
+    s.push_str(&format!(
+        "  {:<17} {:>14} {:>10}\n",
+        "Dataset", "# Embedding", "Avg. Lkp"
+    ));
+    s.push_str("  -----------------  ------------  ----------\n");
+    for d in &AMAZON_DATASETS {
+        s.push_str(&format!(
+            "  {:<17} {:>14} {:>10.3}\n",
+            d.name, d.num_embeddings, d.avg_lookups
+        ));
+    }
+    s
+}
+
+/// Fig. 2: co-occurrence degree distribution (power law) per dataset.
+pub fn fig2(wb: &mut Workbench) -> String {
+    let mut s = String::new();
+    s.push_str("FIG 2 — Number of correlated embeddings (co-occurrence degree)\n");
+    s.push_str(&format!("(scale {}, seed {})\n\n", wb.scale(), wb.seed()));
+    for name in DatasetSpec::names() {
+        let data = wb.dataset(name);
+        let degrees = data.graph.degrees();
+        let fit = fit_power_law(&degrees);
+        let mut h = Histogram::new();
+        for &d in &degrees {
+            h.add(d);
+        }
+        s.push_str(&format!(
+            "--- {name}: {} embeddings, {} edges ---\n",
+            data.graph.num_nodes(),
+            data.graph.num_edges()
+        ));
+        match fit {
+            Some(f) => s.push_str(&format!(
+                "power-law fit: alpha={:.2} R^2={:.3} -> {}\n",
+                f.alpha,
+                f.r_squared,
+                if f.is_power_law() { "POWER-LAW (matches paper)" } else { "NOT power-law" }
+            )),
+            None => s.push_str("power-law fit: insufficient data\n"),
+        }
+        s.push_str(&h.render(10, 40));
+        s.push('\n');
+    }
+    s
+}
+
+/// Fig. 4: crossbar access distribution *after* grouping, single queries
+/// and batch-256, showing the power law persists.
+pub fn fig4(wb: &mut Workbench) -> String {
+    let mut s = String::new();
+    s.push_str("FIG 4 — Access distribution after correlation-aware grouping\n\n");
+    let group_size = wb.group_size();
+    let batch = wb.batch_size();
+    for name in ["software", "automotive"] {
+        let data = wb.dataset(name);
+        let mapping = CorrelationMapper.map(&data.graph, group_size);
+        let freqs = group_frequencies(&mapping, &data.eval);
+        let fit = fit_power_law(&freqs);
+        s.push_str(&format!("--- {name}: {} groups ---\n", mapping.num_groups()));
+        if let Some(f) = fit {
+            s.push_str(&format!(
+                "group-access power-law: alpha={:.2} R^2={:.3} -> {}\n",
+                f.alpha,
+                f.r_squared,
+                if f.is_power_law() { "persists (matches paper)" } else { "flattened" }
+            ));
+        }
+        // Batch-level concurrent demand: max accesses to one group within
+        // one batch of 256 (paper: max ~21 for automotive, << batch size).
+        let mut batch_max = 0u64;
+        let mut scratch = Vec::new();
+        for chunk in data.eval.batches(batch) {
+            let mut per_group = std::collections::HashMap::new();
+            for q in chunk {
+                scratch.clear();
+                scratch.extend(q.items.iter().map(|&e| mapping.slot_of(e).group));
+                scratch.sort_unstable();
+                scratch.dedup();
+                for &g in &scratch {
+                    *per_group.entry(g).or_insert(0u64) += 1;
+                }
+            }
+            batch_max = batch_max.max(per_group.values().copied().max().unwrap_or(0));
+        }
+        s.push_str(&format!(
+            "max per-batch accesses to one crossbar: {batch_max} (batch {batch}) — far below batch size, as the paper observes\n\n"
+        ));
+    }
+    s
+}
+
+/// Fig. 5: distribution of copy counts, linear scaling vs Eq. 1.
+pub fn fig5(wb: &mut Workbench) -> String {
+    let mut s = String::new();
+    s.push_str("FIG 5 — Copies per crossbar: linear scaling vs log scaling (Eq. 1)\n\n");
+    let group_size = wb.group_size();
+    let batch = wb.batch_size();
+    let data = wb.dataset("automotive");
+    let mapping = CorrelationMapper.map(&data.graph, group_size);
+    let freqs = group_frequencies(&mapping, &data.history);
+    let total: u64 = freqs.iter().sum();
+    let fmax = freqs.iter().copied().max().unwrap_or(1);
+
+    let mut lin = Histogram::new();
+    let mut log = Histogram::new();
+    for &f in &freqs {
+        lin.add(allocation::linear_copies(f, fmax, batch as u32) as u64);
+        log.add(allocation::log_scaled_copies(f, total, batch) as u64);
+    }
+    let lin_dup = freqs
+        .iter()
+        .filter(|&&f| allocation::linear_copies(f, fmax, batch as u32) > 1)
+        .count();
+    let log_dup = freqs
+        .iter()
+        .filter(|&&f| allocation::log_scaled_copies(f, total, batch) > 1)
+        .count();
+    let lin_gini = gini(&lin_copies_vec(&freqs, fmax, batch));
+    let log_gini = gini(&log_copies_vec(&freqs, total, batch));
+    s.push_str(&format!(
+        "groups: {}   linear: {} duplicated (gini {:.3})   log: {} duplicated (gini {:.3})\n",
+        freqs.len(),
+        lin_dup,
+        lin_gini,
+        log_dup,
+        log_gini
+    ));
+    s.push_str(&format!(
+        "-> log scaling duplicates {}x more groups with a {}% flatter copy distribution (the paper's 'evenness')\n\n",
+        if lin_dup == 0 { log_dup } else { log_dup / lin_dup.max(1) },
+        (((lin_gini - log_gini) / lin_gini.max(1e-9)) * 100.0).round()
+    ));
+    s.push_str("linear copies histogram:\n");
+    s.push_str(&lin.render(8, 40));
+    s.push_str("\nlog (Eq. 1) copies histogram:\n");
+    s.push_str(&log.render(8, 40));
+    s
+}
+
+fn lin_copies_vec(freqs: &[u64], fmax: u64, batch: usize) -> Vec<f64> {
+    freqs
+        .iter()
+        .map(|&f| allocation::linear_copies(f, fmax, batch as u32) as f64)
+        .collect()
+}
+
+fn log_copies_vec(freqs: &[u64], total: u64, batch: usize) -> Vec<f64> {
+    freqs
+        .iter()
+        .map(|&f| allocation::log_scaled_copies(f, total, batch) as f64)
+        .collect()
+}
+
+/// Fig. 6: share of crossbar activations touching a single embedding, per
+/// group size (paper: avg 25.9% software, 53.5% automotive).
+pub fn fig6(wb: &mut Workbench) -> String {
+    let mut s = String::new();
+    s.push_str("FIG 6 — Single-embedding activations vs group size\n\n");
+    s.push_str(&format!(
+        "  {:<17} {:>8} {:>8} {:>8}\n",
+        "dataset", "g=16", "g=32", "g=64"
+    ));
+    for name in DatasetSpec::names() {
+        let data = wb.dataset(name);
+        let mut row = format!("  {name:<17} ");
+        for gs in [16usize, 32, 64] {
+            let mapping = CorrelationMapper.map(&data.graph, gs);
+            let mut single = 0u64;
+            let mut total = 0u64;
+            let mut scratch: Vec<u32> = Vec::new();
+            for q in &data.eval.queries {
+                scratch.clear();
+                scratch.extend(q.items.iter().map(|&e| mapping.slot_of(e).group));
+                scratch.sort_unstable();
+                let mut i = 0;
+                while i < scratch.len() {
+                    let g = scratch[i];
+                    let mut rows = 0;
+                    while i < scratch.len() && scratch[i] == g {
+                        rows += 1;
+                        i += 1;
+                    }
+                    total += 1;
+                    if rows == 1 {
+                        single += 1;
+                    }
+                }
+            }
+            row.push_str(&format!("{:>7.1}% ", 100.0 * single as f64 / total.max(1) as f64));
+        }
+        s.push_str(&row);
+        s.push('\n');
+    }
+    s.push_str("\npaper reference (g=64): software 25.9%, automotive 53.5%\n");
+    s
+}
+
+/// Fig. 8: normalized speedup + energy efficiency vs naive and nMARS.
+pub fn fig8(wb: &mut Workbench) -> String {
+    let mut s = String::new();
+    s.push_str("FIG 8 — Overall performance: ReCross vs naive vs nMARS\n");
+    s.push_str("(normalized to naive; higher is better)\n\n");
+    s.push_str(&format!(
+        "  {:<17} {:>12} {:>12} {:>14} {:>14}\n",
+        "dataset", "speedup/nv", "speedup/nm", "energy-eff/nv", "energy-eff/nm"
+    ));
+    let mut agg = [0.0f64; 4];
+    let mut n = 0.0;
+    for name in DatasetSpec::names() {
+        let r = wb.compare(name, Scheme::fig8_set());
+        let t_nv = r[&Scheme::Naive].completion_ns;
+        let t_nm = r[&Scheme::Nmars].completion_ns;
+        let t_re = r[&Scheme::ReCross].completion_ns;
+        let e_nv = r[&Scheme::Naive].energy_pj;
+        let e_nm = r[&Scheme::Nmars].energy_pj;
+        let e_re = r[&Scheme::ReCross].energy_pj;
+        let row = [t_nv / t_re, t_nm / t_re, e_nv / e_re, e_nm / e_re];
+        s.push_str(&format!(
+            "  {:<17} {:>11.2}x {:>11.2}x {:>13.2}x {:>13.2}x\n",
+            name, row[0], row[1], row[2], row[3]
+        ));
+        for (a, v) in agg.iter_mut().zip(row) {
+            *a += v;
+        }
+        n += 1.0;
+    }
+    s.push_str(&format!(
+        "  {:<17} {:>11.2}x {:>11.2}x {:>13.2}x {:>13.2}x\n",
+        "AVERAGE",
+        agg[0] / n,
+        agg[1] / n,
+        agg[2] / n,
+        agg[3] / n
+    ));
+    s.push_str("\npaper: speedup 2.58-6.85x vs naive (avg 5.2x), 2.60-5.48x vs nMARS (avg 3.97x);\n");
+    s.push_str("       energy  3.60-12.55x vs naive (avg 8.4x), 1.39-3.65x vs nMARS (avg 6.1x*)\n");
+    s.push_str("       (*abstract quotes 6.1x; per-workload numbers in §IV-B give avg 2.35x)\n");
+    s
+}
+
+/// Fig. 9: crossbar activations, naive vs frequency vs ReCross.
+pub fn fig9(wb: &mut Workbench) -> String {
+    let mut s = String::new();
+    s.push_str("FIG 9 — Crossbar activations (lower is better)\n\n");
+    s.push_str(&format!(
+        "  {:<17} {:>12} {:>12} {:>12} {:>9} {:>9}\n",
+        "dataset", "naive", "frequency", "recross", "nv/re", "fq/re"
+    ));
+    for name in DatasetSpec::names() {
+        let a = wb.activations(name, Scheme::fig9_set());
+        let nv = a[&Scheme::Naive] as f64;
+        let fq = a[&Scheme::Frequency] as f64;
+        let re = a[&Scheme::ReCross] as f64;
+        s.push_str(&format!(
+            "  {:<17} {:>12} {:>12} {:>12} {:>8.2}x {:>8.2}x\n",
+            name,
+            a[&Scheme::Naive],
+            a[&Scheme::Frequency],
+            a[&Scheme::ReCross],
+            nv / re,
+            fq / re
+        ));
+    }
+    s.push_str("\npaper: up to 8.79x fewer than naive, up to 5.27x fewer than frequency-based\n");
+    s
+}
+
+/// Fig. 10: duplication-ratio sweep (0/5/10/20% area overhead).
+pub fn fig10(wb: &mut Workbench) -> String {
+    let ratios = [0.0, 0.05, 0.10, 0.20];
+    let mut s = String::new();
+    s.push_str("FIG 10 — Access-aware allocation: duplication-ratio sweep\n");
+    s.push_str("(speedup & energy-efficiency vs naive; Dup-0% = grouping only)\n\n");
+    s.push_str(&format!(
+        "  {:<17} {:>10} {:>10} {:>10} {:>10}   {:>10} {:>10} {:>10} {:>10}\n",
+        "", "t-0%", "t-5%", "t-10%", "t-20%", "e-0%", "e-5%", "e-10%", "e-20%"
+    ));
+    for name in DatasetSpec::names() {
+        let sweep = wb.dup_sweep(name, &ratios);
+        let base = wb.compare(name, [Scheme::Naive]);
+        let t_nv = base[&Scheme::Naive].completion_ns;
+        let e_nv = base[&Scheme::Naive].energy_pj;
+        let mut row = format!("  {name:<17} ");
+        for st in &sweep {
+            row.push_str(&format!("{:>9.2}x ", t_nv / st.completion_ns));
+        }
+        row.push_str("  ");
+        for st in &sweep {
+            row.push_str(&format!("{:>9.2}x ", e_nv / st.energy_pj));
+        }
+        s.push_str(&row);
+        s.push('\n');
+    }
+    s.push_str("\npaper: gains converge as duplication grows; dense workloads still gain at 20%\n");
+    s
+}
+
+/// Fig. 11: energy efficiency vs CPU-only and CPU+GPU platforms.
+pub fn fig11(wb: &mut Workbench) -> String {
+    let mut s = String::new();
+    s.push_str("FIG 11 — Energy efficiency vs host platforms (x better than host)\n\n");
+    s.push_str(&format!(
+        "  {:<17} {:>12} {:>12}\n",
+        "dataset", "vs CPU", "vs CPU+GPU"
+    ));
+    let mut acc = [0.0f64; 2];
+    let mut n = 0.0;
+    let embed_dim = wb.embedding_dim();
+    for name in DatasetSpec::names() {
+        let host = HostModel::new(&HostParams::default(), embed_dim);
+        let data = wb.dataset(name);
+        let cpu = host.run_trace(&data.eval, HostPlatform::CpuOnly);
+        let gpu = host.run_trace(&data.eval, HostPlatform::CpuGpu);
+        let re = wb.compare(name, [Scheme::ReCross]);
+        let e_re = re[&Scheme::ReCross].energy_pj;
+        let r_cpu = cpu.energy_pj / e_re;
+        let r_gpu = gpu.energy_pj / e_re;
+        s.push_str(&format!("  {name:<17} {r_cpu:>11.0}x {r_gpu:>11.0}x\n"));
+        acc[0] += r_cpu;
+        acc[1] += r_gpu;
+        n += 1.0;
+    }
+    s.push_str(&format!(
+        "  {:<17} {:>11.0}x {:>11.0}x\n",
+        "AVERAGE",
+        acc[0] / n,
+        acc[1] / n
+    ));
+    s.push_str("\npaper: avg 363x vs CPU-only, 1144x vs CPU+GPU\n");
+    s
+}
+
+/// Run every report (the `report all` subcommand).
+pub fn all(wb: &mut Workbench) -> String {
+    let mut s = String::new();
+    s.push_str(&table1());
+    s.push('\n');
+    for f in [fig2, fig4, fig5, fig6, fig8, fig9, fig10, fig11] {
+        s.push_str(&f(wb));
+        s.push('\n');
+    }
+    s
+}
+
+/// Ablation table for DESIGN.md's design-choice analysis: full ReCross vs
+/// each component disabled.
+pub fn ablation(wb: &mut Workbench, dataset: &str) -> String {
+    let schemes = [
+        Scheme::ReCross,
+        Scheme::ReCrossNoDup,
+        Scheme::ReCrossNoSwitch,
+        Scheme::ReCrossLinear,
+        Scheme::Naive,
+    ];
+    let r = wb.compare(dataset, schemes);
+    let base_t = r[&Scheme::Naive].completion_ns;
+    let base_e = r[&Scheme::Naive].energy_pj;
+    let mut s = String::new();
+    s.push_str(&format!("ABLATION — {dataset}\n\n"));
+    s.push_str(&format!(
+        "  {:<18} {:>10} {:>12} {:>12} {:>10} {:>12} {:>12} {:>12}\n",
+        "variant", "speedup", "energy-eff", "activations", "xbars", "compl_us", "stall_us", "bus_us"
+    ));
+    for sc in schemes {
+        let st = &r[&sc];
+        s.push_str(&format!(
+            "  {:<18} {:>9.2}x {:>11.2}x {:>12} {:>10} {:>12.2} {:>12.2} {:>12.2}\n",
+            sc.name(),
+            base_t / st.completion_ns,
+            base_e / st.energy_pj,
+            st.activations,
+            wb.physical_crossbars(dataset, sc),
+            st.completion_ns / 1e3,
+            st.stall_ns / 1e3,
+            st.bus_wait_ns / 1e3,
+        ));
+    }
+    // One-time programming overhead of the duplication plan (the other
+    // side of the area tradeoff; amortized over the mapping's lifetime).
+    let model = crate::xbar::CrossbarModel::new(
+        &wb.config().hardware,
+        &crate::xbar::CircuitParams::default(),
+    );
+    let extra = wb
+        .physical_crossbars(dataset, Scheme::ReCross)
+        .saturating_sub(wb.physical_crossbars(dataset, Scheme::ReCrossNoDup));
+    let (w_ns, w_pj) = model.programming_cost(extra);
+    s.push_str(&format!(
+        "\n  one-time duplication programming: {extra} extra crossbars, {:.1} µs / {:.1} nJ (amortized over the mapping lifetime)\n",
+        w_ns / 1e3,
+        w_pj / 1e3
+    ));
+    s
+}
+
+/// Look up a report function by CLI name.
+#[allow(clippy::type_complexity)]
+pub fn by_name(name: &str) -> Option<fn(&mut Workbench) -> String> {
+    Some(match name {
+        "fig2" => fig2,
+        "fig4" => fig4,
+        "fig5" => fig5,
+        "fig6" => fig6,
+        "fig8" => fig8,
+        "fig9" => fig9,
+        "fig10" => fig10,
+        "fig11" => fig11,
+        "all" => all,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wb() -> Workbench {
+        // Tiny scale so report tests stay fast.
+        Workbench::new(0.01, 300, 128, 64, 42)
+    }
+
+    #[test]
+    fn table1_lists_all_datasets() {
+        let t = table1();
+        for d in DatasetSpec::names() {
+            assert!(t.contains(d), "missing {d}");
+        }
+        assert!(t.contains("932019") || t.contains("932,019") || t.contains("932019"));
+    }
+
+    #[test]
+    fn fig8_reports_wins() {
+        let mut wb = wb();
+        let s = fig8(&mut wb);
+        assert!(s.contains("AVERAGE"));
+        // every dataset row present
+        for d in DatasetSpec::names() {
+            assert!(s.contains(d));
+        }
+    }
+
+    #[test]
+    fn fig9_reports_reduction() {
+        let mut wb = wb();
+        let s = fig9(&mut wb);
+        assert!(s.contains("recross"));
+        assert!(s.contains('x'));
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        for n in ["fig2", "fig4", "fig5", "fig6", "fig8", "fig9", "fig10", "fig11", "all"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("fig99").is_none());
+    }
+}

@@ -1,0 +1,207 @@
+//! Workbench: caches per-dataset traces/graphs/engines so a multi-figure
+//! report run prepares each dataset exactly once.
+
+use crate::config::Config;
+use crate::engine::{Engine, Scheme};
+use crate::graph::CoGraph;
+use crate::sched::ExecStats;
+use crate::workload::{generate, DatasetSpec, Trace};
+use std::collections::HashMap;
+
+/// Prepared data for one dataset.
+#[derive(Debug)]
+pub struct DatasetData {
+    pub spec: DatasetSpec,
+    pub history: Trace,
+    pub eval: Trace,
+    pub graph: CoGraph,
+}
+
+/// The report workbench.
+pub struct Workbench {
+    scale: f64,
+    history_queries: usize,
+    eval_queries: usize,
+    group_size: usize,
+    seed: u64,
+    cfg: Config,
+    datasets: HashMap<String, DatasetData>,
+    engines: HashMap<(String, Scheme, u64), Engine>,
+}
+
+impl Workbench {
+    /// `scale` shrinks Table I's embedding counts; `history`/`eval` set
+    /// trace lengths; `group_size` is the crossbar row count.
+    pub fn new(scale: f64, history: usize, eval: usize, group_size: usize, seed: u64) -> Self {
+        let mut cfg = Config::paper_default();
+        cfg.scheme.group_size = group_size;
+        cfg.workload.history_queries = history;
+        cfg.workload.eval_queries = eval;
+        cfg.workload.seed = seed;
+        Self {
+            scale,
+            history_queries: history,
+            eval_queries: eval,
+            group_size,
+            seed,
+            cfg,
+            datasets: HashMap::new(),
+            engines: HashMap::new(),
+        }
+    }
+
+    /// Paper-default workbench at a given scale.
+    pub fn at_scale(scale: f64) -> Self {
+        // History/eval sized so sub-scale runs stay statistically stable.
+        Self::new(scale, 4_000, 1_024, 64, 42)
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+    pub fn batch_size(&self) -> usize {
+        self.cfg.scheme.batch_size
+    }
+    pub fn embedding_dim(&self) -> usize {
+        self.cfg.hardware.embedding_dim
+    }
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// Prepare (or fetch cached) traces + graph for a dataset.
+    pub fn dataset(&mut self, name: &str) -> &DatasetData {
+        if !self.datasets.contains_key(name) {
+            let spec = DatasetSpec::by_name(name)
+                .unwrap_or_else(|| panic!("unknown dataset {name}"))
+                .scaled(self.scale);
+            let (history, eval) =
+                generate(&spec, self.history_queries, self.eval_queries, self.seed);
+            let graph = CoGraph::build(&history);
+            self.datasets.insert(
+                name.to_string(),
+                DatasetData {
+                    spec,
+                    history,
+                    eval,
+                    graph,
+                },
+            );
+        }
+        &self.datasets[name]
+    }
+
+    /// Prepare (or fetch cached) an engine. Engines are additionally keyed
+    /// by the dup-ratio in millis so Fig. 10 sweeps don't collide.
+    fn engine(&mut self, name: &str, scheme: Scheme, dup_ratio: f64) -> &Engine {
+        let key = (name.to_string(), scheme, (dup_ratio * 1000.0) as u64);
+        if !self.engines.contains_key(&key) {
+            self.dataset(name); // ensure cached
+            let data = &self.datasets[name];
+            let mut cfg = self.cfg.clone();
+            cfg.scheme.dup_ratio = dup_ratio;
+            let engine = Engine::prepare(scheme, &data.graph, &data.history, &cfg);
+            self.engines.insert(key.clone(), engine);
+        }
+        &self.engines[&key]
+    }
+
+    /// Run several schemes over a dataset's eval trace.
+    pub fn compare<I: IntoIterator<Item = Scheme>>(
+        &mut self,
+        name: &str,
+        schemes: I,
+    ) -> HashMap<Scheme, ExecStats> {
+        let dup = self.cfg.scheme.dup_ratio;
+        let batch = self.cfg.scheme.batch_size;
+        schemes
+            .into_iter()
+            .map(|sc| {
+                self.engine(name, sc, dup);
+                let key = (name.to_string(), sc, (dup * 1000.0) as u64);
+                let eval = &self.datasets[name].eval;
+                let stats = self.engines[&key].run_trace(eval, batch);
+                (sc, stats)
+            })
+            .collect()
+    }
+
+    /// Activation counts for several schemes (Fig. 9's cheap metric).
+    pub fn activations<I: IntoIterator<Item = Scheme>>(
+        &mut self,
+        name: &str,
+        schemes: I,
+    ) -> HashMap<Scheme, u64> {
+        let dup = self.cfg.scheme.dup_ratio;
+        schemes
+            .into_iter()
+            .map(|sc| {
+                self.engine(name, sc, dup);
+                let key = (name.to_string(), sc, (dup * 1000.0) as u64);
+                let eval = &self.datasets[name].eval;
+                (sc, self.engines[&key].count_activations(eval))
+            })
+            .collect()
+    }
+
+    /// ReCross at several duplication ratios (Fig. 10).
+    pub fn dup_sweep(&mut self, name: &str, ratios: &[f64]) -> Vec<ExecStats> {
+        let batch = self.cfg.scheme.batch_size;
+        ratios
+            .iter()
+            .map(|&r| {
+                self.engine(name, Scheme::ReCross, r);
+                let key = (name.to_string(), Scheme::ReCross, (r * 1000.0) as u64);
+                let eval = &self.datasets[name].eval;
+                self.engines[&key].run_trace(eval, batch)
+            })
+            .collect()
+    }
+
+    /// Physical crossbars an engine uses (area proxy for ablations).
+    pub fn physical_crossbars(&mut self, name: &str, scheme: Scheme) -> usize {
+        let dup = self.cfg.scheme.dup_ratio;
+        self.engine(name, scheme, dup);
+        let key = (name.to_string(), scheme, (dup * 1000.0) as u64);
+        self.engines[&key].physical_crossbars()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_cached_once() {
+        let mut wb = Workbench::new(0.01, 100, 40, 64, 1);
+        let n1 = wb.dataset("software").history.queries.len();
+        let n2 = wb.dataset("software").history.queries.len();
+        assert_eq!(n1, n2);
+        assert_eq!(wb.datasets.len(), 1);
+    }
+
+    #[test]
+    fn compare_covers_schemes() {
+        let mut wb = Workbench::new(0.01, 150, 50, 64, 2);
+        let r = wb.compare("software", [Scheme::Naive, Scheme::ReCross]);
+        assert_eq!(r.len(), 2);
+        assert!(r[&Scheme::Naive].completion_ns > 0.0);
+        assert!(r[&Scheme::ReCross].completion_ns > 0.0);
+    }
+
+    #[test]
+    fn dup_sweep_monotone_area() {
+        let mut wb = Workbench::new(0.01, 150, 50, 64, 3);
+        let _ = wb.dup_sweep("software", &[0.0, 0.1]);
+        let x0 = wb.physical_crossbars("software", Scheme::ReCrossNoDup);
+        wb.cfg.scheme.dup_ratio = 0.1;
+        let x1 = wb.physical_crossbars("software", Scheme::ReCross);
+        assert!(x1 >= x0);
+    }
+}

@@ -1,0 +1,321 @@
+//! PJRT runtime: load AOT artifacts and execute them on the request path.
+//!
+//! `make artifacts` lowers the L2 JAX model (with the L1 Pallas kernels
+//! inlined, interpret-mode) to HLO **text**; this module loads each
+//! artifact with `HloModuleProto::from_text_file`, compiles it once on the
+//! PJRT CPU client, and exposes typed execute wrappers. After artifacts
+//! are built, the rust binary is self-contained — Python never runs on the
+//! request path.
+//!
+//! Artifact ABI (see `python/compile/aot.py::write_manifest`):
+//! * `reduce_b{B}.hlo.txt`  — masks `[B,T,R]`, tiles `[T,R,D]` → `[B,D]`
+//! * `dlrm_head_b{B}.hlo.txt` — dense `[B,F]`, reduced `[B,D]`, 8 MLP
+//!   params → logits `[B,1]`
+//! * `dlrm_b{B}.hlo.txt`    — the fused whole-model variant
+//! * `manifest.toml`        — dimensions + parameter order
+
+pub mod params;
+
+pub use params::DlrmParams;
+
+use crate::config::toml::Doc;
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `manifest.toml`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub dense_features: usize,
+    pub embed_dim: usize,
+    pub xbar_rows: usize,
+    pub tiles: usize,
+    pub batches: Vec<usize>,
+    pub param_order: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = Doc::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let batches = doc
+            .get("model.batches")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| anyhow!("manifest missing model.batches"))?
+            .iter()
+            .map(|v| v.as_i64().unwrap_or(0) as usize)
+            .collect::<Vec<_>>();
+        let param_order = doc
+            .get("params.order")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| anyhow!("manifest missing params.order"))?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect::<Vec<_>>();
+        anyhow::ensure!(!batches.is_empty(), "manifest has no batch sizes");
+        anyhow::ensure!(param_order.len() == 8, "expected 8 params");
+        Ok(Self {
+            dense_features: doc.usize_or("model.dense_features", 0),
+            embed_dim: doc.usize_or("model.embed_dim", 0),
+            xbar_rows: doc.usize_or("model.xbar_rows", 0),
+            tiles: doc.usize_or("model.tiles", 0),
+            batches,
+            param_order,
+        })
+    }
+}
+
+/// One compiled artifact.
+struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        Ok(Self { exe })
+    }
+
+    /// Execute with literal inputs; unwrap the 1-tuple output to an `f32`
+    /// vector (artifacts are lowered with `return_tuple=True`).
+    fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        let out = literal.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+/// Build an `f32` literal of the given shape from a flat slice.
+fn literal(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = shape.iter().product();
+    anyhow::ensure!(
+        expect as usize == data.len(),
+        "literal shape {shape:?} wants {expect} elems, got {}",
+        data.len()
+    );
+    xla::Literal::vec1(data)
+        .reshape(shape)
+        .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// The PJRT runtime: compiled executables keyed by batch size.
+pub struct Runtime {
+    manifest: Manifest,
+    reduce: BTreeMap<usize, Executable>,
+    head: BTreeMap<usize, Executable>,
+    dlrm: BTreeMap<usize, Executable>,
+    platform: String,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("manifest", &self.manifest)
+            .field("platform", &self.platform)
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Load and compile every artifact under `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let platform = client.platform_name();
+        let mut reduce = BTreeMap::new();
+        let mut head = BTreeMap::new();
+        let mut dlrm = BTreeMap::new();
+        for &b in &manifest.batches {
+            reduce.insert(b, Executable::load(&client, &artifact(dir, "reduce", b))?);
+            head.insert(b, Executable::load(&client, &artifact(dir, "dlrm_head", b))?);
+            dlrm.insert(b, Executable::load(&client, &artifact(dir, "dlrm", b))?);
+        }
+        Ok(Self {
+            manifest,
+            reduce,
+            head,
+            dlrm,
+            platform,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Smallest compiled batch size >= `n` (or the largest available).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        for &b in &self.manifest.batches {
+            if b >= n {
+                return b;
+            }
+        }
+        *self.manifest.batches.last().unwrap()
+    }
+
+    /// Embedding reduction: `masks [B,T,R]`, `tiles [T,R,D]` → `[B,D]`.
+    pub fn reduce(&self, batch: usize, masks: &[f32], tiles: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let exe = self
+            .reduce
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no reduce artifact for batch {batch}"))?;
+        let masks_l = literal(masks, &[batch as i64, m.tiles as i64, m.xbar_rows as i64])?;
+        let tiles_l = literal(tiles, &[m.tiles as i64, m.xbar_rows as i64, m.embed_dim as i64])?;
+        exe.run_f32(&[masks_l, tiles_l])
+    }
+
+    /// DLRM head: `dense [B,F]`, `reduced [B,D]`, params → logits `[B]`.
+    pub fn dlrm_head(
+        &self,
+        batch: usize,
+        dense: &[f32],
+        reduced: &[f32],
+        params: &DlrmParams,
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let exe = self
+            .head
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no dlrm_head artifact for batch {batch}"))?;
+        let mut inputs = vec![
+            literal(dense, &[batch as i64, m.dense_features as i64])?,
+            literal(reduced, &[batch as i64, m.embed_dim as i64])?,
+        ];
+        inputs.extend(params.literals()?);
+        exe.run_f32(&inputs)
+    }
+
+    /// Fused whole-model forward: dense + masks + tiles + params → logits.
+    pub fn dlrm_forward(
+        &self,
+        batch: usize,
+        dense: &[f32],
+        masks: &[f32],
+        tiles: &[f32],
+        params: &DlrmParams,
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let exe = self
+            .dlrm
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no dlrm artifact for batch {batch}"))?;
+        let mut inputs = vec![
+            literal(dense, &[batch as i64, m.dense_features as i64])?,
+            literal(masks, &[batch as i64, m.tiles as i64, m.xbar_rows as i64])?,
+            literal(tiles, &[m.tiles as i64, m.xbar_rows as i64, m.embed_dim as i64])?,
+        ];
+        inputs.extend(params.literals()?);
+        exe.run_f32(&inputs)
+    }
+}
+
+fn artifact(dir: &Path, kind: &str, batch: usize) -> PathBuf {
+    dir.join(format!("{kind}_b{batch}.hlo.txt"))
+}
+
+/// True when the artifact directory looks complete (used by tests and the
+/// CLI to degrade gracefully with a clear message instead of a panic).
+pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+    let dir = dir.as_ref();
+    match Manifest::load(dir) {
+        Ok(m) => m.batches.iter().all(|&b| {
+            artifact(dir, "reduce", b).exists() && artifact(dir, "dlrm_head", b).exists()
+        }),
+        Err(_) => false,
+    }
+}
+
+/// Bail with a friendly message when artifacts are missing.
+pub fn require_artifacts(dir: impl AsRef<Path>) -> Result<()> {
+    if !artifacts_available(&dir) {
+        bail!(
+            "AOT artifacts not found in {:?} — run `make artifacts` first",
+            dir.as_ref()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            "[model]\ndense_features = 13\nembed_dim = 16\nxbar_rows = 64\ntiles = 8\n\
+             batches = [1, 8, 32]\n[params]\norder = [\"w_bot1\", \"b_bot1\", \"w_bot2\", \
+             \"b_bot2\", \"w_top1\", \"b_top1\", \"w_top2\", \"b_top2\"]\n",
+        )
+        .unwrap();
+        assert_eq!(m.embed_dim, 16);
+        assert_eq!(m.batches, vec![1, 8, 32]);
+        assert_eq!(m.param_order.len(), 8);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("[model]\n").is_err());
+        assert!(Manifest::parse("batches = [1]").is_err());
+    }
+
+    #[test]
+    fn literal_shape_checked() {
+        assert!(literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn pick_batch_rounds_up() {
+        // pick_batch logic exercised without loading executables.
+        let m = Manifest {
+            dense_features: 13,
+            embed_dim: 16,
+            xbar_rows: 64,
+            tiles: 8,
+            batches: vec![1, 8, 32],
+            param_order: vec![String::new(); 8],
+        };
+        let pick = |n: usize| -> usize {
+            for &b in &m.batches {
+                if b >= n {
+                    return b;
+                }
+            }
+            *m.batches.last().unwrap()
+        };
+        assert_eq!(pick(1), 1);
+        assert_eq!(pick(2), 8);
+        assert_eq!(pick(9), 32);
+        assert_eq!(pick(100), 32);
+    }
+
+    // Full execute-path tests live in rust/tests/runtime_integration.rs
+    // (they need `make artifacts`).
+}

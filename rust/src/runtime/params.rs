@@ -1,0 +1,261 @@
+//! DLRM MLP parameters on the rust side.
+//!
+//! The artifact ABI passes the 8 MLP weight tensors positionally (see
+//! `python/compile/model.py::PARAM_ORDER`). This module owns their shapes,
+//! deterministic He-style initialisation (so rust-side and test runs are
+//! reproducible without a checkpoint file), and a flat binary
+//! checkpoint format for round-tripping trained weights.
+
+use super::Manifest;
+use crate::util::Rng;
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::io::{Read, Write};
+
+/// One named tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The 8 DLRM MLP tensors, in ABI order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DlrmParams {
+    pub tensors: Vec<Tensor>,
+}
+
+impl DlrmParams {
+    /// Parameter shapes implied by the manifest dimensions.
+    /// Order: w_bot1, b_bot1, w_bot2, b_bot2, w_top1, b_top1, w_top2, b_top2.
+    pub fn shapes(m: &Manifest) -> Vec<(String, Vec<usize>)> {
+        let f = m.dense_features;
+        let d = m.embed_dim;
+        let bh = 64; // BOTTOM_HIDDEN, fixed in model.py
+        let th = 64; // TOP_HIDDEN
+        vec![
+            ("w_bot1".into(), vec![f, bh]),
+            ("b_bot1".into(), vec![bh]),
+            ("w_bot2".into(), vec![bh, d]),
+            ("b_bot2".into(), vec![d]),
+            ("w_top1".into(), vec![3 * d, th]),
+            ("b_top1".into(), vec![th]),
+            ("w_top2".into(), vec![th, 1]),
+            ("b_top2".into(), vec![1]),
+        ]
+    }
+
+    /// Deterministic He-initialised parameters.
+    pub fn init(m: &Manifest, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let tensors = Self::shapes(m)
+            .into_iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let data = if name.starts_with('b') {
+                    vec![0.0; n]
+                } else {
+                    let fan_in = shape[0].max(1) as f64;
+                    let scale = (2.0 / fan_in).sqrt();
+                    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+                };
+                Tensor { name, shape, data }
+            })
+            .collect();
+        Self { tensors }
+    }
+
+    /// Validate against the manifest's declared order and shapes.
+    pub fn validate(&self, m: &Manifest) -> Result<()> {
+        let shapes = Self::shapes(m);
+        anyhow::ensure!(
+            self.tensors.len() == shapes.len(),
+            "expected {} tensors, got {}",
+            shapes.len(),
+            self.tensors.len()
+        );
+        for (t, (name, shape)) in self.tensors.iter().zip(&shapes) {
+            anyhow::ensure!(&t.name == name, "tensor order: {} vs {}", t.name, name);
+            anyhow::ensure!(
+                &t.shape == shape,
+                "tensor {} shape {:?} vs expected {:?}",
+                t.name,
+                t.shape,
+                shape
+            );
+            anyhow::ensure!(t.data.len() == t.elements(), "tensor {} data length", t.name);
+        }
+        for (t, o) in self.tensors.iter().zip(&m.param_order) {
+            anyhow::ensure!(&t.name == o, "manifest order mismatch: {} vs {o}", t.name);
+        }
+        Ok(())
+    }
+
+    /// XLA literals in ABI order.
+    pub fn literals(&self) -> Result<Vec<xla::Literal>> {
+        self.tensors
+            .iter()
+            .map(|t| {
+                let shape: Vec<i64> = t.shape.iter().map(|&s| s as i64).collect();
+                xla::Literal::vec1(&t.data)
+                    .reshape(&shape)
+                    .map_err(|e| anyhow!("param {}: {e:?}", t.name))
+            })
+            .collect()
+    }
+
+    /// Serialize to a flat binary checkpoint:
+    /// magic `RXCP`, count u32, then per tensor: name-len u32 + utf8,
+    /// rank u32, dims u32*, data f32* (LE).
+    pub fn save<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(b"RXCP")?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for t in &self.tensors {
+            w.write_all(&(t.name.len() as u32).to_le_bytes())?;
+            w.write_all(t.name.as_bytes())?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &x in &t.data {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint written by [`DlrmParams::save`].
+    pub fn load_from<R: Read>(r: &mut R) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"RXCP" {
+            bail!("not a ReCross checkpoint");
+        }
+        let count = read_u32(r)? as usize;
+        if count > 1024 {
+            bail!("checkpoint declares {count} tensors; refusing");
+        }
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u32(r)? as usize;
+            if name_len > 256 {
+                bail!("tensor name too long");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let rank = read_u32(r)? as usize;
+            if rank > 8 {
+                bail!("tensor rank {rank} too large");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u32(r)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            if n > 64 << 20 {
+                bail!("tensor too large ({n} elems)");
+            }
+            let mut data = Vec::with_capacity(n);
+            let mut buf = [0u8; 4];
+            for _ in 0..n {
+                r.read_exact(&mut buf)?;
+                data.push(f32::from_le_bytes(buf));
+            }
+            tensors.push(Tensor {
+                name: String::from_utf8(name)?,
+                shape,
+                data,
+            });
+        }
+        Ok(Self { tensors })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest {
+            dense_features: 13,
+            embed_dim: 16,
+            xbar_rows: 64,
+            tiles: 8,
+            batches: vec![1],
+            param_order: [
+                "w_bot1", "b_bot1", "w_bot2", "b_bot2", "w_top1", "b_top1", "w_top2", "b_top2",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        }
+    }
+
+    #[test]
+    fn init_validates() {
+        let m = manifest();
+        let p = DlrmParams::init(&m, 42);
+        p.validate(&m).unwrap();
+        assert_eq!(p.tensors.len(), 8);
+        assert_eq!(p.tensors[0].shape, vec![13, 64]);
+        assert_eq!(p.tensors[4].shape, vec![48, 64]);
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let m = manifest();
+        assert_eq!(DlrmParams::init(&m, 7), DlrmParams::init(&m, 7));
+        assert_ne!(DlrmParams::init(&m, 7), DlrmParams::init(&m, 8));
+    }
+
+    #[test]
+    fn biases_zero_weights_scaled() {
+        let m = manifest();
+        let p = DlrmParams::init(&m, 1);
+        assert!(p.tensors[1].data.iter().all(|&x| x == 0.0));
+        let w = &p.tensors[0];
+        let mean: f32 = w.data.iter().sum::<f32>() / w.data.len() as f32;
+        assert!(mean.abs() < 0.1, "weight mean {mean}");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = manifest();
+        let p = DlrmParams::init(&m, 3);
+        let mut buf = Vec::new();
+        p.save(&mut buf).unwrap();
+        let back = DlrmParams::load_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(p, back);
+        back.validate(&m).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_rejects_garbage() {
+        assert!(DlrmParams::load_from(&mut &b"XXXX"[..]).is_err());
+        let mut buf = Vec::new();
+        DlrmParams::init(&manifest(), 1).save(&mut buf).unwrap();
+        buf.truncate(buf.len() / 2);
+        assert!(DlrmParams::load_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn validate_catches_wrong_order() {
+        let m = manifest();
+        let mut p = DlrmParams::init(&m, 1);
+        p.tensors.swap(0, 2);
+        assert!(p.validate(&m).is_err());
+    }
+}

@@ -1,0 +1,475 @@
+//! Online-phase scheduler: maps a batch of queries onto physical crossbars
+//! and simulates completion time with a discrete-event model.
+//!
+//! Model (matches the paper's completion-time metric):
+//!
+//! * Every logical group `g` owns `copies[g]` physical crossbars. A query
+//!   touching `g` is served by the **least-loaded replica** (greedy
+//!   earliest-finish selection — this is where access-aware duplication
+//!   buys parallelism).
+//! * A physical crossbar serves activations serially; an activation's
+//!   latency comes from [`CrossbarModel::activation`]. Waiting for a busy
+//!   crossbar is recorded as **stall time** (the Fig. 4 contention the
+//!   paper describes: "later queries experience long delays while waiting
+//!   for prior queries to complete").
+//! * A query's partial sums from `k` crossbars merge through `k-1` digital
+//!   vector adds on its tile reducer; the query finishes when its last
+//!   activation + merge completes. The batch completes when every query
+//!   has finished.
+//!
+//! The same event loop also implements the nMARS dataflow (parallel
+//! in-memory row lookups + *sequential* external aggregation) so all
+//! schemes share one timing substrate.
+
+use crate::allocation::Replication;
+use crate::grouping::Mapping;
+use crate::workload::Query;
+use crate::xbar::{AdcMode, CrossbarModel};
+
+/// Aggregated execution statistics for one batch (or a whole trace).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExecStats {
+    /// Batch completion time (max query finish), ns.
+    pub completion_ns: f64,
+    /// Total energy, pJ.
+    pub energy_pj: f64,
+    /// Total crossbar activations (MAC or read).
+    pub activations: u64,
+    /// Activations that ran in full MAC mode.
+    pub mac_activations: u64,
+    /// Activations served in gated read mode.
+    pub read_activations: u64,
+    /// Activations that touched exactly one row (Fig. 6's quantity,
+    /// independent of whether the dynamic switch was enabled).
+    pub single_row_activations: u64,
+    /// Total wordlines activated across all activations.
+    pub rows_activated: u64,
+    /// Total time queries spent queued behind busy crossbars, ns.
+    pub stall_ns: f64,
+    /// Total time activation results waited for a free bus channel, ns.
+    pub bus_wait_ns: f64,
+    /// Queries processed.
+    pub queries: u64,
+    /// Total embedding lookups processed.
+    pub lookups: u64,
+}
+
+impl ExecStats {
+    /// Merge another batch's stats (sequential batches: completion adds).
+    pub fn accumulate(&mut self, other: &ExecStats) {
+        self.completion_ns += other.completion_ns;
+        self.energy_pj += other.energy_pj;
+        self.activations += other.activations;
+        self.mac_activations += other.mac_activations;
+        self.read_activations += other.read_activations;
+        self.single_row_activations += other.single_row_activations;
+        self.rows_activated += other.rows_activated;
+        self.stall_ns += other.stall_ns;
+        self.bus_wait_ns += other.bus_wait_ns;
+        self.queries += other.queries;
+        self.lookups += other.lookups;
+    }
+
+    /// Mean completion time per query, ns.
+    pub fn ns_per_query(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.completion_ns / self.queries as f64
+        }
+    }
+
+    /// Energy per lookup, pJ.
+    pub fn pj_per_lookup(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.energy_pj / self.lookups as f64
+        }
+    }
+
+    /// Fraction of activations that were single-row.
+    pub fn single_row_share(&self) -> f64 {
+        if self.activations == 0 {
+            0.0
+        } else {
+            self.single_row_activations as f64 / self.activations as f64
+        }
+    }
+}
+
+/// Scheduler over a fixed mapping + replication plan.
+#[derive(Debug)]
+pub struct Scheduler<'a> {
+    mapping: &'a Mapping,
+    replication: &'a Replication,
+    model: &'a CrossbarModel,
+    /// Physical crossbar id of the first replica of each group.
+    replica_base: Vec<u32>,
+    /// Precomputed activation cost per activated-row count (§Perf
+    /// iteration 3: the circuit model is pure in `rows`, so the per-
+    /// activation float math is hoisted out of the batch loop).
+    cost_by_rows: Vec<crate::xbar::ActivationCost>,
+}
+
+/// Reusable per-batch scratch buffers (hot path: allocation-free).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// (group, rows) runs for the current query.
+    runs: Vec<(u32, u32)>,
+    /// group ids of the current query (pre-sort buffer).
+    groups: Vec<u32>,
+    /// busy-until time per physical crossbar.
+    busy: Vec<f64>,
+    /// busy-until time per global-bus channel.
+    bus: Vec<f64>,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(
+        mapping: &'a Mapping,
+        replication: &'a Replication,
+        model: &'a CrossbarModel,
+        dynamic_switch: bool,
+    ) -> Self {
+        assert_eq!(
+            mapping.num_groups(),
+            replication.copies.len(),
+            "replication plan does not match mapping"
+        );
+        let mut replica_base = Vec::with_capacity(mapping.num_groups());
+        let mut next = 0u32;
+        for &c in &replication.copies {
+            replica_base.push(next);
+            next += c;
+        }
+        let cost_by_rows = (0..=mapping.group_size)
+            .map(|r| model.activation(r.max(1), dynamic_switch))
+            .collect();
+        Self {
+            mapping,
+            replication,
+            model,
+            replica_base,
+            cost_by_rows,
+        }
+    }
+
+    /// Total physical crossbars.
+    pub fn num_physical(&self) -> usize {
+        self.replication.total_crossbars
+    }
+
+    /// Simulate one batch. All queries arrive at t=0 (the paper's
+    /// batch-synchronous inference); the returned stats cover this batch.
+    pub fn run_batch(&self, queries: &[Query], scratch: &mut Scratch) -> ExecStats {
+        scratch.busy.clear();
+        scratch.busy.resize(self.num_physical(), 0.0);
+        scratch.bus.clear();
+        scratch.bus.resize(self.model.bus_channels(), 0.0);
+        let (add_ns, add_pj) = self.model.vector_add();
+        let flit_ns = self.model.bus_flit_ns();
+
+        let mut stats = ExecStats::default();
+        let mut batch_finish = 0.0f64;
+
+        for q in queries {
+            if q.is_empty() {
+                continue;
+            }
+            self.query_runs(q, scratch);
+            let mut query_finish = 0.0f64;
+            let k = scratch.runs.len();
+
+            for &(group, rows) in &scratch.runs {
+                let cost = self.cost_by_rows[rows as usize];
+                // least-loaded replica of this group
+                let base = self.replica_base[group as usize] as usize;
+                let copies = self.replication.copies_of(group) as usize;
+                let (slot, &start_busy) = scratch.busy[base..base + copies]
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                let start = start_busy;
+                let finish = start + cost.latency_ns;
+                scratch.busy[base + slot] = finish;
+
+                // Result transfer on the least-busy global-bus channel.
+                let (chan, &chan_busy) = scratch
+                    .bus
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                let t_start = finish.max(chan_busy);
+                let t_finish = t_start + cost.bus_flits as f64 * flit_ns;
+                scratch.bus[chan] = t_finish;
+
+                stats.stall_ns += start; // queue wait from batch arrival
+                stats.bus_wait_ns += t_start - finish;
+                stats.energy_pj += cost.energy_pj;
+                stats.activations += 1;
+                stats.rows_activated += rows as u64;
+                if rows == 1 {
+                    stats.single_row_activations += 1;
+                }
+                match cost.mode {
+                    AdcMode::Mac => stats.mac_activations += 1,
+                    AdcMode::Read => stats.read_activations += 1,
+                }
+                query_finish = query_finish.max(t_finish);
+            }
+
+            // Merge partial sums across the k crossbars.
+            if k > 1 {
+                query_finish += (k - 1) as f64 * add_ns;
+                stats.energy_pj += (k - 1) as f64 * add_pj;
+            }
+            batch_finish = batch_finish.max(query_finish);
+            stats.queries += 1;
+            stats.lookups += q.len() as u64;
+        }
+        stats.completion_ns = batch_finish;
+        stats
+    }
+
+    /// nMARS dataflow over the same mapping: every lookup is a single-row
+    /// full-resolution read (in-memory lookup), aggregation is sequential
+    /// per query on an external adder.
+    pub fn run_batch_nmars(&self, queries: &[Query], scratch: &mut Scratch) -> ExecStats {
+        scratch.busy.clear();
+        scratch.busy.resize(self.num_physical(), 0.0);
+        scratch.bus.clear();
+        scratch.bus.resize(self.model.bus_channels(), 0.0);
+        let (add_ns, add_pj) = self.model.vector_add();
+        let lookup = self.model.row_lookup();
+        let flit_ns = self.model.bus_flit_ns();
+
+        let mut stats = ExecStats::default();
+        let mut batch_finish = 0.0f64;
+
+        for q in queries {
+            if q.is_empty() {
+                continue;
+            }
+            let mut last_read = 0.0f64;
+            for &e in &q.items {
+                let slot = self.mapping.slot_of(e);
+                let base = self.replica_base[slot.group as usize] as usize;
+                let copies = self.replication.copies_of(slot.group) as usize;
+                let (rep, &start_busy) = scratch.busy[base..base + copies]
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                let finish = start_busy + lookup.latency_ns;
+                scratch.busy[base + rep] = finish;
+                // Every looked-up row ships over the global bus.
+                let (chan, &chan_busy) = scratch
+                    .bus
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                let t_start = finish.max(chan_busy);
+                let t_finish = t_start + lookup.bus_flits as f64 * flit_ns;
+                scratch.bus[chan] = t_finish;
+                stats.stall_ns += start_busy;
+                stats.bus_wait_ns += t_start - finish;
+                stats.energy_pj += lookup.energy_pj;
+                stats.activations += 1;
+                stats.rows_activated += 1;
+                stats.single_row_activations += 1;
+                stats.read_activations += 1; // gated single-row sense
+                last_read = last_read.max(t_finish);
+            }
+            // Sequential external aggregation (the nMARS bottleneck).
+            let adds = (q.len() - 1) as f64;
+            let query_finish = last_read + adds * add_ns;
+            stats.energy_pj += adds * add_pj;
+            batch_finish = batch_finish.max(query_finish);
+            stats.queries += 1;
+            stats.lookups += q.len() as u64;
+        }
+        stats.completion_ns = batch_finish;
+        stats
+    }
+
+    /// Decompose a query into `(group, rows)` runs using scratch buffers.
+    fn query_runs(&self, q: &Query, scratch: &mut Scratch) {
+        scratch.groups.clear();
+        scratch
+            .groups
+            .extend(q.items.iter().map(|&e| self.mapping.slot_of(e).group));
+        scratch.groups.sort_unstable();
+        scratch.runs.clear();
+        let mut i = 0;
+        while i < scratch.groups.len() {
+            let g = scratch.groups[i];
+            let mut rows = 0u32;
+            while i < scratch.groups.len() && scratch.groups[i] == g {
+                rows += 1;
+                i += 1;
+            }
+            scratch.runs.push((g, rows));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::Replication;
+    use crate::config::HardwareConfig;
+    use crate::grouping::Mapping;
+    use crate::workload::Query;
+    use crate::xbar::CircuitParams;
+
+    fn model() -> CrossbarModel {
+        CrossbarModel::new(&HardwareConfig::default(), &CircuitParams::default())
+    }
+
+    fn mapping_2x2() -> Mapping {
+        Mapping::from_groups(vec![vec![0, 1], vec![2, 3]], 2, 4)
+    }
+
+    #[test]
+    fn single_query_one_group() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let s = Scheduler::new(&map, &rep, &m, true);
+        let mut scratch = Scratch::default();
+        let stats = s.run_batch(&[Query::new(vec![0, 1])], &mut scratch);
+        assert_eq!(stats.activations, 1);
+        assert_eq!(stats.rows_activated, 2);
+        assert_eq!(stats.mac_activations, 1);
+        assert_eq!(stats.single_row_activations, 0);
+        assert_eq!(stats.stall_ns, 0.0);
+        let expect = m.activation(2, true);
+        let flit = m.bus_flit_ns();
+        assert!((stats.completion_ns - (expect.latency_ns + flit)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cross_group_query_pays_merge() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let s = Scheduler::new(&map, &rep, &m, true);
+        let mut scratch = Scratch::default();
+        let stats = s.run_batch(&[Query::new(vec![0, 2])], &mut scratch);
+        assert_eq!(stats.activations, 2);
+        assert_eq!(stats.read_activations, 2); // both single-row
+        assert_eq!(stats.single_row_activations, 2);
+        let act = m.activation(1, true);
+        let (add_ns, _) = m.vector_add();
+        let flit = m.bus_flit_ns();
+        // two parallel activations on different crossbars (transfers land
+        // on distinct bus channels) + one merge
+        assert!((stats.completion_ns - (act.latency_ns + flit + add_ns)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_serializes_and_stalls() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let s = Scheduler::new(&map, &rep, &m, true);
+        let mut scratch = Scratch::default();
+        // Two queries hitting the same group: second must queue.
+        let qs = vec![Query::new(vec![0, 1]), Query::new(vec![0, 1])];
+        let stats = s.run_batch(&qs, &mut scratch);
+        let act = m.activation(2, true);
+        let flit = m.bus_flit_ns();
+        assert!((stats.completion_ns - (2.0 * act.latency_ns + flit)).abs() < 1e-9);
+        assert!((stats.stall_ns - act.latency_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replication_removes_contention() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication {
+            copies: vec![2, 1],
+            total_crossbars: 3,
+            batch_size: 2,
+        };
+        let s = Scheduler::new(&map, &rep, &m, true);
+        let mut scratch = Scratch::default();
+        let qs = vec![Query::new(vec![0, 1]), Query::new(vec![0, 1])];
+        let stats = s.run_batch(&qs, &mut scratch);
+        let act = m.activation(2, true);
+        let flit = m.bus_flit_ns();
+        // both served in parallel on the two replicas (plenty of channels)
+        assert!((stats.completion_ns - (act.latency_ns + flit)).abs() < 1e-9);
+        assert_eq!(stats.stall_ns, 0.0);
+    }
+
+    #[test]
+    fn dynamic_switch_saves_energy_not_counts() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let qs = vec![Query::new(vec![0]), Query::new(vec![2, 3])];
+        let mut scratch = Scratch::default();
+        let on = Scheduler::new(&map, &rep, &m, true).run_batch(&qs, &mut scratch);
+        let off = Scheduler::new(&map, &rep, &m, false).run_batch(&qs, &mut scratch);
+        assert_eq!(on.activations, off.activations);
+        assert_eq!(on.single_row_activations, 1);
+        assert_eq!(off.single_row_activations, 1);
+        assert_eq!(on.read_activations, 1);
+        assert_eq!(off.read_activations, 0);
+        assert!(on.energy_pj < off.energy_pj);
+    }
+
+    #[test]
+    fn nmars_pays_per_lookup() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let s = Scheduler::new(&map, &rep, &m, false);
+        let mut scratch = Scratch::default();
+        let stats = s.run_batch_nmars(&[Query::new(vec![0, 1, 2])], &mut scratch);
+        assert_eq!(stats.activations, 3);
+        assert_eq!(stats.lookups, 3);
+        // rows 0,1 share a crossbar -> serialized; plus transfer + 2 adds.
+        let lk = m.row_lookup();
+        let (add_ns, _) = m.vector_add();
+        let flit = m.bus_flit_ns();
+        assert!(
+            (stats.completion_ns - (2.0 * lk.latency_ns + flit + 2.0 * add_ns)).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn accumulate_sums() {
+        let mut a = ExecStats {
+            completion_ns: 10.0,
+            energy_pj: 5.0,
+            activations: 2,
+            queries: 1,
+            lookups: 3,
+            ..Default::default()
+        };
+        let b = a.clone();
+        a.accumulate(&b);
+        assert_eq!(a.completion_ns, 20.0);
+        assert_eq!(a.activations, 4);
+        assert_eq!(a.queries, 2);
+        assert_eq!(a.lookups, 6);
+    }
+
+    #[test]
+    fn empty_queries_skipped() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let s = Scheduler::new(&map, &rep, &m, true);
+        let mut scratch = Scratch::default();
+        let stats = s.run_batch(&[Query::new(vec![])], &mut scratch);
+        assert_eq!(stats.queries, 0);
+        assert_eq!(stats.completion_ns, 0.0);
+    }
+}

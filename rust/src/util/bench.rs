@@ -1,0 +1,186 @@
+//! A criterion-style measurement harness (offline stand-in for `criterion`).
+//!
+//! `cargo bench` targets are declared with `harness = false` and call into
+//! this module: warm-up, timed iterations, mean/median/stddev, and a
+//! one-line report per benchmark. Results can also be appended to a TSV so
+//! `EXPERIMENTS.md` numbers are regenerable.
+
+use std::time::{Duration, Instant};
+
+/// Measurement settings.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Wall-clock spent warming up before measuring.
+    pub warmup: Duration,
+    /// Target wall-clock for the measurement phase.
+    pub measure: Duration,
+    /// Hard cap on measured iterations (keeps slow end-to-end benches sane).
+    pub max_iters: u64,
+    /// Minimum measured iterations regardless of duration.
+    pub min_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+/// Summary statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    /// One-line human report, criterion-flavored.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  (σ {}, {} iters)",
+            self.name,
+            super::fmt_ns(self.min_ns),
+            super::fmt_ns(self.median_ns),
+            super::fmt_ns(self.max_ns),
+            super::fmt_ns(self.stddev_ns),
+            self.iters
+        )
+    }
+}
+
+/// A benchmark group that prints results as they complete.
+pub struct Bench {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::with_config(BenchConfig::default())
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Self {
+        Self {
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark: `f` is called once per iteration; its return value
+    /// is black-boxed to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warm-up.
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.cfg.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let mstart = Instant::now();
+        while (mstart.elapsed() < self.cfg.measure && (samples.len() as u64) < self.cfg.max_iters)
+            || (samples.len() as u64) < self.cfg.min_iters
+        {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean_ns: mean,
+            median_ns: samples[samples.len() / 2],
+            stddev_ns: var.sqrt(),
+            min_ns: samples[0],
+            max_ns: *samples.last().unwrap(),
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Append results as TSV rows (`name\tmean_ns\tmedian_ns\tstddev_ns`).
+    pub fn write_tsv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        for r in &self.results {
+            writeln!(
+                f,
+                "{}\t{:.1}\t{:.1}\t{:.1}",
+                r.name, r.mean_ns, r.median_ns, r.stddev_ns
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Optimizer barrier (stable-rust version of `std::hint::black_box`; kept
+/// behind a function so benches don't depend on unstable features).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            max_iters: 1000,
+            min_iters: 3,
+        }
+    }
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench::with_config(fast_cfg());
+        let r = b.run("noop", || 1 + 1).clone();
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn tsv_written() {
+        let path = std::env::temp_dir().join("recross_bench_test.tsv");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let mut b = Bench::with_config(fast_cfg());
+        b.run("a", || 0);
+        b.run("b", || 0);
+        b.write_tsv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,267 @@
+//! A minimal declarative command-line parser (offline stand-in for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; generates usage text from the declared options. Only what the
+//! `recross` launcher and the examples need.
+
+use std::collections::HashMap;
+
+/// Declared option kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Flag,
+    Value,
+}
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    kind: Kind,
+    default: Option<String>,
+    help: &'static str,
+}
+
+/// A tiny argument parser: declare options, then [`Args::parse`].
+#[derive(Debug, Default)]
+pub struct ArgSpec {
+    opts: Vec<Opt>,
+    positional: Vec<(&'static str, &'static str)>,
+    about: &'static str,
+}
+
+/// Parsed arguments.
+#[derive(Debug)]
+pub struct Args {
+    values: HashMap<&'static str, String>,
+    flags: HashMap<&'static str, bool>,
+    positional: Vec<String>,
+}
+
+impl ArgSpec {
+    /// New spec with a one-line description (shown in `--help`).
+    pub fn new(about: &'static str) -> Self {
+        Self {
+            about,
+            ..Default::default()
+        }
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            kind: Kind::Flag,
+            default: None,
+            help,
+        });
+        self
+    }
+
+    /// Declare a `--name <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            kind: Kind::Value,
+            default: Some(default.to_string()),
+            help,
+        });
+        self
+    }
+
+    /// Declare a required positional argument.
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positional.push((name, help));
+        self
+    }
+
+    /// Usage text.
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("{}\n\nUSAGE: {prog}", self.about);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let lhs = match o.kind {
+                Kind::Flag => format!("  --{}", o.name),
+                Kind::Value => format!("  --{} <v>", o.name),
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{lhs:<26} {}{def}\n", o.help));
+        }
+        for (p, h) in &self.positional {
+            s.push_str(&format!("  <{p:<22}> {h}\n"));
+        }
+        s
+    }
+
+    /// Parse an argv slice (without the program name). Returns `Err` with a
+    /// usage-style message on malformed input or `--help`.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut values = HashMap::new();
+        let mut flags = HashMap::new();
+        for o in &self.opts {
+            match o.kind {
+                Kind::Flag => {
+                    flags.insert(o.name, false);
+                }
+                Kind::Value => {
+                    values.insert(o.name, o.default.clone().unwrap_or_default());
+                }
+            }
+        }
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage("recross"));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage("recross")))?;
+                match opt.kind {
+                    Kind::Flag => {
+                        if inline_val.is_some() {
+                            return Err(format!("--{key} takes no value"));
+                        }
+                        flags.insert(opt.name, true);
+                    }
+                    Kind::Value => {
+                        let v = match inline_val {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| format!("--{key} requires a value"))?
+                            }
+                        };
+                        values.insert(opt.name, v);
+                    }
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        if positional.len() < self.positional.len() {
+            return Err(format!(
+                "missing positional argument <{}>\n\n{}",
+                self.positional[positional.len()].0,
+                self.usage("recross")
+            ));
+        }
+        Ok(Args {
+            values,
+            flags,
+            positional,
+        })
+    }
+}
+
+impl Args {
+    /// Get a value option as a string.
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    /// Get a value option parsed to any `FromStr` type.
+    pub fn get_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get(name)
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    /// Was a flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not declared"))
+    }
+
+    /// Positional argument by index.
+    pub fn pos(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test")
+            .flag("verbose", "be loud")
+            .opt("seed", "42", "rng seed")
+            .opt("dataset", "software", "dataset name")
+            .positional("cmd", "subcommand")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&sv(&["run"])).unwrap();
+        assert_eq!(a.get("seed"), "42");
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.pos(0), Some("run"));
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = spec()
+            .parse(&sv(&["run", "--seed", "7", "--dataset=sports"]))
+            .unwrap();
+        assert_eq!(a.get_as::<u64>("seed").unwrap(), 7);
+        assert_eq!(a.get("dataset"), "sports");
+    }
+
+    #[test]
+    fn flags_toggle() {
+        let a = spec().parse(&sv(&["run", "--verbose"])).unwrap();
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(&sv(&["run", "--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(spec().parse(&sv(&["run", "--seed"])).is_err());
+    }
+
+    #[test]
+    fn missing_positional_rejected() {
+        assert!(spec().parse(&sv(&[])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = spec().parse(&sv(&["--help"])).unwrap_err();
+        assert!(err.contains("USAGE"));
+        assert!(err.contains("--seed"));
+    }
+}

@@ -1,0 +1,75 @@
+//! Self-contained utility substrates.
+//!
+//! The reproduction environment is fully offline, so everything that would
+//! normally come from a crate (`rand`, `clap`, `criterion`, `proptest`) is
+//! implemented here from scratch:
+//!
+//! * [`rng`] — a `SplitMix64`-seeded `xoshiro256**` PRNG with the sampling
+//!   helpers the workload generator needs.
+//! * [`zipf`] — an exact inverse-CDF Zipf(α) sampler (the paper's power-law
+//!   access distributions).
+//! * [`cli`] — a small declarative command-line parser for the launcher.
+//! * [`bench`] — a criterion-style measurement harness used by
+//!   `rust/benches/*` (warm-up, iterations, mean/stddev/median reporting).
+//! * [`fxhash`] — a fast multiplicative hasher for trusted integer keys
+//!   (the graph build's hot path).
+
+pub mod bench;
+pub mod cli;
+pub mod fxhash;
+pub mod rng;
+pub mod zipf;
+
+pub use fxhash::{FxHashMap, FxHashSet};
+pub use rng::Rng;
+pub use zipf::Zipf;
+
+/// Format a nanosecond quantity with an adaptive unit (ns/µs/ms/s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a picojoule quantity with an adaptive unit (pJ/nJ/µJ/mJ/J).
+pub fn fmt_pj(pj: f64) -> String {
+    if pj < 1e3 {
+        format!("{pj:.1} pJ")
+    } else if pj < 1e6 {
+        format!("{:.2} nJ", pj / 1e3)
+    } else if pj < 1e9 {
+        format!("{:.2} µJ", pj / 1e6)
+    } else if pj < 1e12 {
+        format!("{:.2} mJ", pj / 1e9)
+    } else {
+        format!("{:.3} J", pj / 1e12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn fmt_pj_units() {
+        assert!(fmt_pj(3.0).ends_with("pJ"));
+        assert!(fmt_pj(3e3).ends_with("nJ"));
+        assert!(fmt_pj(3e6).ends_with("µJ"));
+        assert!(fmt_pj(3e9).ends_with("mJ"));
+        assert!(fmt_pj(3e12).ends_with(" J"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Exact Zipf(α) sampling over `n` ranks.
+//!
+//! The paper's central empirical observation (§II-C, Fig. 2) is that both
+//! embedding access frequency and co-occurrence degree follow a power law.
+//! The workload generator therefore draws item popularity from a Zipf
+//! distribution: `P(rank = k) ∝ 1 / k^α`.
+//!
+//! Implementation: a precomputed cumulative table + binary search
+//! (inverse-CDF). Exact, O(log n) per draw, O(n) memory — fine up to the
+//! ~1M embeddings of the Sports dataset and fully deterministic, which
+//! rejection samplers with floating-point envelopes are not across
+//! platforms.
+
+use super::rng::Rng;
+
+/// An exact Zipf(α) sampler over ranks `0..n` (rank 0 is the hottest).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    /// Cumulative probability for each rank; `cdf[n-1] == 1.0`.
+    cdf: Vec<f64>,
+    alpha: f64,
+}
+
+impl Zipf {
+    /// Build a sampler over `n` ranks with exponent `alpha > 0`.
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n > 0, "Zipf over zero ranks");
+        assert!(alpha > 0.0, "Zipf exponent must be positive");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(alpha);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        // Guard against floating-point shortfall at the tail.
+        *cdf.last_mut().unwrap() = 1.0;
+        Self { cdf, alpha }
+    }
+
+    /// Number of ranks.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// True if the sampler has a single rank.
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// The configured exponent.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Draw a rank in `[0, n)`; rank 0 is the most popular.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        // partition_point returns the first rank whose cdf >= u.
+        self.cdf.partition_point(|&c| c < u)
+    }
+
+    /// Probability mass of a given rank.
+    pub fn pmf(&self, rank: usize) -> f64 {
+        if rank == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[rank] - self.cdf[rank - 1]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_in_bounds() {
+        let z = Zipf::new(1000, 1.1);
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut r) < 1000);
+        }
+    }
+
+    #[test]
+    fn pmf_sums_to_one() {
+        let z = Zipf::new(500, 0.9);
+        let total: f64 = (0..500).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank0_is_hottest_and_matches_pmf() {
+        let z = Zipf::new(100, 1.2);
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let mut counts = vec![0usize; 100];
+        for _ in 0..n {
+            counts[z.sample(&mut r)] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[90]);
+        let emp0 = counts[0] as f64 / n as f64;
+        assert!((emp0 - z.pmf(0)).abs() < 0.01, "emp {emp0} vs {}", z.pmf(0));
+    }
+
+    #[test]
+    fn empirical_follows_power_law_slope() {
+        // log(freq) vs log(rank+1) should be roughly linear with slope -α.
+        let alpha = 1.0;
+        let z = Zipf::new(10_000, alpha);
+        let mut r = Rng::new(42);
+        let mut counts = vec![0usize; 10_000];
+        for _ in 0..2_000_000 {
+            counts[z.sample(&mut r)] += 1;
+        }
+        // Fit over well-populated head ranks.
+        let pts: Vec<(f64, f64)> = (0..200)
+            .filter(|&k| counts[k] > 0)
+            .map(|k| (((k + 1) as f64).ln(), (counts[k] as f64).ln()))
+            .collect();
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+        assert!(
+            (slope + alpha).abs() < 0.1,
+            "fitted slope {slope}, expected {}",
+            -alpha
+        );
+    }
+}

@@ -1,0 +1,257 @@
+//! Synthetic Amazon-Review-like trace generator.
+//!
+//! Model: items are partitioned into *co-purchase communities* (clusters).
+//! A query is built by
+//!
+//! 1. drawing a **primary community** from a Zipf distribution over
+//!    communities (popular categories are queried more — the paper's
+//!    power-law access frequency),
+//! 2. drawing a correlated **secondary community** (a deterministic
+//!    neighbor of the primary, modelling cross-category correlations),
+//! 3. drawing `len ~ max(1, Poisson(avg_lookups))` items, each of which is
+//!    * with probability `p_tail`: an *uncorrelated* long-tail item sampled
+//!      uniformly (these become Fig. 6's single-embedding activations),
+//!    * else with probability `p_secondary`: a Zipf draw within the
+//!      secondary community,
+//!    * else: a Zipf draw within the primary community.
+//!
+//! Item ids are assigned by a seeded permutation, so "naive mapping by
+//! itemID" (the paper's baseline) sees communities scattered across
+//! crossbars exactly as a hash-assigned catalogue would.
+
+use super::spec::DatasetSpec;
+use super::{Query, Trace};
+use crate::util::{Rng, Zipf};
+
+/// Reusable generator: holds the community structure so that *history* and
+/// *evaluation* traces share the same underlying catalogue (the offline
+/// phase must generalise from history to eval, as in the paper).
+#[derive(Debug)]
+pub struct Generator {
+    spec: DatasetSpec,
+    /// Item ids of each community (already permuted).
+    communities: Vec<Vec<u32>>,
+    /// Zipf over communities.
+    community_zipf: Zipf,
+    /// Zipf within a community of the maximum size (prefix used for
+    /// smaller ones — avoids one table per community).
+    intra_zipf: Zipf,
+    /// Catalogue size for uniform tail draws. Tail lookups are
+    /// *uncorrelated* one-off interactions (the paper's single-embedding
+    /// accesses): drawing them uniformly keeps them out of the hot
+    /// co-occurrence structure, matching Fig. 4b's observation that even
+    /// the hottest post-grouping crossbar sees only ~21 accesses per
+    /// batch of 256.
+    tail_n: usize,
+    /// Permutation from "semantic" item index to public item id.
+    perm: Vec<u32>,
+}
+
+impl Generator {
+    /// Build the catalogue for a dataset. `seed` fixes the community
+    /// structure; traces drawn later use their own seeds.
+    pub fn new(spec: &DatasetSpec, seed: u64) -> Self {
+        let n = spec.num_embeddings as usize;
+        let mut rng = Rng::new(seed ^ 0xC0FF_EE00_D15E_A5E5);
+
+        // Seeded permutation: semantic index -> public item id.
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut perm);
+
+        // Partition semantic indices into communities with sizes jittered
+        // around `cluster_size` (uniform in [size/2, 3*size/2]).
+        let mut communities = Vec::new();
+        let mut next = 0usize;
+        while next < n {
+            let lo = (spec.cluster_size / 2).max(4);
+            let hi = spec.cluster_size + spec.cluster_size / 2;
+            let size = rng.range(lo as u64, hi as u64) as usize;
+            let end = (next + size).min(n);
+            communities.push(perm[next..end].to_vec());
+            next = end;
+        }
+
+        let max_comm = communities.iter().map(Vec::len).max().unwrap_or(1);
+        Self {
+            community_zipf: Zipf::new(communities.len(), spec.alpha_pop),
+            intra_zipf: Zipf::new(max_comm, 0.8),
+            tail_n: n,
+            communities,
+            perm,
+            spec: spec.clone(),
+        }
+    }
+
+    /// Number of communities in the catalogue.
+    pub fn num_communities(&self) -> usize {
+        self.communities.len()
+    }
+
+    /// The dataset spec this generator was built from.
+    pub fn spec(&self) -> &DatasetSpec {
+        &self.spec
+    }
+
+    /// Draw an item from a community with intra-community Zipf skew.
+    fn draw_from_community(&self, comm: usize, rng: &mut Rng) -> u32 {
+        let items = &self.communities[comm];
+        // Rejection against the shared max-size Zipf: resample until the
+        // rank fits this community. Head-heavy, so few iterations.
+        loop {
+            let r = self.intra_zipf.sample(rng);
+            if r < items.len() {
+                return items[r];
+            }
+        }
+    }
+
+    /// Deterministic correlated neighbor of a community.
+    fn secondary_of(&self, comm: usize) -> usize {
+        // Popular communities correlate with other popular communities:
+        // neighbor in popularity rank, wrapping.
+        (comm + 1) % self.communities.len()
+    }
+
+    /// Generate one query. Lookups within one query are distinct (a
+    /// multi-hot wordline vector has 0/1 entries), so draws are rejected
+    /// until the target length is reached, with an attempt cap for
+    /// pathological cases (tiny communities).
+    pub fn query(&self, rng: &mut Rng) -> Query {
+        let primary = self.community_zipf.sample(rng);
+        let secondary = self.secondary_of(primary);
+        let len = rng.poisson(self.spec.avg_lookups).max(1) as usize;
+        let mut seen = crate::util::FxHashSet::default();
+        seen.reserve(len * 2);
+        let mut items = Vec::with_capacity(len);
+        let mut attempts = 0usize;
+        let max_attempts = len * 20 + 64;
+        while items.len() < len && attempts < max_attempts {
+            attempts += 1;
+            let item = if rng.chance(self.spec.p_tail) {
+                self.perm[rng.index(self.tail_n)]
+            } else if rng.chance(self.spec.p_secondary) {
+                self.draw_from_community(secondary, rng)
+            } else {
+                self.draw_from_community(primary, rng)
+            };
+            if seen.insert(item) {
+                items.push(item);
+            }
+        }
+        Query::new(items)
+    }
+
+    /// Generate a trace of `num_queries` queries with its own seed.
+    pub fn trace(&self, num_queries: usize, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let queries = (0..num_queries).map(|_| self.query(&mut rng)).collect();
+        Trace {
+            num_embeddings: self.spec.num_embeddings,
+            queries,
+        }
+    }
+}
+
+/// Convenience: build a generator and produce `(history, eval)` traces with
+/// derived seeds, the standard experiment setup.
+pub fn generate(
+    spec: &DatasetSpec,
+    history_queries: usize,
+    eval_queries: usize,
+    seed: u64,
+) -> (Trace, Trace) {
+    let g = Generator::new(spec, seed);
+    let history = g.trace(history_queries, seed.wrapping_add(1));
+    let eval = g.trace(eval_queries, seed.wrapping_add(2));
+    (history, eval)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::fit_power_law;
+    use crate::workload::access_frequencies;
+
+    fn small_spec() -> DatasetSpec {
+        DatasetSpec::by_name("software").unwrap().scaled(0.2)
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = small_spec();
+        let (h1, _) = generate(&spec, 50, 10, 7);
+        let (h2, _) = generate(&spec, 50, 10, 7);
+        assert_eq!(h1.queries, h2.queries);
+    }
+
+    #[test]
+    fn seeds_change_trace() {
+        let spec = small_spec();
+        let (h1, _) = generate(&spec, 50, 10, 7);
+        let (h2, _) = generate(&spec, 50, 10, 8);
+        assert_ne!(h1.queries, h2.queries);
+    }
+
+    #[test]
+    fn items_in_range_and_nonempty() {
+        let spec = small_spec();
+        let (h, e) = generate(&spec, 200, 50, 1);
+        for q in h.queries.iter().chain(e.queries.iter()) {
+            assert!(!q.is_empty());
+            assert!(q.items.iter().all(|&i| i < spec.num_embeddings));
+        }
+    }
+
+    #[test]
+    fn mean_query_length_tracks_spec() {
+        let spec = small_spec();
+        let g = Generator::new(&spec, 3);
+        let t = g.trace(2_000, 4);
+        let mean =
+            t.queries.iter().map(|q| q.len() as f64).sum::<f64>() / t.queries.len() as f64;
+        // Dedup within a query shaves a little off the Poisson mean.
+        assert!(
+            (spec.avg_lookups * 0.75..=spec.avg_lookups * 1.05).contains(&mean),
+            "mean lookups {mean} vs spec {}",
+            spec.avg_lookups
+        );
+    }
+
+    #[test]
+    fn access_frequency_is_power_law() {
+        // The paper's Fig. 2 premise: generated frequencies must be
+        // power-law distributed.
+        let spec = small_spec();
+        let g = Generator::new(&spec, 5);
+        let t = g.trace(3_000, 6);
+        let freq = access_frequencies(&t);
+        let fit = fit_power_law(&freq).expect("enough points");
+        assert!(fit.is_power_law(), "fit {fit:?}");
+    }
+
+    #[test]
+    fn history_and_eval_share_structure() {
+        // Hot items of the history must be hot in eval: grouping must
+        // generalise. Compare top-100 overlap.
+        let spec = small_spec();
+        let (h, e) = generate(&spec, 2_000, 2_000, 11);
+        let top = |t: &Trace| {
+            let f = access_frequencies(t);
+            let mut idx: Vec<usize> = (0..f.len()).collect();
+            idx.sort_by_key(|&i| std::cmp::Reverse(f[i]));
+            idx[..100].iter().copied().collect::<std::collections::HashSet<_>>()
+        };
+        let overlap = top(&h).intersection(&top(&e)).count();
+        assert!(overlap >= 60, "top-100 overlap only {overlap}");
+    }
+
+    #[test]
+    fn communities_cover_catalogue() {
+        let spec = small_spec();
+        let g = Generator::new(&spec, 9);
+        let total: usize = (0..g.num_communities())
+            .map(|c| g.communities[c].len())
+            .sum();
+        assert_eq!(total, spec.num_embeddings as usize);
+    }
+}

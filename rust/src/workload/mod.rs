@@ -1,0 +1,118 @@
+//! DLRM embedding-lookup workloads.
+//!
+//! The paper evaluates on five Amazon Review categories (Table I). The raw
+//! dataset is not redistributable, so [`gen`] synthesizes traces whose
+//! *statistical structure* matches what the paper measures and what the
+//! ReCross algorithms actually consume:
+//!
+//! * item popularity follows a power law (Fig. 2),
+//! * co-occurrence degree follows a power law (Fig. 2),
+//! * queries draw most items from coherent co-purchase communities plus a
+//!   long random tail (this is what makes grouping effective and produces
+//!   the single-embedding activations of Fig. 6),
+//! * per-dataset scale and mean lookups-per-query match Table I.
+//!
+//! See DESIGN.md §Substitutions for the fidelity argument.
+
+pub mod gen;
+pub mod spec;
+pub mod trace;
+
+pub use gen::{generate, Generator};
+pub use spec::{DatasetSpec, AMAZON_DATASETS};
+pub use trace::Trace;
+
+/// Identifier of one embedding row (an item).
+pub type EmbeddingId = u32;
+
+/// One recommendation inference request: the set of embedding rows to
+/// gather and sum (the paper's "embedding reduction" input).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Query {
+    /// Looked-up embedding ids. May contain the paper's observed skew but
+    /// never duplicates (a multi-hot vector has 0/1 entries).
+    pub items: Vec<EmbeddingId>,
+}
+
+impl Query {
+    /// Construct, deduplicating and sorting the item set.
+    pub fn new(mut items: Vec<EmbeddingId>) -> Self {
+        items.sort_unstable();
+        items.dedup();
+        Self { items }
+    }
+
+    /// Number of embedding lookups in this query.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// A batch of queries processed together (the paper evaluates batch 256).
+#[derive(Debug, Clone)]
+pub struct Batch<'a> {
+    pub queries: &'a [Query],
+}
+
+impl<'a> Batch<'a> {
+    pub fn new(queries: &'a [Query]) -> Self {
+        Self { queries }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+
+    /// Total lookups across the batch.
+    pub fn total_lookups(&self) -> usize {
+        self.queries.iter().map(|q| q.len()).sum()
+    }
+}
+
+/// Per-embedding access frequency over a trace.
+pub fn access_frequencies(trace: &Trace) -> Vec<u64> {
+    let mut freq = vec![0u64; trace.num_embeddings as usize];
+    for q in &trace.queries {
+        for &it in &q.items {
+            freq[it as usize] += 1;
+        }
+    }
+    freq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_dedups_and_sorts() {
+        let q = Query::new(vec![5, 1, 5, 3, 1]);
+        assert_eq!(q.items, vec![1, 3, 5]);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn batch_totals() {
+        let qs = vec![Query::new(vec![1, 2]), Query::new(vec![3])];
+        let b = Batch::new(&qs);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.total_lookups(), 3);
+    }
+
+    #[test]
+    fn frequencies_counted() {
+        let t = Trace {
+            num_embeddings: 4,
+            queries: vec![Query::new(vec![0, 1]), Query::new(vec![1, 3])],
+        };
+        assert_eq!(access_frequencies(&t), vec![1, 2, 0, 1]);
+    }
+}

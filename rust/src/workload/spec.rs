@@ -1,0 +1,160 @@
+//! Dataset specifications calibrated to the paper's Table I.
+//!
+//! Each spec carries the published scale (`num_embeddings`) and mean
+//! lookups per query (`avg_lookups`, the Table I "Avg. Lat" column), plus
+//! the generator parameters that shape the synthetic trace:
+//!
+//! * `alpha_pop` — Zipf exponent for cluster popularity. All datasets are
+//!   power-law (Fig. 2); larger α means a hotter head.
+//! * `cluster_size` — mean size of a co-purchase community. Communities
+//!   wider than the 64-row crossbar force groups to split, diluting the
+//!   benefit of grouping (this is visible in the paper: software — the
+//!   smallest dataset — gains least).
+//! * `p_tail` — probability that a lookup is an uncorrelated long-tail
+//!   item rather than a community item. Tail lookups land alone in a
+//!   crossbar and become the single-embedding activations of Fig. 6
+//!   (25.9% on software vs 53.5% on automotive implies automotive has a
+//!   much heavier uncorrelated tail).
+//! * `p_secondary` — probability that a community lookup comes from a
+//!   correlated *secondary* community instead of the primary one.
+
+/// Generator parameters for one dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetSpec {
+    /// Canonical lowercase name.
+    pub name: &'static str,
+    /// Embedding-table rows (Table I "# of Embedding").
+    pub num_embeddings: u32,
+    /// Mean lookups per query (Table I "Avg. Lat").
+    pub avg_lookups: f64,
+    /// Zipf exponent of community popularity.
+    pub alpha_pop: f64,
+    /// Mean co-purchase community size.
+    pub cluster_size: usize,
+    /// Probability of an uncorrelated tail lookup.
+    pub p_tail: f64,
+    /// Probability a community lookup uses the secondary community.
+    pub p_secondary: f64,
+}
+
+/// The five Amazon Review categories of Table I.
+pub const AMAZON_DATASETS: [DatasetSpec; 5] = [
+    DatasetSpec {
+        name: "software",
+        num_embeddings: 26_815,
+        avg_lookups: 41.32,
+        alpha_pop: 0.85,
+        cluster_size: 48,
+        p_tail: 0.03,
+        p_secondary: 0.20,
+    },
+    DatasetSpec {
+        name: "office_products",
+        num_embeddings: 315_644,
+        avg_lookups: 64.088,
+        alpha_pop: 0.95,
+        cluster_size: 56,
+        p_tail: 0.05,
+        p_secondary: 0.15,
+    },
+    DatasetSpec {
+        name: "electronics",
+        num_embeddings: 786_868,
+        avg_lookups: 55.746,
+        alpha_pop: 1.00,
+        cluster_size: 56,
+        p_tail: 0.07,
+        p_secondary: 0.12,
+    },
+    DatasetSpec {
+        name: "automotive",
+        num_embeddings: 932_019,
+        avg_lookups: 42.26,
+        alpha_pop: 1.05,
+        cluster_size: 40,
+        p_tail: 0.14,
+        p_secondary: 0.10,
+    },
+    DatasetSpec {
+        name: "sports",
+        num_embeddings: 962_876,
+        avg_lookups: 96.019,
+        alpha_pop: 1.00,
+        cluster_size: 64,
+        p_tail: 0.08,
+        p_secondary: 0.12,
+    },
+];
+
+impl DatasetSpec {
+    /// Look up a spec by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<&'static DatasetSpec> {
+        let lower = name.to_ascii_lowercase();
+        AMAZON_DATASETS.iter().find(|d| d.name == lower)
+    }
+
+    /// A proportionally scaled-down copy (for tests and quick runs):
+    /// `scale` in (0, 1] shrinks the embedding table while keeping the
+    /// distributional parameters identical.
+    pub fn scaled(&self, scale: f64) -> DatasetSpec {
+        assert!(scale > 0.0 && scale <= 1.0, "scale {scale} outside (0,1]");
+        DatasetSpec {
+            num_embeddings: ((self.num_embeddings as f64 * scale).round() as u32).max(256),
+            ..self.clone()
+        }
+    }
+
+    /// All dataset names, evaluation order of the paper's figures.
+    pub fn names() -> Vec<&'static str> {
+        AMAZON_DATASETS.iter().map(|d| d.name).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_scales_match_paper() {
+        assert_eq!(DatasetSpec::by_name("software").unwrap().num_embeddings, 26_815);
+        assert_eq!(
+            DatasetSpec::by_name("office_products").unwrap().num_embeddings,
+            315_644
+        );
+        assert_eq!(
+            DatasetSpec::by_name("electronics").unwrap().num_embeddings,
+            786_868
+        );
+        assert_eq!(
+            DatasetSpec::by_name("automotive").unwrap().num_embeddings,
+            932_019
+        );
+        assert_eq!(DatasetSpec::by_name("sports").unwrap().num_embeddings, 962_876);
+    }
+
+    #[test]
+    fn table1_avg_lookups_match_paper() {
+        let avg: Vec<f64> = AMAZON_DATASETS.iter().map(|d| d.avg_lookups).collect();
+        assert_eq!(avg, vec![41.32, 64.088, 55.746, 42.26, 96.019]);
+    }
+
+    #[test]
+    fn lookup_case_insensitive_and_missing() {
+        assert!(DatasetSpec::by_name("SPORTS").is_some());
+        assert!(DatasetSpec::by_name("books").is_none());
+    }
+
+    #[test]
+    fn scaled_preserves_params() {
+        let d = DatasetSpec::by_name("sports").unwrap().scaled(0.01);
+        assert_eq!(d.num_embeddings, 9_629);
+        assert_eq!(d.avg_lookups, 96.019);
+        assert_eq!(d.p_tail, 0.08);
+    }
+
+    #[test]
+    fn scaled_floors_at_minimum() {
+        let d = DatasetSpec::by_name("software").unwrap().scaled(0.000_001);
+        assert!(d.num_embeddings >= 256);
+    }
+}

@@ -1,0 +1,205 @@
+//! On-disk trace format.
+//!
+//! A compact little-endian binary layout so full-scale traces (1M-item
+//! catalogues, 20k queries × ~100 lookups) round-trip quickly:
+//!
+//! ```text
+//! magic  b"RXTR"           4 bytes
+//! version u32              currently 1
+//! num_embeddings u32
+//! num_queries u64
+//! per query: len u32, then len * u32 item ids
+//! ```
+
+use super::Query;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"RXTR";
+const VERSION: u32 = 1;
+
+/// A workload trace: the embedding-table size plus an ordered list of
+/// queries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trace {
+    pub num_embeddings: u32,
+    pub queries: Vec<Query>,
+}
+
+impl Trace {
+    /// Total lookups across all queries.
+    pub fn total_lookups(&self) -> usize {
+        self.queries.iter().map(|q| q.len()).sum()
+    }
+
+    /// Mean lookups per query.
+    pub fn mean_lookups(&self) -> f64 {
+        if self.queries.is_empty() {
+            0.0
+        } else {
+            self.total_lookups() as f64 / self.queries.len() as f64
+        }
+    }
+
+    /// Iterate fixed-size batches (the last batch may be short).
+    pub fn batches(&self, batch_size: usize) -> impl Iterator<Item = &[Query]> {
+        self.queries.chunks(batch_size)
+    }
+
+    /// Serialize to a writer.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.num_embeddings.to_le_bytes())?;
+        w.write_all(&(self.queries.len() as u64).to_le_bytes())?;
+        for q in &self.queries {
+            w.write_all(&(q.items.len() as u32).to_le_bytes())?;
+            for &it in &q.items {
+                w.write_all(&it.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Deserialize from a reader.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).context("reading trace magic")?;
+        if &magic != MAGIC {
+            bail!("not a ReCross trace file (bad magic {magic:?})");
+        }
+        let version = read_u32(r)?;
+        if version != VERSION {
+            bail!("unsupported trace version {version}");
+        }
+        let num_embeddings = read_u32(r)?;
+        let num_queries = read_u64(r)?;
+        // Sanity cap: refuse absurd files instead of OOMing.
+        if num_queries > 100_000_000 {
+            bail!("trace declares {num_queries} queries; refusing");
+        }
+        let mut queries = Vec::with_capacity(num_queries as usize);
+        for _ in 0..num_queries {
+            let len = read_u32(r)? as usize;
+            let mut items = Vec::with_capacity(len);
+            for _ in 0..len {
+                let it = read_u32(r)?;
+                if it >= num_embeddings {
+                    bail!("item id {it} out of range (table size {num_embeddings})");
+                }
+                items.push(it);
+            }
+            queries.push(Query::new(items));
+        }
+        Ok(Self {
+            num_embeddings,
+            queries,
+        })
+    }
+
+    /// Save to a file path.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        let mut w = BufWriter::new(f);
+        self.write_to(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        Self::read_from(&mut BufReader::new(f))
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace {
+            num_embeddings: 100,
+            queries: vec![
+                Query::new(vec![1, 5, 9]),
+                Query::new(vec![42]),
+                Query::new(vec![0, 99]),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let t = sample();
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let back = Trace::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let t = sample();
+        let path = std::env::temp_dir().join("recross_trace_test.rxtr");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(t, back);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        sample().write_to(&mut buf).unwrap();
+        buf[0] = b'X';
+        assert!(Trace::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn out_of_range_item_rejected() {
+        let t = Trace {
+            num_embeddings: 100,
+            queries: vec![Query::new(vec![5])],
+        };
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        // Patch num_embeddings down to 3 so item 5 is out of range.
+        buf[8..12].copy_from_slice(&3u32.to_le_bytes());
+        assert!(Trace::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let mut buf = Vec::new();
+        sample().write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 2);
+        assert!(Trace::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn stats_and_batches() {
+        let t = sample();
+        assert_eq!(t.total_lookups(), 6);
+        assert!((t.mean_lookups() - 2.0).abs() < 1e-12);
+        let batches: Vec<_> = t.batches(2).collect();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].len(), 2);
+        assert_eq!(batches[1].len(), 1);
+    }
+}

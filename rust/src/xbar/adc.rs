@@ -1,0 +1,210 @@
+//! ADC models: conventional flash ADC and the paper's dynamic-switch ADC
+//! (§III-D, Fig. 7).
+//!
+//! A flash ADC resolves `n` bits with `2^n - 1` parallel comparators —
+//! fastest architecture, exponentially power-hungry in resolution. The
+//! dynamic-switch design adds a MAC-enable signal derived from a popcount
+//! over the activated wordlines:
+//!
+//! * popcount > 1 → **MAC mode**: all `2^n - 1` comparators fire
+//!   (full-resolution conversion of the analog bitline sum);
+//! * popcount == 1 → **read mode**: the stored value is a single cell's
+//!   level, so only the low `read_mode_bits` of the ladder are needed —
+//!   `2^r - 1` comparators fire and the rest are gated off.
+//!
+//! With the paper's 6-bit ADC and 3-bit read path this removes
+//! `63 - 7 = 56` comparator firings per conversion, the "100% per-ADC
+//! energy reduction for MAC operations when a single embedding is
+//! required" §IV-B describes (the MAC-specific energy vanishes; only the
+//! cheap read path remains).
+
+use super::params::CircuitParams;
+
+/// Which conversion path an activation used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AdcMode {
+    /// Full-resolution MAC conversion.
+    Mac,
+    /// Gated single-row read conversion.
+    Read,
+}
+
+/// Cost of one ADC conversion.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdcCost {
+    pub latency_ns: f64,
+    pub energy_pj: f64,
+    pub mode: AdcMode,
+}
+
+/// Conventional flash ADC: always full resolution.
+#[derive(Debug, Clone)]
+pub struct FlashAdc {
+    bits: u32,
+    conv_ns: f64,
+    comparator_pj: f64,
+    encoder_pj: f64,
+}
+
+impl FlashAdc {
+    pub fn new(bits: u32, p: &CircuitParams) -> Self {
+        assert!(bits >= 1 && bits <= 12, "flash ADC beyond 12 bits is impractical");
+        Self {
+            bits,
+            conv_ns: p.adc_conv_ns,
+            comparator_pj: p.comparator_energy_pj,
+            encoder_pj: p.adc_encoder_pj,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Comparators in the ladder (`2^bits - 1`).
+    pub fn comparators(&self) -> u64 {
+        (1u64 << self.bits) - 1
+    }
+
+    /// Cost of one conversion (always MAC-mode full resolution).
+    pub fn convert(&self) -> AdcCost {
+        AdcCost {
+            latency_ns: self.conv_ns,
+            energy_pj: self.comparators() as f64 * self.comparator_pj + self.encoder_pj,
+            mode: AdcMode::Mac,
+        }
+    }
+}
+
+/// The paper's dynamic-switch ADC: a flash ladder whose upper comparators
+/// are gated by the popcount-derived MAC-enable signal.
+#[derive(Debug, Clone)]
+pub struct DynamicSwitchAdc {
+    full: FlashAdc,
+    read_bits: u32,
+}
+
+impl DynamicSwitchAdc {
+    pub fn new(bits: u32, read_bits: u32, p: &CircuitParams) -> Self {
+        assert!(read_bits >= 1 && read_bits <= bits);
+        Self {
+            full: FlashAdc::new(bits, p),
+            read_bits,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.full.bits()
+    }
+
+    pub fn read_bits(&self) -> u32 {
+        self.read_bits
+    }
+
+    /// Comparators active in read mode (`2^read_bits - 1`).
+    pub fn read_comparators(&self) -> u64 {
+        (1u64 << self.read_bits) - 1
+    }
+
+    /// Cost of one conversion given the wordline popcount.
+    pub fn convert(&self, popcount: u32) -> AdcCost {
+        if popcount <= 1 {
+            AdcCost {
+                latency_ns: self.full.conv_ns,
+                energy_pj: self.read_comparators() as f64 * self.full.comparator_pj
+                    + self.full.encoder_pj,
+                mode: AdcMode::Read,
+            }
+        } else {
+            self.full.convert()
+        }
+    }
+
+    /// Energy saved versus an always-MAC flash conversion, in pJ.
+    pub fn read_mode_saving_pj(&self) -> f64 {
+        (self.full.comparators() - self.read_comparators()) as f64 * self.full.comparator_pj
+    }
+}
+
+/// Popcount circuit (the mode selector of Fig. 7): counts activated
+/// wordlines. Cost constants from the paper's reference [32].
+#[derive(Debug, Clone, Copy)]
+pub struct Popcount {
+    pub latency_ns: f64,
+    pub energy_pj: f64,
+}
+
+impl Popcount {
+    pub fn new(p: &CircuitParams) -> Self {
+        Self {
+            latency_ns: p.popcount_ns,
+            energy_pj: p.popcount_pj,
+        }
+    }
+
+    /// Count set bits in a wordline mask (the hardware does this in one
+    /// adder-tree pass; the simulator just popcounts the words).
+    pub fn count(mask: &[u64]) -> u32 {
+        mask.iter().map(|w| w.count_ones()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> CircuitParams {
+        CircuitParams::default()
+    }
+
+    #[test]
+    fn comparator_counts() {
+        let adc = FlashAdc::new(6, &p());
+        assert_eq!(adc.comparators(), 63);
+        let ds = DynamicSwitchAdc::new(6, 3, &p());
+        assert_eq!(ds.read_comparators(), 7);
+    }
+
+    #[test]
+    fn read_mode_much_cheaper() {
+        let ds = DynamicSwitchAdc::new(6, 3, &p());
+        let mac = ds.convert(5);
+        let read = ds.convert(1);
+        assert_eq!(mac.mode, AdcMode::Mac);
+        assert_eq!(read.mode, AdcMode::Read);
+        // 63 vs 7 comparators: ~8x cheaper ignoring the fixed encoder.
+        assert!(read.energy_pj < mac.energy_pj / 3.0);
+        // Same conversion latency — the paper keeps flash speed.
+        assert_eq!(read.latency_ns, mac.latency_ns);
+    }
+
+    #[test]
+    fn popcount_zero_also_read_mode() {
+        // A degenerate empty activation must not pay MAC energy.
+        let ds = DynamicSwitchAdc::new(6, 3, &p());
+        assert_eq!(ds.convert(0).mode, AdcMode::Read);
+    }
+
+    #[test]
+    fn saving_matches_comparator_delta() {
+        let ds = DynamicSwitchAdc::new(6, 3, &p());
+        let expect = (63 - 7) as f64 * p().comparator_energy_pj;
+        assert!((ds.read_mode_saving_pj() - expect).abs() < 1e-12);
+        let mac = ds.convert(2).energy_pj;
+        let read = ds.convert(1).energy_pj;
+        assert!((mac - read - ds.read_mode_saving_pj()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn popcount_counts_bits() {
+        assert_eq!(Popcount::count(&[0]), 0);
+        assert_eq!(Popcount::count(&[0b1011]), 3);
+        assert_eq!(Popcount::count(&[u64::MAX, 1]), 65);
+    }
+
+    #[test]
+    #[should_panic]
+    fn read_bits_cannot_exceed_bits() {
+        DynamicSwitchAdc::new(4, 5, &p());
+    }
+}

@@ -1,0 +1,16 @@
+//! ReRAM crossbar circuit model (NeuroSim-style, 22 nm class).
+//!
+//! * [`params`] — component latency/energy constants with provenance notes.
+//! * [`adc`] — flash ADC, the paper's dynamic-switch ADC (§III-D), and the
+//!   popcount mode selector.
+//! * [`array`] — per-activation cost model combining array, ADC, popcount,
+//!   accumulation, and bus, shared by every engine so that scheme
+//!   comparisons are apples-to-apples.
+
+pub mod adc;
+pub mod array;
+pub mod params;
+
+pub use adc::{AdcCost, AdcMode, DynamicSwitchAdc, FlashAdc, Popcount};
+pub use array::{ActivationCost, CrossbarModel};
+pub use params::{CircuitParams, HostParams};

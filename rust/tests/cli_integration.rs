@@ -1,0 +1,126 @@
+//! CLI integration tests: drive the `recross` binary end-to-end the way a
+//! user would (cargo exposes the built binary via `CARGO_BIN_EXE_recross`).
+
+use std::process::Command;
+
+fn recross(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_recross"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("failed to spawn recross")
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = recross(&["--help"]);
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("USAGE"), "{text}");
+    assert!(text.contains("--figure"));
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = recross(&["frobnicate"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn report_table1() {
+    let out = recross(&["report", "--figure", "table1"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("TABLE I"));
+    assert!(text.contains("sports"));
+    assert!(text.contains("962876") || text.contains("962,876"));
+}
+
+#[test]
+fn report_fig9_tiny() {
+    let out = recross(&[
+        "report", "--figure", "fig9", "--scale", "0.01", "--history", "300", "--eval", "80",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("recross"));
+    assert!(text.contains("naive"));
+}
+
+#[test]
+fn report_unknown_figure_fails() {
+    let out = recross(&["report", "--figure", "fig99"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown figure"));
+}
+
+#[test]
+fn generate_then_analyze_roundtrip() {
+    let path = std::env::temp_dir().join("recross_cli_test.rxtr");
+    let path_s = path.to_str().unwrap();
+    let out = recross(&[
+        "generate", "--dataset", "software", "--scale", "0.02", "--queries", "200", "--out",
+        path_s,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("200 queries"));
+
+    let out = recross(&["analyze", path_s]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("queries:          200"));
+    assert!(text.contains("power-law"));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn analyze_missing_file_fails_cleanly() {
+    let out = recross(&["analyze", "/nonexistent/trace.rxtr"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("error"));
+}
+
+#[test]
+fn autotune_picks_a_knee() {
+    let out = recross(&[
+        "autotune", "--dataset", "software", "--scale", "0.02", "--history", "400", "--eval",
+        "100",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("<-- knee"));
+    assert!(text.contains("chosen dup_ratio"));
+}
+
+#[test]
+fn config_file_accepted() {
+    let out = recross(&[
+        "report", "--config", "configs/paper.toml", "--figure", "table1",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+}
+
+#[test]
+fn bad_config_rejected() {
+    let p = std::env::temp_dir().join("recross_bad_config.toml");
+    std::fs::write(&p, "[scheme]\ndup_ratio = 7.0\n").unwrap();
+    let out = recross(&["report", "--config", p.to_str().unwrap(), "--figure", "fig9"]);
+    assert!(!out.status.success());
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn serve_smoke_when_artifacts_exist() {
+    if !recross::runtime::artifacts_available(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        eprintln!("skipping serve smoke: artifacts missing");
+        return;
+    }
+    let out = recross(&[
+        "serve", "--dataset", "software", "--scale", "0.02", "--history", "300", "--eval", "64",
+        "--requests", "16",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("throughput"));
+    assert!(text.contains("served 16 requests"));
+}

@@ -1,0 +1,236 @@
+//! Property-based tests over the coordinator's core invariants.
+//!
+//! `proptest` is not available in this offline environment, so properties
+//! are checked the classical way: a seeded PRNG drives many random cases
+//! per property, and failures print the seed for replay. Each `CASES`
+//! iteration is an independent random instance.
+
+use recross::allocation::{self, Replication};
+use recross::config::Config;
+use recross::coordinator::{EmbeddingStore, Planner};
+use recross::engine::{Engine, Scheme};
+use recross::graph::CoGraph;
+use recross::grouping::{CorrelationMapper, FrequencyMapper, Mapper, NaiveMapper};
+use recross::sched::Scratch;
+use recross::util::Rng;
+use recross::workload::{Query, Trace};
+
+const CASES: usize = 40;
+const TRACE_SALT: u64 = 0x7FAC_E000;
+
+/// Random trace over `n` embeddings.
+fn random_trace(rng: &mut Rng, n: u32, queries: usize, max_len: usize) -> Trace {
+    let qs = (0..queries)
+        .map(|_| {
+            let len = rng.range(1, max_len as u64) as usize;
+            Query::new((0..len).map(|_| rng.below(n as u64) as u32).collect())
+        })
+        .collect();
+    Trace {
+        num_embeddings: n,
+        queries: qs,
+    }
+}
+
+#[test]
+fn prop_every_mapper_is_a_partition() {
+    // All three mappers must place every embedding exactly once with no
+    // group over capacity (Mapping::from_groups asserts this internally —
+    // the property is that it never panics on any input).
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let n = rng.range(1, 500) as u32;
+        let group_size = rng.range(1, 128) as usize;
+        let trace = random_trace(&mut rng, n, 50, 12);
+        let graph = CoGraph::build(&trace);
+        for mapper in [
+            &NaiveMapper as &dyn Mapper,
+            &FrequencyMapper,
+            &CorrelationMapper,
+        ] {
+            let m = mapper.map(&graph, group_size);
+            assert_eq!(m.num_embeddings(), n as usize, "seed {seed}");
+            let placed: usize = m.groups.iter().map(Vec::len).sum();
+            assert_eq!(placed, n as usize, "seed {seed} mapper {}", mapper.name());
+        }
+    }
+}
+
+#[test]
+fn prop_groups_touched_bounds() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0xA5);
+        let n = rng.range(10, 400) as u32;
+        let trace = random_trace(&mut rng, n, 30, 20);
+        let graph = CoGraph::build(&trace);
+        let m = CorrelationMapper.map(&graph, 16);
+        let mut scratch = Vec::new();
+        for q in &trace.queries {
+            let touched = m.groups_touched(&q.items, &mut scratch);
+            assert!(touched >= 1, "seed {seed}");
+            assert!(touched <= q.len(), "seed {seed}: more groups than items");
+            assert!(touched <= m.num_groups(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_eq1_monotone_and_bounded() {
+    // Eq. 1: copies are >= 1, <= batch, and monotone in frequency.
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0xE1);
+        let total = rng.range(100, 1_000_000);
+        let batch = rng.range(2, 1024) as usize;
+        let mut prev = 0;
+        for f in [1u64, 10, 100, 1_000, 10_000, 100_000] {
+            let f = f.min(total);
+            let c = allocation::log_scaled_copies(f, total, batch);
+            assert!(c >= 1 && c as usize <= batch, "seed {seed}");
+            assert!(c >= prev, "seed {seed}: not monotone");
+            prev = c;
+        }
+    }
+}
+
+#[test]
+fn prop_replication_budget_never_exceeded() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0xB0D);
+        let groups = rng.range(1, 300) as usize;
+        let freqs: Vec<u64> = (0..groups).map(|_| rng.below(10_000)).collect();
+        let ratio = rng.next_f64();
+        let plan = allocation::plan_replication(&freqs, 256, ratio);
+        assert_eq!(plan.copies.len(), groups);
+        assert!(plan.copies.iter().all(|&c| c >= 1), "seed {seed}");
+        let extra = plan.total_crossbars - groups;
+        assert!(
+            extra <= (groups as f64 * ratio) as usize,
+            "seed {seed}: budget exceeded ({extra})"
+        );
+    }
+}
+
+#[test]
+fn prop_scheduler_conservation_and_ordering() {
+    // For any workload: activations & lookups are conserved; dynamic
+    // switching never increases energy; duplication never increases
+    // completion time.
+    let cfg = Config::paper_default();
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x5C4ED);
+        let n = rng.range(64, 600) as u32;
+        let trace = random_trace(&mut rng, n, 80, 24);
+        let graph = CoGraph::build(&trace);
+
+        let on = Engine::prepare(Scheme::ReCross, &graph, &trace, &cfg);
+        let off = Engine::prepare(Scheme::ReCrossNoSwitch, &graph, &trace, &cfg);
+        let nodup = Engine::prepare(Scheme::ReCrossNoDup, &graph, &trace, &cfg);
+
+        let s_on = on.run_trace(&trace, 32);
+        let s_off = off.run_trace(&trace, 32);
+        let s_nodup = nodup.run_trace(&trace, 32);
+
+        // conservation
+        assert_eq!(s_on.lookups as usize, trace.total_lookups(), "seed {seed}");
+        assert_eq!(
+            s_on.activations,
+            on.count_activations(&trace),
+            "seed {seed}: sim and counter disagree"
+        );
+        assert_eq!(
+            s_on.mac_activations + s_on.read_activations,
+            s_on.activations,
+            "seed {seed}"
+        );
+        // orderings
+        assert!(s_on.energy_pj <= s_off.energy_pj + 1e-6, "seed {seed}");
+        assert!(
+            s_on.completion_ns <= s_nodup.completion_ns + 1e-6,
+            "seed {seed}: duplication made things worse"
+        );
+        // sanity
+        assert!(s_on.completion_ns > 0.0 && s_on.energy_pj > 0.0);
+    }
+}
+
+#[test]
+fn prop_planner_reduction_equals_reference() {
+    // For any mapping and any query: the planned masks applied to the
+    // gathered tiles reproduce the master-table sum exactly.
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x9A7);
+        let n = rng.range(16, 300) as u32;
+        let dim = rng.range(2, 24) as usize;
+        let rows = rng.range(4, 64) as usize;
+        let group_size = rng.range(1, rows as u64) as usize;
+        let tiles_per_call = rng.range(1, 6) as usize;
+
+        let trace = random_trace(&mut rng, n, 20, 10);
+        let graph = CoGraph::build(&trace);
+        let mapping = CorrelationMapper.map(&graph, group_size);
+        let table: Vec<f32> = (0..n as usize * dim)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let store = EmbeddingStore::from_table(&mapping, dim, rows, table);
+        let planner = Planner::new(&mapping, &store, tiles_per_call);
+
+        let q = &trace.queries[0];
+        let mut total = vec![0.0f32; dim];
+        let mut tiles = Vec::new();
+        for pass in planner.plan(q) {
+            planner.gather_tiles(&pass, &mut tiles);
+            for t in 0..pass.groups.len() {
+                for r in 0..rows {
+                    let w = pass.masks[t * rows + r];
+                    if w != 0.0 {
+                        for d in 0..dim {
+                            total[d] += w * tiles[(t * rows + r) * dim + d];
+                        }
+                    }
+                }
+            }
+        }
+        let expect = store.reduce_reference(&q.items);
+        for (a, b) in total.iter().zip(&expect) {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "seed {seed}: {a} vs {b} (n={n} dim={dim} rows={rows} gs={group_size})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_trace_roundtrip_any_content() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ TRACE_SALT);
+        let n = rng.range(1, 1000) as u32;
+        let queries = rng.range(0, 40) as usize;
+        let t = random_trace(&mut rng, n, queries, 16);
+        let mut buf = Vec::new();
+        t.write_to(&mut buf).unwrap();
+        let back = Trace::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(t, back, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_identity_replication_matches_no_dup_schedule() {
+    // Scheduling with an identity replication must equal the NoDup
+    // engine's behaviour exactly (stats equality, not just ordering),
+    // and scheduling must be deterministic.
+    let cfg = Config::paper_default();
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed ^ 0x1D);
+        let trace = random_trace(&mut rng, 256, 40, 16);
+        let graph = CoGraph::build(&trace);
+        let e = Engine::prepare(Scheme::ReCrossNoDup, &graph, &trace, &cfg);
+        let ident = Replication::identity(e.mapping().num_groups(), cfg.scheme.batch_size);
+        assert_eq!(e.replication().copies, ident.copies, "seed {seed}");
+        let mut s1 = Scratch::default();
+        let mut s2 = Scratch::default();
+        let a = e.run_batch(&trace.queries[..32], &mut s1);
+        let b = e.run_batch(&trace.queries[..32], &mut s2);
+        assert_eq!(a, b, "seed {seed}: scheduling must be deterministic");
+    }
+}

@@ -1,0 +1,213 @@
+//! Integration tests over the PJRT runtime + coordinator pipeline.
+//!
+//! These need `make artifacts`; when artifacts are missing they skip with a
+//! message instead of failing, so `cargo test` stays meaningful in a fresh
+//! checkout.
+
+use recross::config::Config;
+use recross::coordinator::{self, BatchPolicy, Request, Server};
+use recross::engine::Scheme;
+use recross::runtime::{artifacts_available, DlrmParams, Runtime};
+use recross::util::Rng;
+use recross::workload::Query;
+
+const ARTIFACTS: &str = "artifacts";
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available(ARTIFACTS) {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::paper_default();
+    cfg.workload.history_queries = 300;
+    cfg.workload.eval_queries = 60;
+    cfg.workload.dataset = "software".into();
+    cfg
+}
+
+#[test]
+fn runtime_loads_and_reports_platform() {
+    require_artifacts!();
+    let rt = Runtime::load(ARTIFACTS).unwrap();
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    assert_eq!(rt.manifest().embed_dim, 16);
+    assert_eq!(rt.manifest().xbar_rows, 64);
+}
+
+#[test]
+fn reduce_artifact_matches_manual_sum() {
+    require_artifacts!();
+    let rt = Runtime::load(ARTIFACTS).unwrap();
+    let m = rt.manifest().clone();
+    let mut rng = Rng::new(7);
+    // Random tiles, a few random mask bits.
+    let tiles: Vec<f32> = (0..m.tiles * m.xbar_rows * m.embed_dim)
+        .map(|_| (rng.normal() * 0.1) as f32)
+        .collect();
+    let mut masks = vec![0.0f32; m.tiles * m.xbar_rows];
+    let mut expect = vec![0.0f32; m.embed_dim];
+    for _ in 0..10 {
+        let t = rng.index(m.tiles);
+        let r = rng.index(m.xbar_rows);
+        if masks[t * m.xbar_rows + r] == 1.0 {
+            continue;
+        }
+        masks[t * m.xbar_rows + r] = 1.0;
+        for d in 0..m.embed_dim {
+            expect[d] += tiles[(t * m.xbar_rows + r) * m.embed_dim + d];
+        }
+    }
+    let got = rt.reduce(1, &masks, &tiles).unwrap();
+    assert_eq!(got.len(), m.embed_dim);
+    for (g, e) in got.iter().zip(&expect) {
+        assert!((g - e).abs() < 1e-4, "{g} vs {e}");
+    }
+}
+
+#[test]
+fn dlrm_head_composes_with_reduce() {
+    // dlrm_b* (fused) must equal reduce_b* + dlrm_head_b* on the same
+    // inputs: the serving-path split is semantics-preserving.
+    require_artifacts!();
+    let rt = Runtime::load(ARTIFACTS).unwrap();
+    let m = rt.manifest().clone();
+    let params = DlrmParams::init(&m, 99);
+    let mut rng = Rng::new(3);
+    let b = 1;
+    let dense: Vec<f32> = (0..b * m.dense_features).map(|_| rng.normal() as f32).collect();
+    let tiles: Vec<f32> = (0..m.tiles * m.xbar_rows * m.embed_dim)
+        .map(|_| (rng.normal() * 0.1) as f32)
+        .collect();
+    let mut masks = vec![0.0f32; b * m.tiles * m.xbar_rows];
+    let mask_len = masks.len();
+    for i in 0..8 {
+        masks[i * 13 % mask_len] = 1.0;
+    }
+    let fused = rt.dlrm_forward(b, &dense, &masks, &tiles, &params).unwrap();
+    let reduced = rt.reduce(b, &masks, &tiles).unwrap();
+    let split = rt.dlrm_head(b, &dense, &reduced, &params).unwrap();
+    assert_eq!(fused.len(), split.len());
+    for (f, s) in fused.iter().zip(&split) {
+        assert!((f - s).abs() < 1e-4, "fused {f} vs split {s}");
+    }
+}
+
+#[test]
+fn pipeline_reduction_matches_reference() {
+    // End-to-end: the coordinator's chunked crossbar reduction through
+    // PJRT equals the plain master-table sum, for recross AND naive
+    // mappings (layout-independence).
+    require_artifacts!();
+    let cfg = small_cfg();
+    for scheme in [Scheme::ReCross, Scheme::Naive] {
+        let mut pipeline = coordinator::build_pipeline(&cfg, scheme, 0.02).unwrap();
+        let mut rng = Rng::new(11);
+        for _ in 0..5 {
+            let n_items = rng.range(1, 40) as usize;
+            let max = pipeline.store().num_groups() as u32 * 32;
+            let items: Vec<u32> = (0..n_items)
+                .map(|_| rng.below(max.min(500) as u64) as u32)
+                .collect();
+            let q = Query::new(items);
+            let got = pipeline.reduce_query(&q).unwrap();
+            let expect = pipeline.store().reduce_reference(&q.items);
+            for (g, e) in got.iter().zip(&expect) {
+                assert!(
+                    (g - e).abs() < 1e-3,
+                    "{:?}: {g} vs {e}",
+                    scheme
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn server_batches_and_answers() {
+    require_artifacts!();
+    let cfg = small_cfg();
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: std::time::Duration::from_millis(1),
+    };
+    let cfg2 = cfg.clone();
+    let server = Server::spawn(policy, move || {
+        coordinator::build_pipeline(&cfg2, Scheme::ReCross, 0.02)
+    })
+    .unwrap();
+    let handle = server.handle();
+
+    let mut rng = Rng::new(21);
+    let reqs: Vec<Request> = (0..20)
+        .map(|id| Request {
+            id,
+            dense: (0..13).map(|_| rng.normal() as f32).collect(),
+            items: (0..10).map(|_| rng.below(400) as u32).collect(),
+        })
+        .collect();
+    let responses = handle.infer_many(reqs.clone()).unwrap();
+    assert_eq!(responses.len(), 20);
+    for (resp, req) in responses.iter().zip(&reqs) {
+        assert_eq!(resp.id, req.id);
+        assert!(resp.logit.is_finite());
+        assert!(resp.activations > 0);
+        assert_eq!(resp.reduced.len(), 16);
+    }
+    // Same request twice -> identical logits (deterministic pipeline).
+    let r1 = handle.infer(reqs[0].clone()).unwrap();
+    let r2 = handle.infer(reqs[0].clone()).unwrap();
+    assert_eq!(r1.logit, r2.logit);
+}
+
+#[test]
+fn pipeline_drift_monitor_tracks_traffic() {
+    require_artifacts!();
+    let cfg = small_cfg();
+    let mut pipeline = coordinator::build_pipeline(&cfg, Scheme::ReCross, 0.02).unwrap();
+    // Baseline from the engine's own validation-style stats.
+    pipeline.set_drift_baseline(0.2);
+    assert!(pipeline.drift().current().is_none());
+    let reqs: Vec<Request> = (0..4)
+        .map(|id| Request {
+            id,
+            dense: vec![0.1; 13],
+            items: vec![1, 2, 3, 4, 5, 6, 7, 8],
+        })
+        .collect();
+    let since = vec![std::time::Instant::now(); 4];
+    pipeline.infer_batch(&reqs, &since).unwrap();
+    // Monitor observed the batch.
+    assert!(pipeline.drift().current().is_some());
+    assert!(pipeline.drift().degradation() > 0.0);
+}
+
+#[test]
+fn server_survives_bad_request() {
+    require_artifacts!();
+    let cfg = small_cfg();
+    let cfg2 = cfg.clone();
+    let server = Server::spawn(BatchPolicy::default(), move || {
+        coordinator::build_pipeline(&cfg2, Scheme::ReCross, 0.02)
+    })
+    .unwrap();
+    let handle = server.handle();
+    // Wrong dense width -> error response, not a dead server.
+    let bad = Request {
+        id: 1,
+        dense: vec![0.0; 3],
+        items: vec![1, 2],
+    };
+    assert!(handle.infer(bad).is_err());
+    // Server still serves good requests afterwards.
+    let good = Request {
+        id: 2,
+        dense: vec![0.1; 13],
+        items: vec![1, 2, 3],
+    };
+    assert!(handle.infer(good).is_ok());
+}

@@ -1,0 +1,149 @@
+//! System-level integration tests: the offline→online pipeline on all five
+//! calibrated datasets (tiny scale), cross-checking the paper's ordering
+//! claims without requiring PJRT artifacts.
+
+use recross::config::Config;
+use recross::engine::{Engine, Scheme};
+use recross::graph::CoGraph;
+use recross::metrics::fit_power_law;
+use recross::report::{self, Workbench};
+use recross::workload::{access_frequencies, generate, DatasetSpec};
+
+const SCALE: f64 = 0.02;
+
+fn prepared(name: &str) -> (CoGraph, recross::workload::Trace, recross::workload::Trace, Config) {
+    let spec = DatasetSpec::by_name(name).unwrap().scaled(SCALE);
+    let (history, eval) = generate(&spec, 1_200, 400, 42);
+    let graph = CoGraph::build(&history);
+    (graph, history, eval, Config::paper_default())
+}
+
+#[test]
+fn all_datasets_power_law_access() {
+    // Fig. 2 premise on every calibrated dataset.
+    for name in DatasetSpec::names() {
+        let (_, history, _, _) = prepared(name);
+        let fit = fit_power_law(&access_frequencies(&history)).unwrap();
+        assert!(
+            fit.is_power_law(),
+            "{name}: access distribution not power-law ({fit:?})"
+        );
+    }
+}
+
+#[test]
+fn recross_wins_activations_on_every_dataset() {
+    // Fig. 9 ordering: recross < frequency <= naive, everywhere.
+    for name in DatasetSpec::names() {
+        let (graph, history, eval, cfg) = prepared(name);
+        let naive = Engine::prepare(Scheme::Naive, &graph, &history, &cfg).count_activations(&eval);
+        let freq =
+            Engine::prepare(Scheme::Frequency, &graph, &history, &cfg).count_activations(&eval);
+        let re = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg).count_activations(&eval);
+        assert!(re < freq, "{name}: recross {re} !< frequency {freq}");
+        assert!(freq <= naive, "{name}: frequency {freq} !<= naive {naive}");
+    }
+}
+
+#[test]
+fn recross_wins_time_and_energy_on_every_dataset() {
+    // Fig. 8 ordering at tiny scale: ReCross beats naive and nMARS on both
+    // completion time and energy.
+    for name in DatasetSpec::names() {
+        let (graph, history, eval, cfg) = prepared(name);
+        let bs = cfg.scheme.batch_size;
+        let nv = Engine::prepare(Scheme::Naive, &graph, &history, &cfg).run_trace(&eval, bs);
+        let nm = Engine::prepare(Scheme::Nmars, &graph, &history, &cfg).run_trace(&eval, bs);
+        let re = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg).run_trace(&eval, bs);
+        assert!(
+            re.completion_ns < nv.completion_ns,
+            "{name}: time vs naive ({} vs {})",
+            re.completion_ns,
+            nv.completion_ns
+        );
+        assert!(
+            re.completion_ns < nm.completion_ns,
+            "{name}: time vs nmars"
+        );
+        assert!(re.energy_pj < nv.energy_pj, "{name}: energy vs naive");
+        assert!(re.energy_pj < nm.energy_pj, "{name}: energy vs nmars");
+    }
+}
+
+#[test]
+fn fig10_duplication_converges() {
+    // More area -> completion never degrades, and the marginal gain
+    // shrinks (the paper's convergence claim).
+    let mut wb = Workbench::new(SCALE, 1_200, 400, 64, 42);
+    let sweep = wb.dup_sweep("automotive", &[0.0, 0.05, 0.10, 0.20]);
+    for w in sweep.windows(2) {
+        assert!(
+            w[1].completion_ns <= w[0].completion_ns * 1.001,
+            "more duplication should not hurt: {} -> {}",
+            w[0].completion_ns,
+            w[1].completion_ns
+        );
+    }
+    let gain_first = sweep[0].completion_ns / sweep[1].completion_ns;
+    let gain_last = sweep[2].completion_ns / sweep[3].completion_ns;
+    assert!(
+        gain_last <= gain_first + 1e-9,
+        "gain should shrink: first {gain_first}, last {gain_last}"
+    );
+}
+
+#[test]
+fn fig11_host_platforms_orders_of_magnitude_worse() {
+    let mut wb = Workbench::new(SCALE, 1_200, 400, 64, 42);
+    let out = report::fig11(&mut wb);
+    // At least two orders of magnitude, per the paper's abstract.
+    let avg_line = out.lines().find(|l| l.contains("AVERAGE")).unwrap();
+    let nums: Vec<f64> = avg_line
+        .split_whitespace()
+        .filter_map(|t| t.trim_end_matches('x').parse().ok())
+        .collect();
+    assert_eq!(nums.len(), 2, "line: {avg_line}");
+    assert!(nums[0] > 100.0, "vs CPU only {}", nums[0]);
+    assert!(nums[1] > nums[0], "CPU+GPU should be worse than CPU");
+}
+
+#[test]
+fn offline_phase_deterministic() {
+    for name in ["software", "sports"] {
+        let (graph, history, eval, cfg) = prepared(name);
+        let a = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let b = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        assert_eq!(a.mapping().groups, b.mapping().groups, "{name}");
+        assert_eq!(a.replication().copies, b.replication().copies, "{name}");
+        let sa = a.run_trace(&eval, 64);
+        let sb = b.run_trace(&eval, 64);
+        assert_eq!(sa, sb, "{name}: whole pipeline must be deterministic");
+    }
+}
+
+#[test]
+fn single_row_share_tracks_dataset_tail() {
+    // Fig. 6: automotive (heavy uncorrelated tail) must have a higher
+    // single-embedding share than software (light tail).
+    let (g_sw, h_sw, e_sw, cfg) = prepared("software");
+    let (g_au, h_au, e_au, _) = prepared("automotive");
+    let sw = Engine::prepare(Scheme::ReCross, &g_sw, &h_sw, &cfg).run_trace(&e_sw, 256);
+    let au = Engine::prepare(Scheme::ReCross, &g_au, &h_au, &cfg).run_trace(&e_au, 256);
+    assert!(
+        au.single_row_share() > sw.single_row_share(),
+        "automotive {:.2} should exceed software {:.2}",
+        au.single_row_share(),
+        sw.single_row_share()
+    );
+}
+
+#[test]
+fn report_all_runs_end_to_end() {
+    // The full report harness must execute without panicking and mention
+    // every figure.
+    let mut wb = Workbench::new(0.01, 400, 128, 64, 7);
+    let out = report::all(&mut wb);
+    for key in ["TABLE I", "FIG 2", "FIG 4", "FIG 5", "FIG 6", "FIG 8", "FIG 9", "FIG 10", "FIG 11"] {
+        assert!(out.contains(key), "missing {key}");
+    }
+}
