@@ -1,0 +1,81 @@
+//! Fig. 12 (extension): completion-time scaling of the sharded pool.
+//!
+//! Sweeps shard count × replication budget over the calibrated "software"
+//! workload and reports the simulated batch completion time of the
+//! scatter-gather cluster ([`recross::cluster::simulate_sharded`]), plus
+//! the locality partitioner's fan-out, against the single-pool baseline
+//! (shards = 1). Also measures the simulator's own wall time via the
+//! in-tree bench harness.
+
+use recross::cluster::{simulate_sharded, PoolShared, ShardPlan};
+use recross::config::Config;
+use recross::engine::{Engine, Scheme};
+use recross::graph::CoGraph;
+use recross::util::bench::{black_box, Bench, BenchConfig};
+use recross::util::fmt_ns;
+use recross::workload::{generate, DatasetSpec};
+use std::time::Duration;
+
+fn main() {
+    let spec = DatasetSpec::by_name("software").unwrap().scaled(0.1);
+    let (history, eval) = generate(&spec, 3_000, 512, 42);
+    let graph = CoGraph::build(&history);
+
+    let mut bench = Bench::with_config(BenchConfig {
+        warmup: Duration::from_millis(100),
+        measure: Duration::from_millis(500),
+        max_iters: 200,
+        min_iters: 3,
+    });
+
+    println!("== fig12: sharding x replication sweep (software@0.1) ==\n");
+    println!(
+        "{:>6} {:>6} {:>12} {:>10} {:>10} {:>12}",
+        "dup%", "shards", "completion", "speedup", "fan-out", "stall/subq"
+    );
+    for dup_ratio in [0.0, 0.10] {
+        let mut cfg = Config::paper_default();
+        cfg.scheme.dup_ratio = dup_ratio;
+        let engine = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let shared = PoolShared::from_engine(&engine);
+        let mut baseline_ns = 0.0f64;
+        for shards in [1usize, 2, 4, 8, 16] {
+            let plan = ShardPlan::by_locality(&shared.mapping, &history, shards, 0.10);
+            let stats = simulate_sharded(&shared, &plan, &eval, cfg.scheme.batch_size);
+            if shards == 1 {
+                baseline_ns = stats.completion_ns;
+            }
+            let fanout = plan.fanout_histogram(&shared.mapping, &eval).mean();
+            // Queue wait per sub-query: completion is a max-merge across
+            // shards while stall_ns sums, so a ratio of the two would
+            // inflate with shard count instead of measuring contention.
+            let stall_per_subq = stats.stall_ns / stats.queries.max(1) as f64;
+            println!(
+                "{:>5.0}% {:>6} {:>12} {:>9.2}x {:>10.2} {:>12}",
+                dup_ratio * 100.0,
+                shards,
+                fmt_ns(stats.completion_ns),
+                baseline_ns / stats.completion_ns.max(1e-9),
+                fanout,
+                fmt_ns(stall_per_subq)
+            );
+        }
+    }
+
+    println!("\n== simulator wall time ==");
+    let cfg = Config::paper_default();
+    let engine = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+    let shared = PoolShared::from_engine(&engine);
+    for shards in [1usize, 4, 16] {
+        let plan = ShardPlan::by_locality(&shared.mapping, &history, shards, 0.10);
+        bench.run(&format!("fig12/simulate_sharded(shards={shards})"), || {
+            black_box(simulate_sharded(
+                &shared,
+                &plan,
+                &eval,
+                cfg.scheme.batch_size,
+            ))
+        });
+    }
+    let _ = bench.write_tsv("target/bench_fig12.tsv");
+}

@@ -1,0 +1,246 @@
+//! Sharded crossbar serving pool — the cluster layer above the single-pool
+//! coordinator.
+//!
+//! The paper's pipeline (grouping → replication → dynamic-ADC scheduling)
+//! manages *one* crossbar pool. A production recommender shards its
+//! embedding tables across many such pools; this module adds that layer:
+//!
+//! ```text
+//!                    ClusterHandle (scatter-gather)
+//!                   /       |        \
+//!            shard 0     shard 1    shard N-1        (one thread each)
+//!            Batcher     Batcher     Batcher         per-shard dynamic batching
+//!            Scheduler   Scheduler   Scheduler       circuit cost per sub-batch
+//!            ShardStore  ShardStore  ShardStore      owned tiles only
+//! ```
+//!
+//! * **Partitioning** ([`partition`], [`hashring`]) — logical groups are
+//!   assigned to shards either by consistent hashing of the group id
+//!   (stateless; reuses [`crate::util::fxhash`]) or by a co-occurrence-
+//!   locality-preserving balanced partition
+//!   ([`crate::grouping::Mapping::partition_across`]) that keeps
+//!   correlated crossbars on one shard so query fan-out stays low.
+//! * **Shard executors** ([`shard`]) — one thread per shard owning its
+//!   slice of the embedding table, serving sub-queries through its own
+//!   dynamic batcher and accumulating its own [`crate::sched::ExecStats`].
+//! * **Scatter-gather** ([`server`]) — the front-end splits a query's
+//!   lookups by owning shard, dispatches all sub-queries, then merges the
+//!   partial sums in shard order. The reduction is linear, so the split
+//!   is exact; shard stats combine with
+//!   [`crate::sched::ExecStats::merge_parallel`] (completion = max).
+//! * **Reporting** ([`report`]) — per-shard load/stall and fan-out
+//!   histograms for the `recross cluster` CLI mode.
+
+pub mod hashring;
+pub mod partition;
+pub mod report;
+pub mod server;
+pub mod shard;
+
+pub use hashring::HashRing;
+pub use partition::ShardPlan;
+pub use server::{Cluster, ClusterConfig, ClusterHandle, ClusterResponse, PartitionPolicy};
+pub use shard::{partition_store, PoolShared, ShardPartial, ShardStatus, ShardStore};
+
+use crate::config::Config;
+use crate::coordinator::{EmbeddingStore, OfflinePhase};
+use crate::engine::Scheme;
+use crate::sched::{ExecStats, Scheduler, Scratch};
+use crate::workload::{Query, Trace};
+use crate::Result;
+
+/// Everything `Cluster::build` assembles: the running pool plus the
+/// reference pieces a driver needs (the held-out eval trace and the full
+/// table for single-pool verification).
+pub struct ClusterBundle {
+    pub cluster: Cluster,
+    /// Full (unsharded) store — the verification reference; shards hold
+    /// their own partitioned copies.
+    pub store: EmbeddingStore,
+    /// Held-out evaluation trace from the offline phase.
+    pub eval: Trace,
+}
+
+impl Cluster {
+    /// Offline phase → partition → spawn, per the config. The engine's
+    /// mapping/replication/cost model are shared read-only by all shards;
+    /// the store is laid out once and partitioned tile-by-tile.
+    pub fn build(
+        cfg: &Config,
+        scheme: Scheme,
+        scale: f64,
+        ccfg: &ClusterConfig,
+    ) -> Result<ClusterBundle> {
+        anyhow::ensure!(ccfg.shards > 0, "need at least one shard");
+        anyhow::ensure!(ccfg.vnodes > 0, "need at least one virtual node per shard");
+        // The shard executors run the in-crossbar MAC dataflow
+        // (Scheduler::run_batch); nMARS's lookup + serial-aggregation
+        // dataflow has no sharded implementation, so refuse it rather
+        // than report MAC costs under an nMARS label.
+        anyhow::ensure!(
+            scheme != Scheme::Nmars,
+            "the sharded pool serves the MAC dataflow; scheme {:?} is not supported here",
+            scheme.name()
+        );
+        let offline = OfflinePhase::run(cfg, scheme, scale)?;
+        let mapping = offline.engine.mapping();
+        let plan = match ccfg.policy {
+            PartitionPolicy::Hash => ShardPlan::by_hash(
+                mapping.num_groups(),
+                &HashRing::new(ccfg.shards as u32, ccfg.vnodes),
+            ),
+            PartitionPolicy::Locality => {
+                ShardPlan::by_locality(mapping, &offline.history, ccfg.shards, ccfg.slack)
+            }
+        };
+        let store = EmbeddingStore::random(
+            mapping,
+            cfg.hardware.embedding_dim,
+            cfg.hardware.xbar_rows,
+            cfg.workload.seed,
+        );
+        let shared = PoolShared::from_engine(&offline.engine);
+        let cluster = Cluster::spawn_from_parts(shared, &store, plan, ccfg.batch.clone())?;
+        Ok(ClusterBundle {
+            cluster,
+            store,
+            eval: offline.eval,
+        })
+    }
+}
+
+/// Deterministic thread-free simulation of the sharded pool over a trace
+/// (what `benches/fig12_sharding.rs` sweeps).
+///
+/// Each batch is split into per-shard sub-batches; shards execute
+/// concurrently, so the batch's stats merge with
+/// [`ExecStats::merge_parallel`] and successive batches accumulate.
+/// The front-end's cross-shard merge is modelled as `fanout - 1` vector
+/// adds per query, serialised on the slowest query's critical path.
+///
+/// Note: `queries` in the result counts *sub-queries* (one per
+/// shard a query touched), mirroring what the live shard executors see.
+pub fn simulate_sharded(
+    shared: &PoolShared,
+    plan: &ShardPlan,
+    trace: &Trace,
+    batch_size: usize,
+) -> ExecStats {
+    assert_eq!(
+        plan.num_groups(),
+        shared.mapping.num_groups(),
+        "plan covers {} groups, mapping has {}",
+        plan.num_groups(),
+        shared.mapping.num_groups()
+    );
+    let sched = Scheduler::new(
+        &shared.mapping,
+        &shared.replication,
+        &shared.model,
+        shared.dynamic_switch,
+    );
+    let (add_ns, add_pj) = shared.model.vector_add();
+    let mut scratch = Scratch::default();
+    let mut total = ExecStats::default();
+    let mut sub: Vec<Vec<Query>> = vec![Vec::new(); plan.shards];
+    for batch in trace.batches(batch_size) {
+        for v in &mut sub {
+            v.clear();
+        }
+        let mut max_fanout = 0usize;
+        for q in batch {
+            // Same routing rule as the live pool (ShardPlan::split_items).
+            let split = plan.split_items(&shared.mapping, &q.items);
+            let fanout = split.iter().filter(|v| !v.is_empty()).count();
+            max_fanout = max_fanout.max(fanout);
+            if fanout > 1 {
+                // Front-end merge energy: one vector add per extra shard.
+                total.energy_pj += (fanout - 1) as f64 * add_pj;
+            }
+            for (s, items) in split.into_iter().enumerate() {
+                if !items.is_empty() {
+                    sub[s].push(Query::new(items));
+                }
+            }
+        }
+        let mut batch_stats = ExecStats::default();
+        for queries in &sub {
+            if queries.is_empty() {
+                continue;
+            }
+            batch_stats.merge_parallel(&sched.run_batch(queries, &mut scratch));
+        }
+        // Cross-shard merge latency on the critical path.
+        if max_fanout > 1 {
+            batch_stats.completion_ns += (max_fanout - 1) as f64 * add_ns;
+        }
+        total.accumulate(&batch_stats);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::Replication;
+    use crate::grouping::Mapping;
+    use crate::xbar::{CircuitParams, CrossbarModel};
+
+    fn shared_2x2() -> PoolShared {
+        let mapping = Mapping::from_groups(vec![vec![0, 1], vec![2, 3]], 2, 4);
+        let replication = Replication::identity(2, 4);
+        let model = CrossbarModel::new(
+            &crate::config::HardwareConfig::default(),
+            &CircuitParams::default(),
+        );
+        PoolShared {
+            mapping,
+            replication,
+            model,
+            dynamic_switch: true,
+        }
+    }
+
+    #[test]
+    fn one_shard_simulation_matches_single_pool() {
+        let shared = shared_2x2();
+        let trace = Trace {
+            num_embeddings: 4,
+            queries: vec![
+                Query::new(vec![0, 1]),
+                Query::new(vec![0, 2]),
+                Query::new(vec![3]),
+            ],
+        };
+        let plan = ShardPlan::from_assignment(vec![0, 0], 1);
+        let sharded = simulate_sharded(&shared, &plan, &trace, 2);
+        let sched = Scheduler::new(
+            &shared.mapping,
+            &shared.replication,
+            &shared.model,
+            shared.dynamic_switch,
+        );
+        let mut scratch = Scratch::default();
+        let mut reference = ExecStats::default();
+        for batch in trace.batches(2) {
+            reference.accumulate(&sched.run_batch(batch, &mut scratch));
+        }
+        assert_eq!(sharded, reference);
+    }
+
+    #[test]
+    fn sharded_split_conserves_work() {
+        let shared = shared_2x2();
+        let trace = Trace {
+            num_embeddings: 4,
+            queries: vec![Query::new(vec![0, 2]), Query::new(vec![1, 3])],
+        };
+        let plan = ShardPlan::from_assignment(vec![0, 1], 2);
+        let stats = simulate_sharded(&shared, &plan, &trace, 2);
+        // Every (query, group) pair still produces exactly one activation.
+        assert_eq!(stats.activations, 4);
+        assert_eq!(stats.lookups, 4);
+        // Each query split into 2 sub-queries.
+        assert_eq!(stats.queries, 4);
+    }
+}

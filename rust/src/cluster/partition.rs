@@ -1,0 +1,212 @@
+//! Group→shard partition plans.
+//!
+//! A [`ShardPlan`] fixes which shard owns each logical group (crossbar).
+//! Two builders:
+//!
+//! * [`ShardPlan::by_hash`] — stateless consistent hashing of the group id
+//!   over a [`HashRing`]; what a production pool would use when no access
+//!   history is available (and the only choice that stays stable as the
+//!   catalogue grows).
+//! * [`ShardPlan::by_locality`] — the history-driven partitioner
+//!   ([`Mapping::partition_across`]): correlated groups land on the same
+//!   shard so the scatter-gather fan-out per query stays low.
+//!
+//! The plan also answers the monitoring questions the `cluster` report
+//! mode prints: per-shard load, group counts, and the cross-shard fan-out
+//! distribution of a trace.
+
+use super::hashring::HashRing;
+use crate::grouping::Mapping;
+use crate::metrics::Histogram;
+use crate::workload::{EmbeddingId, Trace};
+
+/// A complete group→shard assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Number of shards in the pool.
+    pub shards: usize,
+    /// Owning shard of every group, indexed by group id.
+    pub shard_of_group: Vec<u32>,
+}
+
+impl ShardPlan {
+    /// Wrap an explicit assignment (validates shard ids).
+    pub fn from_assignment(shard_of_group: Vec<u32>, shards: usize) -> Self {
+        assert!(shards > 0, "need at least one shard");
+        assert!(
+            shard_of_group.iter().all(|&s| (s as usize) < shards),
+            "assignment references a shard >= {shards}"
+        );
+        Self {
+            shards,
+            shard_of_group,
+        }
+    }
+
+    /// Consistent-hash assignment of group ids over a ring.
+    pub fn by_hash(num_groups: usize, ring: &HashRing) -> Self {
+        let shard_of_group = (0..num_groups as u32).map(|g| ring.owner(g as u64)).collect();
+        Self {
+            shards: ring.num_shards() as usize,
+            shard_of_group,
+        }
+    }
+
+    /// Locality-preserving assignment from lookup history
+    /// (see [`Mapping::partition_across`]).
+    pub fn by_locality(mapping: &Mapping, history: &Trace, shards: usize, slack: f64) -> Self {
+        Self::from_assignment(mapping.partition_across(history, shards, slack), shards)
+    }
+
+    /// Owning shard of a group.
+    #[inline]
+    pub fn shard_of(&self, group: u32) -> u32 {
+        self.shard_of_group[group as usize]
+    }
+
+    /// Number of groups covered by the plan.
+    pub fn num_groups(&self) -> usize {
+        self.shard_of_group.len()
+    }
+
+    /// Groups owned by one shard, ascending.
+    pub fn groups_of(&self, shard: u32) -> Vec<u32> {
+        self.shard_of_group
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s == shard)
+            .map(|(g, _)| g as u32)
+            .collect()
+    }
+
+    /// Groups per shard.
+    pub fn group_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.shards];
+        for &s in &self.shard_of_group {
+            counts[s as usize] += 1;
+        }
+        counts
+    }
+
+    /// Owning shard of one embedding lookup — the single routing rule
+    /// every scatter path (live pool, simulator, fan-out metrics) shares.
+    #[inline]
+    pub fn shard_of_item(&self, mapping: &Mapping, e: EmbeddingId) -> u32 {
+        self.shard_of(mapping.slot_of(e).group)
+    }
+
+    /// Split a query's items into per-shard sub-lists (length = `shards`;
+    /// shards the query does not touch get an empty list). Item order is
+    /// preserved within each shard.
+    pub fn split_items(&self, mapping: &Mapping, items: &[EmbeddingId]) -> Vec<Vec<EmbeddingId>> {
+        let mut split: Vec<Vec<EmbeddingId>> = vec![Vec::new(); self.shards];
+        for &e in items {
+            split[self.shard_of_item(mapping, e) as usize].push(e);
+        }
+        split
+    }
+
+    /// Distinct shards one query touches (its scatter fan-out).
+    pub fn query_fanout(
+        &self,
+        mapping: &Mapping,
+        items: &[EmbeddingId],
+        scratch: &mut Vec<u32>,
+    ) -> usize {
+        scratch.clear();
+        scratch.extend(items.iter().map(|&e| self.shard_of_item(mapping, e)));
+        scratch.sort_unstable();
+        scratch.dedup();
+        scratch.len()
+    }
+
+    /// Fan-out distribution over a whole trace.
+    pub fn fanout_histogram(&self, mapping: &Mapping, trace: &Trace) -> Histogram {
+        let mut h = Histogram::new();
+        let mut scratch = Vec::new();
+        for q in &trace.queries {
+            if !q.is_empty() {
+                h.add(self.query_fanout(mapping, &q.items, &mut scratch) as u64);
+            }
+        }
+        h
+    }
+
+    /// Per-shard activation load over a trace (one unit per query touching
+    /// any group the shard owns — the quantity shard executors serialise
+    /// on).
+    pub fn shard_loads(&self, mapping: &Mapping, trace: &Trace) -> Vec<u64> {
+        let freqs = crate::allocation::group_frequencies(mapping, trace);
+        let mut loads = vec![0u64; self.shards];
+        for (g, &f) in freqs.iter().enumerate() {
+            loads[self.shard_of(g as u32) as usize] += f;
+        }
+        loads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Query;
+
+    fn mapping_4x2() -> Mapping {
+        Mapping::from_groups(
+            vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]],
+            2,
+            8,
+        )
+    }
+
+    #[test]
+    fn hash_plan_covers_all_groups() {
+        let ring = HashRing::new(4, 64);
+        let plan = ShardPlan::by_hash(100, &ring);
+        assert_eq!(plan.num_groups(), 100);
+        assert!(plan.shard_of_group.iter().all(|&s| s < 4));
+        // groups_of partitions exactly
+        let total: usize = (0..4).map(|s| plan.groups_of(s).len()).sum();
+        assert_eq!(total, 100);
+        assert_eq!(plan.group_counts().iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn hash_plan_deterministic() {
+        let ring = HashRing::new(8, 64);
+        assert_eq!(ShardPlan::by_hash(64, &ring), ShardPlan::by_hash(64, &ring));
+    }
+
+    #[test]
+    fn fanout_counts_distinct_shards() {
+        let m = mapping_4x2();
+        // groups 0,1 -> shard 0; groups 2,3 -> shard 1
+        let plan = ShardPlan::from_assignment(vec![0, 0, 1, 1], 2);
+        let mut scratch = Vec::new();
+        assert_eq!(plan.query_fanout(&m, &[0, 2], &mut scratch), 1); // g0,g1 both shard 0
+        assert_eq!(plan.query_fanout(&m, &[0, 4], &mut scratch), 2); // g0 + g2
+        assert_eq!(plan.query_fanout(&m, &[], &mut scratch), 0);
+    }
+
+    #[test]
+    fn shard_loads_sum_to_group_frequencies() {
+        let m = mapping_4x2();
+        let plan = ShardPlan::from_assignment(vec![0, 1, 0, 1], 2);
+        let t = Trace {
+            num_embeddings: 8,
+            queries: vec![Query::new(vec![0, 2, 4]), Query::new(vec![6])],
+        };
+        let loads = plan.shard_loads(&m, &t);
+        // q0 touches g0 (s0), g1 (s1), g2 (s0); q1 touches g3 (s1).
+        assert_eq!(loads, vec![2, 2]);
+        let h = plan.fanout_histogram(&m, &t);
+        assert_eq!(h.total(), 2);
+        assert_eq!(h.count(2), 1); // q0 fans out to both shards
+        assert_eq!(h.count(1), 1); // q1 stays on shard 1
+    }
+
+    #[test]
+    #[should_panic(expected = "references a shard")]
+    fn out_of_range_assignment_rejected() {
+        ShardPlan::from_assignment(vec![0, 5], 2);
+    }
+}

@@ -1,0 +1,124 @@
+//! Text report for the `cluster` CLI mode: per-shard load/stall table,
+//! cross-shard fan-out histogram, and the pool-level merged simulation.
+
+use super::shard::ShardStatus;
+use crate::metrics::Histogram;
+use crate::sched::ExecStats;
+use crate::util::{fmt_ns, fmt_pj};
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Render the cluster serving report.
+///
+/// * `statuses` — one row per shard (from `ClusterHandle::shard_status`).
+/// * `fanout` — distribution of distinct-shards-per-query.
+/// * `merged` — shard stats merged with [`ExecStats::merge_parallel`]
+///   (completion = slowest shard; energy/counters = pool totals).
+/// * `wall` / `queries` — what the front-end actually served.
+pub fn render(
+    statuses: &[ShardStatus],
+    fanout: &Histogram,
+    merged: &ExecStats,
+    wall: Duration,
+    queries: usize,
+) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "=== cluster report ({} shards) ===", statuses.len());
+
+    let total_acts: u64 = statuses.iter().map(|st| st.sim.activations).sum();
+    let _ = writeln!(
+        s,
+        "{:>6} {:>8} {:>10} {:>9} {:>12} {:>12} {:>8}",
+        "shard", "groups", "sub-q", "lookups", "busy", "stall", "load%"
+    );
+    for st in statuses {
+        let share = if total_acts == 0 {
+            0.0
+        } else {
+            100.0 * st.sim.activations as f64 / total_acts as f64
+        };
+        let _ = writeln!(
+            s,
+            "{:>6} {:>8} {:>10} {:>9} {:>12} {:>12} {:>7.1}%",
+            st.shard,
+            st.owned_groups,
+            st.sub_queries,
+            st.lookups,
+            fmt_ns(st.sim.completion_ns),
+            fmt_ns(st.sim.stall_ns),
+            share
+        );
+    }
+
+    let _ = writeln!(s, "\ncross-shard fan-out per query (mean {:.2}):", fanout.mean());
+    s.push_str(&fanout.render(8, 40));
+
+    let _ = writeln!(
+        s,
+        "\npool (parallel merge): completion {}, energy {}, {} activations ({} read-mode)",
+        fmt_ns(merged.completion_ns),
+        fmt_pj(merged.energy_pj),
+        merged.activations,
+        merged.read_activations
+    );
+    let _ = writeln!(
+        s,
+        "front-end: {queries} queries in {wall:.2?} ({:.0} query/s)",
+        queries as f64 / wall.as_secs_f64().max(1e-9)
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_sections() {
+        let statuses = vec![
+            ShardStatus {
+                shard: 0,
+                owned_groups: 10,
+                sub_queries: 100,
+                lookups: 900,
+                batches: 4,
+                sim: ExecStats {
+                    completion_ns: 5_000.0,
+                    energy_pj: 2_000.0,
+                    activations: 300,
+                    queries: 100,
+                    lookups: 900,
+                    ..Default::default()
+                },
+            },
+            ShardStatus {
+                shard: 1,
+                owned_groups: 8,
+                sub_queries: 80,
+                lookups: 700,
+                batches: 4,
+                sim: ExecStats {
+                    completion_ns: 4_000.0,
+                    energy_pj: 1_500.0,
+                    activations: 200,
+                    queries: 80,
+                    lookups: 700,
+                    ..Default::default()
+                },
+            },
+        ];
+        let mut merged = ExecStats::default();
+        for st in &statuses {
+            merged.merge_parallel(&st.sim);
+        }
+        let mut fanout = Histogram::new();
+        fanout.add_n(1, 60);
+        fanout.add_n(2, 40);
+        let text = render(&statuses, &fanout, &merged, Duration::from_millis(12), 100);
+        assert!(text.contains("cluster report (2 shards)"), "{text}");
+        assert!(text.contains("fan-out"), "{text}");
+        assert!(text.contains("100 queries"), "{text}");
+        // parallel merge: completion is the max (5 µs), not the sum
+        assert!(text.contains("5.00 µs"), "{text}");
+    }
+}

@@ -1,0 +1,320 @@
+//! Cluster front-end: spawn the shard pool, scatter queries, gather and
+//! merge partial reductions.
+//!
+//! [`Cluster::spawn_from_parts`] starts one executor thread per shard
+//! (each with its own dynamic batcher and its own slice of the embedding
+//! table). A [`ClusterHandle`] is the cloneable client: it splits each
+//! query's lookups by owning shard, dispatches the per-shard sub-queries
+//! in parallel, and sums the returned partial vectors — the reduction is
+//! linear, so the scatter-gather merge is exact. Partials are always
+//! merged in ascending shard order, keeping the float summation order
+//! deterministic across runs.
+
+use super::partition::ShardPlan;
+use super::shard::{
+    partition_store, spawn_shard, PoolShared, ShardExecutor, ShardMsg, ShardStatus,
+};
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::EmbeddingStore;
+use crate::sched::ExecStats;
+use crate::workload::{EmbeddingId, Query};
+use crate::Result;
+use anyhow::anyhow;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How groups are assigned to shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    /// Consistent hashing of the group id (stateless, history-free).
+    Hash,
+    /// Co-occurrence-locality-preserving balanced partition (needs the
+    /// offline history trace).
+    Locality,
+}
+
+/// Cluster assembly knobs.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Shard executors to spawn.
+    pub shards: usize,
+    /// Virtual nodes per shard on the hash ring (Hash policy).
+    pub vnodes: u32,
+    /// Group→shard assignment policy.
+    pub policy: PartitionPolicy,
+    /// Per-shard dynamic-batcher policy.
+    pub batch: BatchPolicy,
+    /// Load-balance slack for the locality partitioner.
+    pub slack: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            shards: 4,
+            vnodes: 128,
+            policy: PartitionPolicy::Locality,
+            batch: BatchPolicy::default(),
+            slack: 0.10,
+        }
+    }
+}
+
+/// One merged scatter-gather result.
+#[derive(Debug, Clone)]
+pub struct ClusterResponse {
+    /// Position of the query in the submitted batch.
+    pub id: u64,
+    /// The merged reduced embedding, length `D`.
+    pub reduced: Vec<f32>,
+    /// Distinct shards this query touched.
+    pub fanout: usize,
+    /// Crossbar activations summed across shards.
+    pub activations: u64,
+    /// Wall clock from batch submission to this query's merge completing.
+    /// Like the single-pool path, submission time is shared by the whole
+    /// `reduce_many` batch, so later queries report larger values (queue +
+    /// execute), and the in-order gather can add head-of-line wait on top
+    /// — this is batch-position latency, not isolated service time.
+    pub latency: Duration,
+}
+
+/// A running sharded pool: executors + plan.
+pub struct Cluster {
+    shards: Vec<ShardExecutor>,
+    plan: Arc<ShardPlan>,
+    shared: Arc<PoolShared>,
+    dim: usize,
+}
+
+impl std::fmt::Debug for Cluster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Cluster")
+            .field("shards", &self.shards.len())
+            .field("groups", &self.plan.num_groups())
+            .finish()
+    }
+}
+
+impl Cluster {
+    /// Spawn the pool from prepared parts. `store` is the full table; each
+    /// shard copies out only the tiles it owns.
+    pub fn spawn_from_parts(
+        shared: PoolShared,
+        store: &EmbeddingStore,
+        plan: ShardPlan,
+        batch: BatchPolicy,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            plan.num_groups() == shared.mapping.num_groups(),
+            "plan covers {} groups, mapping has {}",
+            plan.num_groups(),
+            shared.mapping.num_groups()
+        );
+        let dim = store.dim();
+        let shared = Arc::new(shared);
+        let plan = Arc::new(plan);
+        let stores = partition_store(store, &plan);
+        let mut shards = Vec::with_capacity(plan.shards);
+        for (s, sstore) in stores.into_iter().enumerate() {
+            shards.push(spawn_shard(
+                s as u32,
+                Arc::clone(&shared),
+                sstore,
+                batch.clone(),
+            )?);
+        }
+        Ok(Self {
+            shards,
+            plan,
+            shared,
+            dim,
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Cloneable client handle.
+    pub fn handle(&self) -> ClusterHandle {
+        ClusterHandle {
+            txs: self.shards.iter().map(|s| s.tx.clone()).collect(),
+            plan: Arc::clone(&self.plan),
+            shared: Arc::clone(&self.shared),
+            dim: self.dim,
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for s in &self.shards {
+            let _ = s.tx.send(ShardMsg::Shutdown);
+        }
+        for s in &mut self.shards {
+            if let Some(j) = s.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Cloneable scatter-gather client of a [`Cluster`].
+#[derive(Clone)]
+pub struct ClusterHandle {
+    txs: Vec<mpsc::Sender<ShardMsg>>,
+    plan: Arc<ShardPlan>,
+    shared: Arc<PoolShared>,
+    dim: usize,
+}
+
+impl ClusterHandle {
+    pub fn num_shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Embedding dimension of merged results.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Scatter-gather one query (blocking).
+    pub fn reduce(&self, items: &[EmbeddingId]) -> Result<ClusterResponse> {
+        let q = Query::new(items.to_vec());
+        let mut out = self.reduce_many(std::slice::from_ref(&q))?;
+        Ok(out.pop().expect("one query in, one response out"))
+    }
+
+    /// Scatter-gather a batch: all sub-queries are dispatched before any
+    /// gather blocks, so shards work each other's queries concurrently.
+    /// Responses come back in submission order.
+    pub fn reduce_many(&self, queries: &[Query]) -> Result<Vec<ClusterResponse>> {
+        type PartialRx = mpsc::Receiver<crate::Result<super::ShardPartial>>;
+        let t0 = Instant::now();
+        // Scatter phase: route every query's items by owning shard
+        // (ShardPlan::split_items is the one routing rule shared with the
+        // simulator and the fan-out metrics). One reply channel per
+        // (query, shard) sub-query keeps the gather ordered by shard id —
+        // a tagged shared channel would be fewer allocations but would
+        // make the float merge order depend on thread timing.
+        let mut pending: Vec<Vec<(u32, PartialRx)>> = Vec::with_capacity(queries.len());
+        for (i, q) in queries.iter().enumerate() {
+            let split = self.plan.split_items(&self.shared.mapping, &q.items);
+            let mut receivers = Vec::new();
+            for (s, items) in split.into_iter().enumerate() {
+                if items.is_empty() {
+                    continue;
+                }
+                let (tx, rx) = mpsc::channel();
+                self.txs[s]
+                    .send(ShardMsg::Reduce {
+                        id: i as u64,
+                        items,
+                        reply: tx,
+                    })
+                    .map_err(|_| anyhow!("shard {s} is down"))?;
+                receivers.push((s as u32, rx));
+            }
+            pending.push(receivers);
+        }
+        // Gather phase: merge partials in ascending shard order (the
+        // receivers were registered in shard order) for determinism.
+        let mut out = Vec::with_capacity(queries.len());
+        for (i, receivers) in pending.into_iter().enumerate() {
+            let fanout = receivers.len();
+            let mut reduced = vec![0.0f32; self.dim];
+            let mut activations = 0u64;
+            for (s, rx) in receivers {
+                let partial = rx
+                    .recv()
+                    .map_err(|_| anyhow!("shard {s} dropped a sub-query"))??;
+                anyhow::ensure!(
+                    partial.partial.len() == self.dim,
+                    "shard {s} returned dim {} != {}",
+                    partial.partial.len(),
+                    self.dim
+                );
+                for (o, &v) in reduced.iter_mut().zip(&partial.partial) {
+                    *o += v;
+                }
+                activations += partial.activations;
+            }
+            out.push(ClusterResponse {
+                id: i as u64,
+                reduced,
+                fanout,
+                activations,
+                latency: t0.elapsed(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Snapshot every shard's cumulative status.
+    pub fn shard_status(&self) -> Result<Vec<ShardStatus>> {
+        let mut out = Vec::with_capacity(self.txs.len());
+        for (s, tx) in self.txs.iter().enumerate() {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(ShardMsg::Status { reply: rtx })
+                .map_err(|_| anyhow!("shard {s} is down"))?;
+            out.push(rrx.recv().map_err(|_| anyhow!("shard {s} died"))?);
+        }
+        Ok(out)
+    }
+
+    /// Pool-level simulated cost: shards run concurrently, so completion
+    /// is the max across shards ([`ExecStats::merge_parallel`]) while
+    /// energy and counters sum. Shard stats only — the front-end's
+    /// cross-shard merge adds are not included; see
+    /// [`ClusterHandle::merged_sim_with_fanout`].
+    pub fn merged_sim(&self) -> Result<ExecStats> {
+        let mut total = ExecStats::default();
+        for status in self.shard_status()? {
+            total.merge_parallel(&status.sim);
+        }
+        Ok(total)
+    }
+
+    /// Pool cost from an already-taken status snapshot, plus the
+    /// front-end scatter-gather merge cost, charged the same way
+    /// `cluster::simulate_sharded` does: one vector add per extra shard a
+    /// query touched (energy, exact from the fan-out histogram) and one
+    /// `max_fanout - 1` merge chain on the critical path (completion; per
+    /// gather wave — callers that issued a single `reduce_many` get
+    /// exactly one wave). Takes statuses so one [`Self::shard_status`]
+    /// sweep serves both the per-shard table and this total.
+    pub fn merged_sim_with_fanout(
+        &self,
+        statuses: &[ShardStatus],
+        fanout: &crate::metrics::Histogram,
+    ) -> ExecStats {
+        let mut total = ExecStats::default();
+        for status in statuses {
+            total.merge_parallel(&status.sim);
+        }
+        let (add_ns, add_pj) = self.shared.model.vector_add();
+        let mut cross_adds = 0u64;
+        let mut max_fanout = 0u64;
+        for (value, count) in fanout.iter() {
+            if value > 1 {
+                cross_adds += (value - 1) * count;
+            }
+            max_fanout = max_fanout.max(value);
+        }
+        total.energy_pj += cross_adds as f64 * add_pj;
+        if max_fanout > 1 {
+            total.completion_ns += (max_fanout - 1) as f64 * add_ns;
+        }
+        total
+    }
+}

@@ -1,0 +1,368 @@
+//! One shard of the serving pool: partitioned store + executor thread.
+//!
+//! A shard owns a subset of the logical groups (per the cluster's
+//! [`super::ShardPlan`]) and materialises *only those crossbar tiles*
+//! ([`ShardStore`]) — the embedding table is genuinely partitioned, not
+//! mirrored. Its executor thread mirrors the single-pool server's
+//! threading model: an `mpsc` channel drained through a per-shard dynamic
+//! [`Batcher`], with the circuit cost of every sub-batch simulated on the
+//! shared pool model and accumulated locally. Because sub-queries routed
+//! here only touch owned groups, the shard's `ExecStats` describe exactly
+//! the crossbars it owns.
+
+use super::ShardPlan;
+use crate::allocation::Replication;
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::EmbeddingStore;
+use crate::grouping::Mapping;
+use crate::sched::{ExecStats, Scheduler, Scratch};
+use crate::util::FxHashMap;
+use crate::workload::{EmbeddingId, Query};
+use crate::xbar::CrossbarModel;
+use crate::Result;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Immutable pool state shared (via `Arc`) by every shard executor: the
+/// global mapping/replication/cost model the offline phase produced.
+#[derive(Debug)]
+pub struct PoolShared {
+    pub mapping: Mapping,
+    pub replication: Replication,
+    pub model: CrossbarModel,
+    /// Whether the dynamic-switch ADC path is active.
+    pub dynamic_switch: bool,
+}
+
+impl PoolShared {
+    /// Snapshot a prepared engine's offline-phase products (this is what
+    /// [`crate::engine::Engine::dynamic_switch`] exists for).
+    pub fn from_engine(engine: &crate::engine::Engine) -> Self {
+        Self {
+            mapping: engine.mapping().clone(),
+            replication: engine.replication().clone(),
+            model: engine.model().clone(),
+            dynamic_switch: engine.dynamic_switch(),
+        }
+    }
+}
+
+/// The slice of the embedding table one shard owns: tiles for its groups
+/// only, addressed through a group→local index.
+#[derive(Debug, Clone)]
+pub struct ShardStore {
+    dim: usize,
+    rows: usize,
+    /// Flat `[owned_groups, R, D]` tile data.
+    tiles: Vec<f32>,
+    local_of_group: FxHashMap<u32, u32>,
+}
+
+impl ShardStore {
+    /// Copy the owned groups' tiles out of a full store.
+    pub fn from_store(store: &EmbeddingStore, owned: &[u32]) -> Self {
+        let dim = store.dim();
+        let rows = store.rows();
+        let mut tiles = Vec::with_capacity(owned.len() * rows * dim);
+        let mut local_of_group = FxHashMap::default();
+        for (i, &g) in owned.iter().enumerate() {
+            local_of_group.insert(g, i as u32);
+            tiles.extend_from_slice(store.tile(g));
+        }
+        Self {
+            dim,
+            rows,
+            tiles,
+            local_of_group,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Groups this shard owns.
+    pub fn num_tiles(&self) -> usize {
+        self.local_of_group.len()
+    }
+
+    pub fn owns(&self, group: u32) -> bool {
+        self.local_of_group.contains_key(&group)
+    }
+
+    /// Row slice of an owned `(group, row)` slot.
+    fn row(&self, group: u32, row: u16) -> Option<&[f32]> {
+        let &local = self.local_of_group.get(&group)?;
+        let off = (local as usize * self.rows + row as usize) * self.dim;
+        Some(&self.tiles[off..off + self.dim])
+    }
+
+    /// Sum the items' rows into `out` (length `dim`). Returns `false` if
+    /// any item lives outside this shard's partition — the scatter planner
+    /// must never send one, so callers treat that as a routing bug.
+    pub fn reduce_into(&self, mapping: &Mapping, items: &[EmbeddingId], out: &mut [f32]) -> bool {
+        for &e in items {
+            let slot = mapping.slot_of(e);
+            match self.row(slot.group, slot.row) {
+                Some(row) => {
+                    for (o, &v) in out.iter_mut().zip(row) {
+                        *o += v;
+                    }
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+}
+
+/// One scatter fan-out result from a shard.
+#[derive(Debug, Clone)]
+pub struct ShardPartial {
+    /// Request id assigned by the scatter layer.
+    pub id: u64,
+    /// Partial reduction over this shard's owned lookups, length `D`.
+    pub partial: Vec<f32>,
+    /// Crossbar activations the sub-query cost on this shard.
+    pub activations: u64,
+}
+
+/// Cumulative per-shard status snapshot (the `cluster` report's row).
+#[derive(Debug, Clone)]
+pub struct ShardStatus {
+    pub shard: u32,
+    /// Groups this shard owns.
+    pub owned_groups: usize,
+    /// Sub-queries served since spawn.
+    pub sub_queries: u64,
+    /// Embedding lookups served since spawn.
+    pub lookups: u64,
+    /// Batches the dynamic batcher closed.
+    pub batches: u64,
+    /// Circuit-simulated cost of everything served (sequential batches on
+    /// this shard, so completion accumulates).
+    pub sim: ExecStats,
+}
+
+pub(crate) enum ShardMsg {
+    Reduce {
+        id: u64,
+        items: Vec<EmbeddingId>,
+        reply: mpsc::Sender<Result<ShardPartial>>,
+    },
+    Status {
+        reply: mpsc::Sender<ShardStatus>,
+    },
+    Shutdown,
+}
+
+/// A running shard executor: channel + join handle.
+pub(crate) struct ShardExecutor {
+    pub tx: mpsc::Sender<ShardMsg>,
+    pub join: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Spawn one shard executor thread.
+pub(crate) fn spawn_shard(
+    shard: u32,
+    shared: Arc<PoolShared>,
+    store: ShardStore,
+    policy: BatchPolicy,
+) -> Result<ShardExecutor> {
+    let (tx, rx) = mpsc::channel::<ShardMsg>();
+    let join = std::thread::Builder::new()
+        .name(format!("recross-shard-{shard}"))
+        .spawn(move || shard_loop(shard, &shared, &store, &rx, policy))?;
+    Ok(ShardExecutor {
+        tx,
+        join: Some(join),
+    })
+}
+
+/// Per-thread mutable executor state.
+struct ShardState {
+    scratch: Scratch,
+    gscratch: Vec<u32>,
+    sim: ExecStats,
+    sub_queries: u64,
+    lookups: u64,
+    batches: u64,
+}
+
+type Pending = (u64, Vec<EmbeddingId>, mpsc::Sender<Result<ShardPartial>>);
+
+fn shard_loop(
+    shard: u32,
+    shared: &PoolShared,
+    store: &ShardStore,
+    rx: &mpsc::Receiver<ShardMsg>,
+    policy: BatchPolicy,
+) {
+    let mut batcher: Batcher<Pending> = Batcher::new(policy);
+    // One scheduler for the thread's lifetime: its replica table and
+    // per-row cost table are pure functions of the shared pool state.
+    let sched = Scheduler::new(
+        &shared.mapping,
+        &shared.replication,
+        &shared.model,
+        shared.dynamic_switch,
+    );
+    let mut state = ShardState {
+        scratch: Scratch::default(),
+        gscratch: Vec::new(),
+        sim: ExecStats::default(),
+        sub_queries: 0,
+        lookups: 0,
+        batches: 0,
+    };
+    loop {
+        let msg = match batcher.deadline_in(Instant::now()) {
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return, // all senders gone
+            },
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            },
+        };
+        match msg {
+            Some(ShardMsg::Shutdown) => return,
+            Some(ShardMsg::Reduce { id, items, reply }) => {
+                batcher.push((id, items, reply));
+            }
+            Some(ShardMsg::Status { reply }) => {
+                // Flush queued work first so the snapshot is consistent.
+                while !batcher.is_empty() {
+                    serve_shard_batch(&sched, shared, store, batcher.take_batch(), &mut state);
+                }
+                let _ = reply.send(ShardStatus {
+                    shard,
+                    owned_groups: store.num_tiles(),
+                    sub_queries: state.sub_queries,
+                    lookups: state.lookups,
+                    batches: state.batches,
+                    sim: state.sim.clone(),
+                });
+            }
+            None => {}
+        }
+        while batcher.ready(Instant::now()) {
+            serve_shard_batch(&sched, shared, store, batcher.take_batch(), &mut state);
+        }
+    }
+}
+
+fn serve_shard_batch(
+    sched: &Scheduler<'_>,
+    shared: &PoolShared,
+    store: &ShardStore,
+    batch: Vec<Pending>,
+    state: &mut ShardState,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    // Move the owned item lists straight into queries (no clone).
+    let mut queries = Vec::with_capacity(batch.len());
+    let mut replies = Vec::with_capacity(batch.len());
+    for (id, items, reply) in batch {
+        queries.push(Query::new(items));
+        replies.push((id, reply));
+    }
+
+    // Circuit cost of the sub-batch on this shard's crossbars. The global
+    // mapping/replication are shared, but sub-queries only touch owned
+    // groups, so only this shard's replicas see traffic.
+    let sim = sched.run_batch(&queries, &mut state.scratch);
+    state.sim.accumulate(&sim);
+    state.batches += 1;
+
+    for ((id, reply), q) in replies.into_iter().zip(queries.iter()) {
+        let mut partial = vec![0.0f32; store.dim()];
+        let owned = store.reduce_into(&shared.mapping, &q.items, &mut partial);
+        let activations = shared.mapping.groups_touched(&q.items, &mut state.gscratch) as u64;
+        state.sub_queries += 1;
+        state.lookups += q.len() as u64;
+        let result = if owned {
+            Ok(ShardPartial {
+                id,
+                partial,
+                activations,
+            })
+        } else {
+            Err(anyhow::anyhow!(
+                "sub-query {id} contains items outside this shard's partition"
+            ))
+        };
+        let _ = reply.send(result);
+    }
+}
+
+/// Build every shard's store from the full table per a plan.
+pub fn partition_store(store: &EmbeddingStore, plan: &ShardPlan) -> Vec<ShardStore> {
+    (0..plan.shards as u32)
+        .map(|s| ShardStore::from_store(store, &plan.groups_of(s)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grouping::Mapping;
+
+    fn fixture() -> (Mapping, EmbeddingStore) {
+        let m = Mapping::from_groups(
+            vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]],
+            2,
+            8,
+        );
+        // Integer-valued table: D=2, embedding e = [2e, 2e+1].
+        let table: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let s = EmbeddingStore::from_table(&m, 2, 4, table);
+        (m, s)
+    }
+
+    #[test]
+    fn shard_store_holds_only_owned_tiles() {
+        let (m, full) = fixture();
+        let s = ShardStore::from_store(&full, &[1, 3]);
+        assert_eq!(s.num_tiles(), 2);
+        assert!(s.owns(1) && s.owns(3));
+        assert!(!s.owns(0) && !s.owns(2));
+        // group 1 row 0 = embedding 2 = [4, 5]
+        assert_eq!(s.row(1, 0).unwrap(), &[4.0, 5.0]);
+        assert!(s.row(0, 0).is_none());
+        let _ = m;
+    }
+
+    #[test]
+    fn reduce_into_matches_reference() {
+        let (m, full) = fixture();
+        let s = ShardStore::from_store(&full, &[0, 1]);
+        let mut out = vec![0.0f32; 2];
+        assert!(s.reduce_into(&m, &[0, 3], &mut out));
+        assert_eq!(out, full.reduce_reference(&[0, 3]));
+    }
+
+    #[test]
+    fn reduce_into_rejects_foreign_items() {
+        let (m, full) = fixture();
+        let s = ShardStore::from_store(&full, &[0]);
+        let mut out = vec![0.0f32; 2];
+        assert!(!s.reduce_into(&m, &[0, 7], &mut out));
+    }
+
+    #[test]
+    fn partition_store_covers_every_group() {
+        let (_, full) = fixture();
+        let plan = ShardPlan::from_assignment(vec![0, 1, 1, 0], 2);
+        let stores = partition_store(&full, &plan);
+        assert_eq!(stores.len(), 2);
+        assert_eq!(stores[0].num_tiles() + stores[1].num_tiles(), 4);
+        assert!(stores[0].owns(0) && stores[0].owns(3));
+        assert!(stores[1].owns(1) && stores[1].owns(2));
+    }
+}

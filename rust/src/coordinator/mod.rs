@@ -23,7 +23,7 @@ pub mod store;
 pub use batcher::{BatchPolicy, Batcher};
 pub use drift::DriftMonitor;
 pub use planner::{Planner, ReducePass};
-pub use server::{Pipeline, Request, Response, Server, ServerHandle};
+pub use server::{Pipeline, Request, Response, Server, ServerHandle, ShardedServerHandle};
 pub use store::EmbeddingStore;
 
 use crate::config::Config;

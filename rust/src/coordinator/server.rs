@@ -259,6 +259,66 @@ impl ServerHandle {
     }
 }
 
+/// Scatter-gather front-end over a sharded crossbar pool
+/// ([`crate::cluster`]).
+///
+/// Speaks the same [`Request`]/[`Response`] vocabulary as
+/// [`ServerHandle`], but the embedding reduction is served cooperatively
+/// by `N` shard executors (each with its own dynamic batcher) and merged
+/// exactly — linearity makes the scatter-gather split lossless. The DLRM
+/// head is *not* evaluated on this path: the head runs on a per-node PJRT
+/// runtime, while the sharded pool is the reduction tier, so `logit` is
+/// `NaN` by construction.
+#[derive(Clone)]
+pub struct ShardedServerHandle {
+    inner: crate::cluster::ClusterHandle,
+}
+
+impl ShardedServerHandle {
+    pub fn new(inner: crate::cluster::ClusterHandle) -> Self {
+        Self { inner }
+    }
+
+    /// The underlying cluster client (for per-shard status queries).
+    pub fn cluster(&self) -> &crate::cluster::ClusterHandle {
+        &self.inner
+    }
+
+    fn response(req_id: u64, r: crate::cluster::ClusterResponse) -> Response {
+        Response {
+            id: req_id,
+            logit: f32::NAN,
+            reduced: r.reduced,
+            activations: r.activations,
+            latency: r.latency,
+        }
+    }
+
+    /// Blocking single-request reduction across the shard pool.
+    pub fn infer(&self, req: Request) -> Result<Response> {
+        let r = self.inner.reduce(&req.items)?;
+        Ok(Self::response(req.id, r))
+    }
+
+    /// Scatter-gather many requests; responses in request order.
+    pub fn infer_many(&self, reqs: Vec<Request>) -> Result<Vec<Response>> {
+        // Requests are owned, so move the item lists into queries
+        // instead of cloning them (the dense path is not served here).
+        let mut ids = Vec::with_capacity(reqs.len());
+        let mut queries = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            ids.push(r.id);
+            queries.push(Query::new(r.items));
+        }
+        let results = self.inner.reduce_many(&queries)?;
+        Ok(ids
+            .into_iter()
+            .zip(results)
+            .map(|(id, r)| Self::response(id, r))
+            .collect())
+    }
+}
+
 /// A running server: executor thread + handle.
 pub struct Server {
     handle: ServerHandle,

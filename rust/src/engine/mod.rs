@@ -173,6 +173,11 @@ impl Engine {
         &self.model
     }
 
+    /// Whether the dynamic-switch ADC path is active for this engine.
+    pub fn dynamic_switch(&self) -> bool {
+        self.dynamic_switch
+    }
+
     /// Physical crossbars used (area proxy).
     pub fn physical_crossbars(&self) -> usize {
         self.replication.total_crossbars

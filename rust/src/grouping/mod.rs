@@ -21,7 +21,9 @@ pub use frequency::FrequencyMapper;
 pub use naive::NaiveMapper;
 
 use crate::graph::CoGraph;
-use crate::workload::EmbeddingId;
+use crate::util::FxHashMap;
+use crate::workload::{EmbeddingId, Trace};
+use std::cmp::Reverse;
 
 /// Location of one embedding inside the crossbar pool.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -105,6 +107,115 @@ impl Mapping {
         scratch.dedup();
         scratch.len()
     }
+
+    /// Group-level co-access graph over a trace: `adj[g]` lists
+    /// `(neighbour, weight)` pairs where `weight` counts queries touching
+    /// both groups. This is the co-occurrence graph *lifted* from
+    /// embeddings to crossbars — the signal the shard partitioner uses to
+    /// keep correlated crossbars on the same shard.
+    pub fn group_adjacency(&self, trace: &Trace) -> Vec<Vec<(u32, u64)>> {
+        let mut weights: FxHashMap<u64, u64> = FxHashMap::default();
+        let mut scratch: Vec<u32> = Vec::new();
+        for q in &trace.queries {
+            self.groups_touched(&q.items, &mut scratch);
+            for (i, &a) in scratch.iter().enumerate() {
+                for &b in &scratch[i + 1..] {
+                    // scratch is sorted, so (a, b) is already canonical.
+                    let key = ((a as u64) << 32) | b as u64;
+                    *weights.entry(key).or_insert(0) += 1;
+                }
+            }
+        }
+        let mut adj: Vec<Vec<(u32, u64)>> = vec![Vec::new(); self.num_groups()];
+        for (key, w) in weights {
+            let a = (key >> 32) as u32;
+            let b = key as u32;
+            adj[a as usize].push((b, w));
+            adj[b as usize].push((a, w));
+        }
+        // Deterministic neighbour order regardless of hash-map iteration.
+        for nbrs in &mut adj {
+            nbrs.sort_unstable();
+        }
+        adj
+    }
+
+    /// Shard-aware partitioner: assign every group to one of `shards`
+    /// shards, preserving co-occurrence locality so cross-shard query
+    /// fan-out stays low while per-shard load stays balanced.
+    ///
+    /// Greedy heaviest-first placement: groups are visited in descending
+    /// activation load; each goes to the shard holding the most co-access
+    /// weight with it, subject to a `(1 + slack)` cap on both the shard's
+    /// summed load and its group count (ties broken toward the emptier
+    /// shard, then the lower shard id — fully deterministic).
+    pub fn partition_across(&self, trace: &Trace, shards: usize, slack: f64) -> Vec<u32> {
+        assert!(shards > 0, "need at least one shard");
+        assert!(slack >= 0.0, "negative balance slack");
+        let n = self.num_groups();
+        if shards == 1 || n == 0 {
+            return vec![0; n];
+        }
+
+        // Per-group activation load — the same metric the replication
+        // planner and the cluster report use.
+        let load = crate::allocation::group_frequencies(self, trace);
+        let adj = self.group_adjacency(trace);
+
+        let total: u64 = load.iter().sum();
+        let load_cap = ((total as f64 * (1.0 + slack)) / shards as f64).ceil() as u64;
+        let count_cap = ((n as f64 * (1.0 + slack)) / shards as f64).ceil().max(1.0) as usize;
+
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_by_key(|&g| (Reverse(load[g as usize]), g));
+
+        let mut shard_of = vec![u32::MAX; n];
+        let mut shard_load = vec![0u64; shards];
+        let mut shard_count = vec![0usize; shards];
+        let mut affinity = vec![0u64; shards];
+        for &g in &order {
+            for a in &mut affinity {
+                *a = 0;
+            }
+            for &(nb, w) in &adj[g as usize] {
+                let s = shard_of[nb as usize];
+                if s != u32::MAX {
+                    affinity[s as usize] += w;
+                }
+            }
+            // Best eligible shard: max affinity, then fewest groups, then
+            // least load, then lowest id.
+            let mut best: Option<usize> = None;
+            for s in 0..shards {
+                if shard_load[s] >= load_cap || shard_count[s] >= count_cap {
+                    continue;
+                }
+                best = match best {
+                    None => Some(s),
+                    Some(b) => {
+                        let cand = (affinity[s], Reverse(shard_count[s]), Reverse(shard_load[s]));
+                        let cur = (affinity[b], Reverse(shard_count[b]), Reverse(shard_load[b]));
+                        if cand > cur {
+                            Some(s)
+                        } else {
+                            Some(b)
+                        }
+                    }
+                };
+            }
+            // All shards at capacity (possible when slack rounds down
+            // hard): fall back to the least-loaded shard.
+            let s = best.unwrap_or_else(|| {
+                (0..shards)
+                    .min_by_key(|&s| (shard_load[s], shard_count[s], s))
+                    .unwrap()
+            });
+            shard_of[g as usize] = s as u32;
+            shard_load[s] += load[g as usize];
+            shard_count[s] += 1;
+        }
+        shard_of
+    }
 }
 
 /// A mapping strategy.
@@ -157,5 +268,61 @@ mod tests {
         assert_eq!(m.groups_touched(&[0, 2], &mut scratch), 2);
         assert_eq!(m.groups_touched(&[0, 1, 2, 3], &mut scratch), 2);
         assert_eq!(m.groups_touched(&[], &mut scratch), 0);
+    }
+
+    /// 4 groups of 2; queries co-access groups (0,1) and (2,3).
+    fn co_access_fixture() -> (Mapping, Trace) {
+        let m = Mapping::from_groups(
+            vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]],
+            2,
+            8,
+        );
+        let mut queries = Vec::new();
+        for _ in 0..10 {
+            queries.push(crate::workload::Query::new(vec![0, 2])); // g0 + g1
+            queries.push(crate::workload::Query::new(vec![4, 6])); // g2 + g3
+        }
+        (
+            m,
+            Trace {
+                num_embeddings: 8,
+                queries,
+            },
+        )
+    }
+
+    #[test]
+    fn group_adjacency_counts_co_access() {
+        let (m, t) = co_access_fixture();
+        let adj = m.group_adjacency(&t);
+        assert_eq!(adj[0], vec![(1, 10)]);
+        assert_eq!(adj[1], vec![(0, 10)]);
+        assert_eq!(adj[2], vec![(3, 10)]);
+        assert_eq!(adj[3], vec![(2, 10)]);
+    }
+
+    #[test]
+    fn partition_keeps_correlated_groups_together() {
+        let (m, t) = co_access_fixture();
+        let shard_of = m.partition_across(&t, 2, 0.5);
+        assert_eq!(shard_of.len(), 4);
+        assert_eq!(shard_of[0], shard_of[1], "co-accessed groups split");
+        assert_eq!(shard_of[2], shard_of[3], "co-accessed groups split");
+        assert_ne!(shard_of[0], shard_of[2], "everything piled on one shard");
+    }
+
+    #[test]
+    fn partition_is_deterministic_and_total() {
+        let (m, t) = co_access_fixture();
+        let a = m.partition_across(&t, 3, 0.25);
+        let b = m.partition_across(&t, 3, 0.25);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&s| (s as usize) < 3));
+    }
+
+    #[test]
+    fn single_shard_is_trivial() {
+        let (m, t) = co_access_fixture();
+        assert_eq!(m.partition_across(&t, 1, 0.0), vec![0; 4]);
     }
 }

@@ -25,8 +25,16 @@
 //! model ([`xbar`]), while the *numerics* of the reduction run as an
 //! AOT-compiled JAX/Pallas computation loaded through PJRT ([`runtime`]).
 //! See `DESIGN.md` for the full inventory and experiment index.
+//!
+//! Above the single-pool coordinator sits the **cluster layer**
+//! ([`cluster`]): a sharded serving pool that partitions the logical
+//! groups across `N` shard executors (consistent hashing or a
+//! co-occurrence-locality-preserving partition), runs one scheduler +
+//! dynamic batcher per shard on its own thread, and serves each query
+//! with an exact scatter-gather reduction merge.
 
 pub mod allocation;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod energy;

@@ -6,6 +6,7 @@
 //! recross generate   --dataset software --out trace.rxtr
 //! recross analyze    <trace.rxtr>
 //! recross serve      --dataset software --requests 256
+//! recross cluster    --shards 4 --dataset software # sharded scatter-gather pool
 //! recross autotune   --dataset automotive          # pick dup ratio (knee)
 //! ```
 //!
@@ -23,7 +24,7 @@ use recross::workload::{access_frequencies, DatasetSpec, Generator, Trace};
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let spec = ArgSpec::new("ReCross: ReRAM-crossbar embedding reduction (paper reproduction)")
-        .positional("command", "report | generate | analyze | serve | autotune")
+        .positional("command", "report | generate | analyze | serve | cluster | autotune")
         .opt("config", "", "TOML config file (CLI flags override)")
         .opt("figure", "all", "report figure (fig2..fig11, table1, all, ablation)")
         .opt("dataset", "software", "dataset name (Table I)")
@@ -37,6 +38,10 @@ fn main() {
         .opt("batch", "32", "dynamic-batcher max batch")
         .opt("scheme", "recross", "serving scheme: recross|naive|frequency|nmars")
         .opt("artifacts", "artifacts", "AOT artifacts directory")
+        .opt("shards", "4", "shard executors for the cluster mode")
+        .opt("vnodes", "128", "virtual nodes per shard on the hash ring")
+        .opt("partition", "locality", "group->shard partitioner: locality|hash")
+        .opt("slack", "0.10", "locality partitioner balance slack")
         .flag("verbose", "extra logging");
 
     let args = match spec.parse(&argv) {
@@ -52,6 +57,7 @@ fn main() {
         "generate" => cmd_generate(&args),
         "analyze" => cmd_analyze(&args),
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         "autotune" => cmd_autotune(&args),
         other => {
             eprintln!("unknown command {other:?}\n\n{}", spec.usage("recross"));
@@ -205,24 +211,38 @@ fn cmd_autotune(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
-    let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
-    let seed: u64 = args.get_as("seed").map_err(anyhow::Error::msg)?;
-    let n_requests: usize = args.get_as("requests").map_err(anyhow::Error::msg)?;
-    let max_batch: usize = args.get_as("batch").map_err(anyhow::Error::msg)?;
-    let scheme = match args.get("scheme") {
+/// Apply the shared workload CLI overrides (dataset/seed/history/eval)
+/// identically for every serving mode.
+fn workload_overrides(
+    cfg: &mut Config,
+    args: &recross::util::cli::Args,
+) -> anyhow::Result<()> {
+    cfg.workload.dataset = args.get("dataset").to_string();
+    cfg.workload.seed = args.get_as("seed").map_err(anyhow::Error::msg)?;
+    cfg.workload.history_queries = args.get_as("history").map_err(anyhow::Error::msg)?;
+    cfg.workload.eval_queries = args.get_as("eval").map_err(anyhow::Error::msg)?;
+    Ok(())
+}
+
+fn parse_scheme(name: &str) -> anyhow::Result<Scheme> {
+    Ok(match name {
         "recross" => Scheme::ReCross,
         "naive" => Scheme::Naive,
         "frequency" => Scheme::Frequency,
         "nmars" => Scheme::Nmars,
         other => anyhow::bail!("unknown scheme {other:?}"),
-    };
+    })
+}
+
+fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
+    let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_as("seed").map_err(anyhow::Error::msg)?;
+    let n_requests = args.get_positive("requests").map_err(anyhow::Error::msg)?;
+    let max_batch = args.get_positive("batch").map_err(anyhow::Error::msg)?;
+    let scheme = parse_scheme(args.get("scheme"))?;
 
     let mut cfg = base_config(args)?;
-    cfg.workload.dataset = args.get("dataset").to_string();
-    cfg.workload.seed = seed;
-    cfg.workload.history_queries = args.get_as("history").map_err(anyhow::Error::msg)?;
-    cfg.workload.eval_queries = args.get_as("eval").map_err(anyhow::Error::msg)?;
+    workload_overrides(&mut cfg, args)?;
     cfg.artifacts_dir = args.get("artifacts").to_string();
     recross::runtime::require_artifacts(&cfg.artifacts_dir)?;
 
@@ -284,6 +304,104 @@ fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     if args.flag("verbose") {
         for r in responses.iter().take(5) {
             println!("  req {} -> logit {:.4}", r.id, r.logit);
+        }
+    }
+    Ok(())
+}
+
+/// Sharded serving demo: partition the pool across `--shards` executor
+/// threads, drive the held-out eval trace through the scatter-gather
+/// front-end, verify the merged reductions against the single-pool
+/// reference, and print the per-shard load / fan-out report.
+fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
+    use recross::cluster::{report as cluster_report, Cluster, ClusterConfig, PartitionPolicy};
+    use recross::metrics::Histogram;
+    use recross::workload::Query;
+
+    let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
+    let n_requests = args.get_positive("requests").map_err(anyhow::Error::msg)?;
+    let max_batch = args.get_positive("batch").map_err(anyhow::Error::msg)?;
+    let shards = args.get_positive("shards").map_err(anyhow::Error::msg)?;
+    let vnodes = args.get_positive("vnodes").map_err(anyhow::Error::msg)?;
+    let scheme = parse_scheme(args.get("scheme"))?;
+    let policy = match args.get("partition") {
+        "locality" => PartitionPolicy::Locality,
+        "hash" => PartitionPolicy::Hash,
+        other => anyhow::bail!("unknown partition policy {other:?} (try locality|hash)"),
+    };
+
+    let mut cfg = base_config(args)?;
+    workload_overrides(&mut cfg, args)?;
+
+    let slack: f64 = args.get_as("slack").map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(slack >= 0.0, "--slack must be non-negative");
+    let ccfg = ClusterConfig {
+        shards,
+        vnodes: vnodes as u32,
+        policy,
+        batch: recross::coordinator::BatchPolicy {
+            max_batch,
+            ..recross::coordinator::BatchPolicy::default()
+        },
+        slack,
+    };
+    println!(
+        "starting sharded pool: dataset={} scheme={} shards={shards} partition={}",
+        cfg.workload.dataset,
+        scheme.name(),
+        args.get("partition")
+    );
+    let bundle = Cluster::build(&cfg, scheme, scale, &ccfg)?;
+    let handle = bundle.cluster.handle();
+    println!(
+        "pool up: {} groups over {} shards (groups/shard: {:?})",
+        bundle.cluster.plan().num_groups(),
+        bundle.cluster.num_shards(),
+        bundle.cluster.plan().group_counts()
+    );
+
+    // Drive the held-out eval queries through the front-end in one
+    // scatter wave: reduce_many dispatches every sub-query before any
+    // gather blocks, which is what lets the per-shard batchers fill
+    // instead of idling out their max_wait window.
+    let queries: Vec<Query> = bundle.eval.queries.iter().take(n_requests).cloned().collect();
+    anyhow::ensure!(!queries.is_empty(), "eval trace is empty");
+    let t0 = std::time::Instant::now();
+    let responses = handle.reduce_many(&queries)?;
+    let wall = t0.elapsed();
+
+    // Exactness check against the single-pool reference reduction.
+    let mut max_err = 0.0f32;
+    for (q, r) in queries.iter().zip(&responses) {
+        let expect = bundle.store.reduce_reference(&q.items);
+        for (a, b) in r.reduced.iter().zip(&expect) {
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+
+    let mut fanout = Histogram::new();
+    for r in &responses {
+        if r.fanout > 0 {
+            fanout.add(r.fanout as u64);
+        }
+    }
+    let statuses = handle.shard_status()?;
+    let merged = handle.merged_sim_with_fanout(&statuses, &fanout);
+    println!(
+        "\n{}",
+        cluster_report::render(&statuses, &fanout, &merged, wall, responses.len())
+    );
+    println!("single-pool reference check: max |err| = {max_err:.2e}");
+    anyhow::ensure!(
+        max_err < 1e-4,
+        "sharded reduction diverged from the single-pool reference"
+    );
+    if args.flag("verbose") {
+        for r in responses.iter().take(5) {
+            println!(
+                "  query {} -> fanout {}, {} activations",
+                r.id, r.fanout, r.activations
+            );
         }
     }
     Ok(())

@@ -16,6 +16,18 @@
 
 pub mod params;
 
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+
+// The real PJRT bindings are optional: the `pjrt` cargo feature links the
+// `xla` crate; without it the in-tree [`stub`] keeps every signature
+// compiling and `Runtime::load` returns a clear error instead. Both this
+// module and [`params`] resolve `xla` through this alias.
+#[cfg(feature = "pjrt")]
+pub(crate) use ::xla;
+#[cfg(not(feature = "pjrt"))]
+pub(crate) use stub as xla;
+
 pub use params::DlrmParams;
 
 use crate::config::toml::Doc;

@@ -6,7 +6,7 @@
 //! reproducible without a checkpoint file), and a flat binary
 //! checkpoint format for round-tripping trained weights.
 
-use super::Manifest;
+use super::{xla, Manifest};
 use crate::util::Rng;
 use crate::Result;
 use anyhow::{anyhow, bail};

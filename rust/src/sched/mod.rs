@@ -56,6 +56,10 @@ pub struct ExecStats {
 
 impl ExecStats {
     /// Merge another batch's stats (sequential batches: completion adds).
+    ///
+    /// Only correct when `other` ran *after* this work on the same
+    /// executor. For independent executors running concurrently (e.g.
+    /// cluster shards) use [`ExecStats::merge_parallel`].
     pub fn accumulate(&mut self, other: &ExecStats) {
         self.completion_ns += other.completion_ns;
         self.energy_pj += other.energy_pj;
@@ -68,6 +72,17 @@ impl ExecStats {
         self.bus_wait_ns += other.bus_wait_ns;
         self.queries += other.queries;
         self.lookups += other.lookups;
+    }
+
+    /// Merge stats from an *independent executor running concurrently*
+    /// (e.g. another shard of a sharded pool): completion time is the max
+    /// across executors — the pool finishes when its slowest member does —
+    /// while energy and every counter sum exactly as in
+    /// [`ExecStats::accumulate`].
+    pub fn merge_parallel(&mut self, other: &ExecStats) {
+        let completion = self.completion_ns.max(other.completion_ns);
+        self.accumulate(other);
+        self.completion_ns = completion;
     }
 
     /// Mean completion time per query, ns.
@@ -459,6 +474,35 @@ mod tests {
         assert_eq!(a.activations, 4);
         assert_eq!(a.queries, 2);
         assert_eq!(a.lookups, 6);
+    }
+
+    #[test]
+    fn merge_parallel_maxes_completion_sums_counters() {
+        let mut a = ExecStats {
+            completion_ns: 10.0,
+            energy_pj: 5.0,
+            activations: 2,
+            stall_ns: 1.0,
+            queries: 1,
+            lookups: 3,
+            ..Default::default()
+        };
+        let b = ExecStats {
+            completion_ns: 25.0,
+            energy_pj: 2.0,
+            activations: 1,
+            stall_ns: 4.0,
+            queries: 2,
+            lookups: 2,
+            ..Default::default()
+        };
+        a.merge_parallel(&b);
+        assert_eq!(a.completion_ns, 25.0); // max, not 35
+        assert_eq!(a.energy_pj, 7.0);
+        assert_eq!(a.activations, 3);
+        assert_eq!(a.stall_ns, 5.0);
+        assert_eq!(a.queries, 3);
+        assert_eq!(a.lookups, 5);
     }
 
     #[test]

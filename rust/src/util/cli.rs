@@ -190,6 +190,16 @@ impl Args {
             .map_err(|e| format!("--{name}: {e}"))
     }
 
+    /// Get a value option parsed as a strictly positive integer (count
+    /// knobs like `--shards` or `--batch`, where 0 is always a user error).
+    pub fn get_positive(&self, name: &str) -> Result<usize, String> {
+        let v: usize = self.get_as(name)?;
+        if v == 0 {
+            return Err(format!("--{name} must be at least 1"));
+        }
+        Ok(v)
+    }
+
     /// Was a flag present?
     pub fn flag(&self, name: &str) -> bool {
         *self
@@ -241,6 +251,14 @@ mod tests {
     fn flags_toggle() {
         let a = spec().parse(&sv(&["run", "--verbose"])).unwrap();
         assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn get_positive_rejects_zero() {
+        let a = spec().parse(&sv(&["run", "--seed", "0"])).unwrap();
+        assert!(a.get_positive("seed").is_err());
+        let a = spec().parse(&sv(&["run", "--seed", "3"])).unwrap();
+        assert_eq!(a.get_positive("seed").unwrap(), 3);
     }
 
     #[test]

@@ -5,6 +5,18 @@
 //! `EXPERIMENTS.md` exactly reproducible: the same `(dataset, seed)` pair
 //! always yields the same trace, mapping, and schedule.
 
+/// One SplitMix64 step: advance `state` by the golden-ratio increment and
+/// return the finalized output. Full-avalanche; also used standalone as a
+/// hash finalizer (e.g. the cluster hash ring).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// A `xoshiro256**` PRNG. Not cryptographic; statistically strong and fast,
 /// which is what a workload generator needs.
 #[derive(Debug, Clone)]
@@ -16,14 +28,12 @@ impl Rng {
     /// Create a generator from a 64-bit seed via SplitMix64 expansion.
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
-        let mut next_sm = || {
-            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-            z ^ (z >> 31)
-        };
-        let s = [next_sm(), next_sm(), next_sm(), next_sm()];
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
         // All-zero state is the one forbidden state; SplitMix64 cannot emit
         // four zeros from any seed, but guard anyway.
         let s = if s == [0; 4] { [1, 2, 3, 4] } else { s };

@@ -1,0 +1,239 @@
+//! Cluster-layer integration tests: the sharded scatter-gather reduction
+//! must be *exactly* the single-pool reduction, and the shard executors'
+//! bookkeeping must conserve the pool-level quantities.
+//!
+//! Exactness strategy: the store is loaded with integer-valued f32s, so
+//! every summation order yields bit-identical results (integer f32 adds
+//! are exact well below 2^24) — any mismatch is a routing bug (lost,
+//! duplicated, or misdirected lookups), not float noise.
+
+use recross::cluster::{
+    simulate_sharded, Cluster, ClusterConfig, PartitionPolicy, PoolShared, ShardPlan,
+};
+use recross::config::Config;
+use recross::coordinator::{BatchPolicy, EmbeddingStore};
+use recross::engine::{Engine, Scheme};
+use recross::graph::CoGraph;
+use recross::workload::{generate, DatasetSpec, Query, Trace};
+
+struct Fixture {
+    engine: Engine,
+    history: Trace,
+    eval: Trace,
+    store: EmbeddingStore,
+    cfg: Config,
+}
+
+fn fixture() -> Fixture {
+    let spec = DatasetSpec::by_name("software").unwrap().scaled(0.02);
+    let (history, eval) = generate(&spec, 600, 200, 42);
+    let graph = CoGraph::build(&history);
+    let mut cfg = Config::paper_default();
+    cfg.scheme.batch_size = 64;
+    let engine = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+    // Integer-valued table in [-8, 8]: exact under any summation order.
+    let dim = cfg.hardware.embedding_dim;
+    let n = engine.mapping().num_embeddings();
+    let table: Vec<f32> = (0..n * dim)
+        .map(|i| ((i.wrapping_mul(2_654_435_761)) % 17) as f32 - 8.0)
+        .collect();
+    let store = EmbeddingStore::from_table(engine.mapping(), dim, cfg.hardware.xbar_rows, table);
+    Fixture {
+        engine,
+        history,
+        eval,
+        store,
+        cfg,
+    }
+}
+
+fn shared_of(f: &Fixture) -> PoolShared {
+    PoolShared::from_engine(&f.engine)
+}
+
+#[test]
+fn sharded_reduction_bit_identical_to_single_pool() {
+    let f = fixture();
+    let plan = ShardPlan::by_locality(f.engine.mapping(), &f.history, 4, 0.10);
+    let cluster =
+        Cluster::spawn_from_parts(shared_of(&f), &f.store, plan, BatchPolicy::default()).unwrap();
+    let handle = cluster.handle();
+
+    let queries: Vec<Query> = f.eval.queries.iter().take(100).cloned().collect();
+    let responses = handle.reduce_many(&queries).unwrap();
+    assert_eq!(responses.len(), queries.len());
+    for (q, r) in queries.iter().zip(&responses) {
+        let expect = f.store.reduce_reference(&q.items);
+        assert_eq!(
+            r.reduced, expect,
+            "sharded reduction differs from single-pool reference for {:?}",
+            q.items
+        );
+        if !q.is_empty() {
+            assert!((1..=4).contains(&r.fanout), "fanout {} out of range", r.fanout);
+        }
+    }
+}
+
+#[test]
+fn sharded_activations_conserved() {
+    // Splitting by shard must not create or destroy activations: groups
+    // partition across shards, so per-query distinct-group counts sum
+    // exactly to the single-pool count.
+    let f = fixture();
+    let plan = ShardPlan::by_locality(f.engine.mapping(), &f.history, 4, 0.10);
+    let cluster =
+        Cluster::spawn_from_parts(shared_of(&f), &f.store, plan, BatchPolicy::default()).unwrap();
+    let handle = cluster.handle();
+
+    let queries: Vec<Query> = f.eval.queries.iter().take(128).cloned().collect();
+    let responses = handle.reduce_many(&queries).unwrap();
+    let sharded_acts: u64 = responses.iter().map(|r| r.activations).sum();
+    let reference = f
+        .engine
+        .count_activations(&Trace {
+            num_embeddings: f.eval.num_embeddings,
+            queries: queries.clone(),
+        });
+    assert_eq!(sharded_acts, reference);
+
+    // Shard executors saw every lookup exactly once.
+    let statuses = handle.shard_status().unwrap();
+    let lookups: u64 = statuses.iter().map(|s| s.lookups).sum();
+    let expect: u64 = queries.iter().map(|q| q.len() as u64).sum();
+    assert_eq!(lookups, expect);
+    let sim_acts: u64 = statuses.iter().map(|s| s.sim.activations).sum();
+    assert_eq!(sim_acts, reference);
+}
+
+#[test]
+fn hash_and_locality_plans_agree_with_live_pool() {
+    // The hash-partitioned pool must be just as exact as the locality one.
+    let f = fixture();
+    let ring = recross::cluster::HashRing::new(4, 128);
+    let plan = ShardPlan::by_hash(f.engine.mapping().num_groups(), &ring);
+    let cluster =
+        Cluster::spawn_from_parts(shared_of(&f), &f.store, plan, BatchPolicy::default()).unwrap();
+    let handle = cluster.handle();
+    for q in f.eval.queries.iter().take(40) {
+        let r = handle.reduce(&q.items).unwrap();
+        assert_eq!(r.reduced, f.store.reduce_reference(&q.items));
+    }
+}
+
+#[test]
+fn locality_partition_fans_out_no_worse_than_hash() {
+    let f = fixture();
+    let mapping = f.engine.mapping();
+    let ring = recross::cluster::HashRing::new(4, 128);
+    let hash = ShardPlan::by_hash(mapping.num_groups(), &ring);
+    let locality = ShardPlan::by_locality(mapping, &f.history, 4, 0.25);
+    let h_mean = hash.fanout_histogram(mapping, &f.eval).mean();
+    let l_mean = locality.fanout_histogram(mapping, &f.eval).mean();
+    assert!(l_mean >= 1.0);
+    // 10% tolerance: hash is unbalanced at this tiny group count, which
+    // can deflate its fan-out; locality must still be in its ballpark.
+    assert!(
+        l_mean <= h_mean * 1.10 + 1e-9,
+        "locality fan-out {l_mean:.3} much worse than hash {h_mean:.3}"
+    );
+}
+
+#[test]
+fn sharded_server_handle_serves_requests_in_order() {
+    use recross::coordinator::{Request, ShardedServerHandle};
+    let f = fixture();
+    let plan = ShardPlan::by_locality(f.engine.mapping(), &f.history, 4, 0.10);
+    let cluster =
+        Cluster::spawn_from_parts(shared_of(&f), &f.store, plan, BatchPolicy::default()).unwrap();
+    let front = ShardedServerHandle::new(cluster.handle());
+
+    let reqs: Vec<Request> = f
+        .eval
+        .queries
+        .iter()
+        .take(50)
+        .enumerate()
+        .map(|(i, q)| Request {
+            id: 1000 + i as u64,
+            dense: vec![0.0; 13],
+            items: q.items.clone(),
+        })
+        .collect();
+    let expected: Vec<Vec<f32>> = reqs
+        .iter()
+        .map(|r| f.store.reduce_reference(&r.items))
+        .collect();
+    let responses = front.infer_many(reqs).unwrap();
+    assert_eq!(responses.len(), 50);
+    for (i, (r, want)) in responses.iter().zip(&expected).enumerate() {
+        assert_eq!(r.id, 1000 + i as u64, "responses out of request order");
+        assert_eq!(&r.reduced, want);
+        assert!(r.logit.is_nan(), "sharded path must not fabricate a logit");
+    }
+
+    // Single-request path agrees with the batch path.
+    let one = front
+        .infer(Request {
+            id: 7,
+            dense: vec![0.0; 13],
+            items: f.eval.queries[0].items.clone(),
+        })
+        .unwrap();
+    assert_eq!(one.id, 7);
+    assert_eq!(one.reduced, expected[0]);
+}
+
+#[test]
+fn cluster_rejects_nmars_scheme() {
+    let mut cfg = Config::paper_default();
+    cfg.workload.history_queries = 200;
+    cfg.workload.eval_queries = 50;
+    let err = Cluster::build(&cfg, Scheme::Nmars, 0.02, &ClusterConfig::default());
+    assert!(err.is_err(), "nmars has no sharded dataflow and must be refused");
+}
+
+#[test]
+fn single_shard_cluster_equals_engine_simulation() {
+    let f = fixture();
+    let shared = shared_of(&f);
+    let plan = ShardPlan::from_assignment(vec![0; shared.mapping.num_groups()], 1);
+    let sharded = simulate_sharded(&shared, &plan, &f.eval, f.cfg.scheme.batch_size);
+    let reference = f.engine.run_trace(&f.eval, f.cfg.scheme.batch_size);
+    assert_eq!(sharded, reference, "one-shard pool must equal the single pool");
+}
+
+#[test]
+fn cluster_build_from_config_end_to_end() {
+    // The `recross cluster` CLI path: offline phase -> partition -> spawn
+    // -> serve, via Cluster::build.
+    let mut cfg = Config::paper_default();
+    cfg.workload.history_queries = 400;
+    cfg.workload.eval_queries = 100;
+    let ccfg = ClusterConfig {
+        shards: 3,
+        policy: PartitionPolicy::Locality,
+        ..Default::default()
+    };
+    let bundle = Cluster::build(&cfg, Scheme::ReCross, 0.02, &ccfg).unwrap();
+    assert_eq!(bundle.cluster.num_shards(), 3);
+    let handle = bundle.cluster.handle();
+    let queries: Vec<Query> = bundle.eval.queries.iter().take(32).cloned().collect();
+    let responses = handle.reduce_many(&queries).unwrap();
+    // Random (non-integer) store: allow float reassociation noise.
+    for (q, r) in queries.iter().zip(&responses) {
+        let expect = bundle.store.reduce_reference(&q.items);
+        for (a, b) in r.reduced.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+    let merged = handle.merged_sim().unwrap();
+    assert!(merged.queries > 0);
+    let max_shard = handle
+        .shard_status()
+        .unwrap()
+        .iter()
+        .map(|s| s.sim.completion_ns)
+        .fold(0.0f64, f64::max);
+    assert_eq!(merged.completion_ns, max_shard);
+}
