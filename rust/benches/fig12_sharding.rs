@@ -7,7 +7,10 @@
 //! (shards = 1). Also measures the simulator's own wall time via the
 //! in-tree bench harness.
 
-use recross::cluster::{simulate_sharded, PoolShared, ShardPlan};
+use recross::allocation::group_frequencies;
+use recross::cluster::{
+    simulate_sharded, simulate_with_replicas, PoolShared, ReplicaPlan, RoutePolicy, ShardPlan,
+};
 use recross::config::Config;
 use recross::engine::{Engine, Scheme};
 use recross::graph::CoGraph;
@@ -58,6 +61,53 @@ fn main() {
                 baseline_ns / stats.completion_ns.max(1e-9),
                 fanout,
                 fmt_ns(stall_per_subq)
+            );
+        }
+    }
+
+    // --- replica routing vs ownership-pinned placement -------------------
+    // The tentpole comparison: same plan, same Eq. 1 copies, but spread
+    // across shards and routed by power-of-two-choices.
+    println!("\n== replica placement: pinned vs p2c-routed (dup 10%) ==\n");
+    println!(
+        "{:>6} {:>14} {:>14} {:>9} {:>12} {:>12}",
+        "shards", "pin-maxload", "rt-maxload", "delta", "pin-compl", "rt-compl"
+    );
+    {
+        let cfg = Config::paper_default(); // dup_ratio 0.10
+        let engine = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
+        let shared = PoolShared::from_engine(&engine);
+        let freqs = group_frequencies(&shared.mapping, &history);
+        for shards in [2usize, 4, 8, 16] {
+            let plan = ShardPlan::by_locality(&shared.mapping, &history, shards, 0.10);
+            let pinned_plan = ReplicaPlan::pinned(&plan, &shared.replication);
+            let spread_plan = ReplicaPlan::spread(&plan, &shared.replication, &freqs);
+            let pinned = simulate_with_replicas(
+                &shared,
+                &plan,
+                &pinned_plan,
+                &eval,
+                cfg.scheme.batch_size,
+                RoutePolicy::Pinned,
+            );
+            let routed = simulate_with_replicas(
+                &shared,
+                &plan,
+                &spread_plan,
+                &eval,
+                cfg.scheme.batch_size,
+                RoutePolicy::PowerOfTwo,
+            );
+            let delta = 100.0
+                * (1.0 - routed.max_shard_load() as f64 / pinned.max_shard_load().max(1) as f64);
+            println!(
+                "{:>6} {:>14} {:>14} {:>8.1}% {:>12} {:>12}",
+                shards,
+                pinned.max_shard_load(),
+                routed.max_shard_load(),
+                delta,
+                fmt_ns(pinned.stats.completion_ns),
+                fmt_ns(routed.stats.completion_ns)
             );
         }
     }

@@ -45,6 +45,19 @@ impl Replication {
         }
     }
 
+    /// Wrap an explicit per-group copy vector (each entry >= 1). Used by
+    /// the cluster layer to derive a shard's *local* replica counts from
+    /// the cross-shard placement table.
+    pub fn from_copies(copies: Vec<u32>, batch_size: usize) -> Self {
+        assert!(copies.iter().all(|&c| c >= 1), "every group needs a copy");
+        let total = copies.iter().map(|&c| c as usize).sum();
+        Self {
+            copies,
+            total_crossbars: total,
+            batch_size,
+        }
+    }
+
     /// Copies of group `g`.
     #[inline]
     pub fn copies_of(&self, g: u32) -> u32 {

@@ -38,33 +38,45 @@ pub mod server;
 pub mod shard;
 
 pub use hashring::HashRing;
-pub use partition::ShardPlan;
-pub use server::{Cluster, ClusterConfig, ClusterHandle, ClusterResponse, PartitionPolicy};
-pub use shard::{partition_store, PoolShared, ShardPartial, ShardStatus, ShardStore};
+pub use partition::{ReplicaPlan, ShardPlan};
+pub use server::{
+    Cluster, ClusterConfig, ClusterHandle, ClusterResponse, PartitionPolicy, RouteOptions,
+    RoutePolicy, RouteTable,
+};
+pub use shard::{
+    partition_store, partition_store_with_replicas, PoolShared, ShardPartial, ShardStatus,
+    ShardStore,
+};
 
 use crate::config::Config;
-use crate::coordinator::{EmbeddingStore, OfflinePhase};
+use crate::coordinator::{DriftMonitor, EmbeddingStore, OfflinePhase};
 use crate::engine::Scheme;
 use crate::sched::{ExecStats, Scheduler, Scratch};
 use crate::workload::{Query, Trace};
 use crate::Result;
+use std::sync::Arc;
 
 /// Everything `Cluster::build` assembles: the running pool plus the
-/// reference pieces a driver needs (the held-out eval trace and the full
-/// table for single-pool verification).
+/// reference pieces a driver needs (the held-out eval trace, the offline
+/// history the partition was derived from, and the full table for
+/// single-pool verification).
 pub struct ClusterBundle {
     pub cluster: Cluster,
     /// Full (unsharded) store — the verification reference; shards hold
     /// their own partitioned copies.
     pub store: EmbeddingStore,
+    /// Offline history trace the partition/placement was derived from.
+    pub history: Trace,
     /// Held-out evaluation trace from the offline phase.
     pub eval: Trace,
 }
 
 impl Cluster {
-    /// Offline phase → partition → spawn, per the config. The engine's
-    /// mapping/replication/cost model are shared read-only by all shards;
-    /// the store is laid out once and partitioned tile-by-tile.
+    /// Offline phase → partition → replica placement → spawn, per the
+    /// config. The engine's mapping/replication/cost model are shared
+    /// read-only by all shards; the store is laid out once and
+    /// partitioned tile-by-tile (plus replica tiles when
+    /// `ccfg.replica_routing` spreads hot groups across shards).
     pub fn build(
         cfg: &Config,
         scheme: Scheme,
@@ -100,23 +112,62 @@ impl Cluster {
             cfg.workload.seed,
         );
         let shared = PoolShared::from_engine(&offline.engine);
-        let cluster = Cluster::spawn_from_parts(shared, &store, plan, ccfg.batch.clone())?;
+        let cluster = if ccfg.replica_routing || ccfg.rebalance {
+            let freqs = crate::allocation::group_frequencies(mapping, &offline.history);
+            let replicas = if ccfg.replica_routing {
+                ReplicaPlan::spread(&plan, &shared.replication, &freqs)
+            } else {
+                ReplicaPlan::pinned(&plan, &shared.replication)
+            };
+            let drift = if ccfg.rebalance {
+                // Baseline: the mapping's activations-per-lookup on the
+                // held-out eval trace (the offline validation run).
+                let mut scratch = Vec::new();
+                let (mut acts, mut lks) = (0u64, 0u64);
+                for q in &offline.eval.queries {
+                    acts += mapping.groups_touched(&q.items, &mut scratch) as u64;
+                    lks += q.len() as u64;
+                }
+                let baseline = if lks == 0 {
+                    1.0
+                } else {
+                    acts as f64 / lks as f64
+                };
+                Some(DriftMonitor::new(baseline.max(1e-6), 1.3, 0.05, 128))
+            } else {
+                None
+            };
+            let opts = RouteOptions {
+                policy: if ccfg.replica_routing {
+                    RoutePolicy::PowerOfTwo
+                } else {
+                    RoutePolicy::Pinned
+                },
+                partition: ccfg.policy,
+                slack: ccfg.slack,
+                dup_ratio: None,
+                drift,
+            };
+            Cluster::spawn_routed(shared, &store, plan, replicas, opts, ccfg.batch.clone())?
+        } else {
+            Cluster::spawn_from_parts(shared, &store, plan, ccfg.batch.clone())?
+        };
         Ok(ClusterBundle {
             cluster,
             store,
+            history: offline.history,
             eval: offline.eval,
         })
     }
 }
 
-/// Deterministic thread-free simulation of the sharded pool over a trace
-/// (what `benches/fig12_sharding.rs` sweeps).
+/// Deterministic thread-free simulation of the ownership-pinned sharded
+/// pool over a trace (what `benches/fig12_sharding.rs` sweeps).
 ///
-/// Each batch is split into per-shard sub-batches; shards execute
-/// concurrently, so the batch's stats merge with
-/// [`ExecStats::merge_parallel`] and successive batches accumulate.
-/// The front-end's cross-shard merge is modelled as `fanout - 1` vector
-/// adds per query, serialised on the slowest query's critical path.
+/// A thin wrapper over [`simulate_with_replicas`] with a
+/// [`ReplicaPlan::pinned`] placement and [`RoutePolicy::Pinned`] routing
+/// — the PR 1 cost model as a special case of the replica-routed one, so
+/// every cost-model tweak lands in exactly one loop.
 ///
 /// Note: `queries` in the result counts *sub-queries* (one per
 /// shard a query touched), mirroring what the live shard executors see.
@@ -126,6 +177,49 @@ pub fn simulate_sharded(
     trace: &Trace,
     batch_size: usize,
 ) -> ExecStats {
+    let pinned = ReplicaPlan::pinned(plan, &shared.replication);
+    simulate_with_replicas(shared, plan, &pinned, trace, batch_size, RoutePolicy::Pinned).stats
+}
+
+/// Result of a replica-routed cluster simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutedSim {
+    /// Pool-level stats (per-batch parallel merge + front-end merge cost,
+    /// identical accounting to [`simulate_sharded`]).
+    pub stats: ExecStats,
+    /// Sub-query activation load each shard absorbed over the trace —
+    /// the imbalance metric replica routing exists to flatten.
+    pub shard_loads: Vec<u64>,
+}
+
+impl RoutedSim {
+    /// The hottest shard's activation load.
+    pub fn max_shard_load(&self) -> u64 {
+        self.shard_loads.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Deterministic thread-free simulation of the sharded pool with a
+/// replica placement and routing policy — the apples-to-apples harness
+/// behind the `--replica-routing` report and `benches/fig12_sharding.rs`.
+///
+/// Differences from [`simulate_sharded`]: each shard schedules on its
+/// *local* replica table (only the copies it hosts can absorb its
+/// traffic), and with [`RoutePolicy::PowerOfTwo`] every (query, group)
+/// activation is routed to the less-loaded of two sampled holder shards,
+/// judged by the activations pending on each shard within the current
+/// batch — the deterministic stand-in for the live pool's in-flight
+/// counters, which drain at every gather wave. With
+/// [`RoutePolicy::Pinned`] and a [`ReplicaPlan::pinned`] placement this
+/// reproduces [`simulate_sharded`]'s costs exactly.
+pub fn simulate_with_replicas(
+    shared: &PoolShared,
+    plan: &ShardPlan,
+    replicas: &ReplicaPlan,
+    trace: &Trace,
+    batch_size: usize,
+    policy: RoutePolicy,
+) -> RoutedSim {
     assert_eq!(
         plan.num_groups(),
         shared.mapping.num_groups(),
@@ -133,24 +227,48 @@ pub fn simulate_sharded(
         plan.num_groups(),
         shared.mapping.num_groups()
     );
-    let sched = Scheduler::new(
-        &shared.mapping,
-        &shared.replication,
-        &shared.model,
-        shared.dynamic_switch,
+    assert_eq!(
+        replicas.num_groups(),
+        plan.num_groups(),
+        "replica placement does not match the plan"
     );
+    let shards = plan.shards;
+    let table = RouteTable {
+        epoch: 0,
+        plan: Arc::new(plan.clone()),
+        replicas: Arc::new(replicas.clone()),
+        policy,
+    };
+    // One scheduler per shard over its local replica table.
+    let locals: Vec<crate::allocation::Replication> = (0..shards)
+        .map(|s| replicas.local_replication(s as u32, shared.replication.batch_size))
+        .collect();
+    let scheds: Vec<Scheduler<'_>> = locals
+        .iter()
+        .map(|r| Scheduler::new(&shared.mapping, r, &shared.model, shared.dynamic_switch))
+        .collect();
     let (add_ns, add_pj) = shared.model.vector_add();
     let mut scratch = Scratch::default();
+    let mut gscratch: Vec<u32> = Vec::new();
     let mut total = ExecStats::default();
-    let mut sub: Vec<Vec<Query>> = vec![Vec::new(); plan.shards];
+    let mut loads = vec![0u64; shards];
+    // The routing signal: activations pending on each shard *within the
+    // current batch* — the deterministic analogue of the live pool's
+    // in-flight counters, which drain at every gather wave.
+    let mut pending = vec![0u64; shards];
+    let mut sub: Vec<Vec<Query>> = vec![Vec::new(); shards];
+    let mut qsalt = 0u64;
     for batch in trace.batches(batch_size) {
         for v in &mut sub {
             v.clear();
         }
+        pending.fill(0);
         let mut max_fanout = 0usize;
         for q in batch {
-            // Same routing rule as the live pool (ShardPlan::split_items).
-            let split = plan.split_items(&shared.mapping, &q.items);
+            let split = table.split_query(&shared.mapping, &q.items, qsalt, |s| {
+                pending[s as usize]
+            });
+            qsalt += 1;
             let fanout = split.iter().filter(|v| !v.is_empty()).count();
             max_fanout = max_fanout.max(fanout);
             if fanout > 1 {
@@ -159,16 +277,19 @@ pub fn simulate_sharded(
             }
             for (s, items) in split.into_iter().enumerate() {
                 if !items.is_empty() {
+                    let acts = shared.mapping.groups_touched(&items, &mut gscratch) as u64;
+                    pending[s] += acts;
+                    loads[s] += acts;
                     sub[s].push(Query::new(items));
                 }
             }
         }
         let mut batch_stats = ExecStats::default();
-        for queries in &sub {
+        for (s, queries) in sub.iter().enumerate() {
             if queries.is_empty() {
                 continue;
             }
-            batch_stats.merge_parallel(&sched.run_batch(queries, &mut scratch));
+            batch_stats.merge_parallel(&scheds[s].run_batch(queries, &mut scratch));
         }
         // Cross-shard merge latency on the critical path.
         if max_fanout > 1 {
@@ -176,7 +297,10 @@ pub fn simulate_sharded(
         }
         total.accumulate(&batch_stats);
     }
-    total
+    RoutedSim {
+        stats: total,
+        shard_loads: loads,
+    }
 }
 
 #[cfg(test)]
@@ -242,5 +366,70 @@ mod tests {
         assert_eq!(stats.lookups, 4);
         // Each query split into 2 sub-queries.
         assert_eq!(stats.queries, 4);
+    }
+
+    /// Hot group 0 (2 copies) owned by shard 0; cold group 1 on shard 1.
+    fn skewed_fixture() -> (PoolShared, ShardPlan, Trace) {
+        let mapping = Mapping::from_groups(vec![vec![0, 1], vec![2, 3]], 2, 4);
+        let replication = Replication::from_copies(vec![2, 1], 4);
+        let model = CrossbarModel::new(
+            &crate::config::HardwareConfig::default(),
+            &CircuitParams::default(),
+        );
+        let shared = PoolShared {
+            mapping,
+            replication,
+            model,
+            dynamic_switch: true,
+        };
+        let mut queries = Vec::new();
+        for i in 0..64u32 {
+            queries.push(Query::new(vec![i % 2])); // hammer group 0
+            if i % 8 == 0 {
+                queries.push(Query::new(vec![2])); // trickle to group 1
+            }
+        }
+        let plan = ShardPlan::from_assignment(vec![0, 1], 2);
+        (shared, plan, Trace { num_embeddings: 4, queries })
+    }
+
+    #[test]
+    fn replica_routing_flattens_max_shard_load() {
+        let (shared, plan, trace) = skewed_fixture();
+        let freqs =
+            crate::allocation::group_frequencies(&shared.mapping, &trace);
+        let pinned_plan = ReplicaPlan::pinned(&plan, &shared.replication);
+        let spread_plan = ReplicaPlan::spread(&plan, &shared.replication, &freqs);
+        let pinned =
+            simulate_with_replicas(&shared, &plan, &pinned_plan, &trace, 8, RoutePolicy::Pinned);
+        let routed = simulate_with_replicas(
+            &shared,
+            &plan,
+            &spread_plan,
+            &trace,
+            8,
+            RoutePolicy::PowerOfTwo,
+        );
+        // Conservation first: routing changes placement, not work.
+        assert_eq!(routed.stats.activations, pinned.stats.activations);
+        assert_eq!(routed.stats.lookups, pinned.stats.lookups);
+        assert_eq!(
+            routed.shard_loads.iter().sum::<u64>(),
+            pinned.shard_loads.iter().sum::<u64>()
+        );
+        // The point of the tentpole: the hot shard sheds load...
+        assert!(
+            routed.max_shard_load() < pinned.max_shard_load(),
+            "routed max load {} !< pinned {}",
+            routed.max_shard_load(),
+            pinned.max_shard_load()
+        );
+        // ...without hurting simulated completion time.
+        assert!(
+            routed.stats.completion_ns <= pinned.stats.completion_ns * 1.0001,
+            "routed completion {} worse than pinned {}",
+            routed.stats.completion_ns,
+            pinned.stats.completion_ns
+        );
     }
 }

@@ -16,8 +16,10 @@
 //! distribution of a trace.
 
 use super::hashring::HashRing;
+use crate::allocation::Replication;
 use crate::grouping::Mapping;
 use crate::metrics::Histogram;
+use crate::util::rng::splitmix64;
 use crate::workload::{EmbeddingId, Trace};
 
 /// A complete group→shard assignment.
@@ -145,6 +147,185 @@ impl ShardPlan {
     }
 }
 
+/// Cross-shard replica placement: which shards hold a copy of each group.
+///
+/// PR 1 pinned every Eq. 1 copy inside the group's owning shard, so
+/// replication could parallelise *within* a shard but never relieve a hot
+/// shard. This table lifts replication to the cluster level: a hot
+/// group's copies are spread across several shards
+/// ([`ReplicaPlan::spread`]), and the front-end routes each activation to
+/// the least-loaded holder (power-of-two-choices,
+/// [`ReplicaPlan::route_p2c`]). [`ReplicaPlan::pinned`] reproduces the
+/// PR 1 ownership model for comparison.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaPlan {
+    /// Number of shards in the pool.
+    pub shards: usize,
+    /// Shard of every copy of every group; `holders[g][0]` is the owner.
+    /// A shard may appear twice when it hosts two copies.
+    pub holders: Vec<Vec<u32>>,
+    /// Distinct holder shards per group, ascending (the routing
+    /// candidates).
+    distinct: Vec<Vec<u32>>,
+}
+
+impl ReplicaPlan {
+    fn finish(shards: usize, holders: Vec<Vec<u32>>) -> Self {
+        let distinct = holders
+            .iter()
+            .map(|hs| {
+                let mut d = hs.clone();
+                d.sort_unstable();
+                d.dedup();
+                d
+            })
+            .collect();
+        Self {
+            shards,
+            holders,
+            distinct,
+        }
+    }
+
+    /// The PR 1 ownership model: every copy of a group lives on its
+    /// owning shard.
+    pub fn pinned(plan: &ShardPlan, replication: &Replication) -> Self {
+        assert_eq!(
+            plan.num_groups(),
+            replication.copies.len(),
+            "replication plan does not match shard plan"
+        );
+        let holders = (0..plan.num_groups() as u32)
+            .map(|g| vec![plan.shard_of(g); replication.copies_of(g) as usize])
+            .collect();
+        Self::finish(plan.shards, holders)
+    }
+
+    /// Spread each group's extra copies across shards, greedily assigning
+    /// every copy to the least-loaded shard (preferring shards that do
+    /// not yet hold the group). The load model matches the locality
+    /// partitioner's: a group contributes `freq / copies` per copy, so
+    /// the pass co-optimises with the partition's load cap instead of
+    /// fighting it. Fully deterministic.
+    pub fn spread(plan: &ShardPlan, replication: &Replication, freqs: &[u64]) -> Self {
+        let n = plan.num_groups();
+        assert_eq!(replication.copies.len(), n, "replication/plan mismatch");
+        assert_eq!(freqs.len(), n, "frequency/plan mismatch");
+        let shards = plan.shards;
+        let mut holders: Vec<Vec<u32>> = (0..n)
+            .map(|g| vec![plan.shard_of(g as u32)])
+            .collect();
+        // Each shard starts with the owner copy of everything it owns.
+        let mut load = vec![0.0f64; shards];
+        for g in 0..n {
+            load[plan.shard_of(g as u32) as usize] +=
+                freqs[g] as f64 / replication.copies[g].max(1) as f64;
+        }
+        // Hottest replicated groups place first (they move the most load).
+        let mut order: Vec<usize> = (0..n).filter(|&g| replication.copies[g] > 1).collect();
+        order.sort_by_key(|&g| (std::cmp::Reverse(freqs[g]), g));
+        for &g in &order {
+            let share = freqs[g] as f64 / replication.copies[g] as f64;
+            for _ in 1..replication.copies[g] {
+                let mut best = 0usize;
+                let mut best_key = (true, f64::INFINITY);
+                for (s, &l) in load.iter().enumerate() {
+                    let holds = holders[g].contains(&(s as u32));
+                    // Prefer (not-yet-holding, lighter, lower id).
+                    let better = match (holds, best_key.0) {
+                        (false, true) => true,
+                        (true, false) => false,
+                        _ => l < best_key.1,
+                    };
+                    if better {
+                        best = s;
+                        best_key = (holds, l);
+                    }
+                }
+                holders[g].push(best as u32);
+                load[best] += share;
+            }
+        }
+        Self::finish(shards, holders)
+    }
+
+    /// Number of groups covered.
+    pub fn num_groups(&self) -> usize {
+        self.holders.len()
+    }
+
+    /// Distinct shards holding a copy of `g`, ascending. Never empty.
+    #[inline]
+    pub fn distinct_holders(&self, g: u32) -> &[u32] {
+        &self.distinct[g as usize]
+    }
+
+    /// Every group a shard hosts (owned or replica), ascending.
+    pub fn groups_hosted_by(&self, shard: u32) -> Vec<u32> {
+        (0..self.num_groups() as u32)
+            .filter(|&g| self.distinct[g as usize].contains(&shard))
+            .collect()
+    }
+
+    /// Groups whose copies span more than one shard.
+    pub fn cross_shard_groups(&self) -> usize {
+        self.distinct.iter().filter(|d| d.len() > 1).count()
+    }
+
+    /// A shard's local replica counts: how many copies of each group it
+    /// hosts, clamped to >= 1 so the scheduler's replica table stays
+    /// total (groups the shard does not host are never routed to it, so
+    /// their phantom copy sees no traffic).
+    pub fn local_replication(&self, shard: u32, batch_size: usize) -> Replication {
+        let copies = self
+            .holders
+            .iter()
+            .map(|hs| (hs.iter().filter(|&&s| s == shard).count() as u32).max(1))
+            .collect();
+        Replication::from_copies(copies, batch_size)
+    }
+
+    /// Expected per-shard load under this placement: each copy of a group
+    /// carries `freq / copies` activations.
+    pub fn expected_loads(&self, freqs: &[u64]) -> Vec<f64> {
+        assert_eq!(freqs.len(), self.num_groups());
+        let mut loads = vec![0.0f64; self.shards];
+        for (g, hs) in self.holders.iter().enumerate() {
+            let share = freqs[g] as f64 / hs.len() as f64;
+            for &s in hs {
+                loads[s as usize] += share;
+            }
+        }
+        loads
+    }
+
+    /// Power-of-two-choices routing for one activation of group `g`:
+    /// sample two distinct holder shards from `salt` (deterministic) and
+    /// send the activation to the one with the lower current load (`loads`
+    /// is a callback so the live pool can read atomic in-flight counters
+    /// while the simulator reads a plain vector). Ties break toward the
+    /// lower shard id.
+    pub fn route_p2c<F: Fn(u32) -> u64>(&self, g: u32, salt: u64, loads: F) -> u32 {
+        let hs = self.distinct_holders(g);
+        if hs.len() == 1 {
+            return hs[0];
+        }
+        let mut st = salt ^ ((g as u64) << 32) ^ 0x5EED_0F_2C;
+        let i = (splitmix64(&mut st) % hs.len() as u64) as usize;
+        let mut j = (splitmix64(&mut st) % (hs.len() - 1) as u64) as usize;
+        if j >= i {
+            j += 1;
+        }
+        let (a, b) = (hs[i], hs[j]);
+        let (la, lb) = (loads(a), loads(b));
+        if la < lb || (la == lb && a < b) {
+            a
+        } else {
+            b
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,5 +389,87 @@ mod tests {
     #[should_panic(expected = "references a shard")]
     fn out_of_range_assignment_rejected() {
         ShardPlan::from_assignment(vec![0, 5], 2);
+    }
+
+    #[test]
+    fn pinned_placement_keeps_copies_on_owner() {
+        let plan = ShardPlan::from_assignment(vec![0, 1, 0, 1], 2);
+        let rep = Replication::from_copies(vec![3, 1, 2, 1], 64);
+        let rp = ReplicaPlan::pinned(&plan, &rep);
+        assert_eq!(rp.holders[0], vec![0, 0, 0]);
+        assert_eq!(rp.holders[1], vec![1]);
+        assert_eq!(rp.distinct_holders(0), &[0]);
+        assert_eq!(rp.cross_shard_groups(), 0);
+        // Local replication mirrors the global plan on the owner.
+        assert_eq!(rp.local_replication(0, 64).copies, vec![3, 1, 2, 1]);
+        // Non-hosting shard gets phantom single copies.
+        assert_eq!(rp.local_replication(1, 64).copies, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn spread_placement_crosses_shards_and_lowers_max_load() {
+        // One scorching group owned by shard 0 with 4 copies; spreading
+        // must hand copies to the other shards and flatten expected load.
+        let plan = ShardPlan::from_assignment(vec![0, 1, 2, 3], 4);
+        let rep = Replication::from_copies(vec![4, 1, 1, 1], 64);
+        let freqs = vec![1000u64, 10, 10, 10];
+        let pinned = ReplicaPlan::pinned(&plan, &rep);
+        let spread = ReplicaPlan::spread(&plan, &rep, &freqs);
+        assert_eq!(spread.holders[0][0], 0, "owner keeps the first copy");
+        assert_eq!(spread.distinct_holders(0).len(), 4, "copies spread out");
+        assert!(spread.cross_shard_groups() >= 1);
+        let max = |loads: &[f64]| loads.iter().cloned().fold(0.0f64, f64::max);
+        let lp = max(&pinned.expected_loads(&freqs));
+        let ls = max(&spread.expected_loads(&freqs));
+        assert!(ls < lp, "spread max load {ls} !< pinned {lp}");
+        // Every shard hosts the hot group exactly once here.
+        for s in 0..4 {
+            assert_eq!(spread.local_replication(s, 64).copies[0], 1);
+        }
+    }
+
+    #[test]
+    fn spread_is_deterministic_and_total() {
+        let plan = ShardPlan::from_assignment(vec![0, 1, 0, 1, 0, 1], 2);
+        let rep = Replication::from_copies(vec![2, 2, 1, 1, 3, 1], 32);
+        let freqs = vec![500, 400, 9, 8, 300, 7];
+        let a = ReplicaPlan::spread(&plan, &rep, &freqs);
+        let b = ReplicaPlan::spread(&plan, &rep, &freqs);
+        assert_eq!(a, b);
+        for g in 0..6u32 {
+            assert_eq!(a.holders[g as usize].len(), rep.copies_of(g) as usize);
+            assert!(a.distinct_holders(g).iter().all(|&s| (s as usize) < 2));
+            assert_eq!(a.holders[g as usize][0], plan.shard_of(g));
+        }
+        // hosted sets cover every group at least once
+        let hosted: Vec<_> = (0..2).map(|s| a.groups_hosted_by(s)).collect();
+        for g in 0..6u32 {
+            assert!(hosted.iter().any(|h| h.contains(&g)));
+        }
+    }
+
+    #[test]
+    fn p2c_routes_to_holders_and_prefers_lighter() {
+        let plan = ShardPlan::from_assignment(vec![0, 1], 3);
+        let rep = Replication::from_copies(vec![3, 1], 16);
+        let freqs = vec![100, 1];
+        let rp = ReplicaPlan::spread(&plan, &rep, &freqs);
+        let holders = rp.distinct_holders(0).to_vec();
+        assert!(holders.len() >= 2);
+        // All routes land on holders; with one shard overloaded the other
+        // candidates win whenever they are sampled.
+        let mut loads = vec![0u64; 3];
+        loads[holders[0] as usize] = 1_000_000;
+        for salt in 0..200u64 {
+            let s = rp.route_p2c(0, salt, |s| loads[s as usize]);
+            assert!(holders.contains(&s), "routed to non-holder {s}");
+        }
+        let hits_heavy = (0..200u64)
+            .filter(|&salt| rp.route_p2c(0, salt, |s| loads[s as usize]) == holders[0])
+            .count();
+        // p2c picks the heavy shard only when both samples land on it.
+        assert!(hits_heavy < 60, "p2c kept hammering the loaded shard");
+        // Single-holder groups route unconditionally to the owner.
+        assert_eq!(rp.route_p2c(1, 7, |_| 0), 1);
     }
 }

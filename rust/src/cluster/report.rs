@@ -1,6 +1,7 @@
 //! Text report for the `cluster` CLI mode: per-shard load/stall table,
 //! cross-shard fan-out histogram, and the pool-level merged simulation.
 
+use super::partition::ReplicaPlan;
 use super::shard::ShardStatus;
 use crate::metrics::Histogram;
 use crate::sched::ExecStats;
@@ -23,7 +24,12 @@ pub fn render(
     queries: usize,
 ) -> String {
     let mut s = String::new();
-    let _ = writeln!(s, "=== cluster report ({} shards) ===", statuses.len());
+    let epoch = statuses.iter().map(|st| st.epoch).max().unwrap_or(0);
+    let _ = writeln!(
+        s,
+        "=== cluster report ({} shards, epoch {epoch}) ===",
+        statuses.len()
+    );
 
     let total_acts: u64 = statuses.iter().map(|st| st.sim.activations).sum();
     let _ = writeln!(
@@ -69,6 +75,26 @@ pub fn render(
     s
 }
 
+/// One-paragraph summary of a replica placement: how many groups have
+/// cross-shard copies and how flat the expected load is, per the
+/// `freq/copies`-per-copy load model.
+pub fn placement_summary(replicas: &ReplicaPlan, freqs: &[u64]) -> String {
+    let loads = replicas.expected_loads(freqs);
+    let max = loads.iter().cloned().fold(0.0f64, f64::max);
+    let mean = loads.iter().sum::<f64>() / loads.len().max(1) as f64;
+    format!(
+        "placement: {} of {} groups replicated across shards; expected load max/mean = {:.2} ({})",
+        replicas.cross_shard_groups(),
+        replicas.num_groups(),
+        if mean > 0.0 { max / mean } else { 0.0 },
+        loads
+            .iter()
+            .map(|l| format!("{l:.0}"))
+            .collect::<Vec<_>>()
+            .join("/")
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,6 +105,7 @@ mod tests {
             ShardStatus {
                 shard: 0,
                 owned_groups: 10,
+                epoch: 0,
                 sub_queries: 100,
                 lookups: 900,
                 batches: 4,
@@ -94,6 +121,7 @@ mod tests {
             ShardStatus {
                 shard: 1,
                 owned_groups: 8,
+                epoch: 0,
                 sub_queries: 80,
                 lookups: 700,
                 batches: 4,
@@ -115,10 +143,22 @@ mod tests {
         fanout.add_n(1, 60);
         fanout.add_n(2, 40);
         let text = render(&statuses, &fanout, &merged, Duration::from_millis(12), 100);
-        assert!(text.contains("cluster report (2 shards)"), "{text}");
+        assert!(text.contains("cluster report (2 shards, epoch 0)"), "{text}");
         assert!(text.contains("fan-out"), "{text}");
         assert!(text.contains("100 queries"), "{text}");
         // parallel merge: completion is the max (5 µs), not the sum
         assert!(text.contains("5.00 µs"), "{text}");
+    }
+
+    #[test]
+    fn placement_summary_counts_replicated_groups() {
+        use crate::allocation::Replication;
+        use crate::cluster::ShardPlan;
+        let plan = ShardPlan::from_assignment(vec![0, 1], 2);
+        let rep = Replication::from_copies(vec![2, 1], 8);
+        let freqs = vec![100, 10];
+        let spread = ReplicaPlan::spread(&plan, &rep, &freqs);
+        let text = placement_summary(&spread, &freqs);
+        assert!(text.contains("1 of 2 groups replicated"), "{text}");
     }
 }

@@ -4,24 +4,46 @@
 //! [`Cluster::spawn_from_parts`] starts one executor thread per shard
 //! (each with its own dynamic batcher and its own slice of the embedding
 //! table). A [`ClusterHandle`] is the cloneable client: it splits each
-//! query's lookups by owning shard, dispatches the per-shard sub-queries
-//! in parallel, and sums the returned partial vectors — the reduction is
-//! linear, so the scatter-gather merge is exact. Partials are always
-//! merged in ascending shard order, keeping the float summation order
-//! deterministic across runs.
+//! query's lookups by *holding* shard, dispatches the per-shard
+//! sub-queries in parallel, and sums the returned partial vectors — the
+//! reduction is linear, so the scatter-gather merge is exact. Partials
+//! are always merged in ascending shard order, keeping the float
+//! summation order deterministic for a fixed split.
+//!
+//! Two routing policies ([`RoutePolicy`]):
+//!
+//! * `Pinned` — every group's traffic goes to its owning shard (the PR 1
+//!   model; replication parallelises within the shard only).
+//! * `PowerOfTwo` — a group replicated across shards
+//!   ([`super::ReplicaPlan::spread`]) is routed per activation to the
+//!   less-loaded of two sampled holders, judged by per-shard in-flight
+//!   sub-query counters. Whatever the route, each (query, group) pair is
+//!   served by exactly one shard, so the merge stays exact.
+//!
+//! The routing state is an epoch-versioned [`RouteTable`] behind an
+//! `RwLock<Arc<..>>`: [`Cluster::rebalance`] recomputes frequencies from
+//! recent traffic, builds a new placement, installs each shard's new tile
+//! set ([`super::shard::ShardMsg::Install`]), waits for every ack, and
+//! only then swaps the table — an atomic epoch flip at a batch boundary.
+//! A [`DriftMonitor`] wired into the scatter path tells the driver *when*
+//! that remap is due.
 
-use super::partition::ShardPlan;
+use super::partition::{ReplicaPlan, ShardPlan};
 use super::shard::{
-    partition_store, spawn_shard, PoolShared, ShardExecutor, ShardMsg, ShardStatus,
+    partition_store_with_replicas, spawn_shard, PoolShared, ShardExecutor, ShardMsg, ShardStatus,
+    ShardStore,
 };
+use crate::allocation;
 use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::drift::DriftMonitor;
 use crate::coordinator::EmbeddingStore;
+use crate::grouping::Mapping;
 use crate::sched::ExecStats;
-use crate::workload::{EmbeddingId, Query};
+use crate::workload::{EmbeddingId, Query, Trace};
 use crate::Result;
 use anyhow::anyhow;
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// How groups are assigned to shards.
@@ -32,6 +54,15 @@ pub enum PartitionPolicy {
     /// Co-occurrence-locality-preserving balanced partition (needs the
     /// offline history trace).
     Locality,
+}
+
+/// How each activation picks among a group's replica-holding shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Always the owning shard (ownership-pinned replication).
+    Pinned,
+    /// Power-of-two-choices over per-shard in-flight counters.
+    PowerOfTwo,
 }
 
 /// Cluster assembly knobs.
@@ -47,6 +78,13 @@ pub struct ClusterConfig {
     pub batch: BatchPolicy,
     /// Load-balance slack for the locality partitioner.
     pub slack: f64,
+    /// Spread Eq. 1 replicas across shards and route each activation to
+    /// the least-loaded holder (power-of-two-choices). Off = the PR 1
+    /// ownership-pinned model.
+    pub replica_routing: bool,
+    /// Arm the drift monitor so `rebalance_due()` can trigger
+    /// epoch-versioned remaps online.
+    pub rebalance: bool,
 }
 
 impl Default for ClusterConfig {
@@ -57,6 +95,8 @@ impl Default for ClusterConfig {
             policy: PartitionPolicy::Locality,
             batch: BatchPolicy::default(),
             slack: 0.10,
+            replica_routing: false,
+            rebalance: false,
         }
     }
 }
@@ -80,30 +120,150 @@ pub struct ClusterResponse {
     pub latency: Duration,
 }
 
-/// A running sharded pool: executors + plan.
+/// The epoch-versioned routing state the scatter path reads. Swapped
+/// atomically (as one `Arc`) by [`Cluster::rebalance`].
+#[derive(Debug, Clone)]
+pub struct RouteTable {
+    /// Placement epoch; bumped by every rebalance.
+    pub epoch: u64,
+    /// Group ownership (primary copy per group).
+    pub plan: Arc<ShardPlan>,
+    /// Cross-shard replica placement.
+    pub replicas: Arc<ReplicaPlan>,
+    /// Per-activation routing rule.
+    pub policy: RoutePolicy,
+}
+
+impl RouteTable {
+    /// Split a query's items into per-shard sub-lists under this table.
+    /// `loads` reports a shard's current load for power-of-two-choices
+    /// (atomic in-flight counters on the live path, a plain vector in the
+    /// simulator); `qsalt` decorrelates the two-choice sampling across
+    /// queries while keeping it deterministic.
+    pub fn split_query<F: Fn(u32) -> u64>(
+        &self,
+        mapping: &Mapping,
+        items: &[EmbeddingId],
+        qsalt: u64,
+        loads: F,
+    ) -> Vec<Vec<EmbeddingId>> {
+        match self.policy {
+            // The one owner-routing rule shared with the fan-out metrics.
+            RoutePolicy::Pinned => self.plan.split_items(mapping, items),
+            RoutePolicy::PowerOfTwo => {
+                let mut split: Vec<Vec<EmbeddingId>> = vec![Vec::new(); self.plan.shards];
+                // A query's lookups of one group are one activation —
+                // they must travel together; memoize the choice per group
+                // (queries touch few distinct groups, linear scan wins).
+                let mut chosen: Vec<(u32, u32)> = Vec::new();
+                let salt = self
+                    .epoch
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add(qsalt);
+                for &e in items {
+                    let g = mapping.slot_of(e).group;
+                    let s = match chosen.iter().find(|&&(cg, _)| cg == g) {
+                        Some(&(_, s)) => s,
+                        None => {
+                            let s = self.replicas.route_p2c(g, salt, &loads);
+                            chosen.push((g, s));
+                            s
+                        }
+                    };
+                    split[s as usize].push(e);
+                }
+                split
+            }
+        }
+    }
+}
+
+/// Assembly options for the routed pool (see [`Cluster::spawn_routed`]).
+#[derive(Debug)]
+pub struct RouteOptions {
+    /// Per-activation routing rule.
+    pub policy: RoutePolicy,
+    /// Partition policy a rebalance re-runs (`Hash` keeps the owners).
+    pub partition: PartitionPolicy,
+    /// Locality-partitioner slack for rebalances.
+    pub slack: f64,
+    /// Replication area budget a rebalance re-plans Eq. 1 under; `None`
+    /// derives it from the initial plan's realized overhead.
+    pub dup_ratio: Option<f64>,
+    /// Armed drift monitor (None = no online staleness tracking).
+    pub drift: Option<DriftMonitor>,
+}
+
+impl Default for RouteOptions {
+    fn default() -> Self {
+        Self {
+            policy: RoutePolicy::Pinned,
+            partition: PartitionPolicy::Locality,
+            slack: 0.10,
+            dup_ratio: None,
+            drift: None,
+        }
+    }
+}
+
+/// Rebalance settings retained by a running cluster.
+#[derive(Debug, Clone)]
+struct RebalanceSettings {
+    partition: PartitionPolicy,
+    slack: f64,
+    dup_ratio: f64,
+}
+
+/// A running sharded pool: executors + epoch-versioned routing state.
 pub struct Cluster {
     shards: Vec<ShardExecutor>,
-    plan: Arc<ShardPlan>,
+    routes: Arc<RwLock<Arc<RouteTable>>>,
     shared: Arc<PoolShared>,
+    /// In-flight sub-queries per shard (the p2c load signal).
+    inflight: Arc<Vec<AtomicU64>>,
+    drift: Option<Arc<Mutex<DriftMonitor>>>,
+    /// Full table retained for rebuilding shard tile sets on rebalance —
+    /// only kept when the drift monitor is armed, so the common static
+    /// pool does not hold a second copy of the whole table.
+    full: Option<Arc<EmbeddingStore>>,
+    rebalance: RebalanceSettings,
     dim: usize,
 }
 
 impl std::fmt::Debug for Cluster {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let table = self.routes();
         f.debug_struct("Cluster")
             .field("shards", &self.shards.len())
-            .field("groups", &self.plan.num_groups())
+            .field("groups", &table.plan.num_groups())
+            .field("epoch", &table.epoch)
             .finish()
     }
 }
 
 impl Cluster {
-    /// Spawn the pool from prepared parts. `store` is the full table; each
-    /// shard copies out only the tiles it owns.
+    /// Spawn the pool from prepared parts with ownership-pinned routing
+    /// (the PR 1 model). `store` is the full table; each shard copies out
+    /// only the tiles it owns.
     pub fn spawn_from_parts(
         shared: PoolShared,
         store: &EmbeddingStore,
         plan: ShardPlan,
+        batch: BatchPolicy,
+    ) -> Result<Self> {
+        let replicas = ReplicaPlan::pinned(&plan, &shared.replication);
+        Self::spawn_routed(shared, store, plan, replicas, RouteOptions::default(), batch)
+    }
+
+    /// Spawn the pool with an explicit replica placement and routing
+    /// options. Each shard materialises every tile it hosts (owned +
+    /// replicas) and schedules on its local replica table.
+    pub fn spawn_routed(
+        shared: PoolShared,
+        store: &EmbeddingStore,
+        plan: ShardPlan,
+        replicas: ReplicaPlan,
+        opts: RouteOptions,
         batch: BatchPolicy,
     ) -> Result<Self> {
         anyhow::ensure!(
@@ -112,23 +272,51 @@ impl Cluster {
             plan.num_groups(),
             shared.mapping.num_groups()
         );
+        anyhow::ensure!(
+            replicas.num_groups() == plan.num_groups() && replicas.shards == plan.shards,
+            "replica placement does not match the shard plan"
+        );
         let dim = store.dim();
+        let batch_size = shared.replication.batch_size;
+        let dup_ratio = opts
+            .dup_ratio
+            .unwrap_or_else(|| shared.replication.area_overhead());
         let shared = Arc::new(shared);
-        let plan = Arc::new(plan);
-        let stores = partition_store(store, &plan);
+        let stores = partition_store_with_replicas(store, &replicas);
         let mut shards = Vec::with_capacity(plan.shards);
         for (s, sstore) in stores.into_iter().enumerate() {
+            let local = replicas.local_replication(s as u32, batch_size);
             shards.push(spawn_shard(
                 s as u32,
                 Arc::clone(&shared),
                 sstore,
+                local,
                 batch.clone(),
             )?);
         }
+        let inflight = Arc::new((0..plan.shards).map(|_| AtomicU64::new(0)).collect::<Vec<_>>());
+        let table = RouteTable {
+            epoch: 0,
+            plan: Arc::new(plan),
+            replicas: Arc::new(replicas),
+            policy: opts.policy,
+        };
+        // Rebalancing rebuilds shard tile sets from the full table; only
+        // pools with an armed drift monitor ever rebalance, so only they
+        // pay for the retained copy.
+        let full = opts.drift.as_ref().map(|_| Arc::new(store.clone()));
         Ok(Self {
             shards,
-            plan,
+            routes: Arc::new(RwLock::new(Arc::new(table))),
             shared,
+            inflight,
+            drift: opts.drift.map(|d| Arc::new(Mutex::new(d))),
+            full,
+            rebalance: RebalanceSettings {
+                partition: opts.partition,
+                slack: opts.slack,
+                dup_ratio,
+            },
             dim,
         })
     }
@@ -137,16 +325,116 @@ impl Cluster {
         self.shards.len()
     }
 
-    pub fn plan(&self) -> &ShardPlan {
-        &self.plan
+    /// Snapshot of the current routing table (cheap `Arc` clone).
+    pub fn routes(&self) -> Arc<RouteTable> {
+        self.routes.read().expect("route lock poisoned").clone()
+    }
+
+    /// The current ownership plan.
+    pub fn plan(&self) -> Arc<ShardPlan> {
+        self.routes().plan.clone()
+    }
+
+    /// Current placement epoch (0 until the first rebalance).
+    pub fn epoch(&self) -> u64 {
+        self.routes().epoch
+    }
+
+    /// The shared pool state (mapping / global replication / cost model).
+    pub fn shared(&self) -> &PoolShared {
+        &self.shared
+    }
+
+    /// Epoch-versioned remap from recent traffic: recompute group
+    /// frequencies, re-partition (locality policy only — hash owners are
+    /// traffic-independent), re-plan Eq. 1 copies under the same area
+    /// budget, spread the new copies, install every shard's new tile set,
+    /// and atomically swap the routing table once all shards ack.
+    ///
+    /// Callers invoke this at a batch boundary (no in-flight
+    /// sub-queries); a sub-query racing the swap is answered with an
+    /// error, never with a wrong value — shards refuse foreign items.
+    /// Returns the new epoch.
+    pub fn rebalance(&self, recent: &Trace) -> Result<u64> {
+        anyhow::ensure!(!recent.queries.is_empty(), "rebalance needs recent traffic");
+        let full = self.full.as_ref().ok_or_else(|| {
+            anyhow!("rebalance requires an armed drift monitor (RouteOptions::drift)")
+        })?;
+        let cur = self.routes();
+        let mapping = &self.shared.mapping;
+        let freqs = allocation::group_frequencies(mapping, recent);
+        let plan = match self.rebalance.partition {
+            PartitionPolicy::Locality => ShardPlan::by_locality(
+                mapping,
+                recent,
+                cur.plan.shards,
+                self.rebalance.slack,
+            ),
+            PartitionPolicy::Hash => (*cur.plan).clone(),
+        };
+        let batch_size = self.shared.replication.batch_size;
+        let replication =
+            allocation::plan_replication(&freqs, batch_size, self.rebalance.dup_ratio);
+        let replicas = match cur.policy {
+            RoutePolicy::Pinned => ReplicaPlan::pinned(&plan, &replication),
+            RoutePolicy::PowerOfTwo => ReplicaPlan::spread(&plan, &replication, &freqs),
+        };
+        let epoch = cur.epoch + 1;
+
+        // Install every shard's new tiles + local replica table, then
+        // wait for all acks before exposing the new routes.
+        let mut acks = Vec::with_capacity(self.shards.len());
+        for (s, exec) in self.shards.iter().enumerate() {
+            let hosted = replicas.groups_hosted_by(s as u32);
+            let sstore = ShardStore::from_store(full, &hosted);
+            let local = replicas.local_replication(s as u32, batch_size);
+            let (atx, arx) = mpsc::channel();
+            exec.tx
+                .send(ShardMsg::Install {
+                    epoch,
+                    store: sstore,
+                    replication: local,
+                    reply: atx,
+                })
+                .map_err(|_| anyhow!("shard {s} is down"))?;
+            acks.push((s, arx));
+        }
+        for (s, arx) in acks {
+            let got = arx
+                .recv()
+                .map_err(|_| anyhow!("shard {s} died during rebalance"))?;
+            anyhow::ensure!(got == epoch, "shard {s} acked epoch {got}, expected {epoch}");
+        }
+        let table = RouteTable {
+            epoch,
+            plan: Arc::new(plan),
+            replicas: Arc::new(replicas),
+            policy: cur.policy,
+        };
+        *self.routes.write().expect("route lock poisoned") = Arc::new(table);
+
+        // Re-arm the drift monitor at the drifted workload's level: the
+        // remap fixed the load imbalance; activations-per-lookup is a
+        // property of the mapping, so the new normal is the current EMA.
+        if let Some(d) = &self.drift {
+            let mut m = d.lock().expect("drift lock poisoned");
+            if let Some(e) = m.current() {
+                if e > 0.0 {
+                    m.rebaseline(e);
+                }
+            }
+        }
+        Ok(epoch)
     }
 
     /// Cloneable client handle.
     pub fn handle(&self) -> ClusterHandle {
         ClusterHandle {
             txs: self.shards.iter().map(|s| s.tx.clone()).collect(),
-            plan: Arc::clone(&self.plan),
+            routes: Arc::clone(&self.routes),
             shared: Arc::clone(&self.shared),
+            inflight: Arc::clone(&self.inflight),
+            drift: self.drift.clone(),
             dim: self.dim,
         }
     }
@@ -169,8 +457,10 @@ impl Drop for Cluster {
 #[derive(Clone)]
 pub struct ClusterHandle {
     txs: Vec<mpsc::Sender<ShardMsg>>,
-    plan: Arc<ShardPlan>,
+    routes: Arc<RwLock<Arc<RouteTable>>>,
     shared: Arc<PoolShared>,
+    inflight: Arc<Vec<AtomicU64>>,
+    drift: Option<Arc<Mutex<DriftMonitor>>>,
     dim: usize,
 }
 
@@ -179,13 +469,40 @@ impl ClusterHandle {
         self.txs.len()
     }
 
-    pub fn plan(&self) -> &ShardPlan {
-        &self.plan
+    /// Snapshot of the current routing table (cheap `Arc` clone).
+    pub fn routes(&self) -> Arc<RouteTable> {
+        self.routes.read().expect("route lock poisoned").clone()
+    }
+
+    /// The current ownership plan.
+    pub fn plan(&self) -> Arc<ShardPlan> {
+        self.routes().plan.clone()
+    }
+
+    /// Current placement epoch.
+    pub fn epoch(&self) -> u64 {
+        self.routes().epoch
     }
 
     /// Embedding dimension of merged results.
     pub fn dim(&self) -> usize {
         self.dim
+    }
+
+    /// True when the drift monitor is armed and reports the placement has
+    /// gone stale (the driver should call [`Cluster::rebalance`]).
+    pub fn rebalance_due(&self) -> bool {
+        match &self.drift {
+            Some(d) => d.lock().expect("drift lock poisoned").regroup_due(),
+            None => false,
+        }
+    }
+
+    /// Current drift degradation ratio (None when no monitor is armed).
+    pub fn drift_degradation(&self) -> Option<f64> {
+        self.drift
+            .as_ref()
+            .map(|d| d.lock().expect("drift lock poisoned").degradation())
     }
 
     /// Scatter-gather one query (blocking).
@@ -197,32 +514,44 @@ impl ClusterHandle {
 
     /// Scatter-gather a batch: all sub-queries are dispatched before any
     /// gather blocks, so shards work each other's queries concurrently.
-    /// Responses come back in submission order.
+    /// Responses come back in submission order. The whole batch routes
+    /// under one routing-table snapshot (one epoch).
     pub fn reduce_many(&self, queries: &[Query]) -> Result<Vec<ClusterResponse>> {
         type PartialRx = mpsc::Receiver<crate::Result<super::ShardPartial>>;
         let t0 = Instant::now();
-        // Scatter phase: route every query's items by owning shard
-        // (ShardPlan::split_items is the one routing rule shared with the
-        // simulator and the fan-out metrics). One reply channel per
-        // (query, shard) sub-query keeps the gather ordered by shard id —
-        // a tagged shared channel would be fewer allocations but would
-        // make the float merge order depend on thread timing.
+        let table = self.routes();
+        // Scatter phase: route every query's items by holding shard. One
+        // reply channel per (query, shard) sub-query keeps the gather
+        // ordered by shard id — a tagged shared channel would be fewer
+        // allocations but would make the float merge order depend on
+        // thread timing.
         let mut pending: Vec<Vec<(u32, PartialRx)>> = Vec::with_capacity(queries.len());
-        for (i, q) in queries.iter().enumerate() {
-            let split = self.plan.split_items(&self.shared.mapping, &q.items);
+        // On any failure, remember the first error but keep draining every
+        // dispatched sub-query so the in-flight counters always return to
+        // their pre-call values — a leaked counter would permanently skew
+        // power-of-two-choices routing away from healthy shards.
+        let mut first_err: Option<anyhow::Error> = None;
+        'scatter: for (i, q) in queries.iter().enumerate() {
+            let split = table.split_query(&self.shared.mapping, &q.items, i as u64, |s| {
+                self.inflight[s as usize].load(Ordering::Relaxed)
+            });
             let mut receivers = Vec::new();
             for (s, items) in split.into_iter().enumerate() {
                 if items.is_empty() {
                     continue;
                 }
                 let (tx, rx) = mpsc::channel();
-                self.txs[s]
-                    .send(ShardMsg::Reduce {
-                        id: i as u64,
-                        items,
-                        reply: tx,
-                    })
-                    .map_err(|_| anyhow!("shard {s} is down"))?;
+                let sent = self.txs[s].send(ShardMsg::Reduce {
+                    id: i as u64,
+                    items,
+                    reply: tx,
+                });
+                if sent.is_err() {
+                    first_err = Some(anyhow!("shard {s} is down"));
+                    pending.push(receivers);
+                    break 'scatter;
+                }
+                self.inflight[s].fetch_add(1, Ordering::Relaxed);
                 receivers.push((s as u32, rx));
             }
             pending.push(receivers);
@@ -235,19 +564,29 @@ impl ClusterHandle {
             let mut reduced = vec![0.0f32; self.dim];
             let mut activations = 0u64;
             for (s, rx) in receivers {
-                let partial = rx
-                    .recv()
-                    .map_err(|_| anyhow!("shard {s} dropped a sub-query"))??;
-                anyhow::ensure!(
-                    partial.partial.len() == self.dim,
-                    "shard {s} returned dim {} != {}",
-                    partial.partial.len(),
-                    self.dim
-                );
-                for (o, &v) in reduced.iter_mut().zip(&partial.partial) {
-                    *o += v;
+                let received = rx.recv();
+                self.inflight[s as usize].fetch_sub(1, Ordering::Relaxed);
+                if first_err.is_some() {
+                    continue; // already failed: just drain the counters
                 }
-                activations += partial.activations;
+                match received {
+                    Err(_) => first_err = Some(anyhow!("shard {s} dropped a sub-query")),
+                    Ok(Err(e)) => first_err = Some(e),
+                    Ok(Ok(partial)) => {
+                        if partial.partial.len() != self.dim {
+                            first_err = Some(anyhow!(
+                                "shard {s} returned dim {} != {}",
+                                partial.partial.len(),
+                                self.dim
+                            ));
+                            continue;
+                        }
+                        for (o, &v) in reduced.iter_mut().zip(&partial.partial) {
+                            *o += v;
+                        }
+                        activations += partial.activations;
+                    }
+                }
             }
             out.push(ClusterResponse {
                 id: i as u64,
@@ -256,6 +595,16 @@ impl ClusterHandle {
                 activations,
                 latency: t0.elapsed(),
             });
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        // Feed the drift monitor (placement staleness signal).
+        if let Some(d) = &self.drift {
+            let mut m = d.lock().expect("drift lock poisoned");
+            for (q, r) in queries.iter().zip(&out) {
+                m.observe(r.activations, q.len());
+            }
         }
         Ok(out)
     }

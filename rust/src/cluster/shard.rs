@@ -1,16 +1,24 @@
 //! One shard of the serving pool: partitioned store + executor thread.
 //!
-//! A shard owns a subset of the logical groups (per the cluster's
-//! [`super::ShardPlan`]) and materialises *only those crossbar tiles*
-//! ([`ShardStore`]) — the embedding table is genuinely partitioned, not
-//! mirrored. Its executor thread mirrors the single-pool server's
-//! threading model: an `mpsc` channel drained through a per-shard dynamic
-//! [`Batcher`], with the circuit cost of every sub-batch simulated on the
-//! shared pool model and accumulated locally. Because sub-queries routed
-//! here only touch owned groups, the shard's `ExecStats` describe exactly
-//! the crossbars it owns.
+//! A shard hosts a subset of the logical groups — the ones it *owns* per
+//! the cluster's [`super::ShardPlan`] plus any *replica tiles* the
+//! cross-shard placement ([`super::ReplicaPlan`]) assigns it — and
+//! materialises only those crossbar tiles ([`ShardStore`]); the embedding
+//! table is genuinely partitioned, not mirrored. Its executor thread
+//! mirrors the single-pool server's threading model: an `mpsc` channel
+//! drained through a per-shard dynamic [`Batcher`], with the circuit cost
+//! of every sub-batch simulated on its *local* replica table (the copies
+//! this shard actually hosts) and accumulated locally. Because
+//! sub-queries routed here only touch hosted groups, the shard's
+//! `ExecStats` describe exactly the crossbars it hosts.
+//!
+//! A rebalance installs a new epoch via [`ShardMsg::Install`]: the shard
+//! drains its queue against the old store, swaps in the new store +
+//! local replica table, and acks — the front-end flips its routing table
+//! only after every shard has acked, so no sub-query routed under the new
+//! epoch can reach a shard still holding the old tiles.
 
-use super::ShardPlan;
+use super::{ReplicaPlan, ShardPlan};
 use crate::allocation::Replication;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::EmbeddingStore;
@@ -101,8 +109,14 @@ impl ShardStore {
     /// Sum the items' rows into `out` (length `dim`). Returns `false` if
     /// any item lives outside this shard's partition — the scatter planner
     /// must never send one, so callers treat that as a routing bug.
+    /// Cold-start ids beyond the catalogue have no trained embedding and
+    /// contribute zero (they still cost an activation on the overflow
+    /// group's crossbar, which the scheduler charges separately).
     pub fn reduce_into(&self, mapping: &Mapping, items: &[EmbeddingId], out: &mut [f32]) -> bool {
         for &e in items {
+            if e as usize >= mapping.num_embeddings() {
+                continue;
+            }
             let slot = mapping.slot_of(e);
             match self.row(slot.group, slot.row) {
                 Some(row) => {
@@ -132,8 +146,10 @@ pub struct ShardPartial {
 #[derive(Debug, Clone)]
 pub struct ShardStatus {
     pub shard: u32,
-    /// Groups this shard owns.
+    /// Groups this shard hosts (owned + replica tiles).
     pub owned_groups: usize,
+    /// Placement epoch this shard is serving (bumped by each rebalance).
+    pub epoch: u64,
     /// Sub-queries served since spawn.
     pub sub_queries: u64,
     /// Embedding lookups served since spawn.
@@ -154,6 +170,14 @@ pub(crate) enum ShardMsg {
     Status {
         reply: mpsc::Sender<ShardStatus>,
     },
+    /// Epoch swap: drain queued work against the old tiles, then replace
+    /// the hosted tile set + local replica table and ack.
+    Install {
+        epoch: u64,
+        store: ShardStore,
+        replication: Replication,
+        reply: mpsc::Sender<u64>,
+    },
     Shutdown,
 }
 
@@ -163,17 +187,19 @@ pub(crate) struct ShardExecutor {
     pub join: Option<std::thread::JoinHandle<()>>,
 }
 
-/// Spawn one shard executor thread.
+/// Spawn one shard executor thread with its hosted tiles and *local*
+/// replica table (the copies this shard actually holds).
 pub(crate) fn spawn_shard(
     shard: u32,
     shared: Arc<PoolShared>,
     store: ShardStore,
+    local_rep: Replication,
     policy: BatchPolicy,
 ) -> Result<ShardExecutor> {
     let (tx, rx) = mpsc::channel::<ShardMsg>();
     let join = std::thread::Builder::new()
         .name(format!("recross-shard-{shard}"))
-        .spawn(move || shard_loop(shard, &shared, &store, &rx, policy))?;
+        .spawn(move || shard_loop(shard, &shared, store, local_rep, &rx, policy))?;
     Ok(ShardExecutor {
         tx,
         join: Some(join),
@@ -185,6 +211,7 @@ struct ShardState {
     scratch: Scratch,
     gscratch: Vec<u32>,
     sim: ExecStats,
+    epoch: u64,
     sub_queries: u64,
     lookups: u64,
     batches: u64,
@@ -195,62 +222,87 @@ type Pending = (u64, Vec<EmbeddingId>, mpsc::Sender<Result<ShardPartial>>);
 fn shard_loop(
     shard: u32,
     shared: &PoolShared,
-    store: &ShardStore,
+    store: ShardStore,
+    local_rep: Replication,
     rx: &mpsc::Receiver<ShardMsg>,
     policy: BatchPolicy,
 ) {
     let mut batcher: Batcher<Pending> = Batcher::new(policy);
-    // One scheduler for the thread's lifetime: its replica table and
-    // per-row cost table are pure functions of the shared pool state.
-    let sched = Scheduler::new(
-        &shared.mapping,
-        &shared.replication,
-        &shared.model,
-        shared.dynamic_switch,
-    );
     let mut state = ShardState {
         scratch: Scratch::default(),
         gscratch: Vec::new(),
         sim: ExecStats::default(),
+        epoch: 0,
         sub_queries: 0,
         lookups: 0,
         batches: 0,
     };
-    loop {
-        let msg = match batcher.deadline_in(Instant::now()) {
-            None => match rx.recv() {
-                Ok(m) => Some(m),
-                Err(_) => return, // all senders gone
-            },
-            Some(d) => match rx.recv_timeout(d) {
-                Ok(m) => Some(m),
-                Err(mpsc::RecvTimeoutError::Timeout) => None,
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
-            },
-        };
-        match msg {
-            Some(ShardMsg::Shutdown) => return,
-            Some(ShardMsg::Reduce { id, items, reply }) => {
-                batcher.push((id, items, reply));
-            }
-            Some(ShardMsg::Status { reply }) => {
-                // Flush queued work first so the snapshot is consistent.
-                while !batcher.is_empty() {
-                    serve_shard_batch(&sched, shared, store, batcher.take_batch(), &mut state);
+    // Outer loop = one iteration per epoch: the scheduler (replica table
+    // + per-row cost table) is a pure function of the local replica plan,
+    // which only changes on Install — build it once per epoch, not per
+    // sub-batch.
+    let mut current = Some((store, local_rep));
+    'epoch: while let Some((store, local_rep)) = current.take() {
+        let sched = Scheduler::new(
+            &shared.mapping,
+            &local_rep,
+            &shared.model,
+            shared.dynamic_switch,
+        );
+        loop {
+            let msg = match batcher.deadline_in(Instant::now()) {
+                None => match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => return, // all senders gone
+                },
+                Some(d) => match rx.recv_timeout(d) {
+                    Ok(m) => Some(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                },
+            };
+            match msg {
+                Some(ShardMsg::Shutdown) => return,
+                Some(ShardMsg::Reduce { id, items, reply }) => {
+                    batcher.push((id, items, reply));
                 }
-                let _ = reply.send(ShardStatus {
-                    shard,
-                    owned_groups: store.num_tiles(),
-                    sub_queries: state.sub_queries,
-                    lookups: state.lookups,
-                    batches: state.batches,
-                    sim: state.sim.clone(),
-                });
+                Some(ShardMsg::Status { reply }) => {
+                    // Flush queued work first so the snapshot is consistent.
+                    while !batcher.is_empty() {
+                        serve_shard_batch(&sched, shared, &store, batcher.take_batch(), &mut state);
+                    }
+                    let _ = reply.send(ShardStatus {
+                        shard,
+                        owned_groups: store.num_tiles(),
+                        epoch: state.epoch,
+                        sub_queries: state.sub_queries,
+                        lookups: state.lookups,
+                        batches: state.batches,
+                        sim: state.sim.clone(),
+                    });
+                }
+                Some(ShardMsg::Install {
+                    epoch,
+                    store: new_store,
+                    replication,
+                    reply,
+                }) => {
+                    // Drain everything routed under the old epoch against
+                    // the old tiles, then swap — the epoch flip is atomic
+                    // from the executor's point of view.
+                    while !batcher.is_empty() {
+                        serve_shard_batch(&sched, shared, &store, batcher.take_batch(), &mut state);
+                    }
+                    state.epoch = epoch;
+                    let _ = reply.send(epoch);
+                    current = Some((new_store, replication));
+                    continue 'epoch;
+                }
+                None => {}
             }
-            None => {}
-        }
-        while batcher.ready(Instant::now()) {
-            serve_shard_batch(&sched, shared, store, batcher.take_batch(), &mut state);
+            while batcher.ready(Instant::now()) {
+                serve_shard_batch(&sched, shared, &store, batcher.take_batch(), &mut state);
+            }
         }
     }
 }
@@ -273,9 +325,9 @@ fn serve_shard_batch(
         replies.push((id, reply));
     }
 
-    // Circuit cost of the sub-batch on this shard's crossbars. The global
-    // mapping/replication are shared, but sub-queries only touch owned
-    // groups, so only this shard's replicas see traffic.
+    // Circuit cost of the sub-batch on this shard's crossbars, scheduled
+    // over the *local* replica table — only the copies this shard hosts
+    // can absorb its traffic.
     let sim = sched.run_batch(&queries, &mut state.scratch);
     state.sim.accumulate(&sim);
     state.batches += 1;
@@ -301,10 +353,23 @@ fn serve_shard_batch(
     }
 }
 
-/// Build every shard's store from the full table per a plan.
+/// Build every shard's store from the full table per an ownership plan
+/// (no cross-shard replicas).
 pub fn partition_store(store: &EmbeddingStore, plan: &ShardPlan) -> Vec<ShardStore> {
     (0..plan.shards as u32)
         .map(|s| ShardStore::from_store(store, &plan.groups_of(s)))
+        .collect()
+}
+
+/// Build every shard's store from the full table per a replica placement:
+/// each shard materialises tiles for every group it hosts, owned or
+/// replicated.
+pub fn partition_store_with_replicas(
+    store: &EmbeddingStore,
+    replicas: &ReplicaPlan,
+) -> Vec<ShardStore> {
+    (0..replicas.shards as u32)
+        .map(|s| ShardStore::from_store(store, &replicas.groups_hosted_by(s)))
         .collect()
 }
 

@@ -80,6 +80,21 @@ impl DriftMonitor {
         self.observed_queries >= self.warmup && self.degradation() >= self.threshold
     }
 
+    /// Queries observed since the last (re)baseline.
+    pub fn observed_queries(&self) -> u64 {
+        self.observed_queries
+    }
+
+    /// The configured degradation threshold (ratio > 1).
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+
+    /// The baseline activations-per-lookup the monitor compares against.
+    pub fn baseline(&self) -> f64 {
+        self.baseline
+    }
+
     /// Reset after a regroup with the new baseline.
     pub fn rebaseline(&mut self, baseline: f64) {
         assert!(baseline > 0.0);

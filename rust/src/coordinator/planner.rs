@@ -42,13 +42,16 @@ impl<'a> Planner<'a> {
         }
     }
 
-    /// Plan one query into passes.
+    /// Plan one query into passes. Cold-start ids beyond the catalogue
+    /// have no stored row and are skipped (their reduction contribution
+    /// is the zero vector of an untrained embedding).
     pub fn plan(&self, query: &Query) -> Vec<ReducePass> {
         let rows = self.store.rows();
         // (group, row) pairs, grouped.
         let mut slots: Vec<(u32, u16)> = query
             .items
             .iter()
+            .filter(|&&e| (e as usize) < self.mapping.num_embeddings())
             .map(|&e| {
                 let s = self.mapping.slot_of(e);
                 (s.group, s.row)

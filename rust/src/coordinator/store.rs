@@ -88,10 +88,16 @@ impl EmbeddingStore {
     }
 
     /// Reference reduction: plain sum of the queried embeddings from the
-    /// master table (bypasses the crossbar layout entirely).
+    /// master table (bypasses the crossbar layout entirely). Cold-start
+    /// ids beyond the catalogue contribute zero, matching the serving
+    /// paths' untrained-embedding semantics.
     pub fn reduce_reference(&self, items: &[EmbeddingId]) -> Vec<f32> {
+        let n = self.table.len() / self.dim.max(1);
         let mut out = vec![0.0f32; self.dim];
         for &e in items {
+            if (e as usize) >= n {
+                continue;
+            }
             for (o, &v) in out.iter_mut().zip(self.embedding(e)) {
                 *o += v;
             }

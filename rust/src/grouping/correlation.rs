@@ -79,7 +79,7 @@ impl Mapper for CorrelationMapper {
         // above creates one group per isolated seed; merge them so cold
         // singletons don't each burn a whole crossbar.
         let groups = compact_partial_groups(groups, group_size);
-        Mapping::from_groups(groups, group_size, n)
+        Mapping::from_groups_complete(groups, group_size, n)
     }
 }
 
@@ -195,7 +195,7 @@ mod tests {
         }
         let g = build(qs, 40);
         let m = CorrelationMapper.map(&g, 8);
-        // from_groups() already asserts coverage + uniqueness; check sizes.
+        // from_groups_complete() asserts coverage + uniqueness; check sizes.
         assert!(m.groups.iter().all(|grp| grp.len() <= 8));
         let placed: usize = m.groups.iter().map(Vec::len).sum();
         assert_eq!(placed, 40);

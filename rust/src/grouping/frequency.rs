@@ -26,7 +26,7 @@ impl Mapper for FrequencyMapper {
         for chunk in ids.chunks(group_size) {
             groups.push(chunk.to_vec());
         }
-        Mapping::from_groups(groups, group_size, n)
+        Mapping::from_groups_complete(groups, group_size, n)
     }
 }
 

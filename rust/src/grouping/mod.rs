@@ -43,11 +43,22 @@ pub struct Mapping {
     pub groups: Vec<Vec<EmbeddingId>>,
     /// Slot of every embedding (indexed by embedding id).
     pub slot: Vec<Slot>,
+    /// Group that absorbs cold-start lookups: ids above the catalogue size
+    /// route here instead of indexing `slot` out of bounds.
+    overflow_group: u32,
 }
 
 impl Mapping {
-    /// Build the reverse index from a group list (validates coverage).
+    /// Build the reverse index from a group list.
+    ///
+    /// Embeddings in `0..n` that no group claims (ids absent from the
+    /// grouping history — the cold-start case) are packed into *overflow
+    /// groups* appended after the listed ones, so every in-catalogue id
+    /// has a real `(group, row)` slot and the numeric reduction over them
+    /// stays exact. Ids `>= n` are routed to [`Mapping::overflow_group`]
+    /// by [`Mapping::slot_of`].
     pub fn from_groups(groups: Vec<Vec<EmbeddingId>>, group_size: usize, n: usize) -> Self {
+        let mut groups = groups;
         let mut slot = vec![
             Slot {
                 group: u32::MAX,
@@ -70,15 +81,64 @@ impl Mapping {
                 };
             }
         }
-        assert!(
-            slot.iter().all(|s| s.group != u32::MAX),
-            "not all embeddings placed"
-        );
+        // Cold-start ids: pack every unplaced embedding into overflow
+        // groups at the end instead of asserting (lookup histories do not
+        // cover the whole catalogue).
+        let unplaced: Vec<EmbeddingId> = slot
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.group == u32::MAX)
+            .map(|(e, _)| e as EmbeddingId)
+            .collect();
+        for chunk in unplaced.chunks(group_size.max(1)) {
+            let g = groups.len() as u32;
+            for (r, &e) in chunk.iter().enumerate() {
+                slot[e as usize] = Slot {
+                    group: g,
+                    row: r as u16,
+                };
+            }
+            groups.push(chunk.to_vec());
+        }
+        let overflow_group = groups.len().saturating_sub(1) as u32;
         Self {
             group_size,
             groups,
             slot,
+            overflow_group,
         }
+    }
+
+    /// As [`Mapping::from_groups`], but asserts the listed groups already
+    /// cover every embedding — no overflow groups may be needed. The
+    /// mapping *strategies* use this: a mapper that drops ids has a bug,
+    /// and silently packing the dropped ids into locality-free overflow
+    /// groups would hide it. Only genuine cold-start construction (ids
+    /// absent from the grouping history) goes through the lenient
+    /// [`Mapping::from_groups`].
+    pub fn from_groups_complete(
+        groups: Vec<Vec<EmbeddingId>>,
+        group_size: usize,
+        n: usize,
+    ) -> Self {
+        let listed = groups.len();
+        let m = Self::from_groups(groups, group_size, n);
+        assert_eq!(
+            m.num_groups(),
+            listed,
+            "mapper left embeddings unplaced (overflow groups appended)"
+        );
+        m
+    }
+
+    /// The group that absorbs out-of-catalogue lookups. This is the last
+    /// group — a dedicated overflow group when the grouping history left
+    /// ids unplaced, otherwise it *aliases the last real group*: a cold
+    /// miss is charged one activation on that crossbar (cost model only —
+    /// every numeric path treats out-of-catalogue ids as zero
+    /// contribution, so no real embedding's data is ever misread).
+    pub fn overflow_group(&self) -> u32 {
+        self.overflow_group
     }
 
     /// Number of groups (== logical crossbars before replication).
@@ -91,10 +151,19 @@ impl Mapping {
         self.slot.len()
     }
 
-    /// Slot of an embedding.
+    /// Slot of an embedding. Ids beyond the catalogue (never seen by the
+    /// offline phase) route to the overflow group's row 0 instead of
+    /// panicking — the scheduler then charges them one activation on that
+    /// crossbar, which is the cost model for a cold-start miss.
     #[inline]
     pub fn slot_of(&self, e: EmbeddingId) -> Slot {
-        self.slot[e as usize]
+        match self.slot.get(e as usize) {
+            Some(s) => *s,
+            None => Slot {
+                group: self.overflow_group,
+                row: 0,
+            },
+        }
     }
 
     /// Distinct groups touched by a query — the crossbar *activations* this
@@ -102,7 +171,7 @@ impl Mapping {
     /// crossbar.
     pub fn groups_touched(&self, items: &[EmbeddingId], scratch: &mut Vec<u32>) -> usize {
         scratch.clear();
-        scratch.extend(items.iter().map(|&e| self.slot[e as usize].group));
+        scratch.extend(items.iter().map(|&e| self.slot_of(e).group));
         scratch.sort_unstable();
         scratch.dedup();
         scratch.len()
@@ -249,9 +318,31 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "not all embeddings placed")]
-    fn missing_placement_panics() {
-        Mapping::from_groups(vec![vec![0]], 2, 2);
+    fn unplaced_ids_routed_to_overflow_group() {
+        // Regression: ids absent from the grouping history used to trip
+        // the "not all embeddings placed" assert; they must land in an
+        // overflow group with a real row instead.
+        let m = Mapping::from_groups(vec![vec![0]], 2, 4);
+        assert_eq!(m.num_groups(), 3); // [0], [1,2], [3]
+        assert_eq!(m.slot_of(1), Slot { group: 1, row: 0 });
+        assert_eq!(m.slot_of(2), Slot { group: 1, row: 1 });
+        assert_eq!(m.slot_of(3), Slot { group: 2, row: 0 });
+        assert_eq!(m.overflow_group(), 2);
+        // Every group respects the capacity bound.
+        assert!(m.groups.iter().all(|g| g.len() <= 2));
+    }
+
+    #[test]
+    fn out_of_catalogue_ids_routed_to_overflow_group() {
+        // Regression: slot_of used to index out of bounds for cold-start
+        // ids the offline phase never saw.
+        let m = Mapping::from_groups(vec![vec![0, 1], vec![2, 3]], 2, 4);
+        let s = m.slot_of(1_000_000);
+        assert_eq!(s.group, m.overflow_group());
+        assert_eq!(s.row, 0);
+        let mut scratch = Vec::new();
+        // groups_touched must also survive unseen ids.
+        assert_eq!(m.groups_touched(&[0, 1_000_000], &mut scratch), 2);
     }
 
     #[test]

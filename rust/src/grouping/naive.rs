@@ -32,7 +32,7 @@ impl Mapper for NaiveMapper {
         if !current.is_empty() {
             groups.push(current);
         }
-        Mapping::from_groups(groups, group_size, n)
+        Mapping::from_groups_complete(groups, group_size, n)
     }
 }
 

@@ -42,6 +42,14 @@ fn main() {
         .opt("vnodes", "128", "virtual nodes per shard on the hash ring")
         .opt("partition", "locality", "group->shard partitioner: locality|hash")
         .opt("slack", "0.10", "locality partitioner balance slack")
+        .flag(
+            "replica-routing",
+            "spread hot-group replicas across shards; route by power-of-two-choices",
+        )
+        .flag(
+            "rebalance",
+            "arm the drift monitor and remap placement online (epoch swaps)",
+        )
         .flag("verbose", "extra logging");
 
     let args = match spec.parse(&argv) {
@@ -313,10 +321,21 @@ fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
 /// threads, drive the held-out eval trace through the scatter-gather
 /// front-end, verify the merged reductions against the single-pool
 /// reference, and print the per-shard load / fan-out report.
+///
+/// With `--replica-routing` the pool spreads hot-group replicas across
+/// shards and routes each activation by power-of-two-choices; the report
+/// then compares max-shard load and simulated completion against the
+/// ownership-pinned placement on the same trace. With `--rebalance` the
+/// drift monitor is armed and a stale placement triggers epoch-versioned
+/// remaps between serving waves.
 fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
-    use recross::cluster::{report as cluster_report, Cluster, ClusterConfig, PartitionPolicy};
+    use recross::allocation::group_frequencies;
+    use recross::cluster::{
+        report as cluster_report, simulate_with_replicas, Cluster, ClusterConfig,
+        PartitionPolicy, ReplicaPlan, RoutePolicy,
+    };
     use recross::metrics::Histogram;
-    use recross::workload::Query;
+    use recross::workload::{Query, Trace};
 
     let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
     let n_requests = args.get_positive("requests").map_err(anyhow::Error::msg)?;
@@ -329,6 +348,8 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         "hash" => PartitionPolicy::Hash,
         other => anyhow::bail!("unknown partition policy {other:?} (try locality|hash)"),
     };
+    let replica_routing = args.flag("replica-routing");
+    let rebalance = args.flag("rebalance");
 
     let mut cfg = base_config(args)?;
     workload_overrides(&mut cfg, args)?;
@@ -344,12 +365,15 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
             ..recross::coordinator::BatchPolicy::default()
         },
         slack,
+        replica_routing,
+        rebalance,
     };
     println!(
-        "starting sharded pool: dataset={} scheme={} shards={shards} partition={}",
+        "starting sharded pool: dataset={} scheme={} shards={shards} partition={} routing={}",
         cfg.workload.dataset,
         scheme.name(),
-        args.get("partition")
+        args.get("partition"),
+        if replica_routing { "p2c-replicas" } else { "pinned" },
     );
     let bundle = Cluster::build(&cfg, scheme, scale, &ccfg)?;
     let handle = bundle.cluster.handle();
@@ -360,14 +384,99 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         bundle.cluster.plan().group_counts()
     );
 
-    // Drive the held-out eval queries through the front-end in one
-    // scatter wave: reduce_many dispatches every sub-query before any
+    // Apples-to-apples placement comparison on the deterministic
+    // simulator: ownership-pinned vs cross-shard replica routing over the
+    // same (Zipf-skewed) eval trace.
+    if replica_routing {
+        let shared = bundle.cluster.shared();
+        let table = bundle.cluster.routes();
+        let freqs = group_frequencies(&shared.mapping, &bundle.history);
+        println!("{}", cluster_report::placement_summary(&table.replicas, &freqs));
+        let pinned_plan = ReplicaPlan::pinned(&table.plan, &shared.replication);
+        let pinned = simulate_with_replicas(
+            shared,
+            &table.plan,
+            &pinned_plan,
+            &bundle.eval,
+            cfg.scheme.batch_size,
+            RoutePolicy::Pinned,
+        );
+        let routed = simulate_with_replicas(
+            shared,
+            &table.plan,
+            &table.replicas,
+            &bundle.eval,
+            cfg.scheme.batch_size,
+            RoutePolicy::PowerOfTwo,
+        );
+        let delta = 100.0 * (1.0 - routed.max_shard_load() as f64 / pinned.max_shard_load().max(1) as f64);
+        println!(
+            "pinned : max-shard load {:>8}, completion {}",
+            pinned.max_shard_load(),
+            recross::util::fmt_ns(pinned.stats.completion_ns)
+        );
+        println!(
+            "routed : max-shard load {:>8} ({delta:+.1}% vs pinned), completion {}",
+            routed.max_shard_load(),
+            recross::util::fmt_ns(routed.stats.completion_ns)
+        );
+    }
+
+    // Drive the held-out eval queries through the front-end in scatter
+    // waves: reduce_many dispatches every sub-query of a wave before any
     // gather blocks, which is what lets the per-shard batchers fill
-    // instead of idling out their max_wait window.
-    let queries: Vec<Query> = bundle.eval.queries.iter().take(n_requests).cloned().collect();
+    // instead of idling out their max_wait window. Serving in waves (not
+    // one giant batch) gives the drift monitor batch boundaries at which
+    // a rebalance can swap epochs.
+    let mut queries: Vec<Query> =
+        bundle.eval.queries.iter().take(n_requests).cloned().collect();
     anyhow::ensure!(!queries.is_empty(), "eval trace is empty");
+    if rebalance {
+        // The eval trace matches the distribution the placement was
+        // optimised for, so it can never look stale. Follow it with a
+        // *drifted* phase — same catalogue, re-seeded co-purchase
+        // structure (new communities, shifted popularity) — which is the
+        // traffic shape the monitor exists to catch.
+        use recross::workload::{DatasetSpec, Generator};
+        let spec = DatasetSpec::by_name(&cfg.workload.dataset)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.workload.dataset))?
+            .scaled(scale);
+        let drifted_gen = Generator::new(&spec, cfg.workload.seed.wrapping_add(9_999));
+        let drifted = drifted_gen.trace(n_requests, cfg.workload.seed.wrapping_add(10_000));
+        println!(
+            "drift phase: appending {} re-seeded queries (new co-purchase structure)",
+            drifted.queries.len()
+        );
+        queries.extend(drifted.queries);
+    }
+    let wave = (max_batch * bundle.cluster.num_shards()).max(64);
+    let mut responses = Vec::with_capacity(queries.len());
+    // Traffic window since the last epoch swap — the sample the remap's
+    // frequencies/partition are recomputed from. A single wave (64-ish
+    // queries) is far too sparse for thousands of groups, so accumulate
+    // across waves and reset only after a swap.
+    let mut recent: Vec<Query> = Vec::new();
+    let mut swaps = 0u64;
     let t0 = std::time::Instant::now();
-    let responses = handle.reduce_many(&queries)?;
+    for chunk in queries.chunks(wave) {
+        responses.extend(handle.reduce_many(chunk)?);
+        if rebalance {
+            recent.extend_from_slice(chunk);
+            if handle.rebalance_due() {
+                let degradation = handle.drift_degradation().unwrap_or(1.0);
+                let window = Trace {
+                    num_embeddings: bundle.eval.num_embeddings,
+                    queries: std::mem::take(&mut recent),
+                };
+                let epoch = bundle.cluster.rebalance(&window)?;
+                swaps += 1;
+                println!(
+                    "drift detected (degradation {degradation:.2}, {} recent queries) -> rebalanced to epoch {epoch}",
+                    window.queries.len()
+                );
+            }
+        }
+    }
     let wall = t0.elapsed();
 
     // Exactness check against the single-pool reference reduction.
@@ -391,6 +500,9 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         "\n{}",
         cluster_report::render(&statuses, &fanout, &merged, wall, responses.len())
     );
+    if rebalance {
+        println!("epoch swaps: {swaps} (final epoch {})", bundle.cluster.epoch());
+    }
     println!("single-pool reference check: max |err| = {max_err:.2e}");
     anyhow::ensure!(
         max_err < 1e-4,

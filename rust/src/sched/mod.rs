@@ -113,6 +113,25 @@ impl ExecStats {
     }
 }
 
+/// First least-loaded slot in a busy-until table (ties break toward the
+/// lower index, keeping replica/channel selection fully deterministic).
+/// This is the same "join the shortest queue" rule the cluster front-end
+/// applies one level up when it routes sub-queries across replica-holding
+/// shards.
+#[inline]
+fn least_loaded(busy: &[f64]) -> (usize, f64) {
+    debug_assert!(!busy.is_empty(), "least_loaded over an empty slot table");
+    let mut idx = 0;
+    let mut best = busy[0];
+    for (i, &b) in busy.iter().enumerate().skip(1) {
+        if b < best {
+            best = b;
+            idx = i;
+        }
+    }
+    (idx, best)
+}
+
 /// Scheduler over a fixed mapping + replication plan.
 #[derive(Debug)]
 pub struct Scheduler<'a> {
@@ -201,22 +220,12 @@ impl<'a> Scheduler<'a> {
                 // least-loaded replica of this group
                 let base = self.replica_base[group as usize] as usize;
                 let copies = self.replication.copies_of(group) as usize;
-                let (slot, &start_busy) = scratch.busy[base..base + copies]
-                    .iter()
-                    .enumerate()
-                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap();
-                let start = start_busy;
+                let (slot, start) = least_loaded(&scratch.busy[base..base + copies]);
                 let finish = start + cost.latency_ns;
                 scratch.busy[base + slot] = finish;
 
                 // Result transfer on the least-busy global-bus channel.
-                let (chan, &chan_busy) = scratch
-                    .bus
-                    .iter()
-                    .enumerate()
-                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap();
+                let (chan, chan_busy) = least_loaded(&scratch.bus);
                 let t_start = finish.max(chan_busy);
                 let t_finish = t_start + cost.bus_flits as f64 * flit_ns;
                 scratch.bus[chan] = t_finish;
@@ -273,20 +282,11 @@ impl<'a> Scheduler<'a> {
                 let slot = self.mapping.slot_of(e);
                 let base = self.replica_base[slot.group as usize] as usize;
                 let copies = self.replication.copies_of(slot.group) as usize;
-                let (rep, &start_busy) = scratch.busy[base..base + copies]
-                    .iter()
-                    .enumerate()
-                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap();
+                let (rep, start_busy) = least_loaded(&scratch.busy[base..base + copies]);
                 let finish = start_busy + lookup.latency_ns;
                 scratch.busy[base + rep] = finish;
                 // Every looked-up row ships over the global bus.
-                let (chan, &chan_busy) = scratch
-                    .bus
-                    .iter()
-                    .enumerate()
-                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap();
+                let (chan, chan_busy) = least_loaded(&scratch.bus);
                 let t_start = finish.max(chan_busy);
                 let t_finish = t_start + lookup.bus_flits as f64 * flit_ns;
                 scratch.bus[chan] = t_finish;
@@ -312,7 +312,14 @@ impl<'a> Scheduler<'a> {
     }
 
     /// Decompose a query into `(group, rows)` runs using scratch buffers.
+    ///
+    /// Rows are clamped to `group_size`: distinct cold-start ids beyond
+    /// the catalogue all collapse onto the overflow group's row 0
+    /// ([`Mapping::slot_of`]), so a run can nominally exceed the crossbar
+    /// height even though the hardware can never activate more wordlines
+    /// than it has.
     fn query_runs(&self, q: &Query, scratch: &mut Scratch) {
+        let max_rows = self.mapping.group_size.max(1) as u32;
         scratch.groups.clear();
         scratch
             .groups
@@ -327,7 +334,7 @@ impl<'a> Scheduler<'a> {
                 rows += 1;
                 i += 1;
             }
-            scratch.runs.push((g, rows));
+            scratch.runs.push((g, rows.min(max_rows)));
         }
     }
 }
@@ -503,6 +510,23 @@ mod tests {
         assert_eq!(a.stall_ns, 5.0);
         assert_eq!(a.queries, 3);
         assert_eq!(a.lookups, 5);
+    }
+
+    #[test]
+    fn cold_start_flood_does_not_panic() {
+        // Regression: distinct out-of-catalogue ids all collapse onto the
+        // overflow group's row 0; more of them than group_size used to
+        // index cost_by_rows out of bounds and kill the executor thread.
+        let m = model();
+        let map = mapping_2x2(); // group_size 2
+        let rep = Replication::identity(2, 4);
+        let s = Scheduler::new(&map, &rep, &m, true);
+        let mut scratch = Scratch::default();
+        let cold: Vec<u32> = (100..110).collect(); // 10 ids, all unseen
+        let stats = s.run_batch(&[Query::new(cold)], &mut scratch);
+        assert_eq!(stats.activations, 1); // one (overflow-group) activation
+        assert!(stats.rows_activated <= map.group_size as u64);
+        assert!(stats.completion_ns > 0.0);
     }
 
     #[test]
