@@ -38,6 +38,11 @@ pub struct TuneResult {
 /// `min_gain` is the marginal-speedup threshold: once an extra budget step
 /// improves completion time by less than this factor, the previous step
 /// is chosen. Typical value 1.05 (5%).
+///
+/// An empty candidate list is a caller configuration error, reported as a
+/// typed error rather than a panic — an auto-derived sweep (e.g. filtered
+/// against an area budget) can legitimately come up empty and deserves a
+/// recoverable diagnosis, not a crashed tuner.
 pub fn tune_dup_ratio(
     graph: &CoGraph,
     history: &Trace,
@@ -45,8 +50,11 @@ pub fn tune_dup_ratio(
     cfg: &Config,
     ratios: &[f64],
     min_gain: f64,
-) -> TuneResult {
-    assert!(!ratios.is_empty(), "empty ratio sweep");
+) -> crate::Result<TuneResult> {
+    anyhow::ensure!(
+        !ratios.is_empty(),
+        "dup-ratio sweep has no candidates; pass at least one ratio (e.g. 0.0)"
+    );
     assert!(
         ratios.windows(2).all(|w| w[0] < w[1]),
         "ratios must be strictly ascending"
@@ -70,7 +78,7 @@ pub fn tune_dup_ratio(
     }
 
     // Knee: first point whose successor improves by < min_gain.
-    let mut chosen = sweep.last().unwrap().dup_ratio;
+    let mut chosen = sweep.last().expect("sweep is non-empty").dup_ratio;
     for w in sweep.windows(2) {
         let marginal = w[0].completion_ns / w[1].completion_ns;
         if marginal < min_gain {
@@ -78,7 +86,7 @@ pub fn tune_dup_ratio(
             break;
         }
     }
-    TuneResult { chosen, sweep }
+    Ok(TuneResult { chosen, sweep })
 }
 
 #[cfg(test)]
@@ -97,7 +105,7 @@ mod tests {
     fn picks_a_swept_ratio_at_the_knee() {
         let (graph, history, eval, cfg) = setup();
         let ratios = [0.0, 0.05, 0.10, 0.20];
-        let r = tune_dup_ratio(&graph, &history, &eval, &cfg, &ratios, 1.05);
+        let r = tune_dup_ratio(&graph, &history, &eval, &cfg, &ratios, 1.05).unwrap();
         assert!(ratios.contains(&r.chosen));
         assert_eq!(r.sweep.len(), 4);
         // Completion must be non-increasing in budget.
@@ -115,7 +123,7 @@ mod tests {
     #[test]
     fn duplication_actually_helps_before_knee() {
         let (graph, history, eval, cfg) = setup();
-        let r = tune_dup_ratio(&graph, &history, &eval, &cfg, &[0.0, 0.10], 1.0);
+        let r = tune_dup_ratio(&graph, &history, &eval, &cfg, &[0.0, 0.10], 1.0).unwrap();
         assert!(
             r.sweep[1].speedup > 1.0,
             "dup-10% should beat dup-0%: {:?}",
@@ -127,6 +135,19 @@ mod tests {
     #[should_panic(expected = "ascending")]
     fn rejects_unsorted_ratios() {
         let (graph, history, eval, cfg) = setup();
-        tune_dup_ratio(&graph, &history, &eval, &cfg, &[0.1, 0.05], 1.05);
+        let _ = tune_dup_ratio(&graph, &history, &eval, &cfg, &[0.1, 0.05], 1.05);
+    }
+
+    #[test]
+    fn empty_sweep_is_an_error_not_a_panic() {
+        // Regression: this used to reach `sweep.last().unwrap()` (a
+        // panic) instead of reporting a usable configuration error.
+        let (graph, history, eval, cfg) = setup();
+        let err = tune_dup_ratio(&graph, &history, &eval, &cfg, &[], 1.05)
+            .expect_err("empty sweep must be rejected");
+        assert!(
+            err.to_string().contains("no candidates"),
+            "unhelpful error: {err}"
+        );
     }
 }

@@ -27,10 +27,11 @@ use crate::sched::{ExecStats, Scheduler, Scratch};
 use crate::util::FxHashMap;
 use crate::workload::{EmbeddingId, Query};
 use crate::xbar::CrossbarModel;
+use crate::util::{Clock, WallClock};
 use crate::Result;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
 /// Immutable pool state shared (via `Arc`) by every shard executor: the
 /// global mapping/replication/cost model the offline phase produced.
@@ -227,6 +228,7 @@ fn shard_loop(
     rx: &mpsc::Receiver<ShardMsg>,
     policy: BatchPolicy,
 ) {
+    let clock = WallClock::new();
     let mut batcher: Batcher<Pending> = Batcher::new(policy);
     let mut state = ShardState {
         scratch: Scratch::default(),
@@ -250,12 +252,12 @@ fn shard_loop(
             shared.dynamic_switch,
         );
         loop {
-            let msg = match batcher.deadline_in(Instant::now()) {
+            let msg = match batcher.deadline_in(clock.now_ns()) {
                 None => match rx.recv() {
                     Ok(m) => Some(m),
                     Err(_) => return, // all senders gone
                 },
-                Some(d) => match rx.recv_timeout(d) {
+                Some(d) => match rx.recv_timeout(Duration::from_nanos(d)) {
                     Ok(m) => Some(m),
                     Err(mpsc::RecvTimeoutError::Timeout) => None,
                     Err(mpsc::RecvTimeoutError::Disconnected) => return,
@@ -264,7 +266,7 @@ fn shard_loop(
             match msg {
                 Some(ShardMsg::Shutdown) => return,
                 Some(ShardMsg::Reduce { id, items, reply }) => {
-                    batcher.push((id, items, reply));
+                    batcher.push_at((id, items, reply), clock.now_ns());
                 }
                 Some(ShardMsg::Status { reply }) => {
                     // Flush queued work first so the snapshot is consistent.
@@ -300,7 +302,7 @@ fn shard_loop(
                 }
                 None => {}
             }
-            while batcher.ready(Instant::now()) {
+            while batcher.ready(clock.now_ns()) {
                 serve_shard_batch(&sched, shared, &store, batcher.take_batch(), &mut state);
             }
         }

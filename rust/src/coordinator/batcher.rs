@@ -4,9 +4,16 @@
 //! a batch closes when it reaches `max_batch` requests OR the oldest
 //! queued request has waited `max_wait`. The serving loop then pads the
 //! batch up to the nearest compiled batch size.
+//!
+//! Time is an **injected** `u64` nanosecond timeline
+//! ([`crate::util::Clock`]): the live executor threads pass a
+//! [`crate::util::WallClock`]'s readings, while tests and the open-loop
+//! simulated-time driver ([`crate::loadgen`]) pass virtual timestamps —
+//! the close-on-deadline policy is deterministic and unit-testable, and
+//! the exact same code decides batch boundaries in both worlds.
 
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Batching policy knobs.
 #[derive(Debug, Clone)]
@@ -15,6 +22,13 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// ... or when the oldest request has waited this long.
     pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    /// The wait deadline on the nanosecond timeline.
+    pub fn max_wait_ns(&self) -> u64 {
+        self.max_wait.as_nanos().min(u64::MAX as u128) as u64
+    }
 }
 
 impl Default for BatchPolicy {
@@ -28,29 +42,32 @@ impl Default for BatchPolicy {
 
 /// An accumulating batch former. Generic over the request type so it is
 /// testable without the serving stack.
+///
+/// Callers supply every timestamp explicitly (from whatever
+/// [`crate::util::Clock`] they injected) and must keep them monotone
+/// non-decreasing across pushes and queries.
 #[derive(Debug)]
 pub struct Batcher<T> {
     policy: BatchPolicy,
-    queue: VecDeque<(T, Instant)>,
+    max_wait_ns: u64,
+    queue: VecDeque<(T, u64)>,
 }
 
 impl<T> Batcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch > 0);
+        let max_wait_ns = policy.max_wait_ns();
         Self {
             policy,
+            max_wait_ns,
             queue: VecDeque::new(),
         }
     }
 
-    /// Enqueue one request (records arrival time).
-    pub fn push(&mut self, req: T) {
-        self.queue.push_back((req, Instant::now()));
-    }
-
-    /// Enqueue with an explicit arrival instant (deterministic tests).
-    pub fn push_at(&mut self, req: T, at: Instant) {
-        self.queue.push_back((req, at));
+    /// Enqueue one request with its arrival time (ns on the injected
+    /// clock's timeline).
+    pub fn push_at(&mut self, req: T, now_ns: u64) {
+        self.queue.push_back((req, now_ns));
     }
 
     /// Queued requests.
@@ -62,24 +79,29 @@ impl<T> Batcher<T> {
         self.queue.is_empty()
     }
 
-    /// Should a batch close *now*?
-    pub fn ready(&self, now: Instant) -> bool {
-        if self.queue.len() >= self.policy.max_batch {
-            return true;
-        }
-        match self.queue.front() {
-            Some((_, t0)) => now.duration_since(*t0) >= self.policy.max_wait,
-            None => false,
+    /// Earliest time at which the *current* queue contents satisfy the
+    /// close policy: the size trigger fires at the arrival of the
+    /// `max_batch`-th request, the wait trigger at `oldest + max_wait` —
+    /// whichever comes first. `None` when empty. (New pushes can only
+    /// pull this earlier, never later.)
+    pub fn ready_at(&self) -> Option<u64> {
+        let &(_, t0) = self.queue.front()?;
+        let deadline = t0.saturating_add(self.max_wait_ns);
+        match self.queue.get(self.policy.max_batch - 1) {
+            Some(&(_, t_full)) => Some(deadline.min(t_full)),
+            None => Some(deadline),
         }
     }
 
-    /// Time until the wait deadline would fire (None when empty).
-    pub fn deadline_in(&self, now: Instant) -> Option<Duration> {
-        self.queue.front().map(|(_, t0)| {
-            self.policy
-                .max_wait
-                .saturating_sub(now.duration_since(*t0))
-        })
+    /// Should a batch close *now*?
+    pub fn ready(&self, now_ns: u64) -> bool {
+        self.ready_at().is_some_and(|t| t <= now_ns)
+    }
+
+    /// Time until the close policy would fire, ns (None when empty;
+    /// zero when already ready).
+    pub fn deadline_in(&self, now_ns: u64) -> Option<u64> {
+        self.ready_at().map(|t| t.saturating_sub(now_ns))
     }
 
     /// Pop up to `max_batch` requests as one batch (empty vec if none).
@@ -93,6 +115,8 @@ impl<T> Batcher<T> {
 mod tests {
     use super::*;
 
+    const MS: u64 = 1_000_000;
+
     fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
         BatchPolicy {
             max_batch,
@@ -103,11 +127,11 @@ mod tests {
     #[test]
     fn closes_on_size() {
         let mut b = Batcher::new(policy(3, 1000));
-        let now = Instant::now();
         for i in 0..3 {
-            b.push_at(i, now);
+            b.push_at(i, i as u64);
         }
-        assert!(b.ready(now));
+        assert!(b.ready(2));
+        assert_eq!(b.ready_at(), Some(2)); // third arrival filled it
         assert_eq!(b.take_batch(), vec![0, 1, 2]);
         assert!(b.is_empty());
     }
@@ -115,26 +139,45 @@ mod tests {
     #[test]
     fn closes_on_deadline() {
         let mut b = Batcher::new(policy(100, 5));
-        let t0 = Instant::now();
-        b.push_at(7, t0);
-        assert!(!b.ready(t0));
-        assert!(b.ready(t0 + Duration::from_millis(6)));
+        b.push_at(7, 0);
+        assert!(!b.ready(0));
+        assert!(!b.ready(5 * MS - 1));
+        assert!(b.ready(5 * MS));
+        assert_eq!(b.ready_at(), Some(5 * MS));
         assert_eq!(b.take_batch(), vec![7]);
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_not_newest() {
+        let mut b = Batcher::new(policy(100, 5));
+        b.push_at(1, 0);
+        b.push_at(2, 4 * MS);
+        // The second push must not extend the oldest request's deadline.
+        assert_eq!(b.ready_at(), Some(5 * MS));
+    }
+
+    #[test]
+    fn size_trigger_beats_later_deadline() {
+        let mut b = Batcher::new(policy(2, 1000));
+        b.push_at(1, 10);
+        b.push_at(2, 20);
+        // Full at t=20, long before the t=10+1s wait deadline.
+        assert_eq!(b.ready_at(), Some(20));
     }
 
     #[test]
     fn empty_never_ready() {
         let b: Batcher<u32> = Batcher::new(policy(1, 0));
-        assert!(!b.ready(Instant::now()));
-        assert!(b.deadline_in(Instant::now()).is_none());
+        assert!(!b.ready(u64::MAX));
+        assert!(b.ready_at().is_none());
+        assert!(b.deadline_in(0).is_none());
     }
 
     #[test]
     fn take_batch_caps_at_max() {
         let mut b = Batcher::new(policy(2, 0));
-        let now = Instant::now();
         for i in 0..5 {
-            b.push_at(i, now);
+            b.push_at(i, 0);
         }
         assert_eq!(b.take_batch(), vec![0, 1]);
         assert_eq!(b.len(), 3);
@@ -145,9 +188,31 @@ mod tests {
     #[test]
     fn deadline_counts_down() {
         let mut b = Batcher::new(policy(10, 10));
-        let t0 = Instant::now();
-        b.push_at(1, t0);
-        let d = b.deadline_in(t0 + Duration::from_millis(4)).unwrap();
-        assert!(d <= Duration::from_millis(6));
+        b.push_at(1, 0);
+        assert_eq!(b.deadline_in(4 * MS), Some(6 * MS));
+        // Past the deadline it clamps to zero instead of underflowing.
+        assert_eq!(b.deadline_in(11 * MS), Some(0));
+    }
+
+    #[test]
+    fn zero_wait_closes_immediately() {
+        let mut b = Batcher::new(policy(100, 0));
+        b.push_at(9, 42);
+        assert!(b.ready(42));
+        assert_eq!(b.ready_at(), Some(42));
+    }
+
+    #[test]
+    fn simclock_drives_the_deadline_deterministically() {
+        use crate::util::{Clock, SimClock};
+        let clock = SimClock::new();
+        let mut b = Batcher::new(policy(100, 5));
+        b.push_at('a', clock.now_ns());
+        clock.advance(3 * MS);
+        b.push_at('b', clock.now_ns());
+        assert!(!b.ready(clock.now_ns()));
+        clock.advance(2 * MS); // oldest has now waited exactly max_wait
+        assert!(b.ready(clock.now_ns()));
+        assert_eq!(b.take_batch(), vec!['a', 'b']);
     }
 }

@@ -24,6 +24,7 @@ use super::store::EmbeddingStore;
 use crate::engine::Engine;
 use crate::runtime::{DlrmParams, Runtime};
 use crate::sched::{ExecStats, Scratch};
+use crate::util::{Clock, WallClock};
 use crate::workload::Query;
 use crate::Result;
 use anyhow::anyhow;
@@ -375,17 +376,20 @@ impl Drop for Server {
 }
 
 /// The executor loop: drain the channel through the dynamic batcher.
+/// The batcher runs on an injected [`WallClock`] here; the open-loop
+/// driver ([`crate::loadgen`]) runs the identical policy on virtual time.
 fn executor_loop(pipeline: &mut Pipeline, rx: mpsc::Receiver<Msg>, policy: BatchPolicy) {
     type Pending = (Request, Instant, mpsc::Sender<Result<Response>>);
+    let clock = WallClock::new();
     let mut batcher: Batcher<Pending> = Batcher::new(policy);
     loop {
         // Wait for work (or a deadline if requests are queued).
-        let msg = match batcher.deadline_in(Instant::now()) {
+        let msg = match batcher.deadline_in(clock.now_ns()) {
             None => match rx.recv() {
                 Ok(m) => Some(m),
                 Err(_) => return, // all senders gone
             },
-            Some(d) => match rx.recv_timeout(d) {
+            Some(d) => match rx.recv_timeout(Duration::from_nanos(d)) {
                 Ok(m) => Some(m),
                 Err(mpsc::RecvTimeoutError::Timeout) => None,
                 Err(mpsc::RecvTimeoutError::Disconnected) => return,
@@ -393,11 +397,16 @@ fn executor_loop(pipeline: &mut Pipeline, rx: mpsc::Receiver<Msg>, policy: Batch
         };
         match msg {
             Some(Msg::Shutdown) => return,
-            Some(Msg::Infer(req, at, resp_tx)) => batcher.push_at((req, at, resp_tx), at),
+            Some(Msg::Infer(req, at, resp_tx)) => {
+                // The wait deadline counts from when the client *sent* the
+                // request, mapped onto the executor clock's timeline.
+                let at_ns = clock.instant_ns(at);
+                batcher.push_at((req, at, resp_tx), at_ns);
+            }
             None => {}
         }
         // Serve every ready batch.
-        while batcher.ready(Instant::now()) {
+        while batcher.ready(clock.now_ns()) {
             let batch = batcher.take_batch();
             serve_batch(pipeline, batch);
         }

@@ -32,6 +32,12 @@
 //! co-occurrence-locality-preserving partition), runs one scheduler +
 //! dynamic batcher per shard on its own thread, and serves each query
 //! with an exact scatter-gather reduction merge.
+//!
+//! Feeding both serving paths is the **open-loop traffic engine**
+//! ([`loadgen`]): seeded arrival processes stamp queries with arrival
+//! times, and a simulated-clock driver measures sojourn times — queue
+//! wait + batch formation + scheduled service — reporting throughput and
+//! p50/p95/p99/p999 latency, bit-reproducibly.
 
 pub mod allocation;
 pub mod cluster;
@@ -41,6 +47,7 @@ pub mod energy;
 pub mod engine;
 pub mod graph;
 pub mod grouping;
+pub mod loadgen;
 pub mod metrics;
 pub mod report;
 pub mod runtime;

@@ -1,0 +1,371 @@
+//! Seeded arrival processes: *when* queries hit the front-end.
+//!
+//! Every process emits a monotone non-decreasing stream of absolute
+//! arrival timestamps (ns on the simulated clock), fully determined by
+//! `(kind, rate, seed)` — the open-loop driver is bit-reproducible
+//! end-to-end. Three synthetic shapes plus trace replay:
+//!
+//! * **Poisson** — exponential inter-arrival gaps at a constant rate; the
+//!   memoryless baseline every queueing result is stated against.
+//! * **Bursty** — a two-state Markov-modulated Poisson process (MMPP
+//!   on/off): bursts at `1/duty` times the nominal rate separated by
+//!   silent gaps, with exponentially distributed sojourns in both states.
+//!   Long-run mean rate equals the nominal rate; short-run load is what
+//!   stresses the batcher and the replica router.
+//! * **Diurnal** — a sinusoidally modulated Poisson process (a compressed
+//!   day): `λ(t) = rate · (1 + depth · sin(2πt/period))`, sampled exactly
+//!   by Lewis–Shedler thinning against `λmax`.
+//! * **Replay** — timestamps recorded in a v2 trace
+//!   ([`crate::workload::TimedTrace`]).
+
+use crate::util::Rng;
+use crate::workload::{TimedTrace, Trace};
+
+/// Nanoseconds per second (the rate unit conversion).
+const NS_PER_SEC: f64 = 1e9;
+
+/// Bursty (MMPP on/off) defaults: fraction of time spent in the ON state…
+const BURSTY_DUTY: f64 = 0.25;
+/// …and mean ON-state duration, in units of `1/rate` (nominal mean gaps).
+const BURSTY_MEAN_ON_GAPS: f64 = 20.0;
+
+/// Diurnal defaults: modulation depth and period in nominal mean gaps.
+const DIURNAL_DEPTH: f64 = 0.8;
+const DIURNAL_PERIOD_GAPS: f64 = 2_000.0;
+
+/// Which synthetic arrival process to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    Poisson,
+    Bursty,
+    Diurnal,
+}
+
+impl ArrivalKind {
+    /// Parse a CLI name (`poisson | bursty | diurnal`).
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "poisson" => Some(Self::Poisson),
+            "bursty" => Some(Self::Bursty),
+            "diurnal" => Some(Self::Diurnal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Poisson => "poisson",
+            Self::Bursty => "bursty",
+            Self::Diurnal => "diurnal",
+        }
+    }
+}
+
+#[derive(Debug)]
+enum State {
+    Poisson {
+        /// Mean inter-arrival gap, ns.
+        gap_ns: f64,
+    },
+    Bursty {
+        /// Mean gap *within* a burst (`duty · nominal_gap`), ns.
+        gap_on_ns: f64,
+        mean_on_ns: f64,
+        mean_off_ns: f64,
+        /// Absolute end of the current ON period, ns.
+        on_until_ns: f64,
+    },
+    Diurnal {
+        /// Nominal rate, arrivals per ns.
+        rate_ns: f64,
+        depth: f64,
+        period_ns: f64,
+    },
+    Replay {
+        ts: Vec<u64>,
+        next: usize,
+    },
+}
+
+/// A stream of arrival timestamps. Construct via [`Arrivals::poisson`],
+/// [`Arrivals::bursty`], [`Arrivals::diurnal`], [`Arrivals::replay`], or
+/// [`Arrivals::from_kind`]; pull with [`Arrivals::next_ns`].
+#[derive(Debug)]
+pub struct Arrivals {
+    state: State,
+    rng: Rng,
+    /// Current absolute time, ns (f64: gaps compose exactly the same way
+    /// on every platform, and 2^53 ns ≈ 104 days dwarfs any drive).
+    t_ns: f64,
+}
+
+impl Arrivals {
+    /// Constant-rate Poisson arrivals at `rate_qps` queries/second.
+    pub fn poisson(rate_qps: f64, seed: u64) -> Self {
+        assert!(rate_qps > 0.0, "arrival rate must be positive");
+        Self {
+            state: State::Poisson {
+                gap_ns: NS_PER_SEC / rate_qps,
+            },
+            rng: Rng::new(seed ^ 0xA881_7A15_0000_0001),
+            t_ns: 0.0,
+        }
+    }
+
+    /// MMPP on/off bursts with long-run mean rate `rate_qps`.
+    pub fn bursty(rate_qps: f64, seed: u64) -> Self {
+        assert!(rate_qps > 0.0, "arrival rate must be positive");
+        let nominal_gap = NS_PER_SEC / rate_qps;
+        let mean_on_ns = BURSTY_MEAN_ON_GAPS * nominal_gap;
+        // duty = on / (on + off)  =>  off = on · (1 - duty) / duty.
+        let mean_off_ns = mean_on_ns * (1.0 - BURSTY_DUTY) / BURSTY_DUTY;
+        let mut rng = Rng::new(seed ^ 0xA881_7A15_0000_0002);
+        let first_on = exp_sample(&mut rng, mean_on_ns);
+        Self {
+            state: State::Bursty {
+                gap_on_ns: nominal_gap * BURSTY_DUTY,
+                mean_on_ns,
+                mean_off_ns,
+                on_until_ns: first_on,
+            },
+            rng,
+            t_ns: 0.0,
+        }
+    }
+
+    /// Sinusoidally rate-modulated Poisson arrivals (compressed diurnal
+    /// cycle) with time-average rate `rate_qps`.
+    pub fn diurnal(rate_qps: f64, seed: u64) -> Self {
+        assert!(rate_qps > 0.0, "arrival rate must be positive");
+        let nominal_gap = NS_PER_SEC / rate_qps;
+        Self {
+            state: State::Diurnal {
+                rate_ns: rate_qps / NS_PER_SEC,
+                depth: DIURNAL_DEPTH,
+                period_ns: DIURNAL_PERIOD_GAPS * nominal_gap,
+            },
+            rng: Rng::new(seed ^ 0xA881_7A15_0000_0003),
+            t_ns: 0.0,
+        }
+    }
+
+    /// Replay recorded timestamps (must be non-decreasing; validated).
+    pub fn replay(ts: Vec<u64>) -> Self {
+        assert!(
+            ts.windows(2).all(|w| w[0] <= w[1]),
+            "replay timestamps must be non-decreasing"
+        );
+        Self {
+            state: State::Replay { ts, next: 0 },
+            rng: Rng::new(0),
+            t_ns: 0.0,
+        }
+    }
+
+    /// Dispatch on a parsed [`ArrivalKind`].
+    pub fn from_kind(kind: ArrivalKind, rate_qps: f64, seed: u64) -> Self {
+        match kind {
+            ArrivalKind::Poisson => Self::poisson(rate_qps, seed),
+            ArrivalKind::Bursty => Self::bursty(rate_qps, seed),
+            ArrivalKind::Diurnal => Self::diurnal(rate_qps, seed),
+        }
+    }
+
+    /// Next absolute arrival timestamp, ns. Monotone non-decreasing.
+    ///
+    /// Panics when a replay stream is exhausted — the caller decides how
+    /// many arrivals it needs ([`Arrivals::take`]) and a replay source by
+    /// construction carries exactly its trace's query count.
+    pub fn next_ns(&mut self) -> u64 {
+        match &mut self.state {
+            State::Poisson { gap_ns } => {
+                self.t_ns += exp_sample(&mut self.rng, *gap_ns);
+                self.t_ns as u64
+            }
+            State::Bursty {
+                gap_on_ns,
+                mean_on_ns,
+                mean_off_ns,
+                on_until_ns,
+            } => {
+                loop {
+                    let gap = exp_sample(&mut self.rng, *gap_on_ns);
+                    if self.t_ns + gap <= *on_until_ns {
+                        self.t_ns += gap;
+                        break;
+                    }
+                    // The burst ends before this arrival lands: jump over
+                    // the OFF sojourn into the next ON period and redraw
+                    // (exact by memorylessness of the exponential).
+                    let off = exp_sample(&mut self.rng, *mean_off_ns);
+                    self.t_ns = *on_until_ns + off;
+                    *on_until_ns = self.t_ns + exp_sample(&mut self.rng, *mean_on_ns);
+                }
+                self.t_ns as u64
+            }
+            State::Diurnal {
+                rate_ns,
+                depth,
+                period_ns,
+            } => {
+                // Lewis–Shedler thinning against λmax = rate · (1+depth).
+                let lam_max = *rate_ns * (1.0 + *depth);
+                loop {
+                    self.t_ns += exp_sample(&mut self.rng, 1.0 / lam_max);
+                    let phase = std::f64::consts::TAU * self.t_ns / *period_ns;
+                    let lam = *rate_ns * (1.0 + *depth * phase.sin());
+                    if self.rng.next_f64() * lam_max < lam {
+                        break;
+                    }
+                }
+                self.t_ns as u64
+            }
+            State::Replay { ts, next } => {
+                let t = *ts
+                    .get(*next)
+                    .unwrap_or_else(|| panic!("replay exhausted after {} arrivals", ts.len()));
+                *next += 1;
+                t
+            }
+        }
+    }
+
+    /// The next `n` arrival timestamps.
+    pub fn take(&mut self, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.next_ns()).collect()
+    }
+
+    /// Stamp a trace's queries with this process's arrivals, producing a
+    /// replayable v2 timed trace.
+    pub fn stamp(&mut self, trace: Trace) -> TimedTrace {
+        let ts = self.take(trace.queries.len());
+        TimedTrace::new(trace, ts).expect("arrival streams are monotone by construction")
+    }
+}
+
+/// Exponential sample with the given mean (inverse-CDF; `1-U ∈ (0, 1]`
+/// keeps `ln` finite).
+fn exp_sample(rng: &mut Rng, mean: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() * mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_gap(ts: &[u64]) -> f64 {
+        assert!(ts.len() > 1);
+        (ts[ts.len() - 1] - ts[0]) as f64 / (ts.len() - 1) as f64
+    }
+
+    #[test]
+    fn processes_are_seed_deterministic() {
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal] {
+            let a = Arrivals::from_kind(kind, 50_000.0, 7).take(500);
+            let b = Arrivals::from_kind(kind, 50_000.0, 7).take(500);
+            assert_eq!(a, b, "{kind:?} not reproducible");
+            let c = Arrivals::from_kind(kind, 50_000.0, 8).take(500);
+            assert_ne!(a, c, "{kind:?} ignores its seed");
+        }
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal] {
+            let ts = Arrivals::from_kind(kind, 1_000_000.0, 3).take(5_000);
+            assert!(
+                ts.windows(2).all(|w| w[0] <= w[1]),
+                "{kind:?} emitted regressing timestamps"
+            );
+        }
+    }
+
+    #[test]
+    fn poisson_mean_rate_matches() {
+        let rate = 1_000_000.0; // 1M qps -> 1000 ns mean gap
+        let ts = Arrivals::poisson(rate, 42).take(20_000);
+        let gap = mean_gap(&ts);
+        assert!((gap - 1_000.0).abs() < 50.0, "mean gap {gap} ns");
+    }
+
+    #[test]
+    fn bursty_long_run_rate_matches_but_bursts_run_hotter() {
+        let rate = 1_000_000.0;
+        let ts = Arrivals::bursty(rate, 42).take(50_000);
+        let gap = mean_gap(&ts);
+        // Long-run mean within 25% of nominal (burst-level variance is
+        // the point of the process, so the tolerance is loose).
+        assert!(
+            (gap - 1_000.0).abs() < 250.0,
+            "bursty long-run mean gap {gap} ns"
+        );
+        // Within-burst gaps are duty-fraction of nominal: the median gap
+        // must be far below the nominal mean gap.
+        let mut gaps: Vec<u64> = ts.windows(2).map(|w| w[1] - w[0]).collect();
+        gaps.sort_unstable();
+        let median = gaps[gaps.len() / 2] as f64;
+        assert!(median < 500.0, "median intra-burst gap {median} ns");
+    }
+
+    #[test]
+    fn diurnal_time_average_rate_matches() {
+        let rate = 1_000_000.0;
+        // ~10 full cycles (period = 2000 gaps) so the sine averages out.
+        let ts = Arrivals::diurnal(rate, 42).take(20_000);
+        let gap = mean_gap(&ts);
+        assert!((gap - 1_000.0).abs() < 150.0, "diurnal mean gap {gap} ns");
+    }
+
+    #[test]
+    fn diurnal_rate_actually_oscillates() {
+        let ts = Arrivals::diurnal(1_000_000.0, 9).take(20_000);
+        // Count arrivals in consecutive windows of a half-period each:
+        // peak-to-trough ratio must show the modulation.
+        let half_period = 1_000_000.0; // 1000 gaps of 1000 ns
+        let mut counts = vec![0usize; 1 + (ts[ts.len() - 1] as f64 / half_period) as usize];
+        for &t in &ts {
+            counts[(t as f64 / half_period) as usize] += 1;
+        }
+        let full: Vec<usize> = counts[..counts.len().saturating_sub(1)].to_vec();
+        let max = full.iter().copied().max().unwrap();
+        let min = full.iter().copied().min().unwrap().max(1);
+        assert!(
+            max as f64 / min as f64 > 1.5,
+            "no visible modulation: windows {full:?}"
+        );
+    }
+
+    #[test]
+    fn replay_returns_exactly_the_recorded_stream() {
+        let mut a = Arrivals::replay(vec![5, 5, 9, 30]);
+        assert_eq!(a.take(4), vec![5, 5, 9, 30]);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay exhausted")]
+    fn replay_panics_past_the_end() {
+        Arrivals::replay(vec![1]).take(2);
+    }
+
+    #[test]
+    fn stamp_produces_a_valid_timed_trace() {
+        use crate::workload::Query;
+        let trace = Trace {
+            num_embeddings: 10,
+            queries: vec![Query::new(vec![1]), Query::new(vec![2, 3])],
+        };
+        let tt = Arrivals::poisson(10_000.0, 1).stamp(trace.clone());
+        assert_eq!(tt.trace, trace);
+        let ts = tt.arrivals_ns.unwrap();
+        assert_eq!(ts.len(), 2);
+        assert!(ts[0] <= ts[1]);
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal] {
+            assert_eq!(ArrivalKind::by_name(kind.name()), Some(kind));
+        }
+        assert_eq!(ArrivalKind::by_name("closed"), None);
+    }
+}

@@ -1,0 +1,618 @@
+//! Open-loop driver: timestamped queries in, tail-latency telemetry out.
+//!
+//! The closed-loop harnesses (`Engine::run_trace`, `simulate_sharded`)
+//! feed pre-formed batches and report batch completion time — there is no
+//! notion of *offered load* or *queueing delay*. This driver runs the
+//! serving stack on **simulated time**: queries arrive at the timestamps
+//! an arrival process ([`super::arrival`]) produced, pass through the
+//! exact dynamic-batching policy the live executors run
+//! ([`crate::coordinator::Batcher`], now clock-injected), and are served
+//! by the existing discrete-event crossbar model
+//! ([`crate::sched::Scheduler::run_batch_timed`]). No threads, no wall
+//! clock: the same `(queries, arrivals, policy)` input always produces
+//! bit-identical output.
+//!
+//! Sojourn decomposition for a query arriving at `t_a`, whose batch
+//! closes at `t_c` and whose in-batch service finishes `f` ns after the
+//! batch starts:
+//!
+//! ```text
+//! sojourn = (t_c - t_a)              queue wait + batch formation wait
+//!         + f                        scheduled crossbar service
+//!         [+ (fanout-1) · add_ns]    cross-shard merge (sharded backend)
+//! ```
+//!
+//! `t_c` already folds in executor backpressure: a batch cannot close
+//! while the (serial) executor is still serving the previous one, so at
+//! offered loads past capacity the queue — and the tail — grow without
+//! bound. That hockey-stick is exactly what `benches/fig13_latency.rs`
+//! sweeps.
+
+use crate::cluster::{PoolShared, ReplicaPlan, ShardPlan};
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::metrics::percentile;
+use crate::sched::{ExecStats, Scheduler, Scratch};
+use crate::workload::Query;
+
+/// Per-executor (shard) load telemetry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardLoad {
+    pub shard: u32,
+    /// Sub-queries this executor served (= queries, single pool).
+    pub sub_queries: u64,
+    /// Batches its batcher closed.
+    pub batches: u64,
+    /// Simulated time spent serving, ns.
+    pub busy_ns: f64,
+    /// Peak queued sub-queries observed at a batch close.
+    pub max_backlog: usize,
+    /// Time-averaged sub-queries in system (Little's law:
+    /// Σ sub-sojourn / horizon).
+    pub mean_backlog: f64,
+    /// `(close time ns, queued depth)` at every batch close — the
+    /// backlog-over-time series the report can render.
+    pub backlog_samples: Vec<(f64, usize)>,
+}
+
+impl ShardLoad {
+    /// Fraction of the horizon this executor spent serving.
+    pub fn utilization(&self, horizon_ns: f64) -> f64 {
+        if horizon_ns <= 0.0 {
+            0.0
+        } else {
+            (self.busy_ns / horizon_ns).min(1.0)
+        }
+    }
+}
+
+/// Result of one open-loop drive.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpenLoopReport {
+    /// Per-query sojourn time (finish − arrival), ns, in arrival order.
+    pub sojourn_ns: Vec<f64>,
+    /// Service-side accounting: counters sum over everything served;
+    /// `completion_ns` accumulates per executor and maxes across shards
+    /// (the executors run concurrently).
+    pub stats: ExecStats,
+    /// Last query finish time, ns (the simulated makespan).
+    pub horizon_ns: f64,
+    /// Offered load implied by the arrival stamps, queries/second.
+    pub offered_qps: f64,
+    /// One entry per executor (a single entry for the single pool).
+    pub shards: Vec<ShardLoad>,
+}
+
+impl OpenLoopReport {
+    pub fn queries(&self) -> usize {
+        self.sojourn_ns.len()
+    }
+
+    /// Sojourn percentile, ns (nearest-rank over the exact sample).
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        percentile(&self.sojourn_ns, p)
+    }
+
+    pub fn mean_sojourn_ns(&self) -> f64 {
+        if self.sojourn_ns.is_empty() {
+            0.0
+        } else {
+            self.sojourn_ns.iter().sum::<f64>() / self.sojourn_ns.len() as f64
+        }
+    }
+
+    /// Achieved throughput over the makespan, queries/second.
+    pub fn throughput_qps(&self) -> f64 {
+        if self.horizon_ns <= 0.0 {
+            0.0
+        } else {
+            self.queries() as f64 / (self.horizon_ns / 1e9)
+        }
+    }
+
+    /// Time-averaged queries in system (Little's law: L = Σ sojourn / T).
+    pub fn mean_queue_depth(&self) -> f64 {
+        if self.horizon_ns <= 0.0 {
+            0.0
+        } else {
+            self.sojourn_ns.iter().sum::<f64>() / self.horizon_ns
+        }
+    }
+
+    /// Total batches closed across executors.
+    pub fn batches(&self) -> u64 {
+        self.shards.iter().map(|s| s.batches).sum()
+    }
+}
+
+/// Open-loop drive of the **single-pool** path: one serial executor, one
+/// dynamic batcher, the scheduler's discrete-event service model.
+///
+/// `arrivals_ns` must be non-decreasing and aligned with `queries`.
+pub fn drive_single(
+    sched: &Scheduler<'_>,
+    queries: &[Query],
+    arrivals_ns: &[u64],
+    policy: &BatchPolicy,
+) -> OpenLoopReport {
+    check_arrivals(queries.len(), arrivals_ns);
+    let n = queries.len();
+    // Empty queries are dropped at the front door (nothing to serve),
+    // exactly as the sharded backend's scatter drops them — the two
+    // backends must account identical traffic identically.
+    let arr: Vec<(u64, usize)> = arrivals_ns
+        .iter()
+        .copied()
+        .zip(0..n)
+        .filter(|&(_, i)| !queries[i].is_empty())
+        .collect();
+    let mut finish = vec![0.0f64; n];
+    let mut stats = ExecStats::default();
+    let mut scratch = Scratch::default();
+    let mut rel = Vec::new();
+    let qstats = simulate_executor(&arr, policy, &mut finish, |batch| {
+        let qs: Vec<Query> = batch.iter().map(|&i| queries[i].clone()).collect();
+        let s = sched.run_batch_timed(&qs, &mut scratch, &mut rel);
+        stats.accumulate(&s);
+        (s.completion_ns, rel.clone())
+    });
+    let sojourn: Vec<f64> = finish
+        .iter()
+        .zip(arrivals_ns)
+        .zip(queries)
+        .map(|((&f, &a), q)| if q.is_empty() { 0.0 } else { f - a as f64 })
+        .collect();
+    let horizon = qstats.horizon_ns;
+    let shard = ShardLoad {
+        shard: 0,
+        sub_queries: arr.len() as u64,
+        batches: qstats.batches,
+        busy_ns: qstats.busy_ns,
+        max_backlog: qstats.max_backlog,
+        mean_backlog: if horizon > 0.0 {
+            sojourn.iter().sum::<f64>() / horizon
+        } else {
+            0.0
+        },
+        backlog_samples: qstats.backlog_samples,
+    };
+    OpenLoopReport {
+        offered_qps: offered_qps(arrivals_ns),
+        sojourn_ns: sojourn,
+        stats,
+        horizon_ns: horizon,
+        shards: vec![shard],
+    }
+}
+
+/// Open-loop drive of the **sharded** path: the front-end splits every
+/// query by owning shard the instant it arrives (ownership-pinned
+/// routing, the deterministic twin of `cluster::server`'s scatter), each
+/// shard runs its own dynamic batcher + serial executor over its local
+/// replica table, and a query completes when its last sub-query finishes
+/// plus one merge add per extra shard touched.
+pub fn drive_sharded(
+    shared: &PoolShared,
+    plan: &ShardPlan,
+    queries: &[Query],
+    arrivals_ns: &[u64],
+    policy: &BatchPolicy,
+) -> OpenLoopReport {
+    check_arrivals(queries.len(), arrivals_ns);
+    assert_eq!(
+        plan.num_groups(),
+        shared.mapping.num_groups(),
+        "plan covers {} groups, mapping has {}",
+        plan.num_groups(),
+        shared.mapping.num_groups()
+    );
+    let n = queries.len();
+    let shards = plan.shards;
+    let replicas = ReplicaPlan::pinned(plan, &shared.replication);
+    let locals: Vec<crate::allocation::Replication> = (0..shards)
+        .map(|s| replicas.local_replication(s as u32, shared.replication.batch_size))
+        .collect();
+    let scheds: Vec<Scheduler<'_>> = locals
+        .iter()
+        .map(|r| Scheduler::new(&shared.mapping, r, &shared.model, shared.dynamic_switch))
+        .collect();
+    let (add_ns, add_pj) = shared.model.vector_add();
+
+    // Scatter: split every query at its arrival instant.
+    let mut sub_queries: Vec<Vec<Query>> = vec![Vec::new(); shards];
+    let mut sub_arrivals: Vec<Vec<(u64, usize)>> = vec![Vec::new(); shards];
+    // (shard, local index) of every sub-query of each query.
+    let mut subs_of_query: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+    for (qi, q) in queries.iter().enumerate() {
+        for (s, items) in plan.split_items(&shared.mapping, &q.items).into_iter().enumerate() {
+            if items.is_empty() {
+                continue;
+            }
+            let li = sub_queries[s].len();
+            sub_arrivals[s].push((arrivals_ns[qi], li));
+            sub_queries[s].push(Query::new(items));
+            subs_of_query[qi].push((s, li));
+        }
+    }
+
+    // Each shard's executor runs independently: its batch boundaries
+    // depend only on its own arrivals and its own backlog.
+    let mut stats = ExecStats::default();
+    let mut shard_loads = Vec::with_capacity(shards);
+    let mut sub_finish: Vec<Vec<f64>> = Vec::with_capacity(shards);
+    let mut horizon = 0.0f64;
+    let mut scratch = Scratch::default();
+    let mut rel = Vec::new();
+    for s in 0..shards {
+        let mut finish = vec![0.0f64; sub_queries[s].len()];
+        let mut local_stats = ExecStats::default();
+        let qstats = simulate_executor(&sub_arrivals[s], policy, &mut finish, |batch| {
+            let qs: Vec<Query> = batch.iter().map(|&i| sub_queries[s][i].clone()).collect();
+            let st = scheds[s].run_batch_timed(&qs, &mut scratch, &mut rel);
+            local_stats.accumulate(&st);
+            (st.completion_ns, rel.clone())
+        });
+        stats.merge_parallel(&local_stats);
+        let sub_sojourn: f64 = sub_arrivals[s]
+            .iter()
+            .map(|&(a, li)| finish[li] - a as f64)
+            .sum();
+        shard_loads.push(ShardLoad {
+            shard: s as u32,
+            sub_queries: sub_queries[s].len() as u64,
+            batches: qstats.batches,
+            busy_ns: qstats.busy_ns,
+            max_backlog: qstats.max_backlog,
+            // Little's-law numerator for now; divided by the global
+            // horizon once the gather pass below has fixed it.
+            mean_backlog: sub_sojourn,
+            backlog_samples: qstats.backlog_samples,
+        });
+        horizon = horizon.max(qstats.horizon_ns);
+        sub_finish.push(finish);
+    }
+
+    // Gather: a query completes when its last sub-query does, plus one
+    // front-end merge add per extra shard (same accounting as
+    // `cluster::simulate_with_replicas`).
+    let mut sojourn = Vec::with_capacity(n);
+    for (qi, subs) in subs_of_query.iter().enumerate() {
+        let a = arrivals_ns[qi] as f64;
+        if subs.is_empty() {
+            sojourn.push(0.0); // empty query: nothing to serve
+            continue;
+        }
+        let mut f = subs
+            .iter()
+            .map(|&(s, li)| sub_finish[s][li])
+            .fold(f64::NEG_INFINITY, f64::max);
+        if subs.len() > 1 {
+            f += (subs.len() - 1) as f64 * add_ns;
+            stats.energy_pj += (subs.len() - 1) as f64 * add_pj;
+        }
+        horizon = horizon.max(f);
+        sojourn.push(f - a);
+    }
+    for sl in &mut shard_loads {
+        sl.mean_backlog = if horizon > 0.0 {
+            sl.mean_backlog / horizon
+        } else {
+            0.0
+        };
+    }
+    OpenLoopReport {
+        offered_qps: offered_qps(arrivals_ns),
+        sojourn_ns: sojourn,
+        stats,
+        horizon_ns: horizon,
+        shards: shard_loads,
+    }
+}
+
+fn check_arrivals(num_queries: usize, arrivals_ns: &[u64]) {
+    assert_eq!(
+        num_queries,
+        arrivals_ns.len(),
+        "one arrival timestamp per query"
+    );
+    assert!(
+        arrivals_ns.windows(2).all(|w| w[0] <= w[1]),
+        "arrival timestamps must be non-decreasing"
+    );
+}
+
+fn offered_qps(arrivals_ns: &[u64]) -> f64 {
+    match (arrivals_ns.first(), arrivals_ns.last()) {
+        (Some(&a), Some(&b)) if b > a => {
+            (arrivals_ns.len() - 1) as f64 / ((b - a) as f64 / 1e9)
+        }
+        // Two or more arrivals at one instant is an unbounded burst, not
+        // idle traffic.
+        (Some(_), Some(_)) if arrivals_ns.len() > 1 => f64::INFINITY,
+        _ => 0.0,
+    }
+}
+
+/// Aggregates one simulated executor produced.
+struct ExecutorStats {
+    batches: u64,
+    busy_ns: f64,
+    max_backlog: usize,
+    /// Final executor-free time = last batch's finish.
+    horizon_ns: f64,
+    backlog_samples: Vec<(f64, usize)>,
+}
+
+/// Simulate one serial executor behind a dynamic batcher on virtual time.
+///
+/// `arrivals` is `(arrival_ns, item id)`, sorted by time. `serve` is
+/// called once per closed batch with the item ids, and returns the
+/// batch's total service duration plus each item's finish offset within
+/// it; absolute finish times land in `finish_ns[item]`.
+///
+/// Batch-close rule (identical to the live executor loop): a batch
+/// closes at the earliest time `t ≥ executor_free` at which the queue
+/// holds `max_batch` requests or the oldest has waited `max_wait` —
+/// arrivals up to `t` join the queue first, exactly as the live loop's
+/// channel drain would deliver them.
+fn simulate_executor<F>(
+    arrivals: &[(u64, usize)],
+    policy: &BatchPolicy,
+    finish_ns: &mut [f64],
+    mut serve: F,
+) -> ExecutorStats
+where
+    F: FnMut(&[usize]) -> (f64, Vec<f64>),
+{
+    debug_assert!(arrivals.windows(2).all(|w| w[0].0 <= w[1].0));
+    let mut batcher: Batcher<usize> = Batcher::new(policy.clone());
+    let mut i = 0usize;
+    let mut free_at = 0.0f64;
+    let mut out = ExecutorStats {
+        batches: 0,
+        busy_ns: 0.0,
+        max_backlog: 0,
+        horizon_ns: 0.0,
+        backlog_samples: Vec::new(),
+    };
+    while i < arrivals.len() || !batcher.is_empty() {
+        if batcher.is_empty() {
+            // Idle executor: sleep until the next arrival.
+            let (t, id) = arrivals[i];
+            batcher.push_at(id, t);
+            i += 1;
+        }
+        // Settle the close time: every arrival at or before the current
+        // close candidate joins the queue first, which can only pull the
+        // candidate earlier (size trigger) — never push it later.
+        let t_close = loop {
+            let ready = batcher.ready_at().expect("queue is non-empty") as f64;
+            let cand = ready.max(free_at);
+            match arrivals.get(i) {
+                Some(&(t, id)) if (t as f64) <= cand => {
+                    batcher.push_at(id, t);
+                    i += 1;
+                }
+                _ => break cand,
+            }
+        };
+        out.max_backlog = out.max_backlog.max(batcher.len());
+        out.backlog_samples.push((t_close, batcher.len()));
+        let batch = batcher.take_batch();
+        let (busy, rel) = serve(&batch);
+        assert_eq!(rel.len(), batch.len(), "one finish offset per batch item");
+        for (&id, &r) in batch.iter().zip(&rel) {
+            finish_ns[id] = t_close + r;
+        }
+        free_at = t_close + busy;
+        out.busy_ns += busy;
+        out.batches += 1;
+        out.horizon_ns = out.horizon_ns.max(free_at);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::Replication;
+    use crate::config::HardwareConfig;
+    use crate::grouping::Mapping;
+    use crate::loadgen::arrival::Arrivals;
+    use crate::xbar::{CircuitParams, CrossbarModel};
+    use std::time::Duration;
+
+    fn model() -> CrossbarModel {
+        CrossbarModel::new(&HardwareConfig::default(), &CircuitParams::default())
+    }
+
+    fn mapping_2x2() -> Mapping {
+        Mapping::from_groups(vec![vec![0, 1], vec![2, 3]], 2, 4)
+    }
+
+    fn policy(max_batch: usize, wait_us: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(wait_us),
+        }
+    }
+
+    fn some_queries(n: usize) -> Vec<Query> {
+        (0..n)
+            .map(|i| Query::new(vec![(i % 4) as u32, ((i + 1) % 4) as u32]))
+            .collect()
+    }
+
+    #[test]
+    fn zero_load_sojourn_is_pure_service_time() {
+        // Arrivals light-years apart + max_wait 0: every query is served
+        // alone the instant it arrives, so sojourn == single-query batch
+        // service time and p99 collapses to pure service.
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let sched = Scheduler::new(&map, &rep, &m, true);
+        let queries = some_queries(32);
+        let arrivals: Vec<u64> = (0..32).map(|i| i as u64 * 1_000_000_000).collect();
+        let report = drive_single(&sched, &queries, &arrivals, &policy(8, 0));
+        let mut scratch = Scratch::default();
+        // Tolerance: adding a ~1e10 ns arrival timestamp and subtracting
+        // it back costs a few µ-ulps, never more than 1e-3 ns here.
+        for (q, &soj) in queries.iter().zip(&report.sojourn_ns) {
+            let solo = sched.run_batch(std::slice::from_ref(q), &mut scratch);
+            assert!(
+                (soj - solo.completion_ns).abs() < 1e-3,
+                "sojourn {soj} != solo service {}",
+                solo.completion_ns
+            );
+        }
+        let max_solo = queries
+            .iter()
+            .map(|q| sched.run_batch(std::slice::from_ref(q), &mut scratch).completion_ns)
+            .fold(0.0f64, f64::max);
+        assert!((report.percentile_ns(99.0) - max_solo).abs() < 1e-3);
+        // One query per batch, no backlog beyond 1.
+        assert_eq!(report.batches(), 32);
+        assert_eq!(report.shards[0].max_backlog, 1);
+        assert!(report.mean_queue_depth() < 1e-3);
+    }
+
+    #[test]
+    fn drive_is_deterministic() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let sched = Scheduler::new(&map, &rep, &m, true);
+        let queries = some_queries(256);
+        let arrivals = Arrivals::poisson(5_000_000.0, 11).take(256);
+        let a = drive_single(&sched, &queries, &arrivals, &policy(16, 2_000));
+        let b = drive_single(&sched, &queries, &arrivals, &policy(16, 2_000));
+        assert_eq!(a, b, "open-loop drive must be bit-reproducible");
+    }
+
+    #[test]
+    fn saturation_blows_up_the_tail() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let sched = Scheduler::new(&map, &rep, &m, true);
+        let queries = some_queries(512);
+        let slow = Arrivals::poisson(1_000.0, 3).take(512); // ~idle
+        let fast = Arrivals::poisson(1e9, 3).take(512); // far past capacity
+        // max_wait 0 so the idle baseline is pure service time, not
+        // batch-formation wait.
+        let p = policy(16, 0);
+        let low = drive_single(&sched, &queries, &slow, &p);
+        let high = drive_single(&sched, &queries, &fast, &p);
+        assert!(
+            high.percentile_ns(99.0) > 10.0 * low.percentile_ns(99.0),
+            "p99 {} !>> {}",
+            high.percentile_ns(99.0),
+            low.percentile_ns(99.0)
+        );
+        assert!(high.mean_queue_depth() > low.mean_queue_depth());
+        // Conservation either way.
+        assert_eq!(low.stats.queries, 512);
+        assert_eq!(high.stats.queries, 512);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_the_quantile() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let sched = Scheduler::new(&map, &rep, &m, true);
+        let queries = some_queries(300);
+        let arrivals = Arrivals::bursty(50_000_000.0, 5).take(300);
+        let report = drive_single(&sched, &queries, &arrivals, &policy(8, 500));
+        let ps = [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0];
+        let qs: Vec<f64> = ps.iter().map(|&p| report.percentile_ns(p)).collect();
+        for w in qs.windows(2) {
+            assert!(w[1] >= w[0], "percentiles regress: {qs:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_drive_conserves_work_and_merges_fanout() {
+        let shared = PoolShared {
+            mapping: mapping_2x2(),
+            replication: Replication::identity(2, 4),
+            model: model(),
+            dynamic_switch: true,
+        };
+        let plan = ShardPlan::from_assignment(vec![0, 1], 2);
+        // Every query touches both groups -> fanout 2 everywhere.
+        let queries: Vec<Query> = (0..64).map(|_| Query::new(vec![0, 2])).collect();
+        let arrivals = Arrivals::poisson(2_000_000.0, 7).take(64);
+        let report = drive_sharded(&shared, &plan, &queries, &arrivals, &policy(8, 1_000));
+        assert_eq!(report.queries(), 64);
+        assert_eq!(report.shards.len(), 2);
+        // Each query produced one sub-query per shard.
+        assert_eq!(report.shards[0].sub_queries, 64);
+        assert_eq!(report.shards[1].sub_queries, 64);
+        assert_eq!(report.stats.lookups, 128);
+        // Sojourn includes at least the single-item service + merge add.
+        let (add_ns, _) = shared.model.vector_add();
+        let act = shared.model.activation(1, true);
+        let flit = shared.model.bus_flit_ns();
+        let floor = act.latency_ns + flit + add_ns;
+        assert!(report.sojourn_ns.iter().all(|&s| s >= floor - 1e-9));
+        // Deterministic across runs.
+        let again = drive_sharded(&shared, &plan, &queries, &arrivals, &policy(8, 1_000));
+        assert_eq!(report, again);
+    }
+
+    #[test]
+    fn sharding_relieves_an_overloaded_executor() {
+        // max_batch = 1 makes the serial executor the bottleneck: the
+        // single pool serves 256 one-query batches back-to-back, while
+        // two shards serve two independent 128-query streams
+        // concurrently — the saturated tail must drop by roughly half.
+        let shared = PoolShared {
+            mapping: mapping_2x2(),
+            replication: Replication::identity(2, 4),
+            model: model(),
+            dynamic_switch: true,
+        };
+        let queries: Vec<Query> = (0..256)
+            .map(|i| Query::new(vec![(i % 2) as u32 * 2])) // alternate groups
+            .collect();
+        let arrivals = Arrivals::poisson(2e8, 13).take(256);
+        let p = policy(1, 0);
+        let one = ShardPlan::from_assignment(vec![0, 0], 1);
+        let two = ShardPlan::from_assignment(vec![0, 1], 2);
+        let r1 = drive_sharded(&shared, &one, &queries, &arrivals, &p);
+        let r2 = drive_sharded(&shared, &two, &queries, &arrivals, &p);
+        assert!(
+            r2.percentile_ns(99.0) < 0.75 * r1.percentile_ns(99.0),
+            "2-shard p99 {} !< 0.75 x 1-shard {}",
+            r2.percentile_ns(99.0),
+            r1.percentile_ns(99.0)
+        );
+        // Same total work either way.
+        assert_eq!(r1.stats.lookups, r2.stats.lookups);
+        assert_eq!(r1.stats.activations, r2.stats.activations);
+    }
+
+    #[test]
+    fn backpressure_batches_back_to_back() {
+        // All 64 queries arrive at t=0 with max_batch 16: the executor
+        // must serve 4 back-to-back batches, later batches waiting on
+        // earlier ones (free_at), so sojourns strictly stratify.
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let sched = Scheduler::new(&map, &rep, &m, true);
+        let queries = some_queries(64);
+        let arrivals = vec![0u64; 64];
+        let report = drive_single(&sched, &queries, &arrivals, &policy(16, 0));
+        assert_eq!(report.batches(), 4);
+        // The last batch's queries waited for three service rounds.
+        let first_batch_max = report.sojourn_ns[..16].iter().cloned().fold(0.0, f64::max);
+        let last_batch_min = report.sojourn_ns[48..]
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        assert!(last_batch_min > first_batch_max);
+        assert_eq!(report.shards[0].max_backlog, 64);
+    }
+}

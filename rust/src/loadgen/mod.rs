@@ -1,0 +1,32 @@
+//! Open-loop traffic engine: arrival processes, simulated-time batching,
+//! and tail-latency telemetry.
+//!
+//! Everything below the cluster layer evaluates *closed-loop*: pre-formed
+//! batches in, batch completion time out. Serving millions of users is an
+//! *open-loop* problem — requests arrive on their own schedule whether or
+//! not the pool is keeping up, and the metrics that matter are offered
+//! load, queueing delay, and the latency tail (RecNMP and UpDLRM frame
+//! recommendation inference exactly this way). This module supplies that
+//! vocabulary:
+//!
+//! * [`arrival`] — seeded arrival processes (Poisson, bursty MMPP on/off,
+//!   diurnal-modulated, trace replay) stamping each query with an arrival
+//!   timestamp; persisted via the v2 trace format
+//!   ([`crate::workload::TimedTrace`]).
+//! * [`driver`] — an open-loop driver on the **simulated clock**: the
+//!   live dynamic-batching policy ([`crate::coordinator::Batcher`],
+//!   clock-injected) decides batch boundaries, the discrete-event
+//!   crossbar model ([`crate::sched::Scheduler::run_batch_timed`])
+//!   supplies per-query service times, and the driver composes them into
+//!   sojourn times — queue wait + batch-formation wait + scheduled
+//!   service — for the single-pool and sharded back-ends alike. No
+//!   threads, no wall clock: bit-reproducible by construction.
+//!
+//! Entry points: `recross serve --arrivals poisson|bursty|diurnal --rate R`
+//! and `benches/fig13_latency.rs` (offered load → p99 hockey-stick).
+
+pub mod arrival;
+pub mod driver;
+
+pub use arrival::{ArrivalKind, Arrivals};
+pub use driver::{drive_sharded, drive_single, OpenLoopReport, ShardLoad};

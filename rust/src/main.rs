@@ -6,6 +6,7 @@
 //! recross generate   --dataset software --out trace.rxtr
 //! recross analyze    <trace.rxtr>
 //! recross serve      --dataset software --requests 256
+//! recross serve      --arrivals poisson --rate 50000  # open-loop latency sim
 //! recross cluster    --shards 4 --dataset software # sharded scatter-gather pool
 //! recross autotune   --dataset automotive          # pick dup ratio (knee)
 //! ```
@@ -36,6 +37,13 @@ fn main() {
         .opt("out", "trace.rxtr", "output path for generate")
         .opt("requests", "256", "requests to serve in the demo")
         .opt("batch", "32", "dynamic-batcher max batch")
+        .opt(
+            "arrivals",
+            "closed",
+            "serve traffic shape: closed|poisson|bursty|diurnal (open-loop sim)",
+        )
+        .opt("rate", "50000", "open-loop offered load, queries/second")
+        .opt("max-wait-us", "5", "dynamic-batcher max wait, µs (open-loop sim)")
         .opt("scheme", "recross", "serving scheme: recross|naive|frequency|nmars")
         .opt("artifacts", "artifacts", "AOT artifacts directory")
         .opt("shards", "4", "shard executors for the cluster mode")
@@ -203,7 +211,7 @@ fn cmd_autotune(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         &cfg,
         &[0.0, 0.025, 0.05, 0.10, 0.20, 0.40],
         1.05,
-    );
+    )?;
     println!("{:>8} {:>12} {:>10} {:>8}", "dup%", "time µs", "speedup", "xbars");
     for p in &result.sweep {
         let marker = if p.dup_ratio == result.chosen { "  <-- knee" } else { "" };
@@ -243,6 +251,18 @@ fn parse_scheme(name: &str) -> anyhow::Result<Scheme> {
 }
 
 fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
+    // `--arrivals poisson|bursty|diurnal` switches to the open-loop
+    // simulated-time driver (no PJRT artifacts needed); the default
+    // "closed" keeps the original live-thread demo below.
+    match args.get("arrivals") {
+        "closed" => {}
+        name => {
+            let kind = recross::loadgen::ArrivalKind::by_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown arrival process {name:?} (try poisson|bursty|diurnal)")
+            })?;
+            return cmd_serve_open_loop(args, kind);
+        }
+    }
     let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
     let seed: u64 = args.get_as("seed").map_err(anyhow::Error::msg)?;
     let n_requests = args.get_positive("requests").map_err(anyhow::Error::msg)?;
@@ -313,6 +333,126 @@ fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         for r in responses.iter().take(5) {
             println!("  req {} -> logit {:.4}", r.id, r.logit);
         }
+    }
+    Ok(())
+}
+
+/// Open-loop serving simulation (`serve --arrivals poisson --rate R`):
+/// no PJRT, no threads — a seeded arrival process stamps every query
+/// with an arrival time, the live dynamic-batching policy decides batch
+/// boundaries on the simulated clock, and the discrete-event crossbar
+/// model supplies per-query service times. Reports p50/p95/p99/p999
+/// sojourn latency, throughput, and mean queue depth for the single-pool
+/// *and* the `--shards`-way sharded back-ends on identical traffic.
+/// Bit-reproducible for a fixed `(dataset, scheme, arrivals, rate, seed)`.
+fn cmd_serve_open_loop(
+    args: &recross::util::cli::Args,
+    kind: recross::loadgen::ArrivalKind,
+) -> anyhow::Result<()> {
+    use recross::cluster::{PoolShared, ShardPlan};
+    use recross::coordinator::OfflinePhase;
+    use recross::loadgen::{drive_sharded, drive_single, Arrivals, OpenLoopReport};
+    use recross::sched::Scheduler;
+    use recross::util::fmt_ns;
+
+    let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_as("seed").map_err(anyhow::Error::msg)?;
+    let n_requests = args.get_positive("requests").map_err(anyhow::Error::msg)?;
+    let max_batch = args.get_positive("batch").map_err(anyhow::Error::msg)?;
+    let shards = args.get_positive("shards").map_err(anyhow::Error::msg)?;
+    let max_wait_us: u64 = args.get_as("max-wait-us").map_err(anyhow::Error::msg)?;
+    let rate: f64 = args.get_as("rate").map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(rate > 0.0, "--rate must be positive");
+    let slack: f64 = args.get_as("slack").map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(slack >= 0.0, "--slack must be non-negative");
+    let scheme = parse_scheme(args.get("scheme"))?;
+    anyhow::ensure!(
+        scheme != Scheme::Nmars,
+        "the open-loop driver serves the MAC dataflow; scheme {:?} is not supported here",
+        scheme.name()
+    );
+
+    let mut cfg = base_config(args)?;
+    workload_overrides(&mut cfg, args)?;
+    println!(
+        "open-loop serving sim: dataset={} scheme={} arrivals={} rate={rate}/s seed={seed}",
+        cfg.workload.dataset,
+        scheme.name(),
+        kind.name()
+    );
+    let offline = OfflinePhase::run(&cfg, scheme, scale)?;
+
+    // Fresh traffic from the same catalogue (held-out seed), stamped by
+    // the arrival process.
+    let spec = DatasetSpec::by_name(&cfg.workload.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.workload.dataset))?
+        .scaled(scale);
+    let gen = Generator::new(&spec, cfg.workload.seed);
+    let trace = gen.trace(n_requests, cfg.workload.seed.wrapping_add(3));
+    let arrivals = Arrivals::from_kind(kind, rate, seed).take(trace.queries.len());
+    let policy = recross::coordinator::BatchPolicy {
+        max_batch,
+        max_wait: std::time::Duration::from_micros(max_wait_us),
+    };
+    println!(
+        "queries={} batch<={max_batch} wait={max_wait_us}µs shards={shards} (locality)",
+        trace.queries.len()
+    );
+
+    let engine = &offline.engine;
+    let sched = Scheduler::new(
+        engine.mapping(),
+        engine.replication(),
+        engine.model(),
+        engine.dynamic_switch(),
+    );
+    let single = drive_single(&sched, &trace.queries, &arrivals, &policy);
+    let shared = PoolShared::from_engine(engine);
+    let plan = ShardPlan::by_locality(&shared.mapping, &offline.history, shards, slack);
+    let sharded = drive_sharded(&shared, &plan, &trace.queries, &arrivals, &policy);
+
+    let row = |name: &str, r: &OpenLoopReport| {
+        println!(
+            "{name:<14} {:>10} {:>10} {:>10} {:>10} {:>11.0} {:>10.2}",
+            fmt_ns(r.percentile_ns(50.0)),
+            fmt_ns(r.percentile_ns(95.0)),
+            fmt_ns(r.percentile_ns(99.0)),
+            fmt_ns(r.percentile_ns(99.9)),
+            r.throughput_qps(),
+            r.mean_queue_depth(),
+        );
+    };
+    println!(
+        "\n{:<14} {:>10} {:>10} {:>10} {:>10} {:>11} {:>10}",
+        "backend", "p50", "p95", "p99", "p999", "thrpt q/s", "mean-depth"
+    );
+    row("single-pool", &single);
+    row(&format!("sharded({shards})"), &sharded);
+
+    let backlog: Vec<String> = sharded
+        .shards
+        .iter()
+        .map(|s| format!("s{}: mean {:.1} max {}", s.shard, s.mean_backlog, s.max_backlog))
+        .collect();
+    println!("\nper-shard backlog: {}", backlog.join("  "));
+    let util: Vec<String> = sharded
+        .shards
+        .iter()
+        .map(|s| format!("{:.0}%", 100.0 * s.utilization(sharded.horizon_ns)))
+        .collect();
+    println!(
+        "per-shard utilization: {}  (single-pool: {:.0}%)",
+        util.join(" "),
+        100.0 * single.shards[0].utilization(single.horizon_ns)
+    );
+    if args.flag("verbose") {
+        println!(
+            "offered {:.0} q/s over {}; {} batches single, {} sharded",
+            single.offered_qps,
+            fmt_ns(single.horizon_ns),
+            single.batches(),
+            sharded.batches()
+        );
     }
     Ok(())
 }

@@ -75,6 +75,46 @@ impl Histogram {
         below as f64 / self.total as f64
     }
 
+    /// Nearest-rank percentile: the smallest observed value `v` such that
+    /// at least `p`% of observations are `<= v`. `p` is in `[0, 100]`;
+    /// `p = 0` returns the minimum, `p = 100` the maximum. Returns 0 for
+    /// an empty histogram. Monotone non-decreasing in `p` by construction
+    /// (a cumulative scan of the sorted counts).
+    pub fn percentile(&self, p: f64) -> u64 {
+        assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+        if self.total == 0 {
+            return 0;
+        }
+        // Nearest-rank: ceil(p/100 * N), clamped to [1, N].
+        let rank = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.total);
+        let mut seen = 0u64;
+        for (&v, &c) in &self.counts {
+            seen += c;
+            if seen >= rank {
+                return v;
+            }
+        }
+        self.max_value()
+    }
+
+    /// Batch percentile lookup (one cumulative scan per call site's loop
+    /// is fine at histogram sizes; this is a convenience wrapper).
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<u64> {
+        ps.iter().map(|&p| self.percentile(p)).collect()
+    }
+
+    /// One-line quantile summary (p50/p90/p99/p99.9) for reports.
+    pub fn quantile_summary(&self) -> String {
+        format!(
+            "p50 {}  p90 {}  p99 {}  p99.9 {}",
+            self.percentile(50.0),
+            self.percentile(90.0),
+            self.percentile(99.0),
+            self.percentile(99.9)
+        )
+    }
+
     /// Iterate `(value, count)` in ascending value order.
     pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
         self.counts.iter().map(|(&v, &c)| (v, c))
@@ -178,6 +218,48 @@ mod tests {
         assert_eq!(r[0], (20, 5));
         assert_eq!(r[1], (30, 3));
         assert_eq!(r[2], (10, 1));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut h = Histogram::new();
+        for v in 1..=100 {
+            h.add(v);
+        }
+        assert_eq!(h.percentile(0.0), 1);
+        assert_eq!(h.percentile(1.0), 1);
+        assert_eq!(h.percentile(50.0), 50);
+        assert_eq!(h.percentile(99.0), 99);
+        assert_eq!(h.percentile(100.0), 100);
+    }
+
+    #[test]
+    fn percentile_monotone_in_quantile() {
+        // Heavily skewed distribution: percentiles must never decrease
+        // as the quantile grows.
+        let mut h = Histogram::new();
+        h.add_n(1, 900);
+        h.add_n(10, 90);
+        h.add_n(1_000, 9);
+        h.add_n(100_000, 1);
+        let ps: Vec<f64> = (0..=1000).map(|i| i as f64 / 10.0).collect();
+        let qs = h.percentiles(&ps);
+        for w in qs.windows(2) {
+            assert!(w[1] >= w[0], "percentile not monotone: {w:?}");
+        }
+        assert_eq!(h.percentile(100.0), 100_000);
+        assert_eq!(h.percentile(50.0), 1);
+    }
+
+    #[test]
+    fn percentile_empty_and_single() {
+        assert_eq!(Histogram::new().percentile(99.0), 0);
+        let mut h = Histogram::new();
+        h.add(7);
+        for p in [0.0, 50.0, 99.9, 100.0] {
+            assert_eq!(h.percentile(p), 7);
+        }
+        assert!(h.quantile_summary().contains("p99"));
     }
 
     #[test]

@@ -197,6 +197,33 @@ impl<'a> Scheduler<'a> {
     /// Simulate one batch. All queries arrive at t=0 (the paper's
     /// batch-synchronous inference); the returned stats cover this batch.
     pub fn run_batch(&self, queries: &[Query], scratch: &mut Scratch) -> ExecStats {
+        self.run_batch_inner(queries, scratch, None)
+    }
+
+    /// As [`Scheduler::run_batch`], additionally reporting **per-query
+    /// finish times** (ns relative to batch start, one entry per input
+    /// query in order; empty queries finish at 0). `ExecStats` only keeps
+    /// the batch max, which is enough for batch-synchronous figures but
+    /// not for serving latency: the open-loop driver
+    /// ([`crate::loadgen::driver`]) needs each query's own completion to
+    /// compute sojourn times and tail percentiles.
+    pub fn run_batch_timed(
+        &self,
+        queries: &[Query],
+        scratch: &mut Scratch,
+        finish_ns: &mut Vec<f64>,
+    ) -> ExecStats {
+        finish_ns.clear();
+        finish_ns.reserve(queries.len());
+        self.run_batch_inner(queries, scratch, Some(finish_ns))
+    }
+
+    fn run_batch_inner(
+        &self,
+        queries: &[Query],
+        scratch: &mut Scratch,
+        mut finish_ns: Option<&mut Vec<f64>>,
+    ) -> ExecStats {
         scratch.busy.clear();
         scratch.busy.resize(self.num_physical(), 0.0);
         scratch.bus.clear();
@@ -209,6 +236,9 @@ impl<'a> Scheduler<'a> {
 
         for q in queries {
             if q.is_empty() {
+                if let Some(f) = finish_ns.as_deref_mut() {
+                    f.push(0.0);
+                }
                 continue;
             }
             self.query_runs(q, scratch);
@@ -249,6 +279,9 @@ impl<'a> Scheduler<'a> {
             if k > 1 {
                 query_finish += (k - 1) as f64 * add_ns;
                 stats.energy_pj += (k - 1) as f64 * add_pj;
+            }
+            if let Some(f) = finish_ns.as_deref_mut() {
+                f.push(query_finish);
             }
             batch_finish = batch_finish.max(query_finish);
             stats.queries += 1;
@@ -527,6 +560,30 @@ mod tests {
         assert_eq!(stats.activations, 1); // one (overflow-group) activation
         assert!(stats.rows_activated <= map.group_size as u64);
         assert!(stats.completion_ns > 0.0);
+    }
+
+    #[test]
+    fn timed_batch_matches_untimed_and_maxes_to_completion() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let s = Scheduler::new(&map, &rep, &m, true);
+        let mut scratch = Scratch::default();
+        let qs = vec![
+            Query::new(vec![0, 1]),
+            Query::new(vec![0, 2]),
+            Query::new(vec![]),
+            Query::new(vec![3]),
+        ];
+        let plain = s.run_batch(&qs, &mut scratch);
+        let mut finish = Vec::new();
+        let timed = s.run_batch_timed(&qs, &mut scratch, &mut finish);
+        assert_eq!(plain, timed, "timing must not perturb the schedule");
+        assert_eq!(finish.len(), qs.len(), "one finish per input query");
+        assert_eq!(finish[2], 0.0, "empty query finishes at t=0");
+        let max = finish.iter().cloned().fold(0.0f64, f64::max);
+        assert!((max - timed.completion_ns).abs() < 1e-9);
+        assert!(finish.iter().all(|&f| f >= 0.0 && f <= timed.completion_ns));
     }
 
     #[test]

@@ -6,6 +6,8 @@
 //!
 //! * [`rng`] — a `SplitMix64`-seeded `xoshiro256**` PRNG with the sampling
 //!   helpers the workload generator needs.
+//! * [`clock`] — injected time sources (wall + simulated) so the batcher
+//!   and the open-loop load generator run on one nanosecond timeline.
 //! * [`zipf`] — an exact inverse-CDF Zipf(α) sampler (the paper's power-law
 //!   access distributions).
 //! * [`cli`] — a small declarative command-line parser for the launcher.
@@ -16,10 +18,12 @@
 
 pub mod bench;
 pub mod cli;
+pub mod clock;
 pub mod fxhash;
 pub mod rng;
 pub mod zipf;
 
+pub use clock::{Clock, SimClock, WallClock};
 pub use fxhash::{FxHashMap, FxHashSet};
 pub use rng::Rng;
 pub use zipf::Zipf;

@@ -20,7 +20,7 @@ pub mod trace;
 
 pub use gen::{generate, Generator};
 pub use spec::{DatasetSpec, AMAZON_DATASETS};
-pub use trace::Trace;
+pub use trace::{TimedTrace, Trace};
 
 /// Identifier of one embedding row (an item).
 pub type EmbeddingId = u32;

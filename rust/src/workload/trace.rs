@@ -5,20 +5,31 @@
 //!
 //! ```text
 //! magic  b"RXTR"           4 bytes
-//! version u32              currently 1
+//! version u32              1 or 2
+//! flags   u32              v2 only; bit 0 = per-query timestamps present
 //! num_embeddings u32
 //! num_queries u64
-//! per query: len u32, then len * u32 item ids
+//! per query: [arrival_ns u64 when flagged,] len u32, len * u32 item ids
 //! ```
+//!
+//! Version 1 is the original closed-loop format (queries only). Version 2
+//! adds an optional per-query **arrival timestamp** (ns on the simulated
+//! clock, non-decreasing) so open-loop traffic — recorded or synthesized
+//! by [`crate::loadgen::arrival`] — replays bit-identically. [`Trace`]
+//! readers accept both versions (timestamps are skipped); [`TimedTrace`]
+//! preserves them.
 
 use super::Query;
 use crate::Result;
-use anyhow::{bail, Context};
+use anyhow::{bail, ensure, Context};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"RXTR";
-const VERSION: u32 = 1;
+const VERSION_V1: u32 = 1;
+const VERSION_V2: u32 = 2;
+/// v2 flag bit: each query is preceded by its arrival timestamp.
+const FLAG_TIMESTAMPS: u32 = 1;
 
 /// A workload trace: the embedding-table size plus an ordered list of
 /// queries.
@@ -26,6 +37,19 @@ const VERSION: u32 = 1;
 pub struct Trace {
     pub num_embeddings: u32,
     pub queries: Vec<Query>,
+}
+
+/// A trace with per-query arrival timestamps — the open-loop vocabulary:
+/// *when* each query hits the front-end, not just what it looks up.
+/// `arrivals_ns` is `None` when the source carried no timing (a v1 file),
+/// in which case a driver must synthesize arrivals
+/// ([`crate::loadgen::arrival`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedTrace {
+    pub trace: Trace,
+    /// Arrival time of each query, ns on the simulated clock,
+    /// non-decreasing; same length as `trace.queries`.
+    pub arrivals_ns: Option<Vec<u64>>,
 }
 
 impl Trace {
@@ -48,55 +72,18 @@ impl Trace {
         self.queries.chunks(batch_size)
     }
 
-    /// Serialize to a writer.
+    /// Serialize to a writer (version-1 layout: no timestamps).
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
         w.write_all(MAGIC)?;
-        w.write_all(&VERSION.to_le_bytes())?;
-        w.write_all(&self.num_embeddings.to_le_bytes())?;
-        w.write_all(&(self.queries.len() as u64).to_le_bytes())?;
-        for q in &self.queries {
-            w.write_all(&(q.items.len() as u32).to_le_bytes())?;
-            for &it in &q.items {
-                w.write_all(&it.to_le_bytes())?;
-            }
-        }
-        Ok(())
+        w.write_all(&VERSION_V1.to_le_bytes())?;
+        write_body(w, self, None)
     }
 
-    /// Deserialize from a reader.
+    /// Deserialize from a reader. Accepts version 1 and version 2 files;
+    /// v2 timestamps, if present, are dropped (use
+    /// [`TimedTrace::read_from`] to keep them).
     pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
-        let mut magic = [0u8; 4];
-        r.read_exact(&mut magic).context("reading trace magic")?;
-        if &magic != MAGIC {
-            bail!("not a ReCross trace file (bad magic {magic:?})");
-        }
-        let version = read_u32(r)?;
-        if version != VERSION {
-            bail!("unsupported trace version {version}");
-        }
-        let num_embeddings = read_u32(r)?;
-        let num_queries = read_u64(r)?;
-        // Sanity cap: refuse absurd files instead of OOMing.
-        if num_queries > 100_000_000 {
-            bail!("trace declares {num_queries} queries; refusing");
-        }
-        let mut queries = Vec::with_capacity(num_queries as usize);
-        for _ in 0..num_queries {
-            let len = read_u32(r)? as usize;
-            let mut items = Vec::with_capacity(len);
-            for _ in 0..len {
-                let it = read_u32(r)?;
-                if it >= num_embeddings {
-                    bail!("item id {it} out of range (table size {num_embeddings})");
-                }
-                items.push(it);
-            }
-            queries.push(Query::new(items));
-        }
-        Ok(Self {
-            num_embeddings,
-            queries,
-        })
+        Ok(read_any(r)?.trace)
     }
 
     /// Save to a file path.
@@ -115,6 +102,152 @@ impl Trace {
             .with_context(|| format!("opening {:?}", path.as_ref()))?;
         Self::read_from(&mut BufReader::new(f))
     }
+}
+
+impl TimedTrace {
+    /// Wrap a plain trace with explicit arrival times (validated).
+    pub fn new(trace: Trace, arrivals_ns: Vec<u64>) -> Result<Self> {
+        validate_arrivals(&arrivals_ns, trace.queries.len())?;
+        Ok(Self {
+            trace,
+            arrivals_ns: Some(arrivals_ns),
+        })
+    }
+
+    /// A trace with no timing information (reads back as such).
+    pub fn untimed(trace: Trace) -> Self {
+        Self {
+            trace,
+            arrivals_ns: None,
+        }
+    }
+
+    /// Serialize in the version-2 layout (timestamps included when
+    /// present).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        if let Some(ts) = &self.arrivals_ns {
+            validate_arrivals(ts, self.trace.queries.len())?;
+        }
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION_V2.to_le_bytes())?;
+        let flags = if self.arrivals_ns.is_some() {
+            FLAG_TIMESTAMPS
+        } else {
+            0
+        };
+        w.write_all(&flags.to_le_bytes())?;
+        write_body(w, &self.trace, self.arrivals_ns.as_deref())
+    }
+
+    /// Deserialize. A v1 file yields `arrivals_ns = None`.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        read_any(r)
+    }
+
+    /// Save to a file path (always version 2).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        let mut w = BufWriter::new(f);
+        self.write_to(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load from a file path (v1 or v2).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        Self::read_from(&mut BufReader::new(f))
+    }
+}
+
+fn validate_arrivals(ts: &[u64], num_queries: usize) -> Result<()> {
+    ensure!(
+        ts.len() == num_queries,
+        "{} timestamps for {num_queries} queries",
+        ts.len()
+    );
+    ensure!(
+        ts.windows(2).all(|w| w[0] <= w[1]),
+        "arrival timestamps must be non-decreasing"
+    );
+    Ok(())
+}
+
+/// Shared body writer: header fields after the version word, then the
+/// per-query records (timestamp-prefixed when `arrivals` is given).
+fn write_body<W: Write>(w: &mut W, trace: &Trace, arrivals: Option<&[u64]>) -> Result<()> {
+    w.write_all(&trace.num_embeddings.to_le_bytes())?;
+    w.write_all(&(trace.queries.len() as u64).to_le_bytes())?;
+    for (i, q) in trace.queries.iter().enumerate() {
+        if let Some(ts) = arrivals {
+            w.write_all(&ts[i].to_le_bytes())?;
+        }
+        w.write_all(&(q.items.len() as u32).to_le_bytes())?;
+        for &it in &q.items {
+            w.write_all(&it.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Shared reader for both versions.
+fn read_any<R: Read>(r: &mut R) -> Result<TimedTrace> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("reading trace magic")?;
+    if &magic != MAGIC {
+        bail!("not a ReCross trace file (bad magic {magic:?})");
+    }
+    let version = read_u32(r)?;
+    let flags = match version {
+        VERSION_V1 => 0,
+        VERSION_V2 => {
+            let f = read_u32(r)?;
+            if f & !FLAG_TIMESTAMPS != 0 {
+                bail!("trace v2 carries unknown flags {f:#x}");
+            }
+            f
+        }
+        other => bail!("unsupported trace version {other}"),
+    };
+    let timestamped = flags & FLAG_TIMESTAMPS != 0;
+    let num_embeddings = read_u32(r)?;
+    let num_queries = read_u64(r)?;
+    // Sanity cap: refuse absurd files instead of OOMing.
+    if num_queries > 100_000_000 {
+        bail!("trace declares {num_queries} queries; refusing");
+    }
+    let mut queries = Vec::with_capacity(num_queries as usize);
+    let mut arrivals = timestamped.then(|| Vec::with_capacity(num_queries as usize));
+    for _ in 0..num_queries {
+        if let Some(ts) = arrivals.as_mut() {
+            let t = read_u64(r)?;
+            if let Some(&prev) = ts.last() {
+                if t < prev {
+                    bail!("arrival timestamps regress ({t} after {prev})");
+                }
+            }
+            ts.push(t);
+        }
+        let len = read_u32(r)? as usize;
+        let mut items = Vec::with_capacity(len);
+        for _ in 0..len {
+            let it = read_u32(r)?;
+            if it >= num_embeddings {
+                bail!("item id {it} out of range (table size {num_embeddings})");
+            }
+            items.push(it);
+        }
+        queries.push(Query::new(items));
+    }
+    Ok(TimedTrace {
+        trace: Trace {
+            num_embeddings,
+            queries,
+        },
+        arrivals_ns: arrivals,
+    })
 }
 
 fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
@@ -201,5 +334,88 @@ mod tests {
         assert_eq!(batches.len(), 2);
         assert_eq!(batches[0].len(), 2);
         assert_eq!(batches[1].len(), 1);
+    }
+
+    // --- trace format v2 ---------------------------------------------------
+
+    #[test]
+    fn v2_roundtrips_timestamps() {
+        let tt = TimedTrace::new(sample(), vec![0, 1_000, 5_000]).unwrap();
+        let mut buf = Vec::new();
+        tt.write_to(&mut buf).unwrap();
+        let back = TimedTrace::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(tt, back);
+        assert_eq!(back.arrivals_ns.as_deref(), Some(&[0, 1_000, 5_000][..]));
+    }
+
+    #[test]
+    fn v2_file_roundtrip() {
+        let tt = TimedTrace::new(sample(), vec![7, 7, 9]).unwrap();
+        let path = std::env::temp_dir().join("recross_trace_v2_test.rxtr");
+        tt.save(&path).unwrap();
+        let back = TimedTrace::load(&path).unwrap();
+        assert_eq!(tt, back);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v1_bytes_still_parse_as_timed_with_no_arrivals() {
+        // A pre-existing v1 file must stay readable by both entry points.
+        let t = sample();
+        let mut v1_bytes = Vec::new();
+        t.write_to(&mut v1_bytes).unwrap();
+        assert_eq!(&v1_bytes[4..8], &1u32.to_le_bytes());
+        let timed = TimedTrace::read_from(&mut v1_bytes.as_slice()).unwrap();
+        assert_eq!(timed.trace, t);
+        assert!(timed.arrivals_ns.is_none());
+        assert_eq!(Trace::read_from(&mut v1_bytes.as_slice()).unwrap(), t);
+    }
+
+    #[test]
+    fn plain_reader_accepts_v2_and_drops_timestamps() {
+        let tt = TimedTrace::new(sample(), vec![1, 2, 3]).unwrap();
+        let mut buf = Vec::new();
+        tt.write_to(&mut buf).unwrap();
+        let plain = Trace::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(plain, sample());
+    }
+
+    #[test]
+    fn v2_untimed_reads_back_untimed() {
+        let tt = TimedTrace::untimed(sample());
+        let mut buf = Vec::new();
+        tt.write_to(&mut buf).unwrap();
+        let back = TimedTrace::read_from(&mut buf.as_slice()).unwrap();
+        assert!(back.arrivals_ns.is_none());
+        assert_eq!(back.trace, sample());
+    }
+
+    #[test]
+    fn regressing_timestamps_rejected() {
+        assert!(TimedTrace::new(sample(), vec![5, 3, 9]).is_err());
+        assert!(TimedTrace::new(sample(), vec![1, 2]).is_err()); // length
+        // And on the wire: a hand-corrupted v2 file must not load.
+        let tt = TimedTrace::new(sample(), vec![0, 10, 20]).unwrap();
+        let mut buf = Vec::new();
+        tt.write_to(&mut buf).unwrap();
+        // Second query's timestamp lives right after the first record:
+        // header (4+4+4+4+8) + ts(8) + len(4) + 3 items (12) = 48.
+        buf[48..56].copy_from_slice(&0u64.to_le_bytes());
+        // First ts = 0, second patched to 0 — still fine; patch first to 9.
+        buf[24..32].copy_from_slice(&9u64.to_le_bytes());
+        assert!(TimedTrace::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn unknown_version_and_flags_rejected() {
+        let mut buf = Vec::new();
+        sample().write_to(&mut buf).unwrap();
+        buf[4..8].copy_from_slice(&3u32.to_le_bytes());
+        assert!(Trace::read_from(&mut buf.as_slice()).is_err());
+
+        let mut buf2 = Vec::new();
+        TimedTrace::untimed(sample()).write_to(&mut buf2).unwrap();
+        buf2[8..12].copy_from_slice(&0xFFu32.to_le_bytes());
+        assert!(TimedTrace::read_from(&mut buf2.as_slice()).is_err());
     }
 }

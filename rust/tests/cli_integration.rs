@@ -110,6 +110,43 @@ fn bad_config_rejected() {
 }
 
 #[test]
+fn serve_open_loop_reports_tail_latency_and_is_bit_reproducible() {
+    // The open-loop simulator needs no PJRT artifacts and no threads:
+    // identical flags must produce byte-identical stdout.
+    let run = || {
+        recross(&[
+            "serve", "--arrivals", "poisson", "--rate", "200000", "--requests", "128",
+            "--dataset", "software", "--scale", "0.02", "--history", "300", "--eval", "64",
+            "--seed", "7", "--shards", "2",
+        ])
+    };
+    let out = run();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("open-loop serving sim"), "{text}");
+    for needle in ["p50", "p95", "p99", "p999", "single-pool", "sharded(2)", "mean-depth"] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    assert!(text.contains("per-shard backlog"));
+    let again = run();
+    assert_eq!(out.stdout, again.stdout, "open-loop sim must be bit-reproducible");
+}
+
+#[test]
+fn serve_open_loop_rejects_unknown_process_and_nmars() {
+    let out = recross(&["serve", "--arrivals", "fractal"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown arrival process"));
+
+    let out = recross(&[
+        "serve", "--arrivals", "poisson", "--scheme", "nmars", "--scale", "0.02", "--history",
+        "300", "--eval", "64",
+    ]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("MAC dataflow"));
+}
+
+#[test]
 fn serve_smoke_when_artifacts_exist() {
     if !recross::runtime::artifacts_available(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
         eprintln!("skipping serve smoke: artifacts missing");

@@ -1,0 +1,162 @@
+//! End-to-end tests of the open-loop traffic engine over a real offline
+//! phase: arrival processes → v2 timed traces → simulated-time driver →
+//! tail-latency telemetry, for the single-pool and sharded back-ends.
+
+use recross::cluster::{PoolShared, ShardPlan};
+use recross::config::Config;
+use recross::coordinator::{BatchPolicy, OfflinePhase};
+use recross::engine::Scheme;
+use recross::loadgen::{drive_sharded, drive_single, ArrivalKind, Arrivals};
+use recross::sched::{Scheduler, Scratch};
+use recross::workload::{DatasetSpec, Generator, TimedTrace, Trace};
+use std::time::Duration;
+
+const SCALE: f64 = 0.03;
+const QUERIES: usize = 384;
+
+fn setup() -> (OfflinePhase, Trace) {
+    let mut cfg = Config::paper_default();
+    cfg.workload.dataset = "software".into();
+    cfg.workload.history_queries = 800;
+    cfg.workload.eval_queries = 64;
+    let offline = OfflinePhase::run(&cfg, Scheme::ReCross, SCALE).unwrap();
+    let spec = DatasetSpec::by_name("software").unwrap().scaled(SCALE);
+    let gen = Generator::new(&spec, cfg.workload.seed);
+    let trace = gen.trace(QUERIES, 99);
+    (offline, trace)
+}
+
+fn policy(max_batch: usize, wait_us: u64) -> BatchPolicy {
+    BatchPolicy {
+        max_batch,
+        max_wait: Duration::from_micros(wait_us),
+    }
+}
+
+#[test]
+fn open_loop_end_to_end_is_deterministic_across_backends() {
+    let (offline, trace) = setup();
+    let engine = &offline.engine;
+    let sched = Scheduler::new(
+        engine.mapping(),
+        engine.replication(),
+        engine.model(),
+        engine.dynamic_switch(),
+    );
+    let shared = PoolShared::from_engine(engine);
+    let plan = ShardPlan::by_locality(&shared.mapping, &offline.history, 4, 0.10);
+    let p = policy(32, 5);
+    for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal] {
+        let arrivals = Arrivals::from_kind(kind, 100_000.0, 5).take(QUERIES);
+        let s1 = drive_single(&sched, &trace.queries, &arrivals, &p);
+        let s2 = drive_single(&sched, &trace.queries, &arrivals, &p);
+        assert_eq!(s1, s2, "{kind:?} single-pool drive not reproducible");
+        let c1 = drive_sharded(&shared, &plan, &trace.queries, &arrivals, &p);
+        let c2 = drive_sharded(&shared, &plan, &trace.queries, &arrivals, &p);
+        assert_eq!(c1, c2, "{kind:?} sharded drive not reproducible");
+        // Work conservation: every lookup served exactly once.
+        assert_eq!(s1.stats.lookups as usize, trace.total_lookups());
+        assert_eq!(c1.stats.lookups as usize, trace.total_lookups());
+        assert_eq!(s1.queries(), QUERIES);
+        assert_eq!(c1.queries(), QUERIES);
+        // Percentiles monotone in the quantile on both backends.
+        for r in [&s1, &c1] {
+            let qs: Vec<f64> = [50.0, 90.0, 95.0, 99.0, 99.9, 100.0]
+                .iter()
+                .map(|&q| r.percentile_ns(q))
+                .collect();
+            assert!(qs.windows(2).all(|w| w[1] >= w[0]), "{kind:?}: {qs:?}");
+        }
+    }
+}
+
+#[test]
+fn near_zero_load_p99_collapses_to_pure_service_time() {
+    let (offline, trace) = setup();
+    let engine = &offline.engine;
+    let sched = Scheduler::new(
+        engine.mapping(),
+        engine.replication(),
+        engine.model(),
+        engine.dynamic_switch(),
+    );
+    // 10 q/s against µs-scale service times, max_wait 0: every query is
+    // served alone, immediately.
+    let arrivals = Arrivals::poisson(10.0, 1).take(QUERIES);
+    let report = drive_single(&sched, &trace.queries, &arrivals, &policy(32, 0));
+    let mut scratch = Scratch::default();
+    let solo: Vec<f64> = trace
+        .queries
+        .iter()
+        .map(|q| sched.run_batch(std::slice::from_ref(q), &mut scratch).completion_ns)
+        .collect();
+    // Same rank convention as OpenLoopReport::percentile_ns by
+    // construction — both call metrics::percentile.
+    let solo_p99 = recross::metrics::percentile(&solo, 99.0);
+    // Tolerance covers the ulps lost adding/subtracting ~1e10 ns
+    // arrival timestamps around the µs-scale service times.
+    assert!(
+        (report.percentile_ns(99.0) - solo_p99).abs() < 1e-3,
+        "open-loop p99 {} != pure-service p99 {solo_p99}",
+        report.percentile_ns(99.0)
+    );
+    assert!(report.mean_queue_depth() < 1e-2);
+}
+
+#[test]
+fn recross_mapping_holds_the_tail_lower_than_naive_under_load() {
+    // The serving-layer restatement of the paper's headline: at an
+    // offered load the naive mapping cannot sustain, the ReCross mapping
+    // still answers with a bounded tail.
+    let mut cfg = Config::paper_default();
+    cfg.workload.dataset = "software".into();
+    cfg.workload.history_queries = 800;
+    cfg.workload.eval_queries = 64;
+    let naive_off = OfflinePhase::run(&cfg, Scheme::Naive, SCALE).unwrap();
+    let re_off = OfflinePhase::run(&cfg, Scheme::ReCross, SCALE).unwrap();
+    let spec = DatasetSpec::by_name("software").unwrap().scaled(SCALE);
+    let trace = Generator::new(&spec, cfg.workload.seed).trace(QUERIES, 99);
+    let p = policy(32, 5);
+    // Rate at ~half of recross capacity, far past naive capacity.
+    let cap_re = QUERIES as f64
+        / (re_off.engine.run_trace(&trace, p.max_batch).completion_ns / 1e9);
+    let arrivals = Arrivals::poisson(0.5 * cap_re, 3).take(QUERIES);
+    let drive = |off: &OfflinePhase| {
+        let e = &off.engine;
+        let sched = Scheduler::new(e.mapping(), e.replication(), e.model(), e.dynamic_switch());
+        drive_single(&sched, &trace.queries, &arrivals, &p)
+    };
+    let rn = drive(&naive_off);
+    let rr = drive(&re_off);
+    assert!(
+        rr.percentile_ns(99.0) < rn.percentile_ns(99.0),
+        "recross p99 {} !< naive p99 {}",
+        rr.percentile_ns(99.0),
+        rn.percentile_ns(99.0)
+    );
+}
+
+#[test]
+fn timed_trace_replay_reproduces_the_drive() {
+    let (offline, trace) = setup();
+    let engine = &offline.engine;
+    let sched = Scheduler::new(
+        engine.mapping(),
+        engine.replication(),
+        engine.model(),
+        engine.dynamic_switch(),
+    );
+    let p = policy(16, 5);
+    let timed = Arrivals::bursty(150_000.0, 21).stamp(trace.clone());
+    let mut buf = Vec::new();
+    timed.write_to(&mut buf).unwrap();
+    let loaded = TimedTrace::read_from(&mut buf.as_slice()).unwrap();
+    let ts = loaded.arrivals_ns.expect("v2 kept the stamps");
+    let direct = drive_single(&sched, &trace.queries, &ts, &p);
+    let replayed = {
+        let mut replay = Arrivals::replay(ts.clone());
+        let again = replay.take(trace.queries.len());
+        drive_single(&sched, &loaded.trace.queries, &again, &p)
+    };
+    assert_eq!(direct, replayed, "disk round-trip changed the drive");
+}
