@@ -1,0 +1,279 @@
+//! Scheduler hot-path throughput: data-oriented vs reference, with a
+//! machine-readable perf trajectory.
+//!
+//! Sweeps {replica copies, bus channels, batch size, pooling factor}
+//! over synthetic Zipf workloads, runs both the optimized scheduler
+//! (`sched::Scheduler`: tournament-tree slot selection, sort-free run
+//! decomposition) and the preserved naive loop
+//! (`sched::ReferenceScheduler`), asserts their schedules are
+//! bit-identical, and writes **`BENCH_sched.json`** at the repository
+//! root: per config, simulated-queries/second and slot-comparison counts
+//! for both implementations (schema in DESIGN.md §"Simulator
+//! performance"). CI runs `--smoke` (seconds-scale) on every push and
+//! uploads the file as an artifact, so the perf trajectory accumulates
+//! across PRs.
+
+use recross::allocation::{self, Replication};
+use recross::config::HardwareConfig;
+use recross::grouping::Mapping;
+use recross::sched::{ReferenceScheduler, ReferenceScratch, Scheduler, Scratch};
+use recross::util::bench::black_box;
+use recross::util::{Rng, Zipf};
+use recross::workload::{Query, Trace};
+use recross::xbar::{CircuitParams, CrossbarModel};
+use std::time::Instant;
+
+/// One sweep point. `copies = 0` means "plan by Eq. 1" (dup_ratio 0.10,
+/// the paper's default budget); otherwise every group gets exactly
+/// `copies` replicas so the replica-scan length is an explicit knob.
+#[derive(Clone, Copy)]
+struct SweepPoint {
+    name: &'static str,
+    groups: usize,
+    copies: u32,
+    bus_channels: usize,
+    batch: usize,
+    pooling: usize,
+}
+
+const GROUP_SIZE: usize = 64;
+
+fn pt(
+    name: &'static str,
+    groups: usize,
+    copies: u32,
+    bus_channels: usize,
+    batch: usize,
+    pooling: usize,
+) -> SweepPoint {
+    SweepPoint {
+        name,
+        groups,
+        copies,
+        bus_channels,
+        batch,
+        pooling,
+    }
+}
+
+fn full_points() -> Vec<SweepPoint> {
+    // Paper-like baseline first: Eq. 1 copies (<= ~5), 16 channels. Both
+    // slot tables stay on the flat fast path — this row is the
+    // no-regression evidence for tiny configs.
+    let mut pts = vec![pt("eq1-base", 1024, 0, 16, 256, 32)];
+    for &c in &[2u32, 8, 32, 128] {
+        pts.push(pt("copies", 512, c, 32, 256, 32));
+    }
+    for &b in &[8usize, 64, 256] {
+        pts.push(pt("bus", 512, 8, b, 256, 32));
+    }
+    for &n in &[64usize, 1024] {
+        pts.push(pt("batch", 512, 32, 64, n, 32));
+    }
+    for &p in &[8usize, 128] {
+        pts.push(pt("pooling", 512, 32, 64, 256, p));
+    }
+    pts
+}
+
+fn smoke_points() -> Vec<SweepPoint> {
+    vec![
+        pt("eq1-base", 128, 0, 16, 64, 16),
+        pt("copies", 128, 64, 32, 64, 16),
+        pt("bus", 128, 8, 128, 64, 16),
+        pt("pooling", 128, 32, 64, 64, 64),
+    ]
+}
+
+/// Mean wall-clock ns per call of `f`, with warm-up.
+fn measure<F: FnMut()>(mut f: F, measure_ns: u64, min_iters: u64) -> f64 {
+    let warm = Instant::now();
+    let warm_budget = std::time::Duration::from_nanos(measure_ns / 4);
+    let mut warm_iters = 0u64;
+    while warm.elapsed() < warm_budget || warm_iters < 2 {
+        f();
+        warm_iters += 1;
+    }
+    let start = Instant::now();
+    let budget = std::time::Duration::from_nanos(measure_ns);
+    let mut iters = 0u64;
+    while start.elapsed() < budget || iters < min_iters {
+        f();
+        iters += 1;
+    }
+    start.elapsed().as_nanos() as f64 / iters as f64
+}
+
+struct Side {
+    qps: f64,
+    ns_per_batch: f64,
+    comparisons: u64,
+}
+
+struct Row {
+    point: SweepPoint,
+    physical: usize,
+    max_copies: u32,
+    reference: Side,
+    optimized: Side,
+}
+
+fn run_point(pt: &SweepPoint, measure_ns: u64, seed: u64) -> Row {
+    let n = pt.groups * GROUP_SIZE;
+    let groups: Vec<Vec<u32>> = (0..pt.groups)
+        .map(|g| ((g * GROUP_SIZE) as u32..((g + 1) * GROUP_SIZE) as u32).collect())
+        .collect();
+    let map = Mapping::from_groups(groups, GROUP_SIZE, n);
+
+    // Zipf item popularity: low ids are hot, so low groups are hot —
+    // the same skew Eq. 1 is designed around.
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(n, 1.05);
+    let queries: Vec<Query> = (0..pt.batch)
+        .map(|_| Query::new((0..pt.pooling).map(|_| zipf.sample(&mut rng) as u32).collect()))
+        .collect();
+
+    let rep = if pt.copies == 0 {
+        let trace = Trace {
+            num_embeddings: n as u32,
+            queries: queries.clone(),
+        };
+        let freqs = allocation::group_frequencies(&map, &trace);
+        allocation::plan_replication(&freqs, pt.batch, 0.10)
+    } else {
+        Replication::from_copies(vec![pt.copies; pt.groups], pt.batch)
+    };
+    let hw = HardwareConfig {
+        bus_channels: pt.bus_channels,
+        ..Default::default()
+    };
+    let model = CrossbarModel::new(&hw, &CircuitParams::default());
+
+    let opt = Scheduler::new(&map, &rep, &model, true);
+    let naive = ReferenceScheduler::new(&map, &rep, &model, true);
+    let mut scratch = Scratch::default();
+    let mut rscratch = ReferenceScratch::default();
+
+    // Correctness gate: a benchmark of a wrong scheduler is worthless.
+    let a = opt.run_batch(&queries, &mut scratch);
+    let b = naive.run_batch(&queries, &mut rscratch);
+    assert_eq!(a, b, "{}: optimized and reference schedules diverged", pt.name);
+
+    // Deterministic comparison counts for exactly one batch.
+    scratch.reset_comparisons();
+    rscratch.reset_comparisons();
+    opt.run_batch(&queries, &mut scratch);
+    naive.run_batch(&queries, &mut rscratch);
+    let opt_cmps = scratch.comparisons();
+    let ref_cmps = rscratch.comparisons();
+
+    let opt_ns = measure(
+        || {
+            black_box(opt.run_batch(&queries, &mut scratch));
+        },
+        measure_ns,
+        3,
+    );
+    let ref_ns = measure(
+        || {
+            black_box(naive.run_batch(&queries, &mut rscratch));
+        },
+        measure_ns,
+        3,
+    );
+
+    let side = |ns_per_batch: f64, comparisons: u64| Side {
+        qps: pt.batch as f64 / (ns_per_batch / 1e9),
+        ns_per_batch,
+        comparisons,
+    };
+    Row {
+        point: *pt,
+        physical: rep.total_crossbars,
+        max_copies: rep.copies.iter().copied().max().unwrap_or(1),
+        reference: side(ref_ns, ref_cmps),
+        optimized: side(opt_ns, opt_cmps),
+    }
+}
+
+fn json(rows: &[Row], smoke: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"sched_throughput\",\n");
+    out.push_str("  \"version\": 1,\n");
+    out.push_str(&format!("  \"mode\": \"{}\",\n", if smoke { "smoke" } else { "full" }));
+    out.push_str("  \"configs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let p = &r.point;
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"name\": \"{}\",\n", p.name));
+        out.push_str(&format!(
+            "      \"groups\": {}, \"group_size\": {GROUP_SIZE}, \"copies\": {}, \
+             \"max_copies\": {}, \"physical_crossbars\": {},\n",
+            p.groups, p.copies, r.max_copies, r.physical
+        ));
+        out.push_str(&format!(
+            "      \"bus_channels\": {}, \"batch\": {}, \"pooling\": {},\n",
+            p.bus_channels, p.batch, p.pooling
+        ));
+        for (key, s) in [("reference", &r.reference), ("optimized", &r.optimized)] {
+            out.push_str(&format!(
+                "      \"{key}\": {{\"sim_queries_per_sec\": {:.1}, \"ns_per_batch\": {:.1}, \
+                 \"comparisons_per_batch\": {}}},\n",
+                s.qps, s.ns_per_batch, s.comparisons
+            ));
+        }
+        out.push_str(&format!(
+            "      \"speedup\": {:.3},\n      \"comparison_ratio\": {:.3}\n",
+            r.reference.ns_per_batch / r.optimized.ns_per_batch,
+            r.reference.comparisons as f64 / (r.optimized.comparisons.max(1)) as f64
+        ));
+        out.push_str(if i + 1 == rows.len() { "    }\n" } else { "    },\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (points, measure_ns) = if smoke {
+        (smoke_points(), 60_000_000u64) // 60 ms/side/config: seconds total
+    } else {
+        (full_points(), 1_000_000_000u64)
+    };
+
+    println!(
+        "== scheduler throughput: optimized (tree) vs reference (scan), {} mode ==\n",
+        if smoke { "smoke" } else { "full" }
+    );
+    println!(
+        "{:<10} {:>7} {:>6} {:>5} {:>6} {:>8} {:>12} {:>12} {:>8} {:>10}",
+        "config", "groups", "copies", "bus", "batch", "pooling", "ref q/s", "opt q/s",
+        "speedup", "cmp ratio"
+    );
+
+    let mut rows = Vec::new();
+    for (i, pt) in points.iter().enumerate() {
+        let row = run_point(pt, measure_ns, 0xBE11C + i as u64);
+        println!(
+            "{:<10} {:>7} {:>6} {:>5} {:>6} {:>8} {:>12.0} {:>12.0} {:>7.2}x {:>9.1}x",
+            pt.name,
+            pt.groups,
+            row.max_copies,
+            pt.bus_channels,
+            pt.batch,
+            pt.pooling,
+            row.reference.qps,
+            row.optimized.qps,
+            row.reference.ns_per_batch / row.optimized.ns_per_batch,
+            row.reference.comparisons as f64 / row.optimized.comparisons.max(1) as f64,
+        );
+        rows.push(row);
+    }
+
+    // The perf trajectory lands at the repository root so it diffs and
+    // uploads uniformly across PRs regardless of cargo's working dir.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sched.json");
+    std::fs::write(&path, json(&rows, smoke)).expect("writing BENCH_sched.json");
+    println!("\nwrote {}", path.display());
+}

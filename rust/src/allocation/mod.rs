@@ -81,15 +81,21 @@ impl Replication {
 
 /// Per-group access frequency over a trace: how many *activations* each
 /// group would receive (one per query that touches it).
+///
+/// Sort-free: the epoch-stamped [`crate::grouping::TouchSet`] collects
+/// each query's distinct groups in O(k) instead of the old
+/// sort+dedup's O(k log k) — this runs over the *whole history trace*
+/// on every (re)planning pass, so it is offline-phase hot. The counts
+/// are identical (integer increments, order-independent).
 pub fn group_frequencies(mapping: &Mapping, trace: &Trace) -> Vec<u64> {
     let mut freq = vec![0u64; mapping.num_groups()];
-    let mut scratch: Vec<u32> = Vec::new();
+    let mut touch = crate::grouping::TouchSet::default();
     for q in &trace.queries {
-        scratch.clear();
-        scratch.extend(q.items.iter().map(|&e| mapping.slot_of(e).group));
-        scratch.sort_unstable();
-        scratch.dedup();
-        for &g in scratch.iter() {
+        touch.begin(mapping.num_groups());
+        for &e in &q.items {
+            touch.add(mapping.slot_of(e).group);
+        }
+        for &g in touch.touched() {
             freq[g as usize] += 1;
         }
     }

@@ -120,11 +120,10 @@ impl ShardStore {
             }
             let slot = mapping.slot_of(e);
             match self.row(slot.group, slot.row) {
-                Some(row) => {
-                    for (o, &v) in out.iter_mut().zip(row) {
-                        *o += v;
-                    }
-                }
+                // Blocked 4-wide accumulation (`util::accum`): identical
+                // per-element sum order, so partials stay bit-identical
+                // to the pre-blocked loop and to `reduce_reference`.
+                Some(row) => crate::util::accum::add_assign_4wide(out, row),
                 None => return false,
             }
         }

@@ -98,9 +98,9 @@ impl EmbeddingStore {
             if (e as usize) >= n {
                 continue;
             }
-            for (o, &v) in out.iter_mut().zip(self.embedding(e)) {
-                *o += v;
-            }
+            // Blocked 4-wide accumulation: same per-element sum order as
+            // the scalar loop, so the result is bit-identical.
+            crate::util::accum::add_assign_4wide(&mut out, self.embedding(e));
         }
         out
     }
@@ -109,8 +109,25 @@ impl EmbeddingStore {
     /// precision actually programmed into the ReRAM cells (Table I: 8-bit
     /// weights across 2-bit cells). Returns the quantized store and the
     /// scale factor (LSB value); dequantized values are `q * scale`.
+    ///
+    /// **Contract:** `mapping` must describe the same catalogue this
+    /// store was built from — the quantized table is re-tiled per
+    /// `mapping`, so a mapping over a different embedding count would
+    /// silently gather the wrong rows (or truncate the table). Asserted
+    /// here as `mapping.num_embeddings() * dim == table.len()`; callers
+    /// that re-map (e.g. after a rebalance) must quantize against the
+    /// *new* mapping only once the store has been rebuilt for it.
     pub fn quantized(&self, mapping: &crate::grouping::Mapping, bits: u32) -> (Self, f32) {
         assert!((2..=16).contains(&bits), "unsupported weight width {bits}");
+        assert_eq!(
+            mapping.num_embeddings() * self.dim,
+            self.table.len(),
+            "mapping ({} embeddings) inconsistent with the store this was built from \
+             ({} x dim {})",
+            mapping.num_embeddings(),
+            self.table.len() / self.dim.max(1),
+            self.dim
+        );
         let qmax = ((1i32 << (bits - 1)) - 1) as f32;
         let absmax = self
             .table
@@ -225,6 +242,17 @@ mod tests {
                 .fold(0.0f32, f32::max)
         };
         assert!(err(4) >= err(8), "4-bit {} vs 8-bit {}", err(4), err(8));
+    }
+
+    #[test]
+    #[should_panic(expected = "inconsistent with the store")]
+    fn quantized_rejects_foreign_mapping() {
+        // Regression: quantizing against a mapping for a different
+        // catalogue used to re-tile garbage; now it dies loudly.
+        let m4 = Mapping::from_groups(vec![vec![0, 1], vec![2, 3]], 2, 4);
+        let s = EmbeddingStore::random(&m4, 8, 2, 3);
+        let m2 = Mapping::from_groups(vec![vec![0, 1]], 2, 2);
+        let _ = s.quantized(&m2, 8);
     }
 
     #[test]

@@ -184,12 +184,21 @@ impl Mapping {
     /// keep correlated crossbars on the same shard.
     pub fn group_adjacency(&self, trace: &Trace) -> Vec<Vec<(u32, u64)>> {
         let mut weights: FxHashMap<u64, u64> = FxHashMap::default();
-        let mut scratch: Vec<u32> = Vec::new();
+        // Epoch-stamped accumulation (like `allocation::group_frequencies`):
+        // this walks the whole history trace on every replanning pass, so
+        // the per-query sort+dedup is replaced by an O(k) TouchSet with
+        // only the ≤k distinct groups sorted for canonical pair order.
+        let mut touch = TouchSet::default();
         for q in &trace.queries {
-            self.groups_touched(&q.items, &mut scratch);
-            for (i, &a) in scratch.iter().enumerate() {
-                for &b in &scratch[i + 1..] {
-                    // scratch is sorted, so (a, b) is already canonical.
+            touch.begin(self.num_groups());
+            for &e in &q.items {
+                touch.add(self.slot_of(e).group);
+            }
+            touch.sort_touched();
+            let groups = touch.touched();
+            for (i, &a) in groups.iter().enumerate() {
+                for &b in &groups[i + 1..] {
+                    // sorted ascending, so (a, b) is already canonical.
                     let key = ((a as u64) << 32) | b as u64;
                     *weights.entry(key).or_insert(0) += 1;
                 }
@@ -284,6 +293,81 @@ impl Mapping {
             shard_count[s] += 1;
         }
         shard_of
+    }
+}
+
+/// Epoch-stamped distinct-group accumulator — the sort-free core of the
+/// scheduler's run decomposition and the allocation planner's frequency
+/// counting.
+///
+/// The naive way to collect a query's distinct groups is *collect, sort,
+/// dedup*: O(k log k) per query with a fresh sort each time. `TouchSet`
+/// keeps one slot per group (`stamp`/`count`, grown lazily to the
+/// mapping's group count) and an epoch counter: [`TouchSet::begin`] bumps
+/// the epoch, which invalidates every slot in O(1) — no O(num_groups)
+/// clear — and [`TouchSet::add`] stamps, zeroes, and counts in O(1). Only
+/// the ≤k *touched* groups are ever sorted (by the caller, when order
+/// matters), so a k-lookup query costs O(k) to accumulate and O(k log k)
+/// worst-case only over its distinct groups, not its items.
+///
+/// The epoch is a `u64`: it cannot wrap in any realistic run, so a stale
+/// stamp can never alias a live one.
+#[derive(Debug, Clone, Default)]
+pub struct TouchSet {
+    /// Current epoch; slots with `stamp[g] == epoch` are live.
+    epoch: u64,
+    /// Last epoch each group was touched in.
+    stamp: Vec<u64>,
+    /// Touch count per group, valid only when the stamp is current.
+    count: Vec<u32>,
+    /// Groups touched this epoch, in first-touch order.
+    touched: Vec<u32>,
+}
+
+impl TouchSet {
+    /// Start a new accumulation over `num_groups` groups. O(1) amortised
+    /// (grows the slot arrays on first use or when the mapping grows).
+    pub fn begin(&mut self, num_groups: usize) {
+        if self.stamp.len() < num_groups {
+            self.stamp.resize(num_groups, 0);
+            self.count.resize(num_groups, 0);
+        }
+        self.epoch += 1;
+        self.touched.clear();
+    }
+
+    /// Count one touch of group `g`.
+    #[inline]
+    pub fn add(&mut self, g: u32) {
+        let gi = g as usize;
+        if self.stamp[gi] != self.epoch {
+            self.stamp[gi] = self.epoch;
+            self.count[gi] = 0;
+            self.touched.push(g);
+        }
+        self.count[gi] += 1;
+    }
+
+    /// Sort the touched-group list ascending (≤k elements).
+    pub fn sort_touched(&mut self) {
+        self.touched.sort_unstable();
+    }
+
+    /// Groups touched this epoch (first-touch order, or ascending after
+    /// [`TouchSet::sort_touched`]).
+    pub fn touched(&self) -> &[u32] {
+        &self.touched
+    }
+
+    /// Touches of group `g` this epoch (0 if untouched).
+    #[inline]
+    pub fn count_of(&self, g: u32) -> u32 {
+        let gi = g as usize;
+        if self.stamp.get(gi) == Some(&self.epoch) {
+            self.count[gi]
+        } else {
+            0
+        }
     }
 }
 
@@ -415,5 +499,66 @@ mod tests {
     fn single_shard_is_trivial() {
         let (m, t) = co_access_fixture();
         assert_eq!(m.partition_across(&t, 1, 0.0), vec![0; 4]);
+    }
+
+    #[test]
+    fn touch_set_counts_distinct_groups() {
+        let mut ts = TouchSet::default();
+        ts.begin(8);
+        for g in [3, 1, 3, 3, 7, 1] {
+            ts.add(g);
+        }
+        assert_eq!(ts.touched(), &[3, 1, 7], "first-touch order");
+        ts.sort_touched();
+        assert_eq!(ts.touched(), &[1, 3, 7]);
+        assert_eq!(ts.count_of(3), 3);
+        assert_eq!(ts.count_of(1), 2);
+        assert_eq!(ts.count_of(7), 1);
+        assert_eq!(ts.count_of(0), 0, "untouched group counts zero");
+        assert_eq!(ts.count_of(100), 0, "out-of-range group counts zero");
+    }
+
+    #[test]
+    fn touch_set_epochs_isolate_queries() {
+        let mut ts = TouchSet::default();
+        ts.begin(4);
+        ts.add(2);
+        ts.add(2);
+        assert_eq!(ts.count_of(2), 2);
+        // New epoch: previous counts are invisible without any O(n) clear.
+        ts.begin(4);
+        assert!(ts.touched().is_empty());
+        assert_eq!(ts.count_of(2), 0);
+        ts.add(0);
+        assert_eq!(ts.touched(), &[0]);
+        assert_eq!(ts.count_of(0), 1);
+        // Growing the group universe mid-stream is fine.
+        ts.begin(16);
+        ts.add(15);
+        assert_eq!(ts.count_of(15), 1);
+    }
+
+    #[test]
+    fn touch_set_matches_sort_dedup_on_random_streams() {
+        let mut rng = crate::util::Rng::new(77);
+        let mut ts = TouchSet::default();
+        for _ in 0..200 {
+            let n = rng.range(1, 40) as usize;
+            let k = rng.range(0, 60) as usize;
+            let items: Vec<u32> = (0..k).map(|_| rng.below(n as u64) as u32).collect();
+            ts.begin(n);
+            for &g in &items {
+                ts.add(g);
+            }
+            ts.sort_touched();
+            let mut expect = items.clone();
+            expect.sort_unstable();
+            expect.dedup();
+            assert_eq!(ts.touched(), &expect[..]);
+            for &g in &expect {
+                let count = items.iter().filter(|&&x| x == g).count() as u32;
+                assert_eq!(ts.count_of(g), count);
+            }
+        }
     }
 }

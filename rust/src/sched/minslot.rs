@@ -1,0 +1,350 @@
+//! Deterministic min-slot tables — the scheduler's O(log C) selection core.
+//!
+//! The hot loop of [`super::Scheduler`] answers the same question millions
+//! of times per simulated second: *which slot in a busy-until table frees
+//! up first?* — once per activation for the group's replica range, once
+//! for the global bus-channel table. The naive answer
+//! ([`super::reference`]) is a linear scan, O(slots) per activation; at
+//! the paper's scale (heavy Eq. 1 replication, wide bus configs) the scan
+//! dominates the simulator's own runtime.
+//!
+//! [`MinSlotTable`] replaces the scan with a **tournament (segment) tree**
+//! over the busy-until times: every internal node caches the minimum of
+//! its subtree *and the leftmost leaf index achieving it*, giving
+//!
+//! * `min_all` — O(1) (the root *is* the answer),
+//! * `min_range(l, r)` — O(log(r−l)) node visits,
+//! * `set(i, v)` — O(log C) parent recomputations.
+//!
+//! **Determinism / tie-break.** The reference scan keeps the *first*
+//! (lowest-index) slot that attains the minimum (strict `<` while
+//! scanning left to right). The tree reproduces that exactly: a parent
+//! adopts its right child only on a strictly smaller value (equal values
+//! keep the left child, whose indices are all lower), and range queries
+//! fold candidate nodes with the lexicographic `(value, index)` order.
+//! Both rules select the unique lexicographically-least `(value, index)`
+//! pair, so tree and scan pick identical slots on every input — the
+//! schedules are bit-identical, not merely statistically equivalent.
+//!
+//! **Crossover.** A tree walk beats a scan only when the scanned range is
+//! long: a range of `c` slots costs the scan `c−1` comparisons but the
+//! tree ~`2·log₂(c)` visits *plus* a `log₂(C)` root path per update. The
+//! caller therefore chooses the layout per table via [`MinSlotTable::reset`]'s
+//! `flat` flag, keyed on the longest range it will ever scan
+//! ([`FLAT_CROSSOVER`]): max replica copies for the crossbar table,
+//! channel count for the bus table. Paper-default configs (≤5 copies,
+//! 16 channels) stay on the flat path and cannot regress.
+//!
+//! **Op counters.** Every value comparison — flat or tree — increments an
+//! always-on counter ([`MinSlotTable::comparisons`]). The counters are
+//! how `tests/sched_equivalence.rs` proves the asymptotic win and how
+//! `benches/throughput.rs` reports it into `BENCH_sched.json`, so they
+//! are not gated behind a feature; the cost is one integer add alongside
+//! a float compare. Table (re)initialisation is excluded by both
+//! implementations' accounting — it is the same O(C) fill either way.
+
+/// Longest scan a flat table should absorb before the tree layout pays
+/// for itself (see the module docs for the cost model). Conservatively
+/// high: at the crossover the two layouts are within ~2× of each other,
+/// and flat's cache behaviour is better.
+pub const FLAT_CROSSOVER: usize = 32;
+
+/// A busy-until table with deterministic least-loaded selection.
+///
+/// Two layouts behind one API (chosen by [`MinSlotTable::reset`]):
+///
+/// * **flat** — a plain `Vec<f64>`; selection scans, updates are O(1).
+/// * **tree** — a perfect binary tournament tree in two flat arrays
+///   (`val`/`idx`, children of `p` at `2p`/`2p+1`, leaves at
+///   `cap..cap+len` with `+∞` padding); selection descends, updates walk
+///   the root path.
+#[derive(Debug, Clone, Default)]
+pub struct MinSlotTable {
+    /// Live slots.
+    len: usize,
+    /// Leaf capacity (power of two) in tree mode; 0 marks flat mode.
+    cap: usize,
+    /// Flat mode: `val[0..len]`. Tree mode: `val[1]` is the root,
+    /// `val[cap + i]` is slot `i`, padding leaves are `+∞`.
+    val: Vec<f64>,
+    /// Tree mode only: leftmost argmin of each node's subtree.
+    idx: Vec<u32>,
+    /// Value comparisons performed since the last
+    /// [`MinSlotTable::reset_comparisons`].
+    comparisons: u64,
+}
+
+impl MinSlotTable {
+    /// Reinitialise to `len` slots, all at time 0.0. `flat` picks the
+    /// layout; pass `scan_len <= FLAT_CROSSOVER` where `scan_len` is the
+    /// longest range the caller will query. Counters are preserved (they
+    /// accumulate across batches until explicitly reset).
+    pub fn reset(&mut self, len: usize, flat: bool) {
+        self.len = len;
+        if flat || len <= 1 {
+            self.cap = 0;
+            self.idx.clear();
+            self.val.clear();
+            self.val.resize(len, 0.0);
+            return;
+        }
+        let cap = len.next_power_of_two();
+        self.cap = cap;
+        self.val.clear();
+        self.val.resize(2 * cap, f64::INFINITY);
+        self.idx.clear();
+        self.idx.resize(2 * cap, 0);
+        for v in &mut self.val[cap..cap + len] {
+            *v = 0.0;
+        }
+        for (i, x) in self.idx[cap..].iter_mut().enumerate() {
+            *x = i as u32;
+        }
+        // Build bottom-up. All live leaves are equal (0.0), so this is
+        // initialisation, not scheduling work — neither layout counts its
+        // O(C) fill (the flat table's `resize` is the same cost).
+        for p in (1..cap).rev() {
+            let (l, r) = (2 * p, 2 * p + 1);
+            if self.val[r] < self.val[l] {
+                self.val[p] = self.val[r];
+                self.idx[p] = self.idx[r];
+            } else {
+                self.val[p] = self.val[l];
+                self.idx[p] = self.idx[l];
+            }
+        }
+    }
+
+    /// Current busy-until time of slot `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        debug_assert!(i < self.len);
+        if self.cap == 0 {
+            self.val[i]
+        } else {
+            self.val[self.cap + i]
+        }
+    }
+
+    /// Set slot `i`'s busy-until time.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: f64) {
+        debug_assert!(i < self.len);
+        if self.cap == 0 {
+            self.val[i] = v;
+            return;
+        }
+        let mut p = self.cap + i;
+        self.val[p] = v;
+        p >>= 1;
+        while p >= 1 {
+            let (l, r) = (2 * p, 2 * p + 1);
+            self.comparisons += 1;
+            // Equal values keep the LEFT child: its leaves all have lower
+            // indices, which is exactly the reference scan's first-minimum
+            // rule.
+            if self.val[r] < self.val[l] {
+                self.val[p] = self.val[r];
+                self.idx[p] = self.idx[r];
+            } else {
+                self.val[p] = self.val[l];
+                self.idx[p] = self.idx[l];
+            }
+            p >>= 1;
+        }
+    }
+
+    /// Least-loaded slot over the whole table; ties break toward the
+    /// lowest index. Tree mode reads the root in O(1).
+    #[inline]
+    pub fn min_all(&mut self) -> (usize, f64) {
+        debug_assert!(self.len > 0, "min over an empty slot table");
+        if self.cap == 0 {
+            return self.scan(0, self.len);
+        }
+        (self.idx[1] as usize, self.val[1])
+    }
+
+    /// Least-loaded slot in `[l, r)`; ties break toward the lowest index.
+    pub fn min_range(&mut self, l: usize, r: usize) -> (usize, f64) {
+        debug_assert!(l < r && r <= self.len, "min over empty range {l}..{r}");
+        if self.cap == 0 {
+            return self.scan(l, r);
+        }
+        let mut best_v = f64::INFINITY;
+        let mut best_i = u32::MAX;
+        let mut lo = self.cap + l;
+        let mut hi = self.cap + r;
+        while lo < hi {
+            if lo & 1 == 1 {
+                self.fold(&mut best_v, &mut best_i, lo);
+                lo += 1;
+            }
+            if hi & 1 == 1 {
+                hi -= 1;
+                self.fold(&mut best_v, &mut best_i, hi);
+            }
+            lo >>= 1;
+            hi >>= 1;
+        }
+        (best_i as usize, best_v)
+    }
+
+    /// Value comparisons since the last [`MinSlotTable::reset_comparisons`].
+    pub fn comparisons(&self) -> u64 {
+        self.comparisons
+    }
+
+    /// Zero the comparison counter.
+    pub fn reset_comparisons(&mut self) {
+        self.comparisons = 0;
+    }
+
+    /// Fold one covering node into the running `(value, index)` minimum.
+    /// Lexicographic order makes the result visit-order independent: the
+    /// winner is the unique least `(value, index)` pair in the range.
+    #[inline]
+    fn fold(&mut self, best_v: &mut f64, best_i: &mut u32, node: usize) {
+        self.comparisons += 1;
+        let (v, i) = (self.val[node], self.idx[node]);
+        if v < *best_v || (v == *best_v && i < *best_i) {
+            *best_v = v;
+            *best_i = i;
+        }
+    }
+
+    /// Flat-mode linear scan: first minimum wins, `r - l - 1` comparisons
+    /// (identical count and selection to the reference scheduler's scan).
+    fn scan(&mut self, l: usize, r: usize) -> (usize, f64) {
+        self.comparisons += (r - l - 1) as u64;
+        let mut idx = l;
+        let mut best = self.val[l];
+        for (off, &v) in self.val[l + 1..r].iter().enumerate() {
+            if v < best {
+                best = v;
+                idx = l + 1 + off;
+            }
+        }
+        (idx, best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Naive model: plain vector + reference scan rule.
+    struct Model(Vec<f64>);
+
+    impl Model {
+        fn min_range(&self, l: usize, r: usize) -> (usize, f64) {
+            let mut idx = l;
+            let mut best = self.0[l];
+            for i in l + 1..r {
+                if self.0[i] < best {
+                    best = self.0[i];
+                    idx = i;
+                }
+            }
+            (idx, best)
+        }
+    }
+
+    fn differential(len: usize, flat: bool, seed: u64) {
+        let mut t = MinSlotTable::default();
+        t.reset(len, flat);
+        let mut m = Model(vec![0.0; len]);
+        let mut rng = Rng::new(seed);
+        for step in 0..2_000 {
+            // Mutate a random slot; quantized values force frequent ties.
+            let i = rng.index(len);
+            let v = rng.below(8) as f64 * 0.5;
+            t.set(i, v);
+            m.0[i] = v;
+            // Check a random range + the full table + a point read.
+            let a = rng.index(len);
+            let b = rng.index(len);
+            let (l, r) = if a <= b { (a, b + 1) } else { (b, a + 1) };
+            assert_eq!(t.min_range(l, r), m.min_range(l, r), "step {step} range {l}..{r}");
+            assert_eq!(t.min_all(), m.min_range(0, len), "step {step} min_all");
+            let j = rng.index(len);
+            assert_eq!(t.get(j), m.0[j], "step {step} get({j})");
+        }
+    }
+
+    #[test]
+    fn tree_matches_reference_scan() {
+        differential(100, false, 1);
+        differential(64, false, 2); // exact power of two
+        differential(33, false, 3); // just past the crossover
+    }
+
+    #[test]
+    fn flat_matches_reference_scan() {
+        differential(32, true, 4);
+        differential(7, true, 5);
+        differential(1, true, 6);
+    }
+
+    #[test]
+    fn ties_break_toward_lowest_index() {
+        for &flat in &[true, false] {
+            let mut t = MinSlotTable::default();
+            t.reset(40, flat);
+            // All zeros: slot 0 wins everywhere.
+            assert_eq!(t.min_all(), (0, 0.0));
+            assert_eq!(t.min_range(5, 23), (5, 0.0));
+            // Two equal minima: the lower index wins.
+            for i in 0..40 {
+                t.set(i, 9.0);
+            }
+            t.set(31, 2.0);
+            t.set(11, 2.0);
+            assert_eq!(t.min_all(), (11, 2.0));
+            assert_eq!(t.min_range(12, 40), (31, 2.0));
+            assert_eq!(t.min_range(11, 32), (11, 2.0));
+        }
+    }
+
+    #[test]
+    fn reset_restores_zero_and_keeps_counters() {
+        let mut t = MinSlotTable::default();
+        t.reset(50, false);
+        t.set(3, 7.0);
+        let _ = t.min_range(0, 50);
+        let c = t.comparisons();
+        assert!(c > 0);
+        t.reset(50, false);
+        assert_eq!(t.min_all(), (0, 0.0));
+        assert_eq!(t.get(3), 0.0);
+        assert_eq!(t.comparisons(), c, "reset must not clear counters");
+        t.reset_comparisons();
+        assert_eq!(t.comparisons(), 0);
+        // Shrinking / growing across resets reuses the buffers.
+        t.reset(8, true);
+        assert_eq!(t.min_all(), (0, 0.0));
+        t.reset(200, false);
+        assert_eq!(t.min_range(150, 200), (150, 0.0));
+    }
+
+    #[test]
+    fn tree_updates_cost_logarithmically() {
+        // 1024 slots: a full-table scan costs 1023 comparisons; a tree
+        // update costs log2(1024) = 10 and min_all is free.
+        let mut tree = MinSlotTable::default();
+        tree.reset(1024, false);
+        tree.reset_comparisons();
+        tree.set(513, 4.0);
+        let (i, _) = tree.min_all();
+        assert_eq!(i, 0);
+        assert!(tree.comparisons() <= 10, "{} > 10", tree.comparisons());
+
+        let mut flat = MinSlotTable::default();
+        flat.reset(1024, true);
+        flat.reset_comparisons();
+        flat.set(513, 4.0);
+        let _ = flat.min_all();
+        assert_eq!(flat.comparisons(), 1023);
+    }
+}

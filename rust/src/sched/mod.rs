@@ -20,9 +20,31 @@
 //! The same event loop also implements the nMARS dataflow (parallel
 //! in-memory row lookups + *sequential* external aggregation) so all
 //! schemes share one timing substrate.
+//!
+//! ## Hot-path layout (§Perf iteration 4)
+//!
+//! The inner loop is data-oriented: replica and bus-channel selection go
+//! through [`minslot::MinSlotTable`] — a tournament tree with a flat-scan
+//! fast path below [`minslot::FLAT_CROSSOVER`] — giving O(log C) instead
+//! of O(C) selection on heavily replicated / wide-bus configurations, and
+//! run decomposition is sort-free via the epoch-stamped
+//! [`TouchSet`](crate::grouping::TouchSet) (O(k) accumulation; only the
+//! ≤k distinct touched groups are sorted to preserve ascending-group run
+//! order). The produced schedule is **bit-identical** to the naive loop,
+//! which is preserved as [`reference::ReferenceScheduler`] and
+//! differentially fuzzed against this one in
+//! `tests/sched_equivalence.rs`; `benches/throughput.rs` measures both
+//! and writes the comparison into `BENCH_sched.json`. See DESIGN.md
+//! §"Simulator performance".
+
+pub mod minslot;
+pub mod reference;
+
+pub use minslot::MinSlotTable;
+pub use reference::{ReferenceScheduler, ReferenceScratch};
 
 use crate::allocation::Replication;
-use crate::grouping::Mapping;
+use crate::grouping::{Mapping, TouchSet};
 use crate::workload::Query;
 use crate::xbar::{AdcMode, CrossbarModel};
 
@@ -113,25 +135,6 @@ impl ExecStats {
     }
 }
 
-/// First least-loaded slot in a busy-until table (ties break toward the
-/// lower index, keeping replica/channel selection fully deterministic).
-/// This is the same "join the shortest queue" rule the cluster front-end
-/// applies one level up when it routes sub-queries across replica-holding
-/// shards.
-#[inline]
-fn least_loaded(busy: &[f64]) -> (usize, f64) {
-    debug_assert!(!busy.is_empty(), "least_loaded over an empty slot table");
-    let mut idx = 0;
-    let mut best = busy[0];
-    for (i, &b) in busy.iter().enumerate().skip(1) {
-        if b < best {
-            best = b;
-            idx = i;
-        }
-    }
-    (idx, best)
-}
-
 /// Scheduler over a fixed mapping + replication plan.
 #[derive(Debug)]
 pub struct Scheduler<'a> {
@@ -144,6 +147,12 @@ pub struct Scheduler<'a> {
     /// iteration 3: the circuit model is pure in `rows`, so the per-
     /// activation float math is hoisted out of the batch loop).
     cost_by_rows: Vec<crate::xbar::ActivationCost>,
+    /// Layout of the replica busy table: flat when the longest replica
+    /// range (max copies) fits a scan, tree otherwise. Decided once here,
+    /// not per batch — see [`minslot`]'s crossover discussion.
+    busy_flat: bool,
+    /// Layout of the bus-channel table (keyed on channel count).
+    bus_flat: bool,
 }
 
 /// Reusable per-batch scratch buffers (hot path: allocation-free).
@@ -151,12 +160,30 @@ pub struct Scheduler<'a> {
 pub struct Scratch {
     /// (group, rows) runs for the current query.
     runs: Vec<(u32, u32)>,
-    /// group ids of the current query (pre-sort buffer).
-    groups: Vec<u32>,
-    /// busy-until time per physical crossbar.
-    busy: Vec<f64>,
-    /// busy-until time per global-bus channel.
-    bus: Vec<f64>,
+    /// Epoch-stamped per-group touch counters (sort-free run decomposition).
+    touch: TouchSet,
+    /// Busy-until table per physical crossbar.
+    busy: MinSlotTable,
+    /// Busy-until table per global-bus channel.
+    bus: MinSlotTable,
+}
+
+impl Scratch {
+    /// Value comparisons performed by slot selection since the last
+    /// [`Scratch::reset_comparisons`] (replica + bus tables; accumulates
+    /// across batches). The reference scheduler counts the same quantity
+    /// ([`ReferenceScratch::comparisons`]), so the two are directly
+    /// comparable — `BENCH_sched.json`'s `comparison_ratio` is exactly
+    /// this ratio.
+    pub fn comparisons(&self) -> u64 {
+        self.busy.comparisons() + self.bus.comparisons()
+    }
+
+    /// Zero the comparison counters.
+    pub fn reset_comparisons(&mut self) {
+        self.busy.reset_comparisons();
+        self.bus.reset_comparisons();
+    }
 }
 
 impl<'a> Scheduler<'a> {
@@ -171,6 +198,10 @@ impl<'a> Scheduler<'a> {
             replication.copies.len(),
             "replication plan does not match mapping"
         );
+        debug_assert!(
+            model.bus_channels() >= 1,
+            "CrossbarModel construction validates bus_channels >= 1"
+        );
         let mut replica_base = Vec::with_capacity(mapping.num_groups());
         let mut next = 0u32;
         for &c in &replication.copies {
@@ -180,12 +211,15 @@ impl<'a> Scheduler<'a> {
         let cost_by_rows = (0..=mapping.group_size)
             .map(|r| model.activation(r.max(1), dynamic_switch))
             .collect();
+        let max_copies = replication.copies.iter().copied().max().unwrap_or(1) as usize;
         Self {
             mapping,
             replication,
             model,
             replica_base,
             cost_by_rows,
+            busy_flat: max_copies <= minslot::FLAT_CROSSOVER,
+            bus_flat: model.bus_channels() <= minslot::FLAT_CROSSOVER,
         }
     }
 
@@ -224,10 +258,8 @@ impl<'a> Scheduler<'a> {
         scratch: &mut Scratch,
         mut finish_ns: Option<&mut Vec<f64>>,
     ) -> ExecStats {
-        scratch.busy.clear();
-        scratch.busy.resize(self.num_physical(), 0.0);
-        scratch.bus.clear();
-        scratch.bus.resize(self.model.bus_channels(), 0.0);
+        scratch.busy.reset(self.num_physical(), self.busy_flat);
+        scratch.bus.reset(self.model.bus_channels(), self.bus_flat);
         let (add_ns, add_pj) = self.model.vector_add();
         let flit_ns = self.model.bus_flit_ns();
 
@@ -247,18 +279,25 @@ impl<'a> Scheduler<'a> {
 
             for &(group, rows) in &scratch.runs {
                 let cost = self.cost_by_rows[rows as usize];
-                // least-loaded replica of this group
+                // Least-loaded replica of this group. Unreplicated groups
+                // (the common case under a tight dup budget) skip
+                // selection entirely — matching the reference scan's zero
+                // comparisons over a one-slot range.
                 let base = self.replica_base[group as usize] as usize;
                 let copies = self.replication.copies_of(group) as usize;
-                let (slot, start) = least_loaded(&scratch.busy[base..base + copies]);
+                let (slot, start) = if copies == 1 {
+                    (base, scratch.busy.get(base))
+                } else {
+                    scratch.busy.min_range(base, base + copies)
+                };
                 let finish = start + cost.latency_ns;
-                scratch.busy[base + slot] = finish;
+                scratch.busy.set(slot, finish);
 
                 // Result transfer on the least-busy global-bus channel.
-                let (chan, chan_busy) = least_loaded(&scratch.bus);
+                let (chan, chan_busy) = scratch.bus.min_all();
                 let t_start = finish.max(chan_busy);
                 let t_finish = t_start + cost.bus_flits as f64 * flit_ns;
-                scratch.bus[chan] = t_finish;
+                scratch.bus.set(chan, t_finish);
 
                 stats.stall_ns += start; // queue wait from batch arrival
                 stats.bus_wait_ns += t_start - finish;
@@ -295,10 +334,8 @@ impl<'a> Scheduler<'a> {
     /// full-resolution read (in-memory lookup), aggregation is sequential
     /// per query on an external adder.
     pub fn run_batch_nmars(&self, queries: &[Query], scratch: &mut Scratch) -> ExecStats {
-        scratch.busy.clear();
-        scratch.busy.resize(self.num_physical(), 0.0);
-        scratch.bus.clear();
-        scratch.bus.resize(self.model.bus_channels(), 0.0);
+        scratch.busy.reset(self.num_physical(), self.busy_flat);
+        scratch.bus.reset(self.model.bus_channels(), self.bus_flat);
         let (add_ns, add_pj) = self.model.vector_add();
         let lookup = self.model.row_lookup();
         let flit_ns = self.model.bus_flit_ns();
@@ -315,14 +352,18 @@ impl<'a> Scheduler<'a> {
                 let slot = self.mapping.slot_of(e);
                 let base = self.replica_base[slot.group as usize] as usize;
                 let copies = self.replication.copies_of(slot.group) as usize;
-                let (rep, start_busy) = least_loaded(&scratch.busy[base..base + copies]);
+                let (rep, start_busy) = if copies == 1 {
+                    (base, scratch.busy.get(base))
+                } else {
+                    scratch.busy.min_range(base, base + copies)
+                };
                 let finish = start_busy + lookup.latency_ns;
-                scratch.busy[base + rep] = finish;
+                scratch.busy.set(rep, finish);
                 // Every looked-up row ships over the global bus.
-                let (chan, chan_busy) = least_loaded(&scratch.bus);
+                let (chan, chan_busy) = scratch.bus.min_all();
                 let t_start = finish.max(chan_busy);
                 let t_finish = t_start + lookup.bus_flits as f64 * flit_ns;
-                scratch.bus[chan] = t_finish;
+                scratch.bus.set(chan, t_finish);
                 stats.stall_ns += start_busy;
                 stats.bus_wait_ns += t_start - finish;
                 stats.energy_pj += lookup.energy_pj;
@@ -344,7 +385,11 @@ impl<'a> Scheduler<'a> {
         stats
     }
 
-    /// Decompose a query into `(group, rows)` runs using scratch buffers.
+    /// Decompose a query into `(group, rows)` runs, sort-free: an
+    /// epoch-stamped [`TouchSet`] accumulates per-group row counts in
+    /// O(k), then only the ≤k distinct touched groups are sorted so the
+    /// emitted runs keep the ascending-group order the sort-based
+    /// decomposition ([`reference`]) produces — byte for byte.
     ///
     /// Rows are clamped to `group_size`: distinct cold-start ids beyond
     /// the catalogue all collapse onto the overflow group's row 0
@@ -353,21 +398,15 @@ impl<'a> Scheduler<'a> {
     /// than it has.
     fn query_runs(&self, q: &Query, scratch: &mut Scratch) {
         let max_rows = self.mapping.group_size.max(1) as u32;
-        scratch.groups.clear();
-        scratch
-            .groups
-            .extend(q.items.iter().map(|&e| self.mapping.slot_of(e).group));
-        scratch.groups.sort_unstable();
-        scratch.runs.clear();
-        let mut i = 0;
-        while i < scratch.groups.len() {
-            let g = scratch.groups[i];
-            let mut rows = 0u32;
-            while i < scratch.groups.len() && scratch.groups[i] == g {
-                rows += 1;
-                i += 1;
-            }
-            scratch.runs.push((g, rows.min(max_rows)));
+        let Scratch { runs, touch, .. } = scratch;
+        touch.begin(self.mapping.num_groups());
+        for &e in &q.items {
+            touch.add(self.mapping.slot_of(e).group);
+        }
+        touch.sort_touched();
+        runs.clear();
+        for &g in touch.touched() {
+            runs.push((g, touch.count_of(g).min(max_rows)));
         }
     }
 }
@@ -596,5 +635,87 @@ mod tests {
         let stats = s.run_batch(&[Query::new(vec![])], &mut scratch);
         assert_eq!(stats.queries, 0);
         assert_eq!(stats.completion_ns, 0.0);
+    }
+
+    /// In-module smoke of the equivalence contract (the full ≥200-config
+    /// differential fuzz lives in `tests/sched_equivalence.rs`): a
+    /// replicated, contended batch with cold-start ids must produce the
+    /// exact same stats and finish times as the reference scheduler.
+    #[test]
+    fn matches_reference_scheduler_exactly() {
+        let m = model();
+        let map = Mapping::from_groups(
+            vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]],
+            2,
+            8,
+        );
+        let rep = Replication::from_copies(vec![3, 1, 2, 1], 8);
+        let opt = Scheduler::new(&map, &rep, &m, true);
+        let naive = ReferenceScheduler::new(&map, &rep, &m, true);
+        let qs: Vec<Query> = vec![
+            Query::new(vec![0, 1, 2]),
+            Query::new(vec![0, 4, 6]),
+            Query::new(vec![]),
+            Query::new(vec![7, 900, 901]), // cold-start tail
+            Query::new(vec![0, 1]),
+            Query::new(vec![2, 3, 4, 5, 6, 7]),
+        ];
+        let mut scratch = Scratch::default();
+        let mut rscratch = ReferenceScratch::default();
+        let (mut fa, mut fb) = (Vec::new(), Vec::new());
+        assert_eq!(
+            opt.run_batch(&qs, &mut scratch),
+            naive.run_batch(&qs, &mut rscratch)
+        );
+        assert_eq!(
+            opt.run_batch_timed(&qs, &mut scratch, &mut fa),
+            naive.run_batch_timed(&qs, &mut rscratch, &mut fb)
+        );
+        assert_eq!(fa, fb, "per-query finish times must be bit-identical");
+        assert_eq!(
+            opt.run_batch_nmars(&qs, &mut scratch),
+            naive.run_batch_nmars(&qs, &mut rscratch)
+        );
+    }
+
+    #[test]
+    fn comparison_counters_accumulate_and_reset() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let s = Scheduler::new(&map, &rep, &m, true);
+        let mut scratch = Scratch::default();
+        let qs = vec![Query::new(vec![0, 2]), Query::new(vec![0, 1, 3])];
+        s.run_batch(&qs, &mut scratch);
+        let once = scratch.comparisons();
+        // Unreplicated groups cost nothing; the default 16-channel bus
+        // table costs 15 per activation (flat scan), 4 activations total.
+        assert_eq!(once, 4 * 15);
+        s.run_batch(&qs, &mut scratch);
+        assert_eq!(scratch.comparisons(), 2 * once, "counters accumulate");
+        scratch.reset_comparisons();
+        assert_eq!(scratch.comparisons(), 0);
+    }
+
+    #[test]
+    fn scratch_survives_scheduler_and_size_changes() {
+        // One Scratch serves schedulers of very different shapes (the
+        // sharded driver reuses a single scratch across per-shard
+        // schedulers): tables resize, epochs isolate, results stay right.
+        let m = model();
+        let map_a = mapping_2x2();
+        let rep_a = Replication::identity(2, 4);
+        let sa = Scheduler::new(&map_a, &rep_a, &m, true);
+        let groups_b: Vec<Vec<u32>> = (0..40u32).map(|g| vec![2 * g, 2 * g + 1]).collect();
+        let map_b = Mapping::from_groups(groups_b, 2, 80);
+        let rep_b = Replication::from_copies(vec![40; 40], 80); // tree-mode busy table
+        let sb = Scheduler::new(&map_b, &rep_b, &m, true);
+        let mut scratch = Scratch::default();
+        let qa = vec![Query::new(vec![0, 2])];
+        let qb = vec![Query::new(vec![0, 11, 79])];
+        let first = sa.run_batch(&qa, &mut scratch);
+        sb.run_batch(&qb, &mut scratch);
+        let again = sa.run_batch(&qa, &mut scratch);
+        assert_eq!(first, again, "interleaving schedulers must not leak state");
     }
 }

@@ -1,0 +1,321 @@
+//! The naive scheduler hot path, preserved verbatim as a differential
+//! oracle.
+//!
+//! This is the pre-data-oriented implementation of [`super::Scheduler`]:
+//! an O(copies) linear scan per activation for replica selection, an
+//! O(bus_channels) scan per activation for bus-channel selection, and a
+//! per-query `sort_unstable` in its run decomposition. It is kept — not
+//! deleted — because the optimized scheduler's contract is *bit-identical
+//! schedules*: `tests/sched_equivalence.rs` fuzzes the two against each
+//! other on seeded workloads and requires exact `ExecStats` and per-query
+//! `finish_ns` equality, covering replication, cold-start overflow,
+//! nMARS, and the timed path. `benches/throughput.rs` runs both and
+//! records the speedup and comparison-count ratio into
+//! `BENCH_sched.json`.
+//!
+//! Apart from the comparison counter threaded through
+//! [`least_loaded`] (one integer add per float compare, mirroring
+//! [`super::minslot::MinSlotTable`]'s accounting), this file must stay a
+//! faithful copy of the naive loop: fixes to the *model* belong in both
+//! implementations, fixes to *performance* belong only in the optimized
+//! one.
+
+use super::ExecStats;
+use crate::allocation::Replication;
+use crate::grouping::Mapping;
+use crate::workload::Query;
+use crate::xbar::{AdcMode, CrossbarModel};
+
+/// First least-loaded slot in a busy-until table (ties break toward the
+/// lower index — the first minimum encountered by the scan). Counts one
+/// comparison per scanned element after the first.
+#[inline]
+fn least_loaded(busy: &[f64], comparisons: &mut u64) -> (usize, f64) {
+    debug_assert!(!busy.is_empty(), "least_loaded over an empty slot table");
+    *comparisons += (busy.len() - 1) as u64;
+    let mut idx = 0;
+    let mut best = busy[0];
+    for (i, &b) in busy.iter().enumerate().skip(1) {
+        if b < best {
+            best = b;
+            idx = i;
+        }
+    }
+    (idx, best)
+}
+
+/// Reusable per-batch scratch buffers for the reference scheduler.
+#[derive(Debug, Default)]
+pub struct ReferenceScratch {
+    /// (group, rows) runs for the current query.
+    runs: Vec<(u32, u32)>,
+    /// group ids of the current query (pre-sort buffer).
+    groups: Vec<u32>,
+    /// busy-until time per physical crossbar.
+    busy: Vec<f64>,
+    /// busy-until time per global-bus channel.
+    bus: Vec<f64>,
+    /// Value comparisons performed by slot selection.
+    comparisons: u64,
+}
+
+impl ReferenceScratch {
+    /// Value comparisons since the last
+    /// [`ReferenceScratch::reset_comparisons`] (accumulates across
+    /// batches, like the optimized scheduler's counters).
+    pub fn comparisons(&self) -> u64 {
+        self.comparisons
+    }
+
+    /// Zero the comparison counter.
+    pub fn reset_comparisons(&mut self) {
+        self.comparisons = 0;
+    }
+}
+
+/// The naive scheduler over a fixed mapping + replication plan. Same
+/// model, same API surface as [`super::Scheduler`]; O(slots) selection.
+#[derive(Debug)]
+pub struct ReferenceScheduler<'a> {
+    mapping: &'a Mapping,
+    replication: &'a Replication,
+    model: &'a CrossbarModel,
+    /// Physical crossbar id of the first replica of each group.
+    replica_base: Vec<u32>,
+    /// Precomputed activation cost per activated-row count.
+    cost_by_rows: Vec<crate::xbar::ActivationCost>,
+}
+
+impl<'a> ReferenceScheduler<'a> {
+    pub fn new(
+        mapping: &'a Mapping,
+        replication: &'a Replication,
+        model: &'a CrossbarModel,
+        dynamic_switch: bool,
+    ) -> Self {
+        assert_eq!(
+            mapping.num_groups(),
+            replication.copies.len(),
+            "replication plan does not match mapping"
+        );
+        let mut replica_base = Vec::with_capacity(mapping.num_groups());
+        let mut next = 0u32;
+        for &c in &replication.copies {
+            replica_base.push(next);
+            next += c;
+        }
+        let cost_by_rows = (0..=mapping.group_size)
+            .map(|r| model.activation(r.max(1), dynamic_switch))
+            .collect();
+        Self {
+            mapping,
+            replication,
+            model,
+            replica_base,
+            cost_by_rows,
+        }
+    }
+
+    /// Total physical crossbars.
+    pub fn num_physical(&self) -> usize {
+        self.replication.total_crossbars
+    }
+
+    /// Simulate one batch (all queries arrive at t=0).
+    pub fn run_batch(&self, queries: &[Query], scratch: &mut ReferenceScratch) -> ExecStats {
+        self.run_batch_inner(queries, scratch, None)
+    }
+
+    /// As [`ReferenceScheduler::run_batch`], additionally reporting
+    /// per-query finish times (ns relative to batch start, one entry per
+    /// input query in order; empty queries finish at 0).
+    pub fn run_batch_timed(
+        &self,
+        queries: &[Query],
+        scratch: &mut ReferenceScratch,
+        finish_ns: &mut Vec<f64>,
+    ) -> ExecStats {
+        finish_ns.clear();
+        finish_ns.reserve(queries.len());
+        self.run_batch_inner(queries, scratch, Some(finish_ns))
+    }
+
+    fn run_batch_inner(
+        &self,
+        queries: &[Query],
+        scratch: &mut ReferenceScratch,
+        mut finish_ns: Option<&mut Vec<f64>>,
+    ) -> ExecStats {
+        scratch.busy.clear();
+        scratch.busy.resize(self.num_physical(), 0.0);
+        scratch.bus.clear();
+        scratch.bus.resize(self.model.bus_channels(), 0.0);
+        let (add_ns, add_pj) = self.model.vector_add();
+        let flit_ns = self.model.bus_flit_ns();
+
+        let mut stats = ExecStats::default();
+        let mut batch_finish = 0.0f64;
+
+        for q in queries {
+            if q.is_empty() {
+                if let Some(f) = finish_ns.as_deref_mut() {
+                    f.push(0.0);
+                }
+                continue;
+            }
+            self.query_runs(q, scratch);
+            let mut query_finish = 0.0f64;
+            let k = scratch.runs.len();
+
+            for &(group, rows) in &scratch.runs {
+                let cost = self.cost_by_rows[rows as usize];
+                // least-loaded replica of this group
+                let base = self.replica_base[group as usize] as usize;
+                let copies = self.replication.copies_of(group) as usize;
+                let (slot, start) =
+                    least_loaded(&scratch.busy[base..base + copies], &mut scratch.comparisons);
+                let finish = start + cost.latency_ns;
+                scratch.busy[base + slot] = finish;
+
+                // Result transfer on the least-busy global-bus channel.
+                let (chan, chan_busy) = least_loaded(&scratch.bus, &mut scratch.comparisons);
+                let t_start = finish.max(chan_busy);
+                let t_finish = t_start + cost.bus_flits as f64 * flit_ns;
+                scratch.bus[chan] = t_finish;
+
+                stats.stall_ns += start; // queue wait from batch arrival
+                stats.bus_wait_ns += t_start - finish;
+                stats.energy_pj += cost.energy_pj;
+                stats.activations += 1;
+                stats.rows_activated += rows as u64;
+                if rows == 1 {
+                    stats.single_row_activations += 1;
+                }
+                match cost.mode {
+                    AdcMode::Mac => stats.mac_activations += 1,
+                    AdcMode::Read => stats.read_activations += 1,
+                }
+                query_finish = query_finish.max(t_finish);
+            }
+
+            // Merge partial sums across the k crossbars.
+            if k > 1 {
+                query_finish += (k - 1) as f64 * add_ns;
+                stats.energy_pj += (k - 1) as f64 * add_pj;
+            }
+            if let Some(f) = finish_ns.as_deref_mut() {
+                f.push(query_finish);
+            }
+            batch_finish = batch_finish.max(query_finish);
+            stats.queries += 1;
+            stats.lookups += q.len() as u64;
+        }
+        stats.completion_ns = batch_finish;
+        stats
+    }
+
+    /// nMARS dataflow over the same mapping (parallel in-memory row
+    /// lookups, sequential external aggregation).
+    pub fn run_batch_nmars(&self, queries: &[Query], scratch: &mut ReferenceScratch) -> ExecStats {
+        scratch.busy.clear();
+        scratch.busy.resize(self.num_physical(), 0.0);
+        scratch.bus.clear();
+        scratch.bus.resize(self.model.bus_channels(), 0.0);
+        let (add_ns, add_pj) = self.model.vector_add();
+        let lookup = self.model.row_lookup();
+        let flit_ns = self.model.bus_flit_ns();
+
+        let mut stats = ExecStats::default();
+        let mut batch_finish = 0.0f64;
+
+        for q in queries {
+            if q.is_empty() {
+                continue;
+            }
+            let mut last_read = 0.0f64;
+            for &e in &q.items {
+                let slot = self.mapping.slot_of(e);
+                let base = self.replica_base[slot.group as usize] as usize;
+                let copies = self.replication.copies_of(slot.group) as usize;
+                let (rep, start_busy) =
+                    least_loaded(&scratch.busy[base..base + copies], &mut scratch.comparisons);
+                let finish = start_busy + lookup.latency_ns;
+                scratch.busy[base + rep] = finish;
+                // Every looked-up row ships over the global bus.
+                let (chan, chan_busy) = least_loaded(&scratch.bus, &mut scratch.comparisons);
+                let t_start = finish.max(chan_busy);
+                let t_finish = t_start + lookup.bus_flits as f64 * flit_ns;
+                scratch.bus[chan] = t_finish;
+                stats.stall_ns += start_busy;
+                stats.bus_wait_ns += t_start - finish;
+                stats.energy_pj += lookup.energy_pj;
+                stats.activations += 1;
+                stats.rows_activated += 1;
+                stats.single_row_activations += 1;
+                stats.read_activations += 1; // gated single-row sense
+                last_read = last_read.max(t_finish);
+            }
+            // Sequential external aggregation (the nMARS bottleneck).
+            let adds = (q.len() - 1) as f64;
+            let query_finish = last_read + adds * add_ns;
+            stats.energy_pj += adds * add_pj;
+            batch_finish = batch_finish.max(query_finish);
+            stats.queries += 1;
+            stats.lookups += q.len() as u64;
+        }
+        stats.completion_ns = batch_finish;
+        stats
+    }
+
+    /// Decompose a query into `(group, rows)` runs: sort every item's
+    /// group id, then emit ascending-group runs with rows clamped to
+    /// `group_size` (distinct cold-start ids collapse onto the overflow
+    /// group's row 0 and can nominally exceed the crossbar height).
+    fn query_runs(&self, q: &Query, scratch: &mut ReferenceScratch) {
+        let max_rows = self.mapping.group_size.max(1) as u32;
+        scratch.groups.clear();
+        scratch
+            .groups
+            .extend(q.items.iter().map(|&e| self.mapping.slot_of(e).group));
+        scratch.groups.sort_unstable();
+        scratch.runs.clear();
+        let mut i = 0;
+        while i < scratch.groups.len() {
+            let g = scratch.groups[i];
+            let mut rows = 0u32;
+            while i < scratch.groups.len() && scratch.groups[i] == g {
+                rows += 1;
+                i += 1;
+            }
+            scratch.runs.push((g, rows.min(max_rows)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::xbar::CircuitParams;
+
+    fn model() -> CrossbarModel {
+        CrossbarModel::new(&HardwareConfig::default(), &CircuitParams::default())
+    }
+
+    #[test]
+    fn counts_linear_scan_comparisons() {
+        // 2 groups x 3 copies, 16 bus channels: every activation scans
+        // 3 replica slots (2 cmps) and 16 channels (15 cmps).
+        let map = Mapping::from_groups(vec![vec![0, 1], vec![2, 3]], 2, 4);
+        let rep = Replication::from_copies(vec![3, 3], 4);
+        let m = model();
+        let s = ReferenceScheduler::new(&map, &rep, &m, true);
+        let mut scratch = ReferenceScratch::default();
+        // One query touching one group = exactly one activation.
+        let stats = s.run_batch(&[Query::new(vec![0, 1])], &mut scratch);
+        assert_eq!(stats.activations, 1);
+        assert_eq!(scratch.comparisons(), 2 + 15);
+        scratch.reset_comparisons();
+        assert_eq!(scratch.comparisons(), 0);
+    }
+}

@@ -1,0 +1,86 @@
+//! Blocked numeric accumulators for the f32 reduce hot paths.
+//!
+//! The serving-side reductions ([`crate::cluster::ShardStore::reduce_into`],
+//! [`crate::coordinator::EmbeddingStore::reduce_reference`]) sum embedding
+//! rows element-wise into a `dim`-long accumulator. A naive `zip` loop
+//! carries a loop-dependent bounds check and gives the compiler one add
+//! chain; the tiles are already laid out contiguously (`[R, D]`
+//! row-major), so the data is ILP-friendly — the loop just has to say so.
+//! [`add_assign_4wide`] processes four independent lanes per iteration
+//! via `chunks_exact`, which the compiler turns into branch-free
+//! vector/multiple-issue code.
+//!
+//! Each output element still accumulates its inputs in exactly the same
+//! order as the scalar loop (blocking is across the *dim* axis, never
+//! across summands), so results are bit-identical — the same contract the
+//! scheduler rewrite holds itself to.
+
+/// Element-wise `out[i] += src[i]` over the common prefix of the two
+/// slices (callers pass equal lengths; the `zip`-like truncation matches
+/// the scalar loop this replaces). Four independent lanes per iteration.
+#[inline]
+pub fn add_assign_4wide(out: &mut [f32], src: &[f32]) {
+    let n = out.len().min(src.len());
+    let (out, src) = (&mut out[..n], &src[..n]);
+    let mut o4 = out.chunks_exact_mut(4);
+    let mut s4 = src.chunks_exact(4);
+    for (o, s) in (&mut o4).zip(&mut s4) {
+        o[0] += s[0];
+        o[1] += s[1];
+        o[2] += s[2];
+        o[3] += s[3];
+    }
+    for (o, &s) in o4.into_remainder().iter_mut().zip(s4.remainder()) {
+        *o += s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn scalar(out: &mut [f32], src: &[f32]) {
+        for (o, &s) in out.iter_mut().zip(src) {
+            *o += s;
+        }
+    }
+
+    #[test]
+    fn matches_scalar_loop_bit_for_bit() {
+        let mut rng = Rng::new(5);
+        for dim in 0..33 {
+            let src: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let mut a: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let mut b = a.clone();
+            add_assign_4wide(&mut a, &src);
+            scalar(&mut b, &src);
+            assert_eq!(a, b, "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn repeated_accumulation_stays_exact() {
+        // Order of summands per element is unchanged, so even a float-
+        // unfriendly sequence accumulates identically.
+        let rows: Vec<Vec<f32>> = vec![
+            vec![1e8, 1.0, -1e8, 0.5, 3.0, -0.25, 7.0],
+            vec![-1e8, 2.0, 1e8, 0.25, -3.0, 0.125, 0.0],
+            vec![1.5, -2.0, 42.0, -0.5, 0.0, 1.0, -7.0],
+        ];
+        let mut a = vec![0.0f32; 7];
+        let mut b = vec![0.0f32; 7];
+        for r in &rows {
+            add_assign_4wide(&mut a, r);
+            scalar(&mut b, r);
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn truncates_to_common_prefix() {
+        let mut out = vec![1.0f32; 6];
+        add_assign_4wide(&mut out, &[1.0, 1.0, 1.0]);
+        assert_eq!(out, vec![2.0, 2.0, 2.0, 1.0, 1.0, 1.0]);
+    }
+}

@@ -4,6 +4,8 @@
 //! normally come from a crate (`rand`, `clap`, `criterion`, `proptest`) is
 //! implemented here from scratch:
 //!
+//! * [`accum`] — blocked 4-wide f32 accumulators for the serving-side
+//!   reduce hot paths.
 //! * [`rng`] — a `SplitMix64`-seeded `xoshiro256**` PRNG with the sampling
 //!   helpers the workload generator needs.
 //! * [`clock`] — injected time sources (wall + simulated) so the batcher
@@ -16,6 +18,7 @@
 //! * [`fxhash`] — a fast multiplicative hasher for trusted integer keys
 //!   (the graph build's hot path).
 
+pub mod accum;
 pub mod bench;
 pub mod cli;
 pub mod clock;

@@ -47,15 +47,29 @@ pub struct CrossbarModel {
 }
 
 impl CrossbarModel {
-    pub fn new(hw: &HardwareConfig, p: &CircuitParams) -> Self {
-        hw.validate().expect("invalid hardware config");
-        Self {
+    /// Construct after validating the hardware config, returning a typed
+    /// error instead of panicking. Validation here is load-bearing for
+    /// the scheduler: its slot tables are sized by `bus_channels()` and
+    /// `least_loaded`-style selection over an empty table would index out
+    /// of bounds, so a config with `bus_channels == 0` (or any other
+    /// [`HardwareConfig::validate`] violation) must be rejected before a
+    /// model can exist. Prefer this over [`CrossbarModel::new`] anywhere
+    /// the config comes from user input (CLI flags, TOML overrides).
+    pub fn try_new(hw: &HardwareConfig, p: &CircuitParams) -> crate::Result<Self> {
+        hw.validate()?;
+        Ok(Self {
             adc: DynamicSwitchAdc::new(hw.adc_bits, hw.read_mode_bits, p),
             popcount: Popcount::new(p),
             result_bits: hw.xbar_cols * hw.adc_bits as usize,
             hw: hw.clone(),
             p: p.clone(),
-        }
+        })
+    }
+
+    /// As [`CrossbarModel::try_new`], panicking on an invalid config.
+    /// Convenient for paper-default and test configs that are known-good.
+    pub fn new(hw: &HardwareConfig, p: &CircuitParams) -> Self {
+        Self::try_new(hw, p).expect("invalid hardware config")
     }
 
     pub fn hw(&self) -> &HardwareConfig {
@@ -242,6 +256,31 @@ mod tests {
     #[should_panic(expected = "rows")]
     fn too_many_rows_panics() {
         model().activation(65, true);
+    }
+
+    #[test]
+    fn zero_bus_channels_rejected_with_typed_error() {
+        // Regression: a channel-less config must die at model
+        // construction with a typed error, not reach the scheduler —
+        // whose bus table selection would otherwise scan (or tree-query)
+        // an empty slot table and index out of bounds.
+        let hw = HardwareConfig {
+            bus_channels: 0,
+            ..Default::default()
+        };
+        let err = CrossbarModel::try_new(&hw, &CircuitParams::default())
+            .expect_err("bus_channels == 0 must be rejected");
+        assert!(
+            err.to_string().contains("bus channel"),
+            "unhelpful error: {err}"
+        );
+    }
+
+    #[test]
+    fn try_new_accepts_valid_configs() {
+        let m = CrossbarModel::try_new(&HardwareConfig::default(), &CircuitParams::default())
+            .expect("paper default must validate");
+        assert_eq!(m.bus_channels(), 16);
     }
 
     #[test]

@@ -1,0 +1,243 @@
+//! Differential fuzz: the data-oriented scheduler must be **bit-identical**
+//! to the preserved naive loop (`sched::reference`).
+//!
+//! The optimized hot path (tournament-tree slot selection, sort-free run
+//! decomposition) is only admissible because it provably changes nothing:
+//! same replica picked, same bus channel picked, same float arithmetic in
+//! the same order. This suite runs ≥200 seeded random configurations —
+//! replication (including copies ≫ batch), single-channel buses, tree-
+//! and flat-mode tables, cold-start floods past the catalogue, empty
+//! queries, nMARS, and the timed path — and requires exact `ExecStats`
+//! and per-query `finish_ns` equality (`==` on `f64`, not tolerance).
+//!
+//! It also pins the *point* of the rewrite: on a high-replication,
+//! wide-bus config the tree scheduler performs asymptotically fewer slot
+//! comparisons than the reference scan (counters threaded through
+//! `minslot` / `ReferenceScratch`).
+
+use recross::allocation::Replication;
+use recross::config::HardwareConfig;
+use recross::grouping::Mapping;
+use recross::sched::{ReferenceScheduler, ReferenceScratch, Scheduler, Scratch};
+use recross::util::Rng;
+use recross::workload::Query;
+use recross::xbar::{CircuitParams, CrossbarModel};
+
+/// A random catalogue mapping: shuffled ids, a random prefix placed into
+/// random-sized groups, the rest left to cold-start overflow packing.
+fn random_mapping(rng: &mut Rng) -> Mapping {
+    let group_size = rng.range(1, 12) as usize;
+    let n = rng.range(4, 300) as usize;
+    let mut ids: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut ids);
+    let placed = rng.range(0, n as u64) as usize;
+    let mut groups: Vec<Vec<u32>> = Vec::new();
+    let mut i = 0;
+    while i < placed {
+        let take = (rng.range(1, group_size as u64) as usize).min(placed - i);
+        groups.push(ids[i..i + take].to_vec());
+        i += take;
+    }
+    Mapping::from_groups(groups, group_size, n)
+}
+
+/// Random replication: mostly light (Eq. 1-ish), occasionally one group
+/// heavily replicated so the busy table crosses into tree mode.
+fn random_replication(rng: &mut Rng, num_groups: usize) -> Replication {
+    let copies: Vec<u32> = (0..num_groups)
+        .map(|_| {
+            if rng.chance(0.08) {
+                rng.range(2, 60) as u32
+            } else {
+                rng.range(1, 6) as u32
+            }
+        })
+        .collect();
+    Replication::from_copies(copies, 256)
+}
+
+/// Random query batch over `n` in-catalogue ids plus a cold-start tail
+/// of ids the offline phase never saw.
+fn random_queries(rng: &mut Rng, n: usize) -> Vec<Query> {
+    let nq = rng.range(0, 40) as usize;
+    (0..nq)
+        .map(|_| {
+            if rng.chance(0.05) {
+                return Query::new(Vec::new());
+            }
+            if rng.chance(0.05) {
+                // Cold-start flood: distinct out-of-catalogue ids.
+                let start = n as u32 + rng.below(50) as u32;
+                return Query::new((start..start + rng.range(1, 20) as u32).collect());
+            }
+            let k = rng.range(0, 30) as usize;
+            let hi = (n + n / 2 + 1) as u64; // ~1/3 of draws past the catalogue
+            Query::new((0..k).map(|_| rng.below(hi) as u32).collect())
+        })
+        .collect()
+}
+
+/// Scratch pair shared across every checked configuration — table
+/// resizing, epoch stamping, and flat<->tree layout flips are part of
+/// what is under test.
+#[derive(Default)]
+struct Scratches {
+    opt: Scratch,
+    naive: ReferenceScratch,
+}
+
+/// Assert all three entry points agree exactly for one configuration.
+fn assert_equivalent(
+    map: &Mapping,
+    rep: &Replication,
+    model: &CrossbarModel,
+    dynamic_switch: bool,
+    queries: &[Query],
+    s: &mut Scratches,
+    label: &str,
+) {
+    let opt = Scheduler::new(map, rep, model, dynamic_switch);
+    let naive = ReferenceScheduler::new(map, rep, model, dynamic_switch);
+
+    let a = opt.run_batch(queries, &mut s.opt);
+    let b = naive.run_batch(queries, &mut s.naive);
+    assert_eq!(a, b, "[{label}] run_batch diverged");
+
+    let (mut fa, mut fb) = (Vec::new(), Vec::new());
+    let ta = opt.run_batch_timed(queries, &mut s.opt, &mut fa);
+    let tb = naive.run_batch_timed(queries, &mut s.naive, &mut fb);
+    assert_eq!(ta, tb, "[{label}] run_batch_timed stats diverged");
+    assert_eq!(fa, fb, "[{label}] per-query finish_ns diverged");
+    assert_eq!(ta, a, "[{label}] timing perturbed the schedule");
+
+    let na = opt.run_batch_nmars(queries, &mut s.opt);
+    let nb = naive.run_batch_nmars(queries, &mut s.naive);
+    assert_eq!(na, nb, "[{label}] run_batch_nmars diverged");
+}
+
+#[test]
+fn fuzz_bit_identical_across_random_configs() {
+    let mut scratches = Scratches::default();
+    let params = CircuitParams::default();
+    for seed in 0..220u64 {
+        let mut rng = Rng::new(0x5EED_0000 + seed);
+        let map = random_mapping(&mut rng);
+        let rep = random_replication(&mut rng, map.num_groups());
+        let hw = HardwareConfig {
+            bus_channels: rng.range(1, 40) as usize,
+            ..Default::default()
+        };
+        let model = CrossbarModel::new(&hw, &params);
+        let dynamic_switch = rng.chance(0.5);
+        let queries = random_queries(&mut rng, map.num_embeddings());
+        assert_equivalent(
+            &map,
+            &rep,
+            &model,
+            dynamic_switch,
+            &queries,
+            &mut scratches,
+            &format!("seed {seed}"),
+        );
+    }
+}
+
+#[test]
+fn directed_edge_configs_bit_identical() {
+    let params = CircuitParams::default();
+    let mut scratches = Scratches::default();
+
+    let groups: Vec<Vec<u32>> = (0..16u32).map(|g| (4 * g..4 * g + 4).collect()).collect();
+    let map = Mapping::from_groups(groups, 4, 64);
+
+    // copies = 1 everywhere (no replica selection at all).
+    let identity = Replication::identity(16, 256);
+    // copies >> batch: 64 copies per group, 2-query batches.
+    let heavy = Replication::from_copies(vec![64; 16], 2);
+
+    let mut rng = Rng::new(0xD1CE);
+    let small_batch: Vec<Query> = (0..2)
+        .map(|_| Query::new((0..8).map(|_| rng.below(64) as u32).collect()))
+        .collect();
+    let batch: Vec<Query> = (0..48)
+        .map(|_| Query::new((0..12).map(|_| rng.below(96) as u32).collect()))
+        .collect();
+    let flood: Vec<Query> = (0..8)
+        .map(|i| Query::new((64 + 32 * i..64 + 32 * i + 24).collect()))
+        .collect();
+    let empties = vec![Query::new(vec![]), Query::new(vec![]), Query::new(vec![])];
+
+    for &bus in &[1usize, 2, 16, 33, 128] {
+        let hw = HardwareConfig {
+            bus_channels: bus,
+            ..Default::default()
+        };
+        let model = CrossbarModel::new(&hw, &params);
+        for (rep, qs, label) in [
+            (&identity, &batch, "identity"),
+            (&identity, &flood, "identity+cold-flood"),
+            (&identity, &empties, "identity+all-empty"),
+            (&heavy, &small_batch, "copies>>batch"),
+            (&heavy, &batch, "heavy"),
+        ] {
+            assert_equivalent(
+                &map,
+                rep,
+                &model,
+                true,
+                qs,
+                &mut scratches,
+                &format!("{label}, bus={bus}"),
+            );
+        }
+    }
+
+    // Empty batch entirely.
+    let model = CrossbarModel::new(&HardwareConfig::default(), &params);
+    assert_equivalent(&map, &identity, &model, true, &[], &mut scratches, "empty batch");
+}
+
+#[test]
+fn tree_scheduler_does_asymptotically_fewer_comparisons() {
+    // High replication, wide bus: 64 groups x 256 copies and 256 bus
+    // channels. Per activation the reference scans 255 replica slots +
+    // 255 channels; the tree pays ~2 log2(256) query visits plus a
+    // log2(16384) root path per update, and reads the bus minimum off
+    // the root for free. The counters must show a multiple-x gap — this
+    // is the asymptotic win, pinned as a test so a future "cleanup" that
+    // quietly reverts to scans fails loudly.
+    let groups: Vec<Vec<u32>> = (0..64u32).map(|g| (4 * g..4 * g + 4).collect()).collect();
+    let map = Mapping::from_groups(groups, 4, 256);
+    let rep = Replication::from_copies(vec![256; 64], 256);
+    let hw = HardwareConfig {
+        bus_channels: 256,
+        ..Default::default()
+    };
+    let model = CrossbarModel::new(&hw, &CircuitParams::default());
+    let opt = Scheduler::new(&map, &rep, &model, true);
+    let naive = ReferenceScheduler::new(&map, &rep, &model, true);
+
+    let mut rng = Rng::new(0xC0DE);
+    let queries: Vec<Query> = (0..256)
+        .map(|_| Query::new((0..8).map(|_| rng.below(256) as u32).collect()))
+        .collect();
+
+    let mut scratch = Scratch::default();
+    let mut rscratch = ReferenceScratch::default();
+    scratch.reset_comparisons();
+    rscratch.reset_comparisons();
+    let a = opt.run_batch(&queries, &mut scratch);
+    let b = naive.run_batch(&queries, &mut rscratch);
+    assert_eq!(a, b, "schedules must still be identical");
+    assert!(a.activations > 500, "workload too small to be meaningful");
+
+    let tree = scratch.comparisons();
+    let scan = rscratch.comparisons();
+    assert!(
+        tree * 4 < scan,
+        "tree comparisons {tree} not asymptotically below scan {scan}"
+    );
+    // Sanity on the scan side: exactly (copies-1) + (channels-1) = 510
+    // comparisons per activation.
+    assert_eq!(scan, a.activations * 510);
+}
