@@ -1,12 +1,12 @@
 //! Open-loop traffic walkthrough: arrival processes, the simulated-time
 //! driver, trace replay — no PJRT artifacts, no threads, fully
-//! deterministic.
+//! deterministic, and one `deploy` builder away.
 //!
 //! ```bash
 //! cargo run --release --example open_loop
 //! ```
 //!
-//! 1. Build a small ReCross pool (offline phase on synthetic traffic).
+//! 1. Build a small ReCross pool through `Deployment::of(..).build()`.
 //! 2. Stamp the same query stream with Poisson, bursty, and diurnal
 //!    arrivals at the same mean rate and compare the latency tails —
 //!    same work, very different p999.
@@ -14,12 +14,11 @@
 //! 4. Round-trip a timed trace through the v2 on-disk format and replay
 //!    it to identical results.
 
-use recross::cluster::{PoolShared, ShardPlan};
 use recross::config::Config;
-use recross::coordinator::{BatchPolicy, OfflinePhase};
+use recross::coordinator::BatchPolicy;
+use recross::deploy::Deployment;
 use recross::engine::Scheme;
-use recross::loadgen::{drive_sharded, drive_single, ArrivalKind, Arrivals, OpenLoopReport};
-use recross::sched::Scheduler;
+use recross::loadgen::{drive, ArrivalKind, Arrivals, OpenLoopReport};
 use recross::util::fmt_ns;
 use recross::workload::{DatasetSpec, Generator, TimedTrace};
 use std::time::Duration;
@@ -46,14 +45,11 @@ fn main() -> anyhow::Result<()> {
     cfg.workload.eval_queries = 128;
 
     println!("offline phase (graph -> Algorithm 1 -> Eq. 1)...");
-    let offline = OfflinePhase::run(&cfg, Scheme::ReCross, SCALE)?;
-    let engine = &offline.engine;
-    let sched = Scheduler::new(
-        engine.mapping(),
-        engine.replication(),
-        engine.model(),
-        engine.dynamic_switch(),
-    );
+    let prepared = Deployment::of(cfg.clone())
+        .scheme(Scheme::ReCross)
+        .scale(SCALE)
+        .build()?;
+    let single = prepared.sim()?;
     let spec = DatasetSpec::by_name(&cfg.workload.dataset).unwrap().scaled(SCALE);
     let gen = Generator::new(&spec, cfg.workload.seed);
     let trace = gen.trace(QUERIES, cfg.workload.seed.wrapping_add(3));
@@ -64,7 +60,7 @@ fn main() -> anyhow::Result<()> {
 
     // Capacity proxy so the demo rates mean something on any machine.
     let cap = QUERIES as f64
-        / (engine.run_trace(&trace, policy.max_batch).completion_ns / 1e9);
+        / (prepared.engine().run_trace(&trace, policy.max_batch).completion_ns / 1e9);
     println!("closed-loop capacity estimate: {cap:.0} q/s\n");
 
     // --- same mean rate, three traffic shapes ----------------------------
@@ -72,26 +68,25 @@ fn main() -> anyhow::Result<()> {
     println!("== traffic shape vs tail (offered {rate:.0} q/s, half capacity) ==");
     for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal] {
         let arrivals = Arrivals::from_kind(kind, rate, SEED).take(QUERIES);
-        let r = drive_single(&sched, &trace.queries, &arrivals, &policy);
+        let r = drive(&single, &trace.queries, &arrivals, &policy);
         report_row(kind.name(), &r);
     }
 
     // --- the hockey stick -------------------------------------------------
     println!("\n== offered load -> p99 (poisson, single pool vs 4 shards) ==");
-    let shared = PoolShared::from_engine(engine);
-    let plan = ShardPlan::by_locality(&shared.mapping, &offline.history, 4, 0.10);
+    let sharded = prepared.sim_sharded(4, 0.10)?;
     println!(
         "{:>10} {:>14} {:>14}",
         "load/cap", "p99 single", "p99 sharded(4)"
     );
     for mult in [0.25, 0.5, 1.0, 2.0] {
         let arrivals = Arrivals::poisson(mult * cap, SEED).take(QUERIES);
-        let single = drive_single(&sched, &trace.queries, &arrivals, &policy);
-        let sharded = drive_sharded(&shared, &plan, &trace.queries, &arrivals, &policy);
+        let r_single = drive(&single, &trace.queries, &arrivals, &policy);
+        let r_sharded = drive(&sharded, &trace.queries, &arrivals, &policy);
         println!(
             "{mult:>10.2} {:>14} {:>14}",
-            fmt_ns(single.percentile_ns(99.0)),
-            fmt_ns(sharded.percentile_ns(99.0)),
+            fmt_ns(r_single.percentile_ns(99.0)),
+            fmt_ns(r_sharded.percentile_ns(99.0)),
         );
     }
 
@@ -104,9 +99,9 @@ fn main() -> anyhow::Result<()> {
     let _ = std::fs::remove_file(&path);
     anyhow::ensure!(loaded == timed, "v2 round-trip must be lossless");
     let ts = loaded.arrivals_ns.expect("timestamps survived the disk");
-    let live = drive_single(&sched, &trace.queries, &ts, &policy);
+    let live = drive(&single, &trace.queries, &ts, &policy);
     let fresh = Arrivals::poisson(rate, SEED).take(QUERIES);
-    let again = drive_single(&sched, &trace.queries, &fresh, &policy);
+    let again = drive(&single, &trace.queries, &fresh, &policy);
     anyhow::ensure!(live == again, "replayed traffic must reproduce the drive");
     println!("replayed {} arrivals from disk: drive is bit-identical", ts.len());
 

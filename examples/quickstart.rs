@@ -1,61 +1,57 @@
-//! Quickstart: the whole ReCross pipeline in ~60 lines.
+//! Quickstart: the whole ReCross pipeline in ~60 lines, through the
+//! `deploy` facade.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 //!
-//! 1. Generate a synthetic Amazon-like workload (Table I's "software").
-//! 2. Offline phase: co-occurrence graph → Algorithm 1 grouping → Eq. 1
-//!    duplication.
-//! 3. Online phase: simulate a batch on the crossbar pool and compare
-//!    against the naive baseline.
+//! 1. Describe the workload in a `Config` (Table I's "software").
+//! 2. `Deployment::of(cfg).scheme(..).build()` runs the offline phase —
+//!    co-occurrence graph → Algorithm 1 grouping → Eq. 1 duplication —
+//!    exactly once and hands back a `Prepared` bundle.
+//! 3. Online phase: simulate the held-out trace on the crossbar pool and
+//!    compare against the naive baseline.
 //! 4. If AOT artifacts are present, run one real embedding reduction
 //!    through the PJRT runtime and check it against the reference.
 
 use recross::config::Config;
-use recross::coordinator;
-use recross::engine::{Engine, Scheme};
-use recross::graph::CoGraph;
-use recross::workload::{generate, DatasetSpec, Query};
+use recross::deploy::Deployment;
+use recross::engine::Scheme;
+use recross::workload::Query;
 
 fn main() -> anyhow::Result<()> {
     // --- 1. workload -----------------------------------------------------
     let mut cfg = Config::paper_default();
     cfg.workload.history_queries = 2_000;
     cfg.workload.eval_queries = 512;
-    let spec = DatasetSpec::by_name("software").unwrap().scaled(0.25);
-    let (history, eval) = generate(
-        &spec,
-        cfg.workload.history_queries,
-        cfg.workload.eval_queries,
-        42,
-    );
+    const SCALE: f64 = 0.25;
+
+    // --- 2. offline phase (once per scheme) ------------------------------
+    let recross = Deployment::of(cfg.clone())
+        .scheme(Scheme::ReCross)
+        .scale(SCALE)
+        .build()?;
+    let naive = Deployment::of(cfg.clone())
+        .scheme(Scheme::Naive)
+        .scale(SCALE)
+        .build()?;
     println!(
         "workload: {} embeddings, {} history / {} eval queries, {:.1} lookups/query",
-        spec.num_embeddings,
-        history.queries.len(),
-        eval.queries.len(),
-        eval.mean_lookups()
+        recross.eval().num_embeddings,
+        recross.history().queries.len(),
+        recross.eval().queries.len(),
+        recross.eval().mean_lookups()
     );
-
-    // --- 2. offline phase ------------------------------------------------
-    let graph = CoGraph::build(&history);
-    println!(
-        "co-occurrence graph: {} nodes, {} edges",
-        graph.num_nodes(),
-        graph.num_edges()
-    );
-    let recross = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
-    let naive = Engine::prepare(Scheme::Naive, &graph, &history, &cfg);
     println!(
         "mapping: {} groups, {} physical crossbars after Eq. 1 duplication",
-        recross.mapping().num_groups(),
-        recross.physical_crossbars()
+        recross.engine().mapping().num_groups(),
+        recross.engine().physical_crossbars()
     );
 
     // --- 3. online phase (circuit simulation) -----------------------------
-    let s_re = recross.run_trace(&eval, cfg.scheme.batch_size);
-    let s_nv = naive.run_trace(&eval, cfg.scheme.batch_size);
+    let bs = cfg.scheme.batch_size;
+    let s_re = recross.engine().run_trace(recross.eval(), bs);
+    let s_nv = naive.engine().run_trace(naive.eval(), bs);
     println!("\ncircuit simulation over the eval trace:");
     println!(
         "  naive  : {:>10.1} µs, {:>8.1} nJ, {} activations",
@@ -78,8 +74,8 @@ fn main() -> anyhow::Result<()> {
 
     // --- 4. real numerics through PJRT ------------------------------------
     if recross::runtime::artifacts_available(&cfg.artifacts_dir) {
-        let mut pipeline = coordinator::build_pipeline(&cfg, Scheme::ReCross, 0.25)?;
-        let q = Query::new(eval.queries[0].items.clone());
+        let q = Query::new(recross.eval().queries[0].items.clone());
+        let mut pipeline = recross.into_pipeline()?;
         let got = pipeline.reduce_query(&q)?;
         let expect = pipeline.store().reduce_reference(&q.items);
         let max_err = got

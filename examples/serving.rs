@@ -1,20 +1,20 @@
 //! End-to-end serving driver — the repo's E2E validation (see
 //! EXPERIMENTS.md §E2E).
 //!
-//! Loads the AOT-compiled DLRM (bottom MLP + crossbar embedding reduction
-//! + top MLP) through PJRT, stands up the L3 coordinator (router + dynamic
-//! batcher + executor thread), and serves a batched stream of
-//! recommendation requests generated from the calibrated "software"
+//! Builds the deployment once (`Deployment::of(cfg).build()`), spawns the
+//! live single-pool backend (`SinglePool::spawn` — AOT-compiled DLRM
+//! through PJRT behind the dynamic batcher), and serves a batched stream
+//! of recommendation requests generated from the calibrated "software"
 //! workload. Reports latency percentiles, throughput, the simulated
-//! crossbar cost of the same traffic, and verifies every response's
-//! reduction against the pure-rust reference.
+//! crossbar cost of the same traffic, and verifies determinism.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serving
 //! ```
 
 use recross::config::Config;
-use recross::coordinator::{self, BatchPolicy, Request, Server};
+use recross::coordinator::Request;
+use recross::deploy::{Backend, Deployment, SinglePool};
 use recross::engine::Scheme;
 use recross::metrics::percentile;
 use recross::util::Rng;
@@ -24,37 +24,37 @@ const SCALE: f64 = 0.25;
 const REQUESTS: usize = 512;
 
 fn main() -> anyhow::Result<()> {
-    let mut cfg = Config::paper_default();
+    let mut cfg = Config::serving_default();
     cfg.workload.dataset = "software".into();
     cfg.workload.history_queries = 3_000;
     cfg.workload.eval_queries = 256;
     recross::runtime::require_artifacts(&cfg.artifacts_dir)?;
 
-    // Offline phase happens on the executor thread at startup.
+    // Offline phase once, then the engine moves onto the executor thread.
     println!("spinning up coordinator (offline phase + PJRT compile)...");
     let t0 = std::time::Instant::now();
-    let cfg2 = cfg.clone();
-    let server = Server::spawn(
-        BatchPolicy {
-            max_batch: 32,
-            max_wait: std::time::Duration::from_millis(2),
-        },
-        move || coordinator::build_pipeline(&cfg2, Scheme::ReCross, SCALE),
-    )?;
+    let policy = recross::coordinator::BatchPolicy::from_config(&cfg, 32);
+    let dense_features = cfg.workload.dense_features;
+    let seed = cfg.workload.seed;
+    let prepared = Deployment::of(cfg.clone())
+        .scheme(Scheme::ReCross)
+        .scale(SCALE)
+        .build()?;
+    let pool = SinglePool::spawn(prepared, policy)?;
     println!("ready in {:.2?}", t0.elapsed());
-    let handle = server.handle();
+    let handle = pool.handle();
 
     // Build the request stream from the same generator family the offline
     // phase learned from (held-out seed).
     let spec = DatasetSpec::by_name(&cfg.workload.dataset).unwrap().scaled(SCALE);
-    let gen = Generator::new(&spec, cfg.workload.seed);
+    let gen = Generator::new(&spec, seed);
     let mut rng = Rng::new(0xD00D);
     let requests: Vec<Request> = (0..REQUESTS as u64)
         .map(|id| {
             let q = gen.query(&mut rng);
             Request {
                 id,
-                dense: (0..13).map(|_| rng.normal() as f32).collect(),
+                dense: (0..dense_features).map(|_| rng.normal() as f32).collect(),
                 items: q.items,
             }
         })
@@ -93,16 +93,23 @@ fn main() -> anyhow::Result<()> {
     );
     println!("mean logit:    {logit_mean:.4}");
 
+    // The backend status vocabulary works here too.
+    let status = pool.status()?;
+    println!(
+        "executor:      {} batches, {} lookups served",
+        status[0].batches, status[0].lookups
+    );
+
     // Every logit must be finite and reductions deterministic.
     assert!(responses.iter().all(|r| r.logit.is_finite()));
     let again = handle.infer(Request {
         id: 1_000_000,
-        dense: vec![0.25; 13],
+        dense: vec![0.25; dense_features],
         items: vec![1, 2, 3, 4, 5],
     })?;
     let again2 = handle.infer(Request {
         id: 1_000_001,
-        dense: vec![0.25; 13],
+        dense: vec![0.25; dense_features],
         items: vec![1, 2, 3, 4, 5],
     })?;
     assert_eq!(again.logit, again2.logit, "pipeline must be deterministic");

@@ -13,10 +13,10 @@
 use recross::cluster::{PoolShared, ShardPlan};
 use recross::config::Config;
 use recross::coordinator::BatchPolicy;
+use recross::deploy::SimBackend;
 use recross::engine::{Engine, Scheme};
 use recross::graph::CoGraph;
-use recross::loadgen::{drive_sharded, drive_single, Arrivals, OpenLoopReport};
-use recross::sched::Scheduler;
+use recross::loadgen::{drive, Arrivals, OpenLoopReport};
 use recross::util::fmt_ns;
 use recross::workload::{DatasetSpec, Generator, Trace};
 use std::time::Duration;
@@ -30,13 +30,7 @@ fn drive_engine(
     arrivals: &[u64],
     policy: &BatchPolicy,
 ) -> OpenLoopReport {
-    let sched = Scheduler::new(
-        engine.mapping(),
-        engine.replication(),
-        engine.model(),
-        engine.dynamic_switch(),
-    );
-    drive_single(&sched, &trace.queries, arrivals, policy)
+    drive(&SimBackend::of_engine(engine), &trace.queries, arrivals, policy)
 }
 
 /// Closed-loop capacity proxy: queries per second of pure serial service
@@ -145,15 +139,20 @@ fn main() {
         2.0 * cap_re * *shard_set.last().unwrap() as f64,
         points,
     );
-    let plans: Vec<ShardPlan> = shard_set
+    let backends: Vec<SimBackend> = shard_set
         .iter()
-        .map(|&s| ShardPlan::by_locality(&shared.mapping, &history, s, 0.10))
+        .map(|&s| {
+            SimBackend::sharded(
+                &shared,
+                ShardPlan::by_locality(&shared.mapping, &history, s, 0.10),
+            )
+        })
         .collect();
     for &rate in &shard_rates {
         let arrivals = Arrivals::poisson(rate, 7).take(num_queries);
         print!("{rate:>12.0}");
-        for plan in &plans {
-            let r = drive_sharded(&shared, plan, &trace.queries, &arrivals, &policy);
+        for backend in &backends {
+            let r = drive(backend, &trace.queries, &arrivals, &policy);
             print!(" {:>13}", fmt_ns(r.percentile_ns(99.0)));
         }
         println!();

@@ -41,7 +41,7 @@ pub use hashring::HashRing;
 pub use partition::{ReplicaPlan, ShardPlan};
 pub use server::{
     Cluster, ClusterConfig, ClusterHandle, ClusterResponse, PartitionPolicy, RouteOptions,
-    RoutePolicy, RouteTable,
+    RoutePolicy, RouteTable, ShardingMode,
 };
 pub use shard::{
     partition_store, partition_store_with_replicas, PoolShared, ShardPartial, ShardStatus,
@@ -50,7 +50,7 @@ pub use shard::{
 
 use crate::config::Config;
 use crate::coordinator::{DriftMonitor, EmbeddingStore, OfflinePhase};
-use crate::engine::Scheme;
+use crate::engine::{Engine, Scheme};
 use crate::sched::{ExecStats, Scheduler, Scratch};
 use crate::workload::{Query, Trace};
 use crate::Result;
@@ -71,87 +71,112 @@ pub struct ClusterBundle {
     pub eval: Trace,
 }
 
+/// Assemble and spawn a cluster from already-prepared offline products —
+/// the one assembly path shared by [`Cluster::build`] and the
+/// [`crate::deploy::Sharded`] backend: partition → replica placement →
+/// (optional) drift baseline → spawn.
+pub(crate) fn assemble_cluster(
+    engine: &Engine,
+    history: &Trace,
+    eval: &Trace,
+    store: &EmbeddingStore,
+    ccfg: &ClusterConfig,
+) -> Result<Cluster> {
+    anyhow::ensure!(ccfg.shards > 0, "need at least one shard");
+    anyhow::ensure!(ccfg.vnodes > 0, "need at least one virtual node per shard");
+    // The shard executors run the in-crossbar MAC dataflow
+    // (Scheduler::run_batch); nMARS's lookup + serial-aggregation
+    // dataflow has no sharded implementation, so refuse it rather
+    // than report MAC costs under an nMARS label.
+    anyhow::ensure!(
+        engine.scheme() != Scheme::Nmars,
+        "the sharded pool serves the MAC dataflow; scheme {:?} is not supported here",
+        engine.scheme().name()
+    );
+    let mapping = engine.mapping();
+    let plan = match ccfg.policy {
+        PartitionPolicy::Hash => ShardPlan::by_hash(
+            mapping.num_groups(),
+            &HashRing::new(ccfg.shards as u32, ccfg.vnodes),
+        ),
+        PartitionPolicy::Locality => {
+            ShardPlan::by_locality(mapping, history, ccfg.shards, ccfg.slack)
+        }
+    };
+    let shared = PoolShared::from_engine(engine);
+    if ccfg.mode.replica_routing() || ccfg.mode.rebalance() {
+        let freqs = crate::allocation::group_frequencies(mapping, history);
+        let replicas = if ccfg.mode.replica_routing() {
+            ReplicaPlan::spread(&plan, &shared.replication, &freqs)
+        } else {
+            ReplicaPlan::pinned(&plan, &shared.replication)
+        };
+        let drift = if ccfg.mode.rebalance() {
+            // Baseline: the mapping's activations-per-lookup on the
+            // held-out eval trace (the offline validation run).
+            let mut scratch = Vec::new();
+            let (mut acts, mut lks) = (0u64, 0u64);
+            for q in &eval.queries {
+                acts += mapping.groups_touched(&q.items, &mut scratch) as u64;
+                lks += q.len() as u64;
+            }
+            let baseline = if lks == 0 {
+                1.0
+            } else {
+                acts as f64 / lks as f64
+            };
+            Some(DriftMonitor::new(baseline.max(1e-6), 1.3, 0.05, 128))
+        } else {
+            None
+        };
+        let opts = RouteOptions {
+            policy: ccfg.mode.route_policy(),
+            partition: ccfg.policy,
+            slack: ccfg.slack,
+            dup_ratio: None,
+            drift,
+        };
+        Cluster::spawn_routed(shared, store, plan, replicas, opts, ccfg.batch.clone())
+    } else {
+        Cluster::spawn_from_parts(shared, store, plan, ccfg.batch.clone())
+    }
+}
+
 impl Cluster {
     /// Offline phase → partition → replica placement → spawn, per the
     /// config. The engine's mapping/replication/cost model are shared
     /// read-only by all shards; the store is laid out once and
     /// partitioned tile-by-tile (plus replica tiles when
-    /// `ccfg.replica_routing` spreads hot groups across shards).
+    /// `ccfg.mode` spreads hot groups across shards).
+    ///
+    /// Convenience wrapper over the [`crate::deploy`] pieces: prefer
+    /// `Deployment::of(..).build()?` + [`crate::deploy::Sharded::spawn`]
+    /// when you also need the prepared bundle.
     pub fn build(
         cfg: &Config,
         scheme: Scheme,
         scale: f64,
         ccfg: &ClusterConfig,
     ) -> Result<ClusterBundle> {
-        anyhow::ensure!(ccfg.shards > 0, "need at least one shard");
-        anyhow::ensure!(ccfg.vnodes > 0, "need at least one virtual node per shard");
-        // The shard executors run the in-crossbar MAC dataflow
-        // (Scheduler::run_batch); nMARS's lookup + serial-aggregation
-        // dataflow has no sharded implementation, so refuse it rather
-        // than report MAC costs under an nMARS label.
+        // Fast-fail before the (potentially minutes-long) offline phase;
+        // assemble_cluster re-checks for callers arriving with a
+        // prepared engine.
         anyhow::ensure!(
             scheme != Scheme::Nmars,
             "the sharded pool serves the MAC dataflow; scheme {:?} is not supported here",
             scheme.name()
         );
+        anyhow::ensure!(ccfg.shards > 0, "need at least one shard");
+        anyhow::ensure!(ccfg.vnodes > 0, "need at least one virtual node per shard");
         let offline = OfflinePhase::run(cfg, scheme, scale)?;
-        let mapping = offline.engine.mapping();
-        let plan = match ccfg.policy {
-            PartitionPolicy::Hash => ShardPlan::by_hash(
-                mapping.num_groups(),
-                &HashRing::new(ccfg.shards as u32, ccfg.vnodes),
-            ),
-            PartitionPolicy::Locality => {
-                ShardPlan::by_locality(mapping, &offline.history, ccfg.shards, ccfg.slack)
-            }
-        };
         let store = EmbeddingStore::random(
-            mapping,
+            offline.engine.mapping(),
             cfg.hardware.embedding_dim,
             cfg.hardware.xbar_rows,
             cfg.workload.seed,
         );
-        let shared = PoolShared::from_engine(&offline.engine);
-        let cluster = if ccfg.replica_routing || ccfg.rebalance {
-            let freqs = crate::allocation::group_frequencies(mapping, &offline.history);
-            let replicas = if ccfg.replica_routing {
-                ReplicaPlan::spread(&plan, &shared.replication, &freqs)
-            } else {
-                ReplicaPlan::pinned(&plan, &shared.replication)
-            };
-            let drift = if ccfg.rebalance {
-                // Baseline: the mapping's activations-per-lookup on the
-                // held-out eval trace (the offline validation run).
-                let mut scratch = Vec::new();
-                let (mut acts, mut lks) = (0u64, 0u64);
-                for q in &offline.eval.queries {
-                    acts += mapping.groups_touched(&q.items, &mut scratch) as u64;
-                    lks += q.len() as u64;
-                }
-                let baseline = if lks == 0 {
-                    1.0
-                } else {
-                    acts as f64 / lks as f64
-                };
-                Some(DriftMonitor::new(baseline.max(1e-6), 1.3, 0.05, 128))
-            } else {
-                None
-            };
-            let opts = RouteOptions {
-                policy: if ccfg.replica_routing {
-                    RoutePolicy::PowerOfTwo
-                } else {
-                    RoutePolicy::Pinned
-                },
-                partition: ccfg.policy,
-                slack: ccfg.slack,
-                dup_ratio: None,
-                drift,
-            };
-            Cluster::spawn_routed(shared, &store, plan, replicas, opts, ccfg.batch.clone())?
-        } else {
-            Cluster::spawn_from_parts(shared, &store, plan, ccfg.batch.clone())?
-        };
+        let cluster =
+            assemble_cluster(&offline.engine, &offline.history, &offline.eval, &store, ccfg)?;
         Ok(ClusterBundle {
             cluster,
             store,

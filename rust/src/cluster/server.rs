@@ -65,6 +65,66 @@ pub enum RoutePolicy {
     PowerOfTwo,
 }
 
+/// Deployment-time placement/routing mode of a sharded pool — the typed
+/// replacement for the old `(replica_routing, rebalance)` bool pair, so
+/// an impossible-looking combination can't be half-configured and every
+/// `match` is forced to consider all four shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ShardingMode {
+    /// Every Eq. 1 copy lives on its group's owning shard; activations
+    /// route to the owner. The static PR 1 model.
+    #[default]
+    Pinned,
+    /// Hot-group replicas spread across shards; each activation routes by
+    /// power-of-two-choices over in-flight counters.
+    ReplicaRouted,
+    /// Ownership-pinned routing with the drift monitor armed: stale
+    /// placements trigger epoch-versioned remaps online.
+    Rebalancing,
+    /// Spread replicas + p2c routing *and* online rebalancing.
+    RebalancingRouted,
+}
+
+impl ShardingMode {
+    /// Lift the legacy CLI flag pair into the typed mode.
+    pub fn from_flags(replica_routing: bool, rebalance: bool) -> Self {
+        match (replica_routing, rebalance) {
+            (false, false) => Self::Pinned,
+            (true, false) => Self::ReplicaRouted,
+            (false, true) => Self::Rebalancing,
+            (true, true) => Self::RebalancingRouted,
+        }
+    }
+
+    /// Does this mode spread replicas and route by power-of-two-choices?
+    pub fn replica_routing(self) -> bool {
+        matches!(self, Self::ReplicaRouted | Self::RebalancingRouted)
+    }
+
+    /// Does this mode arm the drift monitor for online remaps?
+    pub fn rebalance(self) -> bool {
+        matches!(self, Self::Rebalancing | Self::RebalancingRouted)
+    }
+
+    /// The per-activation routing rule this mode implies.
+    pub fn route_policy(self) -> RoutePolicy {
+        if self.replica_routing() {
+            RoutePolicy::PowerOfTwo
+        } else {
+            RoutePolicy::Pinned
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Pinned => "pinned",
+            Self::ReplicaRouted => "replica-routed",
+            Self::Rebalancing => "rebalancing",
+            Self::RebalancingRouted => "rebalancing-routed",
+        }
+    }
+}
+
 /// Cluster assembly knobs.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -78,13 +138,8 @@ pub struct ClusterConfig {
     pub batch: BatchPolicy,
     /// Load-balance slack for the locality partitioner.
     pub slack: f64,
-    /// Spread Eq. 1 replicas across shards and route each activation to
-    /// the least-loaded holder (power-of-two-choices). Off = the PR 1
-    /// ownership-pinned model.
-    pub replica_routing: bool,
-    /// Arm the drift monitor so `rebalance_due()` can trigger
-    /// epoch-versioned remaps online.
-    pub rebalance: bool,
+    /// Placement/routing mode (pinned, replica-routed, rebalancing).
+    pub mode: ShardingMode,
 }
 
 impl Default for ClusterConfig {
@@ -95,8 +150,7 @@ impl Default for ClusterConfig {
             policy: PartitionPolicy::Locality,
             batch: BatchPolicy::default(),
             slack: 0.10,
-            replica_routing: false,
-            rebalance: false,
+            mode: ShardingMode::Pinned,
         }
     }
 }

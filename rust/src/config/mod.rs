@@ -1,12 +1,22 @@
 //! Typed configuration for the whole system.
 //!
-//! Configuration is layered: built-in defaults reproduce the paper's
-//! Table I setup exactly; a TOML file (parsed by the in-tree
-//! [`toml`] subset parser) can override any field; the CLI can override a
-//! handful of common knobs on top.
+//! Configuration flows through **one precedence chain**, lowest to
+//! highest:
+//!
+//! 1. built-in defaults ([`Config::paper_default`] reproduces Table I;
+//!    [`Config::serving_default`] / [`Config::open_loop_default`] adjust
+//!    the workload sizing for the serving entry points),
+//! 2. a TOML file (the in-tree [`toml`] subset parser), overlaid by
+//!    [`Config::from_file_with_base`],
+//! 3. explicitly passed CLI flags ([`Config::overlay_cli`] — declared
+//!    CLI defaults do **not** clobber TOML values; only flags the user
+//!    actually typed do),
+//! 4. programmatic mutation (e.g.
+//!    [`Deployment::workload`](crate::deploy::Deployment::workload)).
 
 pub mod toml;
 
+use crate::util::cli::Args;
 use crate::Result;
 use anyhow::Context;
 
@@ -120,6 +130,14 @@ pub struct SchemeConfig {
     pub duplication: bool,
     /// Enable energy-aware dynamic switching (§III-D).
     pub dynamic_switching: bool,
+    /// Dynamic-batcher wait window, µs: a serving batch closes when the
+    /// oldest queued request has waited this long (or the batch fills).
+    /// The live single-pool server, the sharded cluster, and the
+    /// open-loop simulator all honor this one knob; only their built-in
+    /// defaults differ (2 ms for the live demos' ms-scale PJRT batches,
+    /// 5 µs for the µs-scale discrete-event simulator — see
+    /// [`Config::open_loop_default`]).
+    pub max_wait_us: u64,
 }
 
 impl Default for SchemeConfig {
@@ -130,6 +148,7 @@ impl Default for SchemeConfig {
             batch_size: 256,
             duplication: true,
             dynamic_switching: true,
+            max_wait_us: 2_000,
         }
     }
 }
@@ -158,6 +177,10 @@ pub struct WorkloadConfig {
     pub eval_queries: usize,
     /// RNG seed.
     pub seed: u64,
+    /// Dense (non-embedding) features per inference request — must match
+    /// the AOT artifact manifest's `model.dense_features` when the PJRT
+    /// head is served.
+    pub dense_features: usize,
 }
 
 impl Default for WorkloadConfig {
@@ -167,6 +190,7 @@ impl Default for WorkloadConfig {
             history_queries: 20_000,
             eval_queries: 4_096,
             seed: 42,
+            dense_features: 13,
         }
     }
 }
@@ -190,16 +214,48 @@ impl Config {
         }
     }
 
+    /// Serving-entry-point defaults: the paper config with the workload
+    /// sized for an interactive demo (history 4 000 / eval 1 024 instead
+    /// of the full offline-report sizing). This is the base every
+    /// `recross` subcommand overlays TOML and CLI flags onto.
+    pub fn serving_default() -> Self {
+        let mut cfg = Self::paper_default();
+        cfg.workload.history_queries = 4_000;
+        cfg.workload.eval_queries = 1_024;
+        cfg
+    }
+
+    /// Open-loop-simulator defaults: [`Config::serving_default`] with the
+    /// batcher wait window dropped to 5 µs — the discrete-event model
+    /// serves µs-scale batches, so a 2 ms window would make every report
+    /// pure batch-formation wait.
+    pub fn open_loop_default() -> Self {
+        let mut cfg = Self::serving_default();
+        cfg.scheme.max_wait_us = 5;
+        cfg
+    }
+
     /// Load from a TOML file, overriding defaults.
     pub fn from_file(path: &str) -> Result<Self> {
+        Self::from_file_with_base(path, Self::paper_default())
+    }
+
+    /// Load from a TOML file, overriding an explicit base configuration.
+    pub fn from_file_with_base(path: &str, base: Self) -> Result<Self> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        Self::from_toml(&text)
+        Self::from_toml_with_base(&text, base)
     }
 
     /// Parse from TOML text, overriding defaults.
     pub fn from_toml(text: &str) -> Result<Self> {
+        Self::from_toml_with_base(text, Self::paper_default())
+    }
+
+    /// Parse from TOML text, overriding an explicit base configuration:
+    /// fields the document does not mention keep the base's values.
+    pub fn from_toml_with_base(text: &str, base: Self) -> Result<Self> {
         let doc = toml::Doc::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
-        let mut cfg = Self::paper_default();
+        let mut cfg = base;
         let hw = &mut cfg.hardware;
         hw.xbar_rows = doc.usize_or("hardware.xbar_rows", hw.xbar_rows);
         hw.xbar_cols = doc.usize_or("hardware.xbar_cols", hw.xbar_cols);
@@ -221,16 +277,56 @@ impl Config {
         sc.batch_size = doc.usize_or("scheme.batch_size", sc.batch_size);
         sc.duplication = doc.bool_or("scheme.duplication", sc.duplication);
         sc.dynamic_switching = doc.bool_or("scheme.dynamic_switching", sc.dynamic_switching);
+        // Clamp negatives to 0 (close immediately) instead of wrapping
+        // to ~1.8e19 µs, which would silently disable the deadline
+        // trigger.
+        sc.max_wait_us = doc.i64_or("scheme.max_wait_us", sc.max_wait_us as i64).max(0) as u64;
 
         let wl = &mut cfg.workload;
         wl.dataset = doc.str_or("workload.dataset", &wl.dataset);
         wl.history_queries = doc.usize_or("workload.history_queries", wl.history_queries);
         wl.eval_queries = doc.usize_or("workload.eval_queries", wl.eval_queries);
         wl.seed = doc.i64_or("workload.seed", wl.seed as i64) as u64;
+        wl.dense_features = doc.usize_or("workload.dense_features", wl.dense_features);
 
         cfg.artifacts_dir = doc.str_or("artifacts_dir", &cfg.artifacts_dir);
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Overlay explicitly passed CLI flags — the top (non-programmatic)
+    /// layer of the precedence chain. Declared CLI defaults are *not*
+    /// applied here; they live in the base config the subcommand chose
+    /// (e.g. [`Config::serving_default`]), so a TOML file is never
+    /// clobbered by a flag the user did not type. Unknown/undeclared
+    /// option names are ignored, so one overlay serves every subcommand's
+    /// `ArgSpec`.
+    pub fn overlay_cli(&mut self, args: &Args) -> Result<()> {
+        fn parse<T: std::str::FromStr>(args: &Args, name: &str) -> Result<T>
+        where
+            T::Err: std::fmt::Display,
+        {
+            args.get_as(name).map_err(anyhow::Error::msg)
+        }
+        if args.provided("dataset") {
+            self.workload.dataset = args.get("dataset").to_string();
+        }
+        if args.provided("seed") {
+            self.workload.seed = parse(args, "seed")?;
+        }
+        if args.provided("history") {
+            self.workload.history_queries = parse(args, "history")?;
+        }
+        if args.provided("eval") {
+            self.workload.eval_queries = parse(args, "eval")?;
+        }
+        if args.provided("max-wait-us") {
+            self.scheme.max_wait_us = parse(args, "max-wait-us")?;
+        }
+        if args.provided("artifacts") {
+            self.artifacts_dir = args.get("artifacts").to_string();
+        }
+        self.validate()
     }
 
     /// Validate all sections.
@@ -238,6 +334,7 @@ impl Config {
         self.hardware.validate()?;
         self.scheme.validate()?;
         anyhow::ensure!(self.workload.history_queries > 0, "empty history");
+        anyhow::ensure!(self.workload.dense_features > 0, "zero dense features");
         Ok(())
     }
 }
@@ -307,5 +404,64 @@ mod tests {
         assert!(Config::from_toml("[scheme]\ndup_ratio = 1.5").is_err());
         assert!(Config::from_toml("[hardware]\nbits_per_cell = 9").is_err());
         assert!(Config::from_toml("[hardware]\nread_mode_bits = 7").is_err());
+        assert!(Config::from_toml("[workload]\ndense_features = 0").is_err());
+    }
+
+    #[test]
+    fn serving_and_open_loop_defaults() {
+        let s = Config::serving_default();
+        assert_eq!(s.workload.history_queries, 4_000);
+        assert_eq!(s.workload.eval_queries, 1_024);
+        assert_eq!(s.scheme.max_wait_us, 2_000);
+        assert_eq!(s.workload.dense_features, 13);
+        let o = Config::open_loop_default();
+        assert_eq!(o.scheme.max_wait_us, 5);
+        assert_eq!(o.workload.history_queries, 4_000);
+    }
+
+    #[test]
+    fn toml_overlays_base_and_new_knobs() {
+        let cfg = Config::from_toml_with_base(
+            "[scheme]\nmax_wait_us = 77\n[workload]\ndense_features = 8",
+            Config::open_loop_default(),
+        )
+        .unwrap();
+        assert_eq!(cfg.scheme.max_wait_us, 77);
+        assert_eq!(cfg.workload.dense_features, 8);
+        // Untouched fields keep the *base*, not the paper default.
+        assert_eq!(cfg.workload.history_queries, 4_000);
+        // A negative wait clamps to "close immediately" instead of
+        // wrapping to a deadline that never fires.
+        let neg = Config::from_toml("[scheme]\nmax_wait_us = -1").unwrap();
+        assert_eq!(neg.scheme.max_wait_us, 0);
+    }
+
+    #[test]
+    fn overlay_cli_applies_explicit_flags_over_toml() {
+        use crate::util::cli::ArgSpec;
+        let spec = ArgSpec::new("t")
+            .opt("dataset", "software", "")
+            .opt("seed", "42", "")
+            .opt("history", "4000", "")
+            .opt("eval", "1024", "")
+            .opt("max-wait-us", "5", "");
+        let argv: Vec<String> = ["--seed", "7", "--max-wait-us", "9"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = spec.parse(&argv).unwrap();
+        let mut cfg = Config::from_toml_with_base(
+            "[workload]\ndataset = \"sports\"\nseed = 1\n[scheme]\nmax_wait_us = 50",
+            Config::serving_default(),
+        )
+        .unwrap();
+        cfg.overlay_cli(&args).unwrap();
+        // Explicit CLI beats TOML...
+        assert_eq!(cfg.workload.seed, 7);
+        assert_eq!(cfg.scheme.max_wait_us, 9);
+        // ...but declared CLI defaults do not clobber TOML values.
+        assert_eq!(cfg.workload.dataset, "sports");
+        // Base values survive where neither layer spoke.
+        assert_eq!(cfg.workload.history_queries, 4_000);
     }
 }

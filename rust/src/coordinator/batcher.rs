@@ -29,6 +29,16 @@ impl BatchPolicy {
     pub fn max_wait_ns(&self) -> u64 {
         self.max_wait.as_nanos().min(u64::MAX as u128) as u64
     }
+
+    /// Build the policy from the configured wait window
+    /// (`scheme.max_wait_us` — one knob for the live servers and the
+    /// open-loop simulator alike) and a caller-chosen batch cap.
+    pub fn from_config(cfg: &crate::config::Config, max_batch: usize) -> Self {
+        Self {
+            max_batch,
+            max_wait: Duration::from_micros(cfg.scheme.max_wait_us),
+        }
+    }
 }
 
 impl Default for BatchPolicy {

@@ -23,7 +23,9 @@ pub mod store;
 pub use batcher::{BatchPolicy, Batcher};
 pub use drift::DriftMonitor;
 pub use planner::{Planner, ReducePass};
-pub use server::{Pipeline, Request, Response, Server, ServerHandle, ShardedServerHandle};
+pub use server::{
+    Pipeline, PipelineStatus, Request, Response, Server, ServerHandle, ShardedServerHandle,
+};
 pub use store::EmbeddingStore;
 
 use crate::config::Config;
@@ -74,14 +76,31 @@ pub fn build_pipeline(cfg: &Config, scheme: Scheme, scale: f64) -> Result<Pipeli
 
 /// Build a pipeline from an already-run offline phase.
 pub fn build_pipeline_from(cfg: &Config, offline: OfflinePhase) -> Result<Pipeline> {
+    build_pipeline_with_store(cfg, offline, None)
+}
+
+/// Build a pipeline from an already-run offline phase and an optional
+/// explicit embedding table (e.g. one installed on a
+/// [`crate::deploy::Prepared`]). `None` lays out the deterministic
+/// random table per the artifact manifest; `Some` tables are validated
+/// against the manifest dims by [`Pipeline::new`] — a mismatched table
+/// is an error, never silently replaced.
+pub fn build_pipeline_with_store(
+    cfg: &Config,
+    offline: OfflinePhase,
+    store: Option<EmbeddingStore>,
+) -> Result<Pipeline> {
     let runtime = Runtime::load(&cfg.artifacts_dir)?;
     let m = runtime.manifest();
-    let store = EmbeddingStore::random(
-        offline.engine.mapping(),
-        m.embed_dim,
-        m.xbar_rows,
-        cfg.workload.seed,
-    );
+    let store = match store {
+        Some(s) => s,
+        None => EmbeddingStore::random(
+            offline.engine.mapping(),
+            m.embed_dim,
+            m.xbar_rows,
+            cfg.workload.seed,
+        ),
+    };
     Pipeline::new(runtime, offline.engine, store, cfg.workload.seed)
 }
 

@@ -55,6 +55,25 @@ pub struct Response {
     pub latency: Duration,
 }
 
+/// Cumulative status snapshot of a running single-pool server — the
+/// coordinator's answer to the cluster layer's
+/// [`crate::cluster::ShardStatus`], served through
+/// [`ServerHandle::status`].
+#[derive(Debug, Clone)]
+pub struct PipelineStatus {
+    /// Queries served since spawn.
+    pub queries: u64,
+    /// Embedding lookups served since spawn.
+    pub lookups: u64,
+    /// Batches the dynamic batcher closed.
+    pub batches: u64,
+    /// Circuit-simulated cost of everything served (sequential batches on
+    /// one executor, so completion accumulates).
+    pub sim: ExecStats,
+    /// Current drift degradation ratio (mapping staleness signal).
+    pub drift_degradation: f64,
+}
+
 /// The synchronous inference pipeline (one per executor thread).
 pub struct Pipeline {
     runtime: Runtime,
@@ -65,6 +84,8 @@ pub struct Pipeline {
     scratch: Scratch,
     /// Reusable tile gather buffer.
     tile_buf: Vec<f32>,
+    /// Batches served since start.
+    batches: u64,
     /// Batch-level circuit stats accumulated since start.
     pub sim_stats: ExecStats,
     /// Online staleness monitor (activations-per-lookup EMA vs the
@@ -108,6 +129,7 @@ impl Pipeline {
             params,
             scratch: Scratch::default(),
             tile_buf: Vec::new(),
+            batches: 0,
             sim_stats: ExecStats::default(),
             // Baseline = the mapping's ideal activations-per-lookup is not
             // known until traffic flows; seed with 1 activation per ~8
@@ -120,6 +142,17 @@ impl Pipeline {
     /// The drift monitor (read-only view for operators/metrics).
     pub fn drift(&self) -> &DriftMonitor {
         &self.drift
+    }
+
+    /// Cumulative status snapshot (counters live in the sim stats).
+    pub fn status(&self) -> PipelineStatus {
+        PipelineStatus {
+            queries: self.sim_stats.queries,
+            lookups: self.sim_stats.lookups,
+            batches: self.batches,
+            sim: self.sim_stats.clone(),
+            drift_degradation: self.drift.degradation(),
+        }
     }
 
     /// Re-arm the drift monitor with a measured baseline
@@ -192,6 +225,7 @@ impl Pipeline {
         // 4: circuit-level cost of this batch on the crossbar pool.
         let sim = self.engine.run_batch(&queries, &mut self.scratch);
         self.sim_stats.accumulate(&sim);
+        self.batches += 1;
 
         // 5: feed the drift monitor (mapping staleness signal).
         let mut drift_scratch = Vec::new();
@@ -224,6 +258,7 @@ impl Pipeline {
 
 enum Msg {
     Infer(Request, Instant, mpsc::Sender<Result<Response>>),
+    Status(mpsc::Sender<PipelineStatus>),
     Shutdown,
 }
 
@@ -241,6 +276,18 @@ impl ServerHandle {
             .send(Msg::Infer(req, Instant::now(), tx))
             .map_err(|_| anyhow!("server is down"))?;
         rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    /// Cumulative status snapshot of the executor: everything served so
+    /// far (responses already delivered). Requests still queued behind
+    /// the dynamic batcher are not counted and are *not* flushed — a
+    /// status poll never changes batch boundaries.
+    pub fn status(&self) -> Result<PipelineStatus> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Status(tx))
+            .map_err(|_| anyhow!("server is down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped status request"))
     }
 
     /// Fire-and-collect: submit many requests, wait for all responses.
@@ -402,6 +449,12 @@ fn executor_loop(pipeline: &mut Pipeline, rx: mpsc::Receiver<Msg>, policy: Batch
                 // request, mapped onto the executor clock's timeline.
                 let at_ns = clock.instant_ns(at);
                 batcher.push_at((req, at, resp_tx), at_ns);
+            }
+            Some(Msg::Status(reply)) => {
+                // Report what has been *served* so far — queued requests
+                // keep their batch-formation window; a status poll must
+                // never change batch boundaries.
+                let _ = reply.send(pipeline.status());
             }
             None => {}
         }

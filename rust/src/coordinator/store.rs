@@ -75,6 +75,12 @@ impl EmbeddingStore {
         self.num_groups
     }
 
+    /// Embeddings in the master table (the catalogue size this store
+    /// was laid out for).
+    pub fn num_embeddings(&self) -> usize {
+        self.table.len() / self.dim.max(1)
+    }
+
     /// One embedding vector from the master table.
     pub fn embedding(&self, e: EmbeddingId) -> &[f32] {
         let off = e as usize * self.dim;

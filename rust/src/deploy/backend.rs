@@ -1,0 +1,699 @@
+//! The [`Backend`] trait and its three implementations.
+//!
+//! A backend is *where a reduction runs*: the live single-pool server
+//! ([`SinglePool`], one executor thread + PJRT numerics), the live
+//! sharded pool ([`Sharded`], scatter-gather over N executor threads),
+//! or the thread-free deterministic simulator ([`SimBackend`], the
+//! discrete-event path the open-loop driver measures). All three speak
+//! one object-safe vocabulary, so callers hold a `&dyn Backend` and the
+//! choice becomes a deployment-time knob — exactly how RecNMP-style
+//! serving stacks treat their memory tiers.
+//!
+//! Every backend also exposes its **deterministic timing twin** through
+//! [`Backend::run_batch_timed`]: the discrete-event cost of a batch on
+//! one executor's local replica table. That is what lets
+//! [`crate::loadgen::drive`] measure any backend — live or simulated —
+//! on virtual time, bit-reproducibly.
+
+use crate::allocation::Replication;
+use crate::cluster::{
+    self, Cluster, ClusterConfig, ClusterHandle, PoolShared, ShardPlan, ShardingMode,
+};
+use crate::coordinator::{
+    build_pipeline_with_store, BatchPolicy, EmbeddingStore, Request, Server, ServerHandle,
+};
+use crate::engine::{Engine, Scheme};
+use crate::grouping::Mapping;
+use crate::sched::{ExecStats, Scheduler, Scratch};
+use crate::workload::{EmbeddingId, Query};
+use crate::xbar::CrossbarModel;
+use crate::Result;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One reduced query, backend-agnostic: the vocabulary shared by the
+/// live single pool's responses, the cluster's scatter-gather merges,
+/// and the simulator's reference reductions.
+#[derive(Debug, Clone)]
+pub struct Reduction {
+    /// Position of the query in the submitted batch.
+    pub id: u64,
+    /// The reduced embedding, length `D`.
+    pub reduced: Vec<f32>,
+    /// Crossbar activations the query cost (summed across executors).
+    pub activations: u64,
+    /// Distinct executors the query touched (1 on the single pool).
+    pub fanout: usize,
+    /// Wall-clock latency (zero on simulated backends).
+    pub latency: Duration,
+}
+
+/// Cumulative per-executor status snapshot, backend-agnostic.
+#[derive(Debug, Clone)]
+pub struct BackendStatus {
+    pub executor: u32,
+    /// Logical groups this executor hosts (owned + replicas).
+    pub hosted_groups: usize,
+    /// Placement epoch (always 0 outside rebalancing pools).
+    pub epoch: u64,
+    /// (Sub-)queries served since spawn.
+    pub queries: u64,
+    /// Embedding lookups served since spawn.
+    pub lookups: u64,
+    /// Batches the executor's dynamic batcher closed.
+    pub batches: u64,
+    /// Circuit-simulated cost of everything served.
+    pub sim: ExecStats,
+}
+
+/// A serving backend: N executors that reduce embedding queries.
+///
+/// Object-safe by design — entry points hold `&dyn Backend` and stay
+/// agnostic of where the reduction runs. The contract:
+///
+/// * [`Backend::scatter`] and [`Backend::run_batch_timed`] together form
+///   the backend's *deterministic timing twin*: scatter is
+///   ownership-pinned (the reproducible stand-in for any load-adaptive
+///   routing the live path does), and `run_batch_timed` prices one batch
+///   on one executor's **local** replica table via the discrete-event
+///   scheduler. Both are pure functions of the backend's configuration —
+///   no wall clock, no thread timing.
+/// * [`Backend::reduce_many`] serves real numerics (and may be
+///   load-adaptive, threaded, or PJRT-backed); responses always come
+///   back in submission order and merge partials in ascending executor
+///   order, so the float summation order is deterministic for a fixed
+///   scatter.
+/// * [`Backend::status`] reports one row per executor.
+pub trait Backend {
+    /// Short human-readable backend label (for reports).
+    fn name(&self) -> &str;
+
+    /// Independent executors (dynamic batchers) this backend runs.
+    fn executors(&self) -> usize;
+
+    /// Split a query's items into per-executor sub-lists (length =
+    /// [`Backend::executors`]; untouched executors get an empty list,
+    /// item order is preserved within each executor).
+    fn scatter(&self, items: &[EmbeddingId]) -> Vec<Vec<EmbeddingId>>;
+
+    /// Discrete-event cost of one batch on `executor`'s local replica
+    /// table. Pushes each query's finish offset (ns relative to batch
+    /// start) into `finish_rel`, one entry per query in order.
+    fn run_batch_timed(
+        &self,
+        executor: usize,
+        queries: &[Query],
+        scratch: &mut Scratch,
+        finish_rel: &mut Vec<f64>,
+    ) -> ExecStats;
+
+    /// `(ns, pJ)` charged per extra executor merged at the front end
+    /// (one digital vector add per partial beyond the first).
+    fn merge_cost(&self) -> (f64, f64);
+
+    /// Reduce a batch of queries; responses in submission order.
+    fn reduce_many(&self, queries: &[Query]) -> Result<Vec<Reduction>>;
+
+    /// Cumulative status, one row per executor. Stateless backends (the
+    /// simulator) report zeroed counters — a drive's accounting lives in
+    /// its [`crate::loadgen::OpenLoopReport`], not here.
+    fn status(&self) -> Result<Vec<BackendStatus>>;
+}
+
+fn zero_status(executor: u32, hosted_groups: usize) -> BackendStatus {
+    BackendStatus {
+        executor,
+        hosted_groups,
+        epoch: 0,
+        queries: 0,
+        lookups: 0,
+        batches: 0,
+        sim: ExecStats::default(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// SimBackend: the thread-free deterministic twin.
+// ---------------------------------------------------------------------
+
+/// The deterministic discrete-event backend: no threads, no wall clock,
+/// no PJRT. This is what the open-loop driver ([`crate::loadgen::drive`])
+/// measures, and what benches sweep. Borrow-built from a prepared
+/// deployment ([`super::Prepared::sim`] /
+/// [`super::Prepared::sim_sharded`]), an [`Engine`], or raw parts.
+///
+/// Numerics are optional: attach a table with
+/// [`SimBackend::with_store`] and [`SimBackend::reduce_many`] serves the
+/// exact reference reduction (per-executor partials merged in ascending
+/// executor order, mirroring the live cluster's gather); without a store
+/// it reports an error — the backend is timing-only.
+#[derive(Debug)]
+pub struct SimBackend<'a> {
+    mapping: &'a Mapping,
+    /// Global replica table — the single executor's schedule domain.
+    replication: &'a Replication,
+    model: &'a CrossbarModel,
+    dynamic_switch: bool,
+    /// Sharded layout; `None` = one executor over the global table.
+    plan: Option<ShardPlan>,
+    /// Per-executor local replica tables (ownership-pinned; sharded only).
+    locals: Vec<Replication>,
+    store: Option<&'a EmbeddingStore>,
+    label: String,
+}
+
+impl<'a> SimBackend<'a> {
+    /// Single-executor simulator over explicit offline products.
+    pub fn from_parts(
+        mapping: &'a Mapping,
+        replication: &'a Replication,
+        model: &'a CrossbarModel,
+        dynamic_switch: bool,
+    ) -> Self {
+        assert_eq!(
+            mapping.num_groups(),
+            replication.copies.len(),
+            "replication plan does not match mapping"
+        );
+        Self {
+            mapping,
+            replication,
+            model,
+            dynamic_switch,
+            plan: None,
+            locals: Vec::new(),
+            store: None,
+            label: "sim".to_string(),
+        }
+    }
+
+    /// Single-executor simulator over a prepared engine. (The four-accessor
+    /// wiring the rest of the crate used to hand-roll lives here and in
+    /// [`Engine::scheduler`] only.)
+    ///
+    /// Panics on an nMARS engine: the timed discrete-event path prices
+    /// the MAC dataflow only, and MAC costs must never be reported
+    /// under an nMARS label. ([`super::Prepared::sim`] returns the same
+    /// refusal as a graceful `Err`.)
+    pub fn of_engine(engine: &'a Engine) -> Self {
+        assert!(
+            engine.scheme() != Scheme::Nmars,
+            "the timing twin serves the MAC dataflow; scheme {:?} is not supported here",
+            engine.scheme().name()
+        );
+        Self::from_parts(
+            engine.mapping(),
+            engine.replication(),
+            engine.model(),
+            engine.dynamic_switch(),
+        )
+    }
+
+    /// Single-executor simulator over a shared pool snapshot.
+    pub fn single(shared: &'a PoolShared) -> Self {
+        Self::from_parts(
+            &shared.mapping,
+            &shared.replication,
+            &shared.model,
+            shared.dynamic_switch,
+        )
+    }
+
+    /// Sharded simulator over a shared pool snapshot: one executor per
+    /// shard of `plan`, each scheduling on its ownership-pinned local
+    /// replica table (the deterministic twin of the live sharded pool).
+    pub fn sharded(shared: &'a PoolShared, plan: ShardPlan) -> Self {
+        Self::single(shared).into_sharded(plan)
+    }
+
+    /// Turn a single-executor simulator into the `plan`-sharded one.
+    pub fn into_sharded(mut self, plan: ShardPlan) -> Self {
+        assert_eq!(
+            plan.num_groups(),
+            self.mapping.num_groups(),
+            "plan covers {} groups, mapping has {}",
+            plan.num_groups(),
+            self.mapping.num_groups()
+        );
+        let pinned = crate::cluster::ReplicaPlan::pinned(&plan, self.replication);
+        self.locals = (0..plan.shards)
+            .map(|s| pinned.local_replication(s as u32, self.replication.batch_size))
+            .collect();
+        self.label = format!("sim-sharded({})", plan.shards);
+        self.plan = Some(plan);
+        self
+    }
+
+    /// Attach an embedding table so [`Backend::reduce_many`] can serve
+    /// exact reference reductions.
+    ///
+    /// **Contract** (the same one [`super::Prepared::install_store`]
+    /// and `EmbeddingStore::quantized` document): the store must have
+    /// been laid out for *this* backend's mapping. Catalogue-size and
+    /// group-count mismatches are rejected here; equal-sized stores
+    /// tiled by a different mapping cannot be detected cheaply and
+    /// remain the caller's responsibility.
+    pub fn with_store(mut self, store: &'a EmbeddingStore) -> Self {
+        assert_eq!(
+            store.num_groups(),
+            self.mapping.num_groups(),
+            "store covers {} groups, mapping has {}",
+            store.num_groups(),
+            self.mapping.num_groups()
+        );
+        assert_eq!(
+            store.num_embeddings(),
+            self.mapping.num_embeddings(),
+            "store holds {} embeddings, mapping catalogues {}",
+            store.num_embeddings(),
+            self.mapping.num_embeddings()
+        );
+        self.store = Some(store);
+        self
+    }
+
+    fn executor_replication(&self, executor: usize) -> &Replication {
+        match self.plan {
+            None => self.replication,
+            Some(_) => &self.locals[executor],
+        }
+    }
+}
+
+impl Backend for SimBackend<'_> {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn executors(&self) -> usize {
+        self.plan.as_ref().map_or(1, |p| p.shards)
+    }
+
+    fn scatter(&self, items: &[EmbeddingId]) -> Vec<Vec<EmbeddingId>> {
+        match &self.plan {
+            None => vec![items.to_vec()],
+            Some(plan) => plan.split_items(self.mapping, items),
+        }
+    }
+
+    fn run_batch_timed(
+        &self,
+        executor: usize,
+        queries: &[Query],
+        scratch: &mut Scratch,
+        finish_rel: &mut Vec<f64>,
+    ) -> ExecStats {
+        // The scheduler is a pure function of (mapping, replicas, model);
+        // rebuilding it per batch costs O(groups) — the same order as the
+        // batch's own busy-table reset — and keeps the backend borrow-only.
+        Scheduler::new(
+            self.mapping,
+            self.executor_replication(executor),
+            self.model,
+            self.dynamic_switch,
+        )
+        .run_batch_timed(queries, scratch, finish_rel)
+    }
+
+    fn merge_cost(&self) -> (f64, f64) {
+        self.model.vector_add()
+    }
+
+    fn reduce_many(&self, queries: &[Query]) -> Result<Vec<Reduction>> {
+        let store = self.store.ok_or_else(|| {
+            anyhow::anyhow!(
+                "this SimBackend is timing-only; attach a table with with_store() to reduce"
+            )
+        })?;
+        let mut out = Vec::with_capacity(queries.len());
+        let mut gscratch = Vec::new();
+        for (i, q) in queries.iter().enumerate() {
+            let mut reduced = vec![0.0f32; store.dim()];
+            let mut activations = 0u64;
+            let mut fanout = 0usize;
+            // Per-executor partials merged in ascending executor order —
+            // the same float summation order as the live cluster gather.
+            for items in self.scatter(&q.items) {
+                if items.is_empty() {
+                    continue;
+                }
+                fanout += 1;
+                activations += self.mapping.groups_touched(&items, &mut gscratch) as u64;
+                let partial = store.reduce_reference(&items);
+                for (o, &v) in reduced.iter_mut().zip(&partial) {
+                    *o += v;
+                }
+            }
+            out.push(Reduction {
+                id: i as u64,
+                reduced,
+                activations,
+                fanout,
+                latency: Duration::ZERO,
+            });
+        }
+        Ok(out)
+    }
+
+    fn status(&self) -> Result<Vec<BackendStatus>> {
+        // The simulator is stateless across calls: counters are always
+        // zero (each drive's accounting is in its OpenLoopReport) and
+        // placement is ownership-pinned, so each executor hosts exactly
+        // the groups it owns.
+        Ok(match &self.plan {
+            None => vec![zero_status(0, self.mapping.num_groups())],
+            Some(plan) => plan
+                .group_counts()
+                .into_iter()
+                .enumerate()
+                .map(|(s, n)| zero_status(s as u32, n))
+                .collect(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// SinglePool: the live single-pool server (PJRT numerics).
+// ---------------------------------------------------------------------
+
+/// The live single-pool backend: one executor thread owning the whole
+/// pipeline (PJRT runtime + engine + store) behind a dynamic batcher.
+/// Requires AOT artifacts; spawn via [`SinglePool::spawn`].
+pub struct SinglePool {
+    server: Server,
+    shared: PoolShared,
+    scheme: Scheme,
+    dense_features: usize,
+}
+
+impl SinglePool {
+    /// Spawn the executor thread from a prepared deployment. The offline
+    /// phase is **not** re-run: the prepared engine moves onto the
+    /// executor thread (PJRT handles are created there and never cross
+    /// threads).
+    pub fn spawn(prepared: super::Prepared, policy: BatchPolicy) -> Result<Self> {
+        crate::runtime::require_artifacts(&prepared.config().artifacts_dir)?;
+        let shared = PoolShared::from_engine(prepared.engine());
+        let scheme = prepared.scheme();
+        let dense_features = prepared.config().workload.dense_features;
+        let (cfg, offline, store) = prepared.into_offline();
+        let server =
+            Server::spawn(policy, move || build_pipeline_with_store(&cfg, offline, store))?;
+        Ok(Self {
+            server,
+            shared,
+            scheme,
+            dense_features,
+        })
+    }
+
+    /// The full request/response client (dense features + logits); the
+    /// [`Backend`] impl covers the reduce-only vocabulary.
+    pub fn handle(&self) -> ServerHandle {
+        self.server.handle()
+    }
+
+    /// Dense features each request must carry (from the config).
+    pub fn dense_features(&self) -> usize {
+        self.dense_features
+    }
+}
+
+impl Backend for SinglePool {
+    fn name(&self) -> &str {
+        "single-pool"
+    }
+
+    fn executors(&self) -> usize {
+        1
+    }
+
+    fn scatter(&self, items: &[EmbeddingId]) -> Vec<Vec<EmbeddingId>> {
+        vec![items.to_vec()]
+    }
+
+    fn run_batch_timed(
+        &self,
+        executor: usize,
+        queries: &[Query],
+        scratch: &mut Scratch,
+        finish_rel: &mut Vec<f64>,
+    ) -> ExecStats {
+        // The live nMARS demo is a supported closed-loop path, but the
+        // timed discrete-event loop prices MAC only — refuse rather
+        // than report MAC costs under an nMARS label.
+        assert!(
+            self.scheme != Scheme::Nmars,
+            "the timing twin serves the MAC dataflow; scheme {:?} is not supported here",
+            self.scheme.name()
+        );
+        // The timing twin is exactly the single-executor simulator over
+        // the shared pool snapshot — one wiring, not a second copy.
+        SimBackend::single(&self.shared).run_batch_timed(executor, queries, scratch, finish_rel)
+    }
+
+    fn merge_cost(&self) -> (f64, f64) {
+        self.shared.model.vector_add()
+    }
+
+    fn reduce_many(&self, queries: &[Query]) -> Result<Vec<Reduction>> {
+        let reqs: Vec<Request> = queries
+            .iter()
+            .enumerate()
+            .map(|(i, q)| Request {
+                id: i as u64,
+                dense: vec![0.0; self.dense_features],
+                items: q.items.clone(),
+            })
+            .collect();
+        Ok(self
+            .handle()
+            .infer_many(reqs)?
+            .into_iter()
+            .map(|r| Reduction {
+                id: r.id,
+                reduced: r.reduced,
+                activations: r.activations,
+                fanout: 1,
+                latency: r.latency,
+            })
+            .collect())
+    }
+
+    fn status(&self) -> Result<Vec<BackendStatus>> {
+        let s = self.handle().status()?;
+        Ok(vec![BackendStatus {
+            executor: 0,
+            hosted_groups: self.shared.mapping.num_groups(),
+            epoch: 0,
+            queries: s.queries,
+            lookups: s.lookups,
+            batches: s.batches,
+            sim: s.sim,
+        }])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sharded: the live scatter-gather pool.
+// ---------------------------------------------------------------------
+
+/// The timing twin's view of one placement epoch: the ownership plan
+/// the scatter pins to and the matching per-executor pinned local
+/// replica tables. Kept together so one snapshot's plan and locals
+/// always share an epoch. (A rebalance racing a long timed drive can
+/// still flip the epoch *between* snapshots; mispricing is bounded to
+/// phantom single copies via `local_replication`'s `.max(1)` clamp —
+/// driving the twin concurrently with rebalances is not a supported
+/// measurement.)
+struct TwinSnapshot {
+    epoch: u64,
+    plan: Arc<ShardPlan>,
+    locals: Arc<Vec<Replication>>,
+}
+
+/// The live sharded backend: N executor threads, each owning its slice
+/// of the table behind its own dynamic batcher, fronted by the
+/// scatter-gather client. Placement/routing behaviour is the typed
+/// [`ShardingMode`] (pinned / replica-routed / rebalancing), not a pair
+/// of bools. Spawn via [`Sharded::spawn`].
+pub struct Sharded {
+    cluster: Cluster,
+    handle: ClusterHandle,
+    mode: ShardingMode,
+    label: String,
+    /// Per-epoch timing-twin snapshot, cached so
+    /// [`Backend::run_batch_timed`] does not rebuild O(groups) local
+    /// tables every batch (the per-sub-batch rebuild PR 2 removed from
+    /// the shard executors). Refreshed lazily after an epoch swap.
+    twin: Mutex<TwinSnapshot>,
+}
+
+impl Sharded {
+    /// Partition the prepared deployment's table per `ccfg` and spawn
+    /// the shard executors. The offline phase is reused, not re-run; the
+    /// prepared bundle stays borrowed so the caller keeps its traces for
+    /// driving and verification.
+    pub fn spawn(prepared: &super::Prepared, ccfg: &ClusterConfig) -> Result<Self> {
+        let cluster = cluster::assemble_cluster(
+            prepared.engine(),
+            prepared.history(),
+            prepared.eval(),
+            prepared.store(),
+            ccfg,
+        )?;
+        let handle = cluster.handle();
+        let table = handle.routes();
+        let twin = Mutex::new(Self::twin_snapshot(&cluster, &table));
+        Ok(Self {
+            cluster,
+            handle,
+            mode: ccfg.mode,
+            label: format!("sharded({})", ccfg.shards),
+            twin,
+        })
+    }
+
+    /// Build the timing twin's view of one routing-table snapshot.
+    ///
+    /// The locals come from the **ownership-pinned** placement over the
+    /// epoch's plan — not the live spread placement — because the
+    /// twin's scatter is pinned too ([`Backend::scatter`]): pricing an
+    /// owner's batches on a spread table whose copies never receive
+    /// pinned traffic would systematically inflate the twin's tails and
+    /// break `drive(&Sharded) == drive(&SimBackend::sharded)` for the
+    /// same plan.
+    fn twin_snapshot(cluster: &Cluster, table: &crate::cluster::RouteTable) -> TwinSnapshot {
+        let shared = cluster.shared();
+        let pinned = crate::cluster::ReplicaPlan::pinned(&table.plan, &shared.replication);
+        let locals: Vec<Replication> = (0..cluster.num_shards())
+            .map(|s| pinned.local_replication(s as u32, shared.replication.batch_size))
+            .collect();
+        TwinSnapshot {
+            epoch: table.epoch,
+            plan: Arc::clone(&table.plan),
+            locals: Arc::new(locals),
+        }
+    }
+
+    /// Check the routing table for an epoch flip and return the current
+    /// `(plan, locals)` snapshot. Called per *batch* (run_batch_timed),
+    /// where the routing-table read is amortised; the per-*query*
+    /// scatter reads the cached snapshot without touching the routing
+    /// lock ([`Sharded::twin_plan`]).
+    fn refresh_twin(&self) -> (Arc<ShardPlan>, Arc<Vec<Replication>>) {
+        let table = self.handle.routes();
+        let mut cached = self.twin.lock().expect("twin lock poisoned");
+        if cached.epoch != table.epoch {
+            *cached = Self::twin_snapshot(&self.cluster, &table);
+        }
+        (Arc::clone(&cached.plan), Arc::clone(&cached.locals))
+    }
+
+    /// The cached snapshot's plan, with no routing-table access — the
+    /// scatter hot path (one call per query) pays a single mutex lock.
+    /// The snapshot advances at batch boundaries via
+    /// [`Sharded::refresh_twin`].
+    fn twin_plan(&self) -> Arc<ShardPlan> {
+        Arc::clone(&self.twin.lock().expect("twin lock poisoned").plan)
+    }
+
+    /// The running cluster (plan, epoch, rebalance entry point).
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// The cloneable scatter-gather client.
+    pub fn handle(&self) -> ClusterHandle {
+        self.handle.clone()
+    }
+
+    /// The configured placement/routing mode.
+    pub fn mode(&self) -> ShardingMode {
+        self.mode
+    }
+
+    /// Unwrap into the bare cluster (legacy [`Cluster::build`] callers).
+    pub fn into_cluster(self) -> Cluster {
+        self.cluster
+    }
+}
+
+impl Backend for Sharded {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn executors(&self) -> usize {
+        self.cluster.num_shards()
+    }
+
+    /// Ownership-pinned scatter — the deterministic twin. The live
+    /// [`Backend::reduce_many`] path may route replicated groups by
+    /// power-of-two-choices; the timing twin pins them so identical
+    /// inputs always price identically.
+    fn scatter(&self, items: &[EmbeddingId]) -> Vec<Vec<EmbeddingId>> {
+        self.twin_plan()
+            .split_items(&self.cluster.shared().mapping, items)
+    }
+
+    fn run_batch_timed(
+        &self,
+        executor: usize,
+        queries: &[Query],
+        scratch: &mut Scratch,
+        finish_rel: &mut Vec<f64>,
+    ) -> ExecStats {
+        let shared = self.cluster.shared();
+        // The executor's schedule domain is its *local* pinned replica
+        // table under the current placement epoch (cached across
+        // batches, coherent with the scatter's plan).
+        let (_, locals) = self.refresh_twin();
+        Scheduler::new(
+            &shared.mapping,
+            &locals[executor],
+            &shared.model,
+            shared.dynamic_switch,
+        )
+        .run_batch_timed(queries, scratch, finish_rel)
+    }
+
+    fn merge_cost(&self) -> (f64, f64) {
+        self.cluster.shared().model.vector_add()
+    }
+
+    fn reduce_many(&self, queries: &[Query]) -> Result<Vec<Reduction>> {
+        Ok(self
+            .handle
+            .reduce_many(queries)?
+            .into_iter()
+            .map(|r| Reduction {
+                id: r.id,
+                reduced: r.reduced,
+                activations: r.activations,
+                fanout: r.fanout,
+                latency: r.latency,
+            })
+            .collect())
+    }
+
+    fn status(&self) -> Result<Vec<BackendStatus>> {
+        Ok(self
+            .handle
+            .shard_status()?
+            .into_iter()
+            .map(|s| BackendStatus {
+                executor: s.shard,
+                // ShardStatus::owned_groups counts the shard's
+                // materialised tiles — owned *and* replicas — despite
+                // its legacy name.
+                hosted_groups: s.owned_groups,
+                epoch: s.epoch,
+                queries: s.sub_queries,
+                lookups: s.lookups,
+                batches: s.batches,
+                sim: s.sim,
+            })
+            .collect())
+    }
+}

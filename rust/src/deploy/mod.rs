@@ -1,0 +1,366 @@
+//! The deployment facade: **one builder, one [`Backend`] trait, every
+//! entry point a thin client**.
+//!
+//! Before this module existed, every consumer of the serving stack (the
+//! CLI, benches, tests, examples) hand-assembled the same pipeline —
+//! `Config` overrides → offline phase → four-accessor scheduler wiring →
+//! pool sharing → shard planning — with subtly different defaults per
+//! call site. `deploy` makes that one typed flow:
+//!
+//! 1. [`Deployment`] — the builder. Point it at a [`Config`], choose a
+//!    [`Scheme`] and scale, and [`Deployment::build`] runs the offline
+//!    phase (co-occurrence graph → Algorithm 1 grouping → Eq. 1
+//!    replication) exactly once.
+//! 2. [`Prepared`] — the resulting bundle: the engine, the history/eval
+//!    traces the placement was derived from, and the lazily-materialised
+//!    embedding table. Everything downstream borrows from here.
+//! 3. [`Backend`] — the object-safe serving interface with three
+//!    implementations: [`SinglePool`] (live, PJRT numerics),
+//!    [`Sharded`] (live scatter-gather pool, [`ShardingMode`]-typed
+//!    placement), and [`SimBackend`] (the deterministic discrete-event
+//!    path [`crate::loadgen::drive`] measures).
+//!
+//! Configuration precedence is a single chain (see [`crate::config`]):
+//! built-in defaults < TOML file < explicitly passed CLI flags
+//! ([`Config::overlay_cli`]) < programmatic overrides
+//! ([`Deployment::workload`] and friends).
+//!
+//! ```no_run
+//! use recross::config::Config;
+//! use recross::deploy::Deployment;
+//! use recross::engine::Scheme;
+//! use recross::loadgen::{drive, Arrivals};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let prepared = Deployment::of(Config::open_loop_default())
+//!     .scheme(Scheme::ReCross)
+//!     .scale(0.05)
+//!     .build()?;
+//! // Deterministic timing of open-loop traffic on the simulated backend:
+//! let backend = prepared.sim()?;
+//! let queries = &prepared.eval().queries;
+//! let arrivals = Arrivals::poisson(50_000.0, 7).take(queries.len());
+//! let report = drive(&backend, queries, &arrivals, &prepared.batch_policy(32));
+//! println!("p99 = {} ns", report.percentile_ns(99.0));
+//! # Ok(()) }
+//! ```
+
+pub mod backend;
+
+pub use backend::{Backend, BackendStatus, Reduction, Sharded, SimBackend, SinglePool};
+pub use crate::cluster::ShardingMode;
+
+use crate::cluster::ShardPlan;
+use crate::config::{Config, WorkloadConfig};
+use crate::coordinator::{
+    build_pipeline_with_store, BatchPolicy, EmbeddingStore, OfflinePhase, Pipeline,
+};
+use crate::engine::{Engine, Scheme};
+use crate::sched::Scheduler;
+use crate::workload::Trace;
+use crate::Result;
+use std::sync::OnceLock;
+
+/// Builder for a prepared serving deployment. See the [module
+/// docs](self) for the full lifecycle.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    cfg: Config,
+    scheme: Scheme,
+    scale: f64,
+}
+
+impl Deployment {
+    /// Start from a configuration (already TOML/CLI-overlaid if the
+    /// caller wants those layers). Defaults: [`Scheme::ReCross`] at
+    /// paper scale (1.0).
+    pub fn of(cfg: Config) -> Self {
+        Self {
+            cfg,
+            scheme: Scheme::ReCross,
+            scale: 1.0,
+        }
+    }
+
+    /// Select the serving scheme (mapping + replication + ADC policy).
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Shrink the dataset (1.0 = paper size).
+    pub fn scale(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// Programmatically replace the workload section — the top layer of
+    /// the config precedence chain.
+    pub fn workload(mut self, workload: WorkloadConfig) -> Self {
+        self.cfg.workload = workload;
+        self
+    }
+
+    /// Validate the config and run the offline phase once.
+    pub fn build(self) -> Result<Prepared> {
+        self.cfg.validate()?;
+        anyhow::ensure!(
+            self.scale > 0.0,
+            "deployment scale must be positive, got {}",
+            self.scale
+        );
+        let offline = OfflinePhase::run(&self.cfg, self.scheme, self.scale)?;
+        Ok(Prepared {
+            cfg: self.cfg,
+            scale: self.scale,
+            offline,
+            store: OnceLock::new(),
+        })
+    }
+}
+
+/// A built deployment: the offline phase's products, ready to back any
+/// [`Backend`]. Owns the engine, the history/eval traces, and the
+/// (lazily materialised) embedding table.
+#[derive(Debug)]
+pub struct Prepared {
+    cfg: Config,
+    scale: f64,
+    offline: OfflinePhase,
+    /// Lazily-built embedding table (or one installed by
+    /// [`Prepared::install_store`]); the offline phase itself never
+    /// needs the numerics.
+    store: OnceLock<EmbeddingStore>,
+}
+
+impl Prepared {
+    /// The configuration this deployment was built from.
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    /// The dataset scale the offline phase ran at.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// The serving scheme.
+    pub fn scheme(&self) -> Scheme {
+        self.offline.engine.scheme()
+    }
+
+    /// The prepared engine (mapping, replication, cost model).
+    pub fn engine(&self) -> &Engine {
+        &self.offline.engine
+    }
+
+    /// The lookup history the offline phase learned from.
+    pub fn history(&self) -> &Trace {
+        &self.offline.history
+    }
+
+    /// The held-out evaluation trace.
+    pub fn eval(&self) -> &Trace {
+        &self.offline.eval
+    }
+
+    /// A scheduler over the engine's offline products (the blessed
+    /// replacement for the four-accessor `Scheduler::new` dance).
+    pub fn scheduler(&self) -> Scheduler<'_> {
+        self.offline.engine.scheduler()
+    }
+
+    /// The configured dynamic-batcher policy (`scheme.max_wait_us`) with
+    /// a caller-chosen batch cap.
+    pub fn batch_policy(&self, max_batch: usize) -> BatchPolicy {
+        BatchPolicy::from_config(&self.cfg, max_batch)
+    }
+
+    /// The embedding table, laid out per the mapping. Built on first use
+    /// (deterministic in `workload.seed`) unless
+    /// [`Prepared::install_store`] supplied one.
+    pub fn store(&self) -> &EmbeddingStore {
+        self.store.get_or_init(|| {
+            EmbeddingStore::random(
+                self.offline.engine.mapping(),
+                self.cfg.hardware.embedding_dim,
+                self.cfg.hardware.xbar_rows,
+                self.cfg.workload.seed,
+            )
+        })
+    }
+
+    /// Install an explicit embedding table (trained weights, an
+    /// integer-valued test table, ...) instead of the deterministic
+    /// random one. Fails if a table was already materialised.
+    ///
+    /// **Contract:** the store must have been laid out for this
+    /// deployment's mapping. Catalogue/group/dimension mismatches are
+    /// rejected; an equal-sized store tiled by a *different* mapping
+    /// cannot be detected cheaply and remains the caller's
+    /// responsibility (the same contract `EmbeddingStore::quantized`
+    /// documents).
+    pub fn install_store(&self, store: EmbeddingStore) -> Result<()> {
+        let mapping = self.offline.engine.mapping();
+        anyhow::ensure!(
+            store.num_groups() == mapping.num_groups(),
+            "store covers {} groups, mapping has {}",
+            store.num_groups(),
+            mapping.num_groups()
+        );
+        anyhow::ensure!(
+            store.num_embeddings() == mapping.num_embeddings(),
+            "store holds {} embeddings, mapping catalogues {}",
+            store.num_embeddings(),
+            mapping.num_embeddings()
+        );
+        anyhow::ensure!(
+            store.dim() == self.cfg.hardware.embedding_dim,
+            "store dim {} != configured embedding_dim {}",
+            store.dim(),
+            self.cfg.hardware.embedding_dim
+        );
+        self.store
+            .set(store)
+            .map_err(|_| anyhow::anyhow!("embedding table already materialised"))
+    }
+
+    /// The deterministic single-executor simulator backend.
+    ///
+    /// Errors on [`Scheme::Nmars`]: the discrete-event driver serves the
+    /// MAC dataflow only.
+    pub fn sim(&self) -> Result<SimBackend<'_>> {
+        self.ensure_mac("the open-loop driver")?;
+        Ok(SimBackend::of_engine(&self.offline.engine))
+    }
+
+    /// The deterministic sharded simulator backend: `shards` executors
+    /// over a locality partition of the offline history (`slack` is the
+    /// partitioner's balance slack).
+    pub fn sim_sharded(&self, shards: usize, slack: f64) -> Result<SimBackend<'_>> {
+        self.ensure_mac("the open-loop driver")?;
+        anyhow::ensure!(shards > 0, "need at least one shard");
+        anyhow::ensure!(slack >= 0.0, "slack must be non-negative");
+        let plan = ShardPlan::by_locality(
+            self.offline.engine.mapping(),
+            &self.offline.history,
+            shards,
+            slack,
+        );
+        Ok(SimBackend::of_engine(&self.offline.engine).into_sharded(plan))
+    }
+
+    /// The deterministic sharded simulator over an explicit plan.
+    pub fn sim_with_plan(&self, plan: ShardPlan) -> Result<SimBackend<'_>> {
+        self.ensure_mac("the open-loop driver")?;
+        Ok(SimBackend::of_engine(&self.offline.engine).into_sharded(plan))
+    }
+
+    fn ensure_mac(&self, who: &str) -> Result<()> {
+        anyhow::ensure!(
+            self.scheme() != Scheme::Nmars,
+            "{who} serves the MAC dataflow; scheme {:?} is not supported here",
+            self.scheme().name()
+        );
+        Ok(())
+    }
+
+    /// Consume into the pieces the live single-pool server moves onto
+    /// its executor thread. The third element is any table the caller
+    /// installed ([`Prepared::install_store`]) or that was already
+    /// materialised — live pipelines must honor it, never silently
+    /// rebuild a random one over it.
+    pub fn into_offline(self) -> (Config, OfflinePhase, Option<EmbeddingStore>) {
+        (self.cfg, self.offline, self.store.into_inner())
+    }
+
+    /// Consume into `(config, offline, store)`, materialising the store
+    /// if it never was (legacy [`crate::cluster::Cluster::build`]-style
+    /// bundles).
+    pub fn into_bundle_parts(self) -> (Config, OfflinePhase, EmbeddingStore) {
+        // Touch the lazy cell so into_inner always has a value.
+        let _ = self.store();
+        let store = self.store.into_inner().expect("store just materialised");
+        (self.cfg, self.offline, store)
+    }
+
+    /// Build the synchronous inference pipeline on the current thread
+    /// (PJRT runtime included; requires artifacts). An installed table
+    /// is honored (and validated against the artifact manifest).
+    pub fn into_pipeline(self) -> Result<Pipeline> {
+        let (cfg, offline, store) = self.into_offline();
+        build_pipeline_with_store(&cfg, offline, store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> Config {
+        let mut cfg = Config::paper_default();
+        cfg.workload.history_queries = 300;
+        cfg.workload.eval_queries = 60;
+        cfg
+    }
+
+    #[test]
+    fn builder_runs_offline_once_and_exposes_products() {
+        let prepared = Deployment::of(tiny_cfg())
+            .scheme(Scheme::ReCross)
+            .scale(0.02)
+            .build()
+            .unwrap();
+        assert_eq!(prepared.scheme(), Scheme::ReCross);
+        assert_eq!(prepared.history().queries.len(), 300);
+        assert_eq!(prepared.eval().queries.len(), 60);
+        assert!(prepared.engine().mapping().num_groups() > 0);
+        // The scheduler is buildable and serves a batch.
+        let mut scratch = crate::sched::Scratch::default();
+        let stats = prepared
+            .scheduler()
+            .run_batch(&prepared.eval().queries[..8], &mut scratch);
+        assert_eq!(stats.queries, 8);
+    }
+
+    #[test]
+    fn workload_override_is_the_top_layer() {
+        let mut w = tiny_cfg().workload;
+        w.dataset = "automotive".to_string();
+        let prepared = Deployment::of(tiny_cfg())
+            .workload(w)
+            .scale(0.02)
+            .build()
+            .unwrap();
+        assert_eq!(prepared.config().workload.dataset, "automotive");
+    }
+
+    #[test]
+    fn nmars_is_refused_by_the_sim_backends() {
+        let prepared = Deployment::of(tiny_cfg())
+            .scheme(Scheme::Nmars)
+            .scale(0.02)
+            .build()
+            .unwrap();
+        assert!(prepared.sim().is_err());
+        assert!(prepared.sim_sharded(2, 0.10).is_err());
+    }
+
+    #[test]
+    fn invalid_builds_are_rejected() {
+        assert!(Deployment::of(tiny_cfg()).scale(0.0).build().is_err());
+        let mut cfg = tiny_cfg();
+        cfg.workload.dataset = "books".into();
+        assert!(Deployment::of(cfg).scale(0.02).build().is_err());
+    }
+
+    #[test]
+    fn store_is_lazy_and_installable_once() {
+        let prepared = Deployment::of(tiny_cfg()).scale(0.02).build().unwrap();
+        let dim = prepared.config().hardware.embedding_dim;
+        assert_eq!(prepared.store().dim(), dim);
+        // Already materialised -> install fails.
+        let other = EmbeddingStore::random(prepared.engine().mapping(), dim, 64, 1);
+        assert!(prepared.install_store(other).is_err());
+    }
+}

@@ -55,6 +55,26 @@ impl Scheme {
         }
     }
 
+    /// Inverse of [`Scheme::name`]: the one scheme-parsing rule every
+    /// entry point (CLI, benches, configs) shares. `None` for unknown
+    /// names.
+    pub fn by_name(name: &str) -> Option<Scheme> {
+        Self::all().into_iter().find(|s| s.name() == name)
+    }
+
+    /// Every scheme, paper baselines and ablations alike.
+    pub fn all() -> [Scheme; 7] {
+        [
+            Scheme::Naive,
+            Scheme::Frequency,
+            Scheme::Nmars,
+            Scheme::ReCross,
+            Scheme::ReCrossNoDup,
+            Scheme::ReCrossNoSwitch,
+            Scheme::ReCrossLinear,
+        ]
+    }
+
     /// All paper-figure schemes (Fig. 8 comparison set).
     pub fn fig8_set() -> [Scheme; 3] {
         [Scheme::Naive, Scheme::Nmars, Scheme::ReCross]
@@ -183,9 +203,17 @@ impl Engine {
         self.replication.total_crossbars
     }
 
+    /// A scheduler over this engine's offline-phase products — the one
+    /// blessed way to wire the four pieces together (callers used to
+    /// hand-assemble `Scheduler::new(engine.mapping(), ...)`; that dance
+    /// now lives here and in [`crate::deploy`] only).
+    pub fn scheduler(&self) -> Scheduler<'_> {
+        Scheduler::new(&self.mapping, &self.replication, &self.model, self.dynamic_switch)
+    }
+
     /// Simulate one batch.
     pub fn run_batch(&self, queries: &[Query], scratch: &mut Scratch) -> ExecStats {
-        let sched = Scheduler::new(&self.mapping, &self.replication, &self.model, self.dynamic_switch);
+        let sched = self.scheduler();
         match self.dataflow {
             Dataflow::Mac => sched.run_batch(queries, scratch),
             Dataflow::NmarsLookup => sched.run_batch_nmars(queries, scratch),
@@ -384,6 +412,17 @@ mod tests {
             log_e.replication().duplicated_groups(),
             lin_e.replication().duplicated_groups()
         );
+    }
+
+    #[test]
+    fn scheme_names_round_trip() {
+        for s in Scheme::all() {
+            assert_eq!(Scheme::by_name(s.name()), Some(s), "{s:?}");
+        }
+        assert_eq!(Scheme::by_name("recross"), Some(Scheme::ReCross));
+        assert_eq!(Scheme::by_name("ReCross"), None, "names are exact");
+        assert_eq!(Scheme::by_name(""), None);
+        assert_eq!(Scheme::by_name("fractal"), None);
     }
 
     #[test]

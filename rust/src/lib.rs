@@ -38,11 +38,18 @@
 //! times, and a simulated-clock driver measures sojourn times — queue
 //! wait + batch formation + scheduled service — reporting throughput and
 //! p50/p95/p99/p999 latency, bit-reproducibly.
+//!
+//! The single front door to all of it is the **deployment facade**
+//! ([`deploy`]): `Deployment::of(config).scheme(..).build()?` runs the
+//! offline phase once, and the resulting [`deploy::Prepared`] bundle
+//! backs every [`deploy::Backend`] — the live single pool, the sharded
+//! pool, or the deterministic simulator — behind one object-safe trait.
 
 pub mod allocation;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod deploy;
 pub mod energy;
 pub mod engine;
 pub mod graph;

@@ -2,21 +2,20 @@
 //!
 //! The closed-loop harnesses (`Engine::run_trace`, `simulate_sharded`)
 //! feed pre-formed batches and report batch completion time — there is no
-//! notion of *offered load* or *queueing delay*. This driver runs the
-//! serving stack on **simulated time**: queries arrive at the timestamps
-//! an arrival process ([`super::arrival`]) produced, pass through the
-//! exact dynamic-batching policy the live executors run
-//! ([`crate::coordinator::Batcher`], now clock-injected), and are served
-//! by the existing discrete-event crossbar model
-//! ([`crate::sched::Scheduler::run_batch_timed`]). No threads, no wall
-//! clock: the same `(queries, arrivals, policy)` input always produces
-//! bit-identical output. Because every batch funnels through
-//! `run_batch_timed`, the driver inherits the scheduler's data-oriented
-//! hot path (O(log C) slot selection, sort-free run decomposition — see
-//! [`crate::sched::minslot`]) for free, and inherits it *safely*: the
-//! optimized scheduler is differentially fuzzed to be bit-identical to
-//! `sched::reference`, so every sojourn percentile this driver reports
-//! is unchanged by the rewrite.
+//! notion of *offered load* or *queueing delay*. This driver runs a
+//! serving [`Backend`] on **simulated time**: queries arrive at the
+//! timestamps an arrival process ([`super::arrival`]) produced, are
+//! scattered to the backend's executors ([`Backend::scatter`]), pass
+//! through the exact dynamic-batching policy the live executors run
+//! ([`crate::coordinator::Batcher`], clock-injected), and are served by
+//! the backend's discrete-event timing twin
+//! ([`Backend::run_batch_timed`]). No threads, no wall clock: the same
+//! `(backend, queries, arrivals, policy)` input always produces
+//! bit-identical output.
+//!
+//! One [`drive`] serves every backend — the single pool is simply the
+//! one-executor case, so the old `drive_single`/`drive_sharded` pair
+//! collapsed into it (both remain as deprecated shims for one release).
 //!
 //! Sojourn decomposition for a query arriving at `t_a`, whose batch
 //! closes at `t_c` and whose in-batch service finishes `f` ns after the
@@ -25,7 +24,7 @@
 //! ```text
 //! sojourn = (t_c - t_a)              queue wait + batch formation wait
 //!         + f                        scheduled crossbar service
-//!         [+ (fanout-1) · add_ns]    cross-shard merge (sharded backend)
+//!         [+ (fanout-1) · add_ns]    cross-executor merge
 //! ```
 //!
 //! `t_c` already folds in executor backpressure: a batch cannot close
@@ -34,11 +33,12 @@
 //! bound. That hockey-stick is exactly what `benches/fig13_latency.rs`
 //! sweeps.
 
-use crate::cluster::{PoolShared, ReplicaPlan, ShardPlan};
+use crate::cluster::{PoolShared, ShardPlan};
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::deploy::{Backend, BackendStatus, Reduction, SimBackend};
 use crate::metrics::percentile;
 use crate::sched::{ExecStats, Scheduler, Scratch};
-use crate::workload::Query;
+use crate::workload::{EmbeddingId, Query};
 
 /// Per-executor (shard) load telemetry.
 #[derive(Debug, Clone, PartialEq)]
@@ -130,106 +130,40 @@ impl OpenLoopReport {
     }
 }
 
-/// Open-loop drive of the **single-pool** path: one serial executor, one
-/// dynamic batcher, the scheduler's discrete-event service model.
+/// Open-loop drive of any [`Backend`] on simulated time.
 ///
-/// `arrivals_ns` must be non-decreasing and aligned with `queries`.
-pub fn drive_single(
-    sched: &Scheduler<'_>,
+/// The front-end splits every query by executor the instant it arrives
+/// ([`Backend::scatter`] — ownership-pinned, the deterministic twin of
+/// the live scatter), each executor runs its own dynamic batcher + a
+/// serial discrete-event service loop ([`Backend::run_batch_timed`]),
+/// and a query completes when its last sub-query finishes plus one merge
+/// add per extra executor touched ([`Backend::merge_cost`]). Empty
+/// queries are dropped at the front door (sojourn 0). `arrivals_ns` must
+/// be non-decreasing and aligned with `queries`.
+pub fn drive(
+    backend: &dyn Backend,
     queries: &[Query],
     arrivals_ns: &[u64],
     policy: &BatchPolicy,
 ) -> OpenLoopReport {
     check_arrivals(queries.len(), arrivals_ns);
     let n = queries.len();
-    // Empty queries are dropped at the front door (nothing to serve),
-    // exactly as the sharded backend's scatter drops them — the two
-    // backends must account identical traffic identically.
-    let arr: Vec<(u64, usize)> = arrivals_ns
-        .iter()
-        .copied()
-        .zip(0..n)
-        .filter(|&(_, i)| !queries[i].is_empty())
-        .collect();
-    let mut finish = vec![0.0f64; n];
-    let mut stats = ExecStats::default();
-    let mut scratch = Scratch::default();
-    let mut rel = Vec::new();
-    let qstats = simulate_executor(&arr, policy, &mut finish, |batch| {
-        let qs: Vec<Query> = batch.iter().map(|&i| queries[i].clone()).collect();
-        let s = sched.run_batch_timed(&qs, &mut scratch, &mut rel);
-        stats.accumulate(&s);
-        (s.completion_ns, rel.clone())
-    });
-    let sojourn: Vec<f64> = finish
-        .iter()
-        .zip(arrivals_ns)
-        .zip(queries)
-        .map(|((&f, &a), q)| if q.is_empty() { 0.0 } else { f - a as f64 })
-        .collect();
-    let horizon = qstats.horizon_ns;
-    let shard = ShardLoad {
-        shard: 0,
-        sub_queries: arr.len() as u64,
-        batches: qstats.batches,
-        busy_ns: qstats.busy_ns,
-        max_backlog: qstats.max_backlog,
-        mean_backlog: if horizon > 0.0 {
-            sojourn.iter().sum::<f64>() / horizon
-        } else {
-            0.0
-        },
-        backlog_samples: qstats.backlog_samples,
-    };
-    OpenLoopReport {
-        offered_qps: offered_qps(arrivals_ns),
-        sojourn_ns: sojourn,
-        stats,
-        horizon_ns: horizon,
-        shards: vec![shard],
-    }
-}
-
-/// Open-loop drive of the **sharded** path: the front-end splits every
-/// query by owning shard the instant it arrives (ownership-pinned
-/// routing, the deterministic twin of `cluster::server`'s scatter), each
-/// shard runs its own dynamic batcher + serial executor over its local
-/// replica table, and a query completes when its last sub-query finishes
-/// plus one merge add per extra shard touched.
-pub fn drive_sharded(
-    shared: &PoolShared,
-    plan: &ShardPlan,
-    queries: &[Query],
-    arrivals_ns: &[u64],
-    policy: &BatchPolicy,
-) -> OpenLoopReport {
-    check_arrivals(queries.len(), arrivals_ns);
-    assert_eq!(
-        plan.num_groups(),
-        shared.mapping.num_groups(),
-        "plan covers {} groups, mapping has {}",
-        plan.num_groups(),
-        shared.mapping.num_groups()
-    );
-    let n = queries.len();
-    let shards = plan.shards;
-    let replicas = ReplicaPlan::pinned(plan, &shared.replication);
-    let locals: Vec<crate::allocation::Replication> = (0..shards)
-        .map(|s| replicas.local_replication(s as u32, shared.replication.batch_size))
-        .collect();
-    let scheds: Vec<Scheduler<'_>> = locals
-        .iter()
-        .map(|r| Scheduler::new(&shared.mapping, r, &shared.model, shared.dynamic_switch))
-        .collect();
-    let (add_ns, add_pj) = shared.model.vector_add();
+    let shards = backend.executors();
+    assert!(shards > 0, "backend reports zero executors");
+    let (add_ns, add_pj) = backend.merge_cost();
 
     // Scatter: split every query at its arrival instant.
     let mut sub_queries: Vec<Vec<Query>> = vec![Vec::new(); shards];
     let mut sub_arrivals: Vec<Vec<(u64, usize)>> = vec![Vec::new(); shards];
-    // (shard, local index) of every sub-query of each query.
+    // (executor, local index) of every sub-query of each query.
     let mut subs_of_query: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
     for (qi, q) in queries.iter().enumerate() {
-        for (s, items) in plan.split_items(&shared.mapping, &q.items).into_iter().enumerate() {
+        if q.is_empty() {
+            continue; // nothing to serve
+        }
+        let split = backend.scatter(&q.items);
+        debug_assert_eq!(split.len(), shards, "scatter width != executors");
+        for (s, items) in split.into_iter().enumerate() {
             if items.is_empty() {
                 continue;
             }
@@ -240,8 +174,8 @@ pub fn drive_sharded(
         }
     }
 
-    // Each shard's executor runs independently: its batch boundaries
-    // depend only on its own arrivals and its own backlog.
+    // Each executor runs independently: its batch boundaries depend only
+    // on its own arrivals and its own backlog.
     let mut stats = ExecStats::default();
     let mut shard_loads = Vec::with_capacity(shards);
     let mut sub_finish: Vec<Vec<f64>> = Vec::with_capacity(shards);
@@ -253,7 +187,7 @@ pub fn drive_sharded(
         let mut local_stats = ExecStats::default();
         let qstats = simulate_executor(&sub_arrivals[s], policy, &mut finish, |batch| {
             let qs: Vec<Query> = batch.iter().map(|&i| sub_queries[s][i].clone()).collect();
-            let st = scheds[s].run_batch_timed(&qs, &mut scratch, &mut rel);
+            let st = backend.run_batch_timed(s, &qs, &mut scratch, &mut rel);
             local_stats.accumulate(&st);
             (st.completion_ns, rel.clone())
         });
@@ -278,7 +212,7 @@ pub fn drive_sharded(
     }
 
     // Gather: a query completes when its last sub-query does, plus one
-    // front-end merge add per extra shard (same accounting as
+    // front-end merge add per extra executor (same accounting as
     // `cluster::simulate_with_replicas`).
     let mut sojourn = Vec::with_capacity(n);
     for (qi, subs) in subs_of_query.iter().enumerate() {
@@ -312,6 +246,80 @@ pub fn drive_sharded(
         horizon_ns: horizon,
         shards: shard_loads,
     }
+}
+
+/// Timing-only adapter so the deprecated [`drive_single`] shim can keep
+/// its bare-`Scheduler` signature.
+struct SchedulerBackend<'s, 'a>(&'s Scheduler<'a>);
+
+impl Backend for SchedulerBackend<'_, '_> {
+    fn name(&self) -> &str {
+        "single-pool"
+    }
+
+    fn executors(&self) -> usize {
+        1
+    }
+
+    fn scatter(&self, items: &[EmbeddingId]) -> Vec<Vec<EmbeddingId>> {
+        vec![items.to_vec()]
+    }
+
+    fn run_batch_timed(
+        &self,
+        _executor: usize,
+        queries: &[Query],
+        scratch: &mut Scratch,
+        finish_rel: &mut Vec<f64>,
+    ) -> ExecStats {
+        self.0.run_batch_timed(queries, scratch, finish_rel)
+    }
+
+    fn merge_cost(&self) -> (f64, f64) {
+        self.0.model().vector_add()
+    }
+
+    fn reduce_many(&self, _queries: &[Query]) -> crate::Result<Vec<Reduction>> {
+        anyhow::bail!("a bare scheduler is timing-only; use a deploy backend to reduce")
+    }
+
+    fn status(&self) -> crate::Result<Vec<BackendStatus>> {
+        anyhow::bail!("a bare scheduler keeps no serving counters")
+    }
+}
+
+/// Open-loop drive of the **single-pool** path.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a deploy backend (e.g. Prepared::sim()) and call loadgen::drive"
+)]
+pub fn drive_single(
+    sched: &Scheduler<'_>,
+    queries: &[Query],
+    arrivals_ns: &[u64],
+    policy: &BatchPolicy,
+) -> OpenLoopReport {
+    drive(&SchedulerBackend(sched), queries, arrivals_ns, policy)
+}
+
+/// Open-loop drive of the **sharded** path (ownership-pinned scatter).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a deploy backend (e.g. Prepared::sim_sharded()) and call loadgen::drive"
+)]
+pub fn drive_sharded(
+    shared: &PoolShared,
+    plan: &ShardPlan,
+    queries: &[Query],
+    arrivals_ns: &[u64],
+    policy: &BatchPolicy,
+) -> OpenLoopReport {
+    drive(
+        &SimBackend::sharded(shared, plan.clone()),
+        queries,
+        arrivals_ns,
+        policy,
+    )
 }
 
 fn check_arrivals(num_queries: usize, arrivals_ns: &[u64]) {
@@ -456,10 +464,11 @@ mod tests {
         let m = model();
         let map = mapping_2x2();
         let rep = Replication::identity(2, 4);
+        let backend = SimBackend::from_parts(&map, &rep, &m, true);
         let sched = Scheduler::new(&map, &rep, &m, true);
         let queries = some_queries(32);
         let arrivals: Vec<u64> = (0..32).map(|i| i as u64 * 1_000_000_000).collect();
-        let report = drive_single(&sched, &queries, &arrivals, &policy(8, 0));
+        let report = drive(&backend, &queries, &arrivals, &policy(8, 0));
         let mut scratch = Scratch::default();
         // Tolerance: adding a ~1e10 ns arrival timestamp and subtracting
         // it back costs a few µ-ulps, never more than 1e-3 ns here.
@@ -487,12 +496,41 @@ mod tests {
         let m = model();
         let map = mapping_2x2();
         let rep = Replication::identity(2, 4);
-        let sched = Scheduler::new(&map, &rep, &m, true);
+        let backend = SimBackend::from_parts(&map, &rep, &m, true);
         let queries = some_queries(256);
         let arrivals = Arrivals::poisson(5_000_000.0, 11).take(256);
-        let a = drive_single(&sched, &queries, &arrivals, &policy(16, 2_000));
-        let b = drive_single(&sched, &queries, &arrivals, &policy(16, 2_000));
+        let a = drive(&backend, &queries, &arrivals, &policy(16, 2_000));
+        let b = drive(&backend, &queries, &arrivals, &policy(16, 2_000));
         assert_eq!(a, b, "open-loop drive must be bit-reproducible");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_the_unified_drive_exactly() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let queries = some_queries(200);
+        let arrivals = Arrivals::poisson(50_000_000.0, 9).take(200);
+        let p = policy(8, 500);
+        // Single pool: shim == SimBackend path, bit-for-bit.
+        let sched = Scheduler::new(&map, &rep, &m, true);
+        let via_shim = drive_single(&sched, &queries, &arrivals, &p);
+        let backend = SimBackend::from_parts(&map, &rep, &m, true);
+        let via_drive = drive(&backend, &queries, &arrivals, &p);
+        assert_eq!(via_shim, via_drive);
+        // Sharded: shim == SimBackend::sharded path, bit-for-bit.
+        let shared = PoolShared {
+            mapping: mapping_2x2(),
+            replication: Replication::identity(2, 4),
+            model: model(),
+            dynamic_switch: true,
+        };
+        let plan = ShardPlan::from_assignment(vec![0, 1], 2);
+        let s_shim = drive_sharded(&shared, &plan, &queries, &arrivals, &p);
+        let s_backend = SimBackend::sharded(&shared, plan.clone());
+        let s_drive = drive(&s_backend, &queries, &arrivals, &p);
+        assert_eq!(s_shim, s_drive);
     }
 
     #[test]
@@ -500,15 +538,15 @@ mod tests {
         let m = model();
         let map = mapping_2x2();
         let rep = Replication::identity(2, 4);
-        let sched = Scheduler::new(&map, &rep, &m, true);
+        let backend = SimBackend::from_parts(&map, &rep, &m, true);
         let queries = some_queries(512);
         let slow = Arrivals::poisson(1_000.0, 3).take(512); // ~idle
         let fast = Arrivals::poisson(1e9, 3).take(512); // far past capacity
         // max_wait 0 so the idle baseline is pure service time, not
         // batch-formation wait.
         let p = policy(16, 0);
-        let low = drive_single(&sched, &queries, &slow, &p);
-        let high = drive_single(&sched, &queries, &fast, &p);
+        let low = drive(&backend, &queries, &slow, &p);
+        let high = drive(&backend, &queries, &fast, &p);
         assert!(
             high.percentile_ns(99.0) > 10.0 * low.percentile_ns(99.0),
             "p99 {} !>> {}",
@@ -526,10 +564,10 @@ mod tests {
         let m = model();
         let map = mapping_2x2();
         let rep = Replication::identity(2, 4);
-        let sched = Scheduler::new(&map, &rep, &m, true);
+        let backend = SimBackend::from_parts(&map, &rep, &m, true);
         let queries = some_queries(300);
         let arrivals = Arrivals::bursty(50_000_000.0, 5).take(300);
-        let report = drive_single(&sched, &queries, &arrivals, &policy(8, 500));
+        let report = drive(&backend, &queries, &arrivals, &policy(8, 500));
         let ps = [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0];
         let qs: Vec<f64> = ps.iter().map(|&p| report.percentile_ns(p)).collect();
         for w in qs.windows(2) {
@@ -546,10 +584,11 @@ mod tests {
             dynamic_switch: true,
         };
         let plan = ShardPlan::from_assignment(vec![0, 1], 2);
+        let backend = SimBackend::sharded(&shared, plan);
         // Every query touches both groups -> fanout 2 everywhere.
         let queries: Vec<Query> = (0..64).map(|_| Query::new(vec![0, 2])).collect();
         let arrivals = Arrivals::poisson(2_000_000.0, 7).take(64);
-        let report = drive_sharded(&shared, &plan, &queries, &arrivals, &policy(8, 1_000));
+        let report = drive(&backend, &queries, &arrivals, &policy(8, 1_000));
         assert_eq!(report.queries(), 64);
         assert_eq!(report.shards.len(), 2);
         // Each query produced one sub-query per shard.
@@ -563,7 +602,7 @@ mod tests {
         let floor = act.latency_ns + flit + add_ns;
         assert!(report.sojourn_ns.iter().all(|&s| s >= floor - 1e-9));
         // Deterministic across runs.
-        let again = drive_sharded(&shared, &plan, &queries, &arrivals, &policy(8, 1_000));
+        let again = drive(&backend, &queries, &arrivals, &policy(8, 1_000));
         assert_eq!(report, again);
     }
 
@@ -584,10 +623,10 @@ mod tests {
             .collect();
         let arrivals = Arrivals::poisson(2e8, 13).take(256);
         let p = policy(1, 0);
-        let one = ShardPlan::from_assignment(vec![0, 0], 1);
-        let two = ShardPlan::from_assignment(vec![0, 1], 2);
-        let r1 = drive_sharded(&shared, &one, &queries, &arrivals, &p);
-        let r2 = drive_sharded(&shared, &two, &queries, &arrivals, &p);
+        let one = SimBackend::sharded(&shared, ShardPlan::from_assignment(vec![0, 0], 1));
+        let two = SimBackend::sharded(&shared, ShardPlan::from_assignment(vec![0, 1], 2));
+        let r1 = drive(&one, &queries, &arrivals, &p);
+        let r2 = drive(&two, &queries, &arrivals, &p);
         assert!(
             r2.percentile_ns(99.0) < 0.75 * r1.percentile_ns(99.0),
             "2-shard p99 {} !< 0.75 x 1-shard {}",
@@ -607,10 +646,10 @@ mod tests {
         let m = model();
         let map = mapping_2x2();
         let rep = Replication::identity(2, 4);
-        let sched = Scheduler::new(&map, &rep, &m, true);
+        let backend = SimBackend::from_parts(&map, &rep, &m, true);
         let queries = some_queries(64);
         let arrivals = vec![0u64; 64];
-        let report = drive_single(&sched, &queries, &arrivals, &policy(16, 0));
+        let report = drive(&backend, &queries, &arrivals, &policy(16, 0));
         assert_eq!(report.batches(), 4);
         // The last batch's queries waited for three service rounds.
         let first_batch_max = report.sojourn_ns[..16].iter().cloned().fold(0.0, f64::max);
@@ -620,5 +659,30 @@ mod tests {
             .fold(f64::INFINITY, f64::min);
         assert!(last_batch_min > first_batch_max);
         assert_eq!(report.shards[0].max_backlog, 64);
+    }
+
+    #[test]
+    fn sim_backend_reduce_many_needs_a_store_and_is_exact() {
+        use crate::coordinator::EmbeddingStore;
+        let shared = PoolShared {
+            mapping: mapping_2x2(),
+            replication: Replication::identity(2, 4),
+            model: model(),
+            dynamic_switch: true,
+        };
+        let timing_only = SimBackend::single(&shared);
+        assert!(timing_only.reduce_many(&[Query::new(vec![0])]).is_err());
+        // Integer table: D=2, embedding e = [2e, 2e+1].
+        let table: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let store = EmbeddingStore::from_table(&shared.mapping, 2, 4, table);
+        let plan = ShardPlan::from_assignment(vec![0, 1], 2);
+        let backend = SimBackend::sharded(&shared, plan).with_store(&store);
+        let out = backend
+            .reduce_many(&[Query::new(vec![0, 2]), Query::new(vec![1])])
+            .unwrap();
+        assert_eq!(out[0].reduced, store.reduce_reference(&[0, 2]));
+        assert_eq!(out[0].fanout, 2);
+        assert_eq!(out[1].reduced, store.reduce_reference(&[1]));
+        assert_eq!(out[1].fanout, 1);
     }
 }

@@ -15,12 +15,13 @@
 //!   ([`crate::workload::TimedTrace`]).
 //! * [`driver`] — an open-loop driver on the **simulated clock**: the
 //!   live dynamic-batching policy ([`crate::coordinator::Batcher`],
-//!   clock-injected) decides batch boundaries, the discrete-event
-//!   crossbar model ([`crate::sched::Scheduler::run_batch_timed`])
-//!   supplies per-query service times, and the driver composes them into
-//!   sojourn times — queue wait + batch-formation wait + scheduled
-//!   service — for the single-pool and sharded back-ends alike. No
-//!   threads, no wall clock: bit-reproducible by construction.
+//!   clock-injected) decides batch boundaries, the backend's
+//!   discrete-event timing twin
+//!   ([`crate::deploy::Backend::run_batch_timed`]) supplies per-query
+//!   service times, and the driver composes them into sojourn times —
+//!   queue wait + batch-formation wait + scheduled service — for any
+//!   [`crate::deploy::Backend`] through the one [`drive`] entry point.
+//!   No threads, no wall clock: bit-reproducible by construction.
 //!
 //! Entry points: `recross serve --arrivals poisson|bursty|diurnal --rate R`
 //! and `benches/fig13_latency.rs` (offered load → p99 hockey-stick).
@@ -29,4 +30,6 @@ pub mod arrival;
 pub mod driver;
 
 pub use arrival::{ArrivalKind, Arrivals};
-pub use driver::{drive_sharded, drive_single, OpenLoopReport, ShardLoad};
+pub use driver::{drive, OpenLoopReport, ShardLoad};
+#[allow(deprecated)]
+pub use driver::{drive_sharded, drive_single};

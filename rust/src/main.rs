@@ -1,5 +1,6 @@
 //! `recross` launcher: offline-phase tooling, report harness, and the
-//! serving demo, wired through the in-tree CLI parser.
+//! serving demo — every subcommand a thin client of the
+//! [`recross::deploy`] facade.
 //!
 //! ```text
 //! recross report --figure <fig2|fig4|fig5|fig6|fig8|fig9|fig10|fig11|table1|all|ablation>
@@ -11,10 +12,14 @@
 //! recross autotune   --dataset automotive          # pick dup ratio (knee)
 //! ```
 //!
-//! `--config configs/paper.toml` loads a TOML file; CLI flags override.
+//! Configuration flows through one precedence chain: built-in defaults
+//! (`Config::serving_default` / `Config::open_loop_default`) < a
+//! `--config` TOML file < explicitly passed CLI flags
+//! (`Config::overlay_cli`).
 
 use recross::config::Config;
-use recross::coordinator::{self, BatchPolicy, Request, Server};
+use recross::coordinator::{BatchPolicy, Request};
+use recross::deploy::{Deployment, Sharded, ShardingMode, SinglePool};
 use recross::engine::Scheme;
 use recross::metrics::{fit_power_law, percentile};
 use recross::report::{self, Workbench};
@@ -43,7 +48,11 @@ fn main() {
             "serve traffic shape: closed|poisson|bursty|diurnal (open-loop sim)",
         )
         .opt("rate", "50000", "open-loop offered load, queries/second")
-        .opt("max-wait-us", "5", "dynamic-batcher max wait, µs (open-loop sim)")
+        .opt(
+            "max-wait-us",
+            "5",
+            "dynamic-batcher max wait, µs (scheme.max_wait_us; live default 2000, open-loop 5)",
+        )
         .opt("scheme", "recross", "serving scheme: recross|naive|frequency|nmars")
         .opt("artifacts", "artifacts", "AOT artifacts directory")
         .opt("shards", "4", "shard executors for the cluster mode")
@@ -86,23 +95,20 @@ fn main() {
     }
 }
 
-fn workbench(args: &recross::util::cli::Args) -> Result<Workbench, String> {
-    let scale: f64 = args.get_as("scale")?;
-    let history: usize = args.get_as("history")?;
-    let eval: usize = args.get_as("eval")?;
-    let seed: u64 = args.get_as("seed")?;
-    // A --config file can override the crossbar group size (and is the
-    // hook for hardware-variant reports).
-    let group_size = match args.get("config") {
-        "" => 64,
-        path => {
-            Config::from_file(path)
-                .map_err(|e| format!("{e:#}"))?
-                .scheme
-                .group_size
-        }
+/// The one config chain every subcommand shares: `base` (the mode's
+/// built-in defaults) < `--config` TOML < explicitly passed CLI flags.
+fn cli_config(args: &recross::util::cli::Args, base: Config) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        "" => base,
+        path => Config::from_file_with_base(path, base)?,
     };
-    Ok(Workbench::new(scale, history, eval, group_size, seed))
+    cfg.overlay_cli(args)?;
+    Ok(cfg)
+}
+
+fn parse_scheme(args: &recross::util::cli::Args) -> anyhow::Result<Scheme> {
+    let name = args.get("scheme");
+    Scheme::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown scheme {name:?}"))
 }
 
 fn cmd_report(args: &recross::util::cli::Args) -> anyhow::Result<()> {
@@ -111,9 +117,17 @@ fn cmd_report(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         println!("{}", report::table1());
         return Ok(());
     }
-    let mut wb = workbench(args).map_err(anyhow::Error::msg)?;
+    let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
+    let cfg = cli_config(args, Config::serving_default())?;
+    let mut wb = Workbench::new(
+        scale,
+        cfg.workload.history_queries,
+        cfg.workload.eval_queries,
+        cfg.scheme.group_size,
+        cfg.workload.seed,
+    );
     if fig == "ablation" {
-        println!("{}", report::ablation(&mut wb, args.get("dataset")));
+        println!("{}", report::ablation(&mut wb, &cfg.workload.dataset));
         return Ok(());
     }
     match report::by_name(fig) {
@@ -130,12 +144,12 @@ fn cmd_report(args: &recross::util::cli::Args) -> anyhow::Result<()> {
 fn cmd_generate(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
     let queries: usize = args.get_as("queries").map_err(anyhow::Error::msg)?;
-    let seed: u64 = args.get_as("seed").map_err(anyhow::Error::msg)?;
-    let spec = DatasetSpec::by_name(args.get("dataset"))
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", args.get("dataset")))?
+    let cfg = cli_config(args, Config::serving_default())?;
+    let spec = DatasetSpec::by_name(&cfg.workload.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.workload.dataset))?
         .scaled(scale);
-    let g = Generator::new(&spec, seed);
-    let trace = g.trace(queries, seed.wrapping_add(1));
+    let g = Generator::new(&spec, cfg.workload.seed);
+    let trace = g.trace(queries, cfg.workload.seed.wrapping_add(1));
     let out = args.get("out");
     trace.save(out)?;
     println!(
@@ -176,29 +190,21 @@ fn cmd_analyze(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn base_config(args: &recross::util::cli::Args) -> anyhow::Result<Config> {
-    let path = args.get("config");
-    if path.is_empty() {
-        Ok(Config::paper_default())
-    } else {
-        Config::from_file(path)
-    }
-}
-
 fn cmd_autotune(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     use recross::allocation::tune_dup_ratio;
     use recross::graph::CoGraph;
     use recross::workload::generate;
     let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
-    let seed: u64 = args.get_as("seed").map_err(anyhow::Error::msg)?;
-    let mut cfg = base_config(args)?;
-    cfg.workload.dataset = args.get("dataset").to_string();
+    let cfg = cli_config(args, Config::serving_default())?;
     let spec = DatasetSpec::by_name(&cfg.workload.dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.workload.dataset))?
         .scaled(scale);
-    let history_n: usize = args.get_as("history").map_err(anyhow::Error::msg)?;
-    let eval_n: usize = args.get_as("eval").map_err(anyhow::Error::msg)?;
-    let (history, eval) = generate(&spec, history_n, eval_n, seed);
+    let (history, eval) = generate(
+        &spec,
+        cfg.workload.history_queries,
+        cfg.workload.eval_queries,
+        cfg.workload.seed,
+    );
     let graph = CoGraph::build(&history);
     println!(
         "auto-tuning duplication ratio on {} (scale {scale})...",
@@ -227,29 +233,6 @@ fn cmd_autotune(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Apply the shared workload CLI overrides (dataset/seed/history/eval)
-/// identically for every serving mode.
-fn workload_overrides(
-    cfg: &mut Config,
-    args: &recross::util::cli::Args,
-) -> anyhow::Result<()> {
-    cfg.workload.dataset = args.get("dataset").to_string();
-    cfg.workload.seed = args.get_as("seed").map_err(anyhow::Error::msg)?;
-    cfg.workload.history_queries = args.get_as("history").map_err(anyhow::Error::msg)?;
-    cfg.workload.eval_queries = args.get_as("eval").map_err(anyhow::Error::msg)?;
-    Ok(())
-}
-
-fn parse_scheme(name: &str) -> anyhow::Result<Scheme> {
-    Ok(match name {
-        "recross" => Scheme::ReCross,
-        "naive" => Scheme::Naive,
-        "frequency" => Scheme::Frequency,
-        "nmars" => Scheme::Nmars,
-        other => anyhow::bail!("unknown scheme {other:?}"),
-    })
-}
-
 fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     // `--arrivals poisson|bursty|diurnal` switches to the open-loop
     // simulated-time driver (no PJRT artifacts needed); the default
@@ -264,14 +247,10 @@ fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         }
     }
     let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
-    let seed: u64 = args.get_as("seed").map_err(anyhow::Error::msg)?;
     let n_requests = args.get_positive("requests").map_err(anyhow::Error::msg)?;
     let max_batch = args.get_positive("batch").map_err(anyhow::Error::msg)?;
-    let scheme = parse_scheme(args.get("scheme"))?;
-
-    let mut cfg = base_config(args)?;
-    workload_overrides(&mut cfg, args)?;
-    cfg.artifacts_dir = args.get("artifacts").to_string();
+    let scheme = parse_scheme(args)?;
+    let cfg = cli_config(args, Config::serving_default())?;
     recross::runtime::require_artifacts(&cfg.artifacts_dir)?;
 
     println!(
@@ -282,16 +261,13 @@ fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     let spec = DatasetSpec::by_name(&cfg.workload.dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?
         .scaled(scale);
+    let seed = cfg.workload.seed;
+    let dense_features = cfg.workload.dense_features;
     let gen = Generator::new(&spec, seed);
-    let cfg2 = cfg.clone();
-    let server = Server::spawn(
-        BatchPolicy {
-            max_batch,
-            max_wait: std::time::Duration::from_millis(2),
-        },
-        move || coordinator::build_pipeline(&cfg2, scheme, scale),
-    )?;
-    let handle = server.handle();
+    let policy = BatchPolicy::from_config(&cfg, max_batch);
+    let prepared = Deployment::of(cfg).scheme(scheme).scale(scale).build()?;
+    let pool = SinglePool::spawn(prepared, policy)?;
+    let handle = pool.handle();
 
     // Drive the demo workload.
     let mut rng = Rng::new(seed.wrapping_add(77));
@@ -300,7 +276,7 @@ fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
             let q = gen.query(&mut rng);
             Request {
                 id,
-                dense: (0..13).map(|_| rng.normal() as f32).collect(),
+                dense: (0..dense_features).map(|_| rng.normal() as f32).collect(),
                 items: q.items,
             }
         })
@@ -340,76 +316,67 @@ fn cmd_serve(args: &recross::util::cli::Args) -> anyhow::Result<()> {
 /// Open-loop serving simulation (`serve --arrivals poisson --rate R`):
 /// no PJRT, no threads — a seeded arrival process stamps every query
 /// with an arrival time, the live dynamic-batching policy decides batch
-/// boundaries on the simulated clock, and the discrete-event crossbar
-/// model supplies per-query service times. Reports p50/p95/p99/p999
-/// sojourn latency, throughput, and mean queue depth for the single-pool
-/// *and* the `--shards`-way sharded back-ends on identical traffic.
-/// Bit-reproducible for a fixed `(dataset, scheme, arrivals, rate, seed)`.
+/// boundaries on the simulated clock, and the deployment's simulated
+/// backends ([`recross::deploy::SimBackend`]) supply per-query service
+/// times through the one [`recross::loadgen::drive`] loop. Reports
+/// p50/p95/p99/p999 sojourn latency, throughput, and mean queue depth
+/// for the single-pool *and* the `--shards`-way sharded back-ends on
+/// identical traffic. Bit-reproducible for a fixed
+/// `(dataset, scheme, arrivals, rate, seed)`.
 fn cmd_serve_open_loop(
     args: &recross::util::cli::Args,
     kind: recross::loadgen::ArrivalKind,
 ) -> anyhow::Result<()> {
-    use recross::cluster::{PoolShared, ShardPlan};
-    use recross::coordinator::OfflinePhase;
-    use recross::loadgen::{drive_sharded, drive_single, Arrivals, OpenLoopReport};
-    use recross::sched::Scheduler;
+    use recross::loadgen::{drive, Arrivals, OpenLoopReport};
     use recross::util::fmt_ns;
 
     let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
-    let seed: u64 = args.get_as("seed").map_err(anyhow::Error::msg)?;
     let n_requests = args.get_positive("requests").map_err(anyhow::Error::msg)?;
     let max_batch = args.get_positive("batch").map_err(anyhow::Error::msg)?;
     let shards = args.get_positive("shards").map_err(anyhow::Error::msg)?;
-    let max_wait_us: u64 = args.get_as("max-wait-us").map_err(anyhow::Error::msg)?;
     let rate: f64 = args.get_as("rate").map_err(anyhow::Error::msg)?;
     anyhow::ensure!(rate > 0.0, "--rate must be positive");
     let slack: f64 = args.get_as("slack").map_err(anyhow::Error::msg)?;
     anyhow::ensure!(slack >= 0.0, "--slack must be non-negative");
-    let scheme = parse_scheme(args.get("scheme"))?;
+    let scheme = parse_scheme(args)?;
+    // Fast-fail before the offline phase runs (Prepared::sim re-checks
+    // for programmatic callers).
     anyhow::ensure!(
         scheme != Scheme::Nmars,
         "the open-loop driver serves the MAC dataflow; scheme {:?} is not supported here",
         scheme.name()
     );
-
-    let mut cfg = base_config(args)?;
-    workload_overrides(&mut cfg, args)?;
+    let cfg = cli_config(args, Config::open_loop_default())?;
+    let seed = cfg.workload.seed;
+    let max_wait_us = cfg.scheme.max_wait_us;
     println!(
         "open-loop serving sim: dataset={} scheme={} arrivals={} rate={rate}/s seed={seed}",
         cfg.workload.dataset,
         scheme.name(),
         kind.name()
     );
-    let offline = OfflinePhase::run(&cfg, scheme, scale)?;
+    let policy = BatchPolicy::from_config(&cfg, max_batch);
+    let prepared = Deployment::of(cfg).scheme(scheme).scale(scale).build()?;
+    let single = prepared.sim()?;
+    let sharded = prepared.sim_sharded(shards, slack)?;
 
     // Fresh traffic from the same catalogue (held-out seed), stamped by
     // the arrival process.
-    let spec = DatasetSpec::by_name(&cfg.workload.dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.workload.dataset))?
+    let spec = DatasetSpec::by_name(&prepared.config().workload.dataset)
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown dataset {:?}", prepared.config().workload.dataset)
+        })?
         .scaled(scale);
-    let gen = Generator::new(&spec, cfg.workload.seed);
-    let trace = gen.trace(n_requests, cfg.workload.seed.wrapping_add(3));
+    let gen = Generator::new(&spec, seed);
+    let trace = gen.trace(n_requests, seed.wrapping_add(3));
     let arrivals = Arrivals::from_kind(kind, rate, seed).take(trace.queries.len());
-    let policy = recross::coordinator::BatchPolicy {
-        max_batch,
-        max_wait: std::time::Duration::from_micros(max_wait_us),
-    };
     println!(
         "queries={} batch<={max_batch} wait={max_wait_us}µs shards={shards} (locality)",
         trace.queries.len()
     );
 
-    let engine = &offline.engine;
-    let sched = Scheduler::new(
-        engine.mapping(),
-        engine.replication(),
-        engine.model(),
-        engine.dynamic_switch(),
-    );
-    let single = drive_single(&sched, &trace.queries, &arrivals, &policy);
-    let shared = PoolShared::from_engine(engine);
-    let plan = ShardPlan::by_locality(&shared.mapping, &offline.history, shards, slack);
-    let sharded = drive_sharded(&shared, &plan, &trace.queries, &arrivals, &policy);
+    let single_r = drive(&single, &trace.queries, &arrivals, &policy);
+    let sharded_r = drive(&sharded, &trace.queries, &arrivals, &policy);
 
     let row = |name: &str, r: &OpenLoopReport| {
         println!(
@@ -426,32 +393,32 @@ fn cmd_serve_open_loop(
         "\n{:<14} {:>10} {:>10} {:>10} {:>10} {:>11} {:>10}",
         "backend", "p50", "p95", "p99", "p999", "thrpt q/s", "mean-depth"
     );
-    row("single-pool", &single);
-    row(&format!("sharded({shards})"), &sharded);
+    row("single-pool", &single_r);
+    row(&format!("sharded({shards})"), &sharded_r);
 
-    let backlog: Vec<String> = sharded
+    let backlog: Vec<String> = sharded_r
         .shards
         .iter()
         .map(|s| format!("s{}: mean {:.1} max {}", s.shard, s.mean_backlog, s.max_backlog))
         .collect();
     println!("\nper-shard backlog: {}", backlog.join("  "));
-    let util: Vec<String> = sharded
+    let util: Vec<String> = sharded_r
         .shards
         .iter()
-        .map(|s| format!("{:.0}%", 100.0 * s.utilization(sharded.horizon_ns)))
+        .map(|s| format!("{:.0}%", 100.0 * s.utilization(sharded_r.horizon_ns)))
         .collect();
     println!(
         "per-shard utilization: {}  (single-pool: {:.0}%)",
         util.join(" "),
-        100.0 * single.shards[0].utilization(single.horizon_ns)
+        100.0 * single_r.shards[0].utilization(single_r.horizon_ns)
     );
     if args.flag("verbose") {
         println!(
             "offered {:.0} q/s over {}; {} batches single, {} sharded",
-            single.offered_qps,
-            fmt_ns(single.horizon_ns),
-            single.batches(),
-            sharded.batches()
+            single_r.offered_qps,
+            fmt_ns(single_r.horizon_ns),
+            single_r.batches(),
+            sharded_r.batches()
         );
     }
     Ok(())
@@ -471,82 +438,84 @@ fn cmd_serve_open_loop(
 fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     use recross::allocation::group_frequencies;
     use recross::cluster::{
-        report as cluster_report, simulate_with_replicas, Cluster, ClusterConfig,
-        PartitionPolicy, ReplicaPlan, RoutePolicy,
+        report as cluster_report, simulate_with_replicas, ClusterConfig, PartitionPolicy,
+        ReplicaPlan, RoutePolicy,
     };
     use recross::metrics::Histogram;
-    use recross::workload::{Query, Trace};
+    use recross::workload::Query;
 
     let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
     let n_requests = args.get_positive("requests").map_err(anyhow::Error::msg)?;
     let max_batch = args.get_positive("batch").map_err(anyhow::Error::msg)?;
     let shards = args.get_positive("shards").map_err(anyhow::Error::msg)?;
     let vnodes = args.get_positive("vnodes").map_err(anyhow::Error::msg)?;
-    let scheme = parse_scheme(args.get("scheme"))?;
+    let scheme = parse_scheme(args)?;
     let policy = match args.get("partition") {
         "locality" => PartitionPolicy::Locality,
         "hash" => PartitionPolicy::Hash,
         other => anyhow::bail!("unknown partition policy {other:?} (try locality|hash)"),
     };
-    let replica_routing = args.flag("replica-routing");
-    let rebalance = args.flag("rebalance");
+    let mode = ShardingMode::from_flags(args.flag("replica-routing"), args.flag("rebalance"));
+    // Fast-fail before the offline phase runs (assemble_cluster
+    // re-checks for programmatic callers).
+    anyhow::ensure!(
+        scheme != Scheme::Nmars,
+        "the sharded pool serves the MAC dataflow; scheme {:?} is not supported here",
+        scheme.name()
+    );
 
-    let mut cfg = base_config(args)?;
-    workload_overrides(&mut cfg, args)?;
-
+    let cfg = cli_config(args, Config::serving_default())?;
     let slack: f64 = args.get_as("slack").map_err(anyhow::Error::msg)?;
     anyhow::ensure!(slack >= 0.0, "--slack must be non-negative");
     let ccfg = ClusterConfig {
         shards,
         vnodes: vnodes as u32,
         policy,
-        batch: recross::coordinator::BatchPolicy {
-            max_batch,
-            ..recross::coordinator::BatchPolicy::default()
-        },
+        batch: BatchPolicy::from_config(&cfg, max_batch),
         slack,
-        replica_routing,
-        rebalance,
+        mode,
     };
     println!(
         "starting sharded pool: dataset={} scheme={} shards={shards} partition={} routing={}",
         cfg.workload.dataset,
         scheme.name(),
         args.get("partition"),
-        if replica_routing { "p2c-replicas" } else { "pinned" },
+        if mode.replica_routing() { "p2c-replicas" } else { "pinned" },
     );
-    let bundle = Cluster::build(&cfg, scheme, scale, &ccfg)?;
-    let handle = bundle.cluster.handle();
+    let prepared = Deployment::of(cfg).scheme(scheme).scale(scale).build()?;
+    let pool = Sharded::spawn(&prepared, &ccfg)?;
+    let handle = pool.handle();
     println!(
         "pool up: {} groups over {} shards (groups/shard: {:?})",
-        bundle.cluster.plan().num_groups(),
-        bundle.cluster.num_shards(),
-        bundle.cluster.plan().group_counts()
+        pool.cluster().plan().num_groups(),
+        pool.cluster().num_shards(),
+        pool.cluster().plan().group_counts()
     );
 
     // Apples-to-apples placement comparison on the deterministic
     // simulator: ownership-pinned vs cross-shard replica routing over the
     // same (Zipf-skewed) eval trace.
-    if replica_routing {
-        let shared = bundle.cluster.shared();
-        let table = bundle.cluster.routes();
-        let freqs = group_frequencies(&shared.mapping, &bundle.history);
+    if mode.replica_routing() {
+        let shared = pool.cluster().shared();
+        let table = pool.cluster().routes();
+        let freqs = group_frequencies(&shared.mapping, prepared.history());
         println!("{}", cluster_report::placement_summary(&table.replicas, &freqs));
         let pinned_plan = ReplicaPlan::pinned(&table.plan, &shared.replication);
+        let batch_size = prepared.config().scheme.batch_size;
         let pinned = simulate_with_replicas(
             shared,
             &table.plan,
             &pinned_plan,
-            &bundle.eval,
-            cfg.scheme.batch_size,
+            prepared.eval(),
+            batch_size,
             RoutePolicy::Pinned,
         );
         let routed = simulate_with_replicas(
             shared,
             &table.plan,
             &table.replicas,
-            &bundle.eval,
-            cfg.scheme.batch_size,
+            prepared.eval(),
+            batch_size,
             RoutePolicy::PowerOfTwo,
         );
         let delta = 100.0 * (1.0 - routed.max_shard_load() as f64 / pinned.max_shard_load().max(1) as f64);
@@ -569,27 +538,27 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     // one giant batch) gives the drift monitor batch boundaries at which
     // a rebalance can swap epochs.
     let mut queries: Vec<Query> =
-        bundle.eval.queries.iter().take(n_requests).cloned().collect();
+        prepared.eval().queries.iter().take(n_requests).cloned().collect();
     anyhow::ensure!(!queries.is_empty(), "eval trace is empty");
-    if rebalance {
+    if mode.rebalance() {
         // The eval trace matches the distribution the placement was
         // optimised for, so it can never look stale. Follow it with a
         // *drifted* phase — same catalogue, re-seeded co-purchase
         // structure (new communities, shifted popularity) — which is the
         // traffic shape the monitor exists to catch.
-        use recross::workload::{DatasetSpec, Generator};
-        let spec = DatasetSpec::by_name(&cfg.workload.dataset)
-            .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", cfg.workload.dataset))?
+        let wl = &prepared.config().workload;
+        let spec = DatasetSpec::by_name(&wl.dataset)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {:?}", wl.dataset))?
             .scaled(scale);
-        let drifted_gen = Generator::new(&spec, cfg.workload.seed.wrapping_add(9_999));
-        let drifted = drifted_gen.trace(n_requests, cfg.workload.seed.wrapping_add(10_000));
+        let drifted_gen = Generator::new(&spec, wl.seed.wrapping_add(9_999));
+        let drifted = drifted_gen.trace(n_requests, wl.seed.wrapping_add(10_000));
         println!(
             "drift phase: appending {} re-seeded queries (new co-purchase structure)",
             drifted.queries.len()
         );
         queries.extend(drifted.queries);
     }
-    let wave = (max_batch * bundle.cluster.num_shards()).max(64);
+    let wave = (max_batch * pool.cluster().num_shards()).max(64);
     let mut responses = Vec::with_capacity(queries.len());
     // Traffic window since the last epoch swap — the sample the remap's
     // frequencies/partition are recomputed from. A single wave (64-ish
@@ -600,15 +569,15 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     for chunk in queries.chunks(wave) {
         responses.extend(handle.reduce_many(chunk)?);
-        if rebalance {
+        if mode.rebalance() {
             recent.extend_from_slice(chunk);
             if handle.rebalance_due() {
                 let degradation = handle.drift_degradation().unwrap_or(1.0);
                 let window = Trace {
-                    num_embeddings: bundle.eval.num_embeddings,
+                    num_embeddings: prepared.eval().num_embeddings,
                     queries: std::mem::take(&mut recent),
                 };
-                let epoch = bundle.cluster.rebalance(&window)?;
+                let epoch = pool.cluster().rebalance(&window)?;
                 swaps += 1;
                 println!(
                     "drift detected (degradation {degradation:.2}, {} recent queries) -> rebalanced to epoch {epoch}",
@@ -622,7 +591,7 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     // Exactness check against the single-pool reference reduction.
     let mut max_err = 0.0f32;
     for (q, r) in queries.iter().zip(&responses) {
-        let expect = bundle.store.reduce_reference(&q.items);
+        let expect = prepared.store().reduce_reference(&q.items);
         for (a, b) in r.reduced.iter().zip(&expect) {
             max_err = max_err.max((a - b).abs());
         }
@@ -640,8 +609,8 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         "\n{}",
         cluster_report::render(&statuses, &fanout, &merged, wall, responses.len())
     );
-    if rebalance {
-        println!("epoch swaps: {swaps} (final epoch {})", bundle.cluster.epoch());
+    if mode.rebalance() {
+        println!("epoch swaps: {swaps} (final epoch {})", pool.cluster().epoch());
     }
     println!("single-pool reference check: max |err| = {max_err:.2e}");
     anyhow::ensure!(

@@ -228,6 +228,12 @@ impl<'a> Scheduler<'a> {
         self.replication.total_crossbars
     }
 
+    /// The circuit cost model (used by the deprecated `drive_single`
+    /// shim's timing adapter).
+    pub fn model(&self) -> &'a CrossbarModel {
+        self.model
+    }
+
     /// Simulate one batch. All queries arrive at t=0 (the paper's
     /// batch-synchronous inference); the returned stats cover this batch.
     pub fn run_batch(&self, queries: &[Query], scratch: &mut Scratch) -> ExecStats {

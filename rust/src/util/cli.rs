@@ -4,7 +4,7 @@
 //! arguments; generates usage text from the declared options. Only what the
 //! `recross` launcher and the examples need.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Declared option kind.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,6 +36,10 @@ pub struct Args {
     values: HashMap<&'static str, String>,
     flags: HashMap<&'static str, bool>,
     positional: Vec<String>,
+    /// Options the user passed explicitly (as opposed to declared
+    /// defaults) — the signal [`crate::config::Config::overlay_cli`] uses
+    /// to decide whether a CLI value outranks a TOML one.
+    provided: HashSet<&'static str>,
 }
 
 impl ArgSpec {
@@ -105,6 +109,7 @@ impl ArgSpec {
     pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
         let mut values = HashMap::new();
         let mut flags = HashMap::new();
+        let mut provided = HashSet::new();
         for o in &self.opts {
             match o.kind {
                 Kind::Flag => {
@@ -138,6 +143,7 @@ impl ArgSpec {
                             return Err(format!("--{key} takes no value"));
                         }
                         flags.insert(opt.name, true);
+                        provided.insert(opt.name);
                     }
                     Kind::Value => {
                         let v = match inline_val {
@@ -150,6 +156,7 @@ impl ArgSpec {
                             }
                         };
                         values.insert(opt.name, v);
+                        provided.insert(opt.name);
                     }
                 }
             } else {
@@ -168,6 +175,7 @@ impl ArgSpec {
             values,
             flags,
             positional,
+            provided,
         })
     }
 }
@@ -198,6 +206,13 @@ impl Args {
             return Err(format!("--{name} must be at least 1"));
         }
         Ok(v)
+    }
+
+    /// Was this option (value or flag) passed explicitly on the command
+    /// line? `false` for declared defaults and for undeclared names, so
+    /// callers can probe without knowing which subcommand's spec is live.
+    pub fn provided(&self, name: &str) -> bool {
+        self.provided.contains(name)
     }
 
     /// Was a flag present?
@@ -251,6 +266,20 @@ mod tests {
     fn flags_toggle() {
         let a = spec().parse(&sv(&["run", "--verbose"])).unwrap();
         assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn provided_tracks_explicit_options_only() {
+        let a = spec()
+            .parse(&sv(&["run", "--seed", "7", "--verbose"]))
+            .unwrap();
+        assert!(a.provided("seed"));
+        assert!(a.provided("verbose"));
+        assert!(!a.provided("dataset"), "defaults are not 'provided'");
+        assert!(!a.provided("no-such-option"), "undeclared names are safe");
+        let b = spec().parse(&sv(&["run", "--dataset=sports"])).unwrap();
+        assert!(b.provided("dataset"));
+        assert!(!b.provided("seed"));
     }
 
     #[test]

@@ -133,6 +133,40 @@ fn serve_open_loop_reports_tail_latency_and_is_bit_reproducible() {
 }
 
 #[test]
+fn config_file_overrides_reach_the_live_batcher() {
+    // `scheme.max_wait_us` from a --config TOML must reach the serving
+    // batcher (the open-loop sim prints — and uses — the live policy).
+    let p = std::env::temp_dir().join("recross_batcher_config.toml");
+    std::fs::write(&p, "[scheme]\nmax_wait_us = 9\n").unwrap();
+    let base = [
+        "serve", "--arrivals", "poisson", "--rate", "200000", "--requests", "64",
+        "--dataset", "software", "--scale", "0.02", "--history", "300", "--eval", "64",
+        "--seed", "7",
+    ];
+    let mut with_cfg = base.to_vec();
+    with_cfg.extend(["--config", p.to_str().unwrap()]);
+    let out = recross(&with_cfg);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("wait=9µs"), "TOML wait did not reach the batcher:\n{text}");
+
+    // An explicitly passed CLI flag outranks the TOML value...
+    let mut with_flag = with_cfg.clone();
+    with_flag.extend(["--max-wait-us", "5"]);
+    let out = recross(&with_flag);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("wait=5µs"), "CLI flag did not outrank TOML:\n{text}");
+
+    // ...and without either, the open-loop default (5 µs) still applies.
+    let out = recross(&base);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("wait=5µs"), "default wait changed:\n{text}");
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
 fn serve_open_loop_rejects_unknown_process_and_nmars() {
     let out = recross(&["serve", "--arrivals", "fractal"]);
     assert!(!out.status.success());

@@ -1,0 +1,289 @@
+//! Builder-built stacks must be **bit-identical** to the legacy
+//! hand-assembled wiring, for all four schemes × {single, sharded-pinned,
+//! sharded-routed}:
+//!
+//! * exact `ExecStats` equality between the `deploy`-built engine /
+//!   simulators and the legacy `OfflinePhase` + `simulate_*` paths,
+//! * exact `OpenLoopReport` equality between the unified
+//!   `loadgen::drive` and the deprecated `drive_single`/`drive_sharded`
+//!   shims,
+//! * exact (not approximate) reduction equality on integer-valued
+//!   tables, where float summation order cannot hide a routing bug.
+
+use recross::cluster::{
+    simulate_sharded, simulate_with_replicas, ClusterConfig, PoolShared, ReplicaPlan,
+    RoutePolicy, ShardPlan, ShardingMode,
+};
+use recross::config::Config;
+use recross::coordinator::{BatchPolicy, EmbeddingStore, OfflinePhase};
+use recross::deploy::{Backend, Deployment, Prepared, Sharded};
+use recross::engine::Scheme;
+use recross::loadgen::{drive, Arrivals};
+// The deprecated shims are compared against the unified drive on purpose.
+#[allow(deprecated)]
+use recross::loadgen::{drive_sharded, drive_single};
+use recross::workload::Query;
+use std::time::Duration;
+
+const SCALE: f64 = 0.02;
+const SHARDS: usize = 3;
+const SLACK: f64 = 0.10;
+
+fn cfg_small() -> Config {
+    let mut cfg = Config::paper_default();
+    cfg.workload.dataset = "software".into();
+    cfg.workload.history_queries = 500;
+    cfg.workload.eval_queries = 96;
+    cfg.scheme.batch_size = 32;
+    cfg
+}
+
+fn build(scheme: Scheme) -> Prepared {
+    Deployment::of(cfg_small())
+        .scheme(scheme)
+        .scale(SCALE)
+        .build()
+        .unwrap()
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 16,
+        max_wait: Duration::from_micros(5),
+    }
+}
+
+/// The four CLI-facing schemes the facade must reproduce exactly.
+const SCHEMES: [Scheme; 4] = [
+    Scheme::Naive,
+    Scheme::Frequency,
+    Scheme::Nmars,
+    Scheme::ReCross,
+];
+
+#[test]
+fn builder_engine_matches_legacy_offline_phase_for_all_schemes() {
+    for scheme in SCHEMES {
+        let prepared = build(scheme);
+        let legacy = OfflinePhase::run(&cfg_small(), scheme, SCALE).unwrap();
+        assert_eq!(prepared.scheme(), scheme);
+        assert_eq!(prepared.history().queries, legacy.history.queries, "{scheme:?}");
+        assert_eq!(prepared.eval().queries, legacy.eval.queries, "{scheme:?}");
+        assert_eq!(
+            prepared.engine().physical_crossbars(),
+            legacy.engine.physical_crossbars(),
+            "{scheme:?}"
+        );
+        // Exact ExecStats equality over the whole eval trace.
+        let bs = cfg_small().scheme.batch_size;
+        let via_builder = prepared.engine().run_trace(prepared.eval(), bs);
+        let via_legacy = legacy.engine.run_trace(&legacy.eval, bs);
+        assert_eq!(via_builder, via_legacy, "{scheme:?} run_trace diverged");
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn unified_drive_is_bit_identical_to_the_deprecated_shims() {
+    for scheme in SCHEMES {
+        let prepared = build(scheme);
+        let queries = &prepared.eval().queries;
+        let arrivals = Arrivals::poisson(150_000.0, 11).take(queries.len());
+        let p = policy();
+        if scheme == Scheme::Nmars {
+            // The open-loop driver serves the MAC dataflow only; the
+            // builder refuses instead of mispricing.
+            assert!(prepared.sim().is_err());
+            assert!(prepared.sim_sharded(SHARDS, SLACK).is_err());
+            continue;
+        }
+        // Single pool: drive(SimBackend) == drive_single(four-accessor).
+        let sched = prepared.scheduler();
+        let legacy_single = drive_single(&sched, queries, &arrivals, &p);
+        let new_single = drive(&prepared.sim().unwrap(), queries, &arrivals, &p);
+        assert_eq!(legacy_single, new_single, "{scheme:?} single drive diverged");
+        // Sharded: drive(SimBackend::sharded) == drive_sharded(legacy).
+        let shared = PoolShared::from_engine(prepared.engine());
+        let plan =
+            ShardPlan::by_locality(&shared.mapping, prepared.history(), SHARDS, SLACK);
+        let legacy_sharded = drive_sharded(&shared, &plan, queries, &arrivals, &p);
+        let new_sharded = drive(
+            &prepared.sim_sharded(SHARDS, SLACK).unwrap(),
+            queries,
+            &arrivals,
+            &p,
+        );
+        assert_eq!(legacy_sharded, new_sharded, "{scheme:?} sharded drive diverged");
+    }
+}
+
+#[test]
+fn builder_sharded_sims_match_legacy_cluster_simulators() {
+    for scheme in SCHEMES {
+        if scheme == Scheme::Nmars {
+            continue; // no sharded dataflow
+        }
+        let prepared = build(scheme);
+        let shared = PoolShared::from_engine(prepared.engine());
+        let plan =
+            ShardPlan::by_locality(&shared.mapping, prepared.history(), SHARDS, SLACK);
+        let bs = cfg_small().scheme.batch_size;
+        // Routed: spread placement + p2c, builder pieces vs legacy pieces.
+        let freqs = recross::allocation::group_frequencies(
+            prepared.engine().mapping(),
+            prepared.history(),
+        );
+        let spread = ReplicaPlan::spread(&plan, &shared.replication, &freqs);
+        let routed_a = simulate_with_replicas(
+            &shared,
+            &plan,
+            &spread,
+            prepared.eval(),
+            bs,
+            RoutePolicy::PowerOfTwo,
+        );
+        let legacy_off = OfflinePhase::run(&cfg_small(), scheme, SCALE).unwrap();
+        let legacy_shared = PoolShared::from_engine(&legacy_off.engine);
+        let legacy_plan = ShardPlan::by_locality(
+            &legacy_shared.mapping,
+            &legacy_off.history,
+            SHARDS,
+            SLACK,
+        );
+        let legacy_freqs = recross::allocation::group_frequencies(
+            legacy_off.engine.mapping(),
+            &legacy_off.history,
+        );
+        let legacy_spread =
+            ReplicaPlan::spread(&legacy_plan, &legacy_shared.replication, &legacy_freqs);
+        let routed_b = simulate_with_replicas(
+            &legacy_shared,
+            &legacy_plan,
+            &legacy_spread,
+            &legacy_off.eval,
+            bs,
+            RoutePolicy::PowerOfTwo,
+        );
+        assert_eq!(routed_a, routed_b, "{scheme:?} routed sim diverged");
+        // Pinned: the legacy closed-loop sharded simulator across paths.
+        let pinned_a = simulate_sharded(&shared, &plan, prepared.eval(), bs);
+        let pinned_b = simulate_sharded(&legacy_shared, &legacy_plan, &legacy_off.eval, bs);
+        assert_eq!(pinned_a, pinned_b, "{scheme:?} pinned sim diverged");
+    }
+}
+
+/// An integer-valued table over the prepared mapping: embedding `e` is
+/// `[e*D, e*D+1, ..]`, so reductions are exact integer sums in f32 and
+/// equality can be `==`, not a tolerance.
+fn integer_store(prepared: &Prepared) -> EmbeddingStore {
+    let mapping = prepared.engine().mapping();
+    let dim = prepared.config().hardware.embedding_dim;
+    let rows = prepared.config().hardware.xbar_rows;
+    let n = mapping.num_embeddings();
+    // Keep values small so any sum stays far below 2^24 (f32-exact).
+    let table: Vec<f32> = (0..n * dim).map(|i| (i % 251) as f32).collect();
+    EmbeddingStore::from_table(mapping, dim, rows, table)
+}
+
+#[test]
+fn live_sharded_backends_reduce_exactly_on_integer_tables() {
+    for mode in [ShardingMode::Pinned, ShardingMode::ReplicaRouted] {
+        let prepared = build(Scheme::ReCross);
+        prepared.install_store(integer_store(&prepared)).unwrap();
+        let ccfg = ClusterConfig {
+            shards: SHARDS,
+            mode,
+            ..Default::default()
+        };
+        let pool = Sharded::spawn(&prepared, &ccfg).unwrap();
+        assert_eq!(pool.executors(), SHARDS);
+        assert_eq!(pool.mode(), mode);
+        let queries: Vec<Query> =
+            prepared.eval().queries.iter().take(48).cloned().collect();
+        let out = pool.reduce_many(&queries).unwrap();
+        assert_eq!(out.len(), queries.len());
+        for (q, r) in queries.iter().zip(&out) {
+            let expect = prepared.store().reduce_reference(&q.items);
+            assert_eq!(r.reduced, expect, "mode {mode:?}: inexact reduction");
+        }
+        // The per-executor status vocabulary is served.
+        let status = pool.status().unwrap();
+        assert_eq!(status.len(), SHARDS);
+        let served: u64 = status.iter().map(|s| s.queries).sum();
+        assert!(served > 0, "shards reported no served sub-queries");
+    }
+}
+
+#[test]
+fn live_sharded_timing_twin_matches_the_simulator_bit_for_bit() {
+    // Driving the *live* pool's deterministic timing twin must equal
+    // driving the thread-free simulator over the same plan — whatever
+    // routing mode the live reduce path uses (the twin is always
+    // ownership-pinned).
+    for mode in [ShardingMode::Pinned, ShardingMode::ReplicaRouted] {
+        let prepared = build(Scheme::ReCross);
+        let ccfg = ClusterConfig {
+            shards: SHARDS,
+            slack: SLACK,
+            mode,
+            ..Default::default()
+        };
+        let pool = Sharded::spawn(&prepared, &ccfg).unwrap();
+        let sim = prepared.sim_sharded(SHARDS, SLACK).unwrap();
+        let queries = &prepared.eval().queries;
+        let arrivals = Arrivals::poisson(120_000.0, 17).take(queries.len());
+        let p = policy();
+        let live_twin = drive(&pool, queries, &arrivals, &p);
+        let simulated = drive(&sim, queries, &arrivals, &p);
+        assert_eq!(live_twin, simulated, "mode {mode:?}: timing twins diverged");
+    }
+}
+
+#[test]
+fn sim_backend_reduces_exactly_on_integer_tables() {
+    let prepared = build(Scheme::ReCross);
+    prepared.install_store(integer_store(&prepared)).unwrap();
+    let backend = prepared
+        .sim_sharded(SHARDS, SLACK)
+        .unwrap()
+        .with_store(prepared.store());
+    let queries: Vec<Query> = prepared.eval().queries.iter().take(48).cloned().collect();
+    let out = backend.reduce_many(&queries).unwrap();
+    for (q, r) in queries.iter().zip(&out) {
+        assert_eq!(
+            r.reduced,
+            prepared.store().reduce_reference(&q.items),
+            "sim reduction diverged"
+        );
+    }
+    // Backend vocabulary sanity.
+    assert_eq!(backend.executors(), SHARDS);
+    assert!(backend.name().contains("sharded"));
+}
+
+#[test]
+fn dyn_backend_objects_are_interchangeable() {
+    // The whole point of the facade: hold any backend behind one `&dyn`.
+    let prepared = build(Scheme::ReCross);
+    prepared.install_store(integer_store(&prepared)).unwrap();
+    let sim_single = prepared.sim().unwrap().with_store(prepared.store());
+    let sim_sharded = prepared
+        .sim_sharded(SHARDS, SLACK)
+        .unwrap()
+        .with_store(prepared.store());
+    let backends: Vec<&dyn Backend> = vec![&sim_single, &sim_sharded];
+    let queries: Vec<Query> = prepared.eval().queries.iter().take(16).cloned().collect();
+    let mut all: Vec<Vec<Vec<f32>>> = Vec::new();
+    for b in &backends {
+        let out = b.reduce_many(&queries).unwrap();
+        all.push(out.into_iter().map(|r| r.reduced).collect());
+    }
+    // Integer tables: every backend agrees exactly, whatever the scatter.
+    assert_eq!(all[0], all[1], "backends disagree on integer reductions");
+    // And every backend drives through the same open-loop loop.
+    let arrivals = Arrivals::poisson(100_000.0, 5).take(queries.len());
+    for b in &backends {
+        let r = drive(*b, &queries, &arrivals, &policy());
+        assert_eq!(r.queries(), queries.len());
+    }
+}

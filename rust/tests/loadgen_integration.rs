@@ -1,29 +1,34 @@
 //! End-to-end tests of the open-loop traffic engine over a real offline
 //! phase: arrival processes → v2 timed traces → simulated-time driver →
-//! tail-latency telemetry, for the single-pool and sharded back-ends.
+//! tail-latency telemetry, for the single-pool and sharded back-ends —
+//! all built through the `deploy` facade.
 
-use recross::cluster::{PoolShared, ShardPlan};
 use recross::config::Config;
-use recross::coordinator::{BatchPolicy, OfflinePhase};
+use recross::coordinator::BatchPolicy;
+use recross::deploy::{Deployment, Prepared};
 use recross::engine::Scheme;
-use recross::loadgen::{drive_sharded, drive_single, ArrivalKind, Arrivals};
-use recross::sched::{Scheduler, Scratch};
+use recross::loadgen::{drive, ArrivalKind, Arrivals};
+use recross::sched::Scratch;
 use recross::workload::{DatasetSpec, Generator, TimedTrace, Trace};
 use std::time::Duration;
 
 const SCALE: f64 = 0.03;
 const QUERIES: usize = 384;
 
-fn setup() -> (OfflinePhase, Trace) {
+fn setup() -> (Prepared, Trace) {
     let mut cfg = Config::paper_default();
     cfg.workload.dataset = "software".into();
     cfg.workload.history_queries = 800;
     cfg.workload.eval_queries = 64;
-    let offline = OfflinePhase::run(&cfg, Scheme::ReCross, SCALE).unwrap();
+    let prepared = Deployment::of(cfg.clone())
+        .scheme(Scheme::ReCross)
+        .scale(SCALE)
+        .build()
+        .unwrap();
     let spec = DatasetSpec::by_name("software").unwrap().scaled(SCALE);
     let gen = Generator::new(&spec, cfg.workload.seed);
     let trace = gen.trace(QUERIES, 99);
-    (offline, trace)
+    (prepared, trace)
 }
 
 fn policy(max_batch: usize, wait_us: u64) -> BatchPolicy {
@@ -35,24 +40,17 @@ fn policy(max_batch: usize, wait_us: u64) -> BatchPolicy {
 
 #[test]
 fn open_loop_end_to_end_is_deterministic_across_backends() {
-    let (offline, trace) = setup();
-    let engine = &offline.engine;
-    let sched = Scheduler::new(
-        engine.mapping(),
-        engine.replication(),
-        engine.model(),
-        engine.dynamic_switch(),
-    );
-    let shared = PoolShared::from_engine(engine);
-    let plan = ShardPlan::by_locality(&shared.mapping, &offline.history, 4, 0.10);
+    let (prepared, trace) = setup();
+    let single = prepared.sim().unwrap();
+    let sharded = prepared.sim_sharded(4, 0.10).unwrap();
     let p = policy(32, 5);
     for kind in [ArrivalKind::Poisson, ArrivalKind::Bursty, ArrivalKind::Diurnal] {
         let arrivals = Arrivals::from_kind(kind, 100_000.0, 5).take(QUERIES);
-        let s1 = drive_single(&sched, &trace.queries, &arrivals, &p);
-        let s2 = drive_single(&sched, &trace.queries, &arrivals, &p);
+        let s1 = drive(&single, &trace.queries, &arrivals, &p);
+        let s2 = drive(&single, &trace.queries, &arrivals, &p);
         assert_eq!(s1, s2, "{kind:?} single-pool drive not reproducible");
-        let c1 = drive_sharded(&shared, &plan, &trace.queries, &arrivals, &p);
-        let c2 = drive_sharded(&shared, &plan, &trace.queries, &arrivals, &p);
+        let c1 = drive(&sharded, &trace.queries, &arrivals, &p);
+        let c2 = drive(&sharded, &trace.queries, &arrivals, &p);
         assert_eq!(c1, c2, "{kind:?} sharded drive not reproducible");
         // Work conservation: every lookup served exactly once.
         assert_eq!(s1.stats.lookups as usize, trace.total_lookups());
@@ -72,18 +70,13 @@ fn open_loop_end_to_end_is_deterministic_across_backends() {
 
 #[test]
 fn near_zero_load_p99_collapses_to_pure_service_time() {
-    let (offline, trace) = setup();
-    let engine = &offline.engine;
-    let sched = Scheduler::new(
-        engine.mapping(),
-        engine.replication(),
-        engine.model(),
-        engine.dynamic_switch(),
-    );
+    let (prepared, trace) = setup();
+    let backend = prepared.sim().unwrap();
     // 10 q/s against µs-scale service times, max_wait 0: every query is
     // served alone, immediately.
     let arrivals = Arrivals::poisson(10.0, 1).take(QUERIES);
-    let report = drive_single(&sched, &trace.queries, &arrivals, &policy(32, 0));
+    let report = drive(&backend, &trace.queries, &arrivals, &policy(32, 0));
+    let sched = prepared.scheduler();
     let mut scratch = Scratch::default();
     let solo: Vec<f64> = trace
         .queries
@@ -112,22 +105,25 @@ fn recross_mapping_holds_the_tail_lower_than_naive_under_load() {
     cfg.workload.dataset = "software".into();
     cfg.workload.history_queries = 800;
     cfg.workload.eval_queries = 64;
-    let naive_off = OfflinePhase::run(&cfg, Scheme::Naive, SCALE).unwrap();
-    let re_off = OfflinePhase::run(&cfg, Scheme::ReCross, SCALE).unwrap();
+    let naive = Deployment::of(cfg.clone())
+        .scheme(Scheme::Naive)
+        .scale(SCALE)
+        .build()
+        .unwrap();
+    let recross = Deployment::of(cfg.clone())
+        .scheme(Scheme::ReCross)
+        .scale(SCALE)
+        .build()
+        .unwrap();
     let spec = DatasetSpec::by_name("software").unwrap().scaled(SCALE);
     let trace = Generator::new(&spec, cfg.workload.seed).trace(QUERIES, 99);
     let p = policy(32, 5);
     // Rate at ~half of recross capacity, far past naive capacity.
     let cap_re = QUERIES as f64
-        / (re_off.engine.run_trace(&trace, p.max_batch).completion_ns / 1e9);
+        / (recross.engine().run_trace(&trace, p.max_batch).completion_ns / 1e9);
     let arrivals = Arrivals::poisson(0.5 * cap_re, 3).take(QUERIES);
-    let drive = |off: &OfflinePhase| {
-        let e = &off.engine;
-        let sched = Scheduler::new(e.mapping(), e.replication(), e.model(), e.dynamic_switch());
-        drive_single(&sched, &trace.queries, &arrivals, &p)
-    };
-    let rn = drive(&naive_off);
-    let rr = drive(&re_off);
+    let rn = drive(&naive.sim().unwrap(), &trace.queries, &arrivals, &p);
+    let rr = drive(&recross.sim().unwrap(), &trace.queries, &arrivals, &p);
     assert!(
         rr.percentile_ns(99.0) < rn.percentile_ns(99.0),
         "recross p99 {} !< naive p99 {}",
@@ -138,25 +134,19 @@ fn recross_mapping_holds_the_tail_lower_than_naive_under_load() {
 
 #[test]
 fn timed_trace_replay_reproduces_the_drive() {
-    let (offline, trace) = setup();
-    let engine = &offline.engine;
-    let sched = Scheduler::new(
-        engine.mapping(),
-        engine.replication(),
-        engine.model(),
-        engine.dynamic_switch(),
-    );
+    let (prepared, trace) = setup();
+    let backend = prepared.sim().unwrap();
     let p = policy(16, 5);
     let timed = Arrivals::bursty(150_000.0, 21).stamp(trace.clone());
     let mut buf = Vec::new();
     timed.write_to(&mut buf).unwrap();
     let loaded = TimedTrace::read_from(&mut buf.as_slice()).unwrap();
     let ts = loaded.arrivals_ns.expect("v2 kept the stamps");
-    let direct = drive_single(&sched, &trace.queries, &ts, &p);
+    let direct = drive(&backend, &trace.queries, &ts, &p);
     let replayed = {
         let mut replay = Arrivals::replay(ts.clone());
         let again = replay.take(trace.queries.len());
-        drive_single(&sched, &loaded.trace.queries, &again, &p)
+        drive(&backend, &loaded.trace.queries, &again, &p)
     };
     assert_eq!(direct, replayed, "disk round-trip changed the drive");
 }

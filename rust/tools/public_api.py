@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Public-API snapshot for the `recross` crate.
+
+A `cargo public-api`-style text dump without the external tool: walks
+`rust/src`, extracts every `pub` item signature (functions, structs,
+enums, traits, type aliases, consts, modules, re-exports), and writes
+them one-per-line, sorted, to `rust/api.txt`.
+
+The dump is intentionally grep-level — it tracks *names and signatures*,
+not full semantics — which is exactly enough for CI to force future PRs
+to acknowledge API breaks by re-running `--bless` and committing the
+diff.
+
+Usage:
+    python3 rust/tools/public_api.py --bless   # regenerate rust/api.txt
+    python3 rust/tools/public_api.py --check   # diff against rust/api.txt
+"""
+
+import difflib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent  # rust/
+SRC = ROOT / "src"
+SNAPSHOT = ROOT / "api.txt"
+
+# Items that open the public surface. `pub(crate)`/`pub(super)` are
+# crate-internal and excluded on purpose.
+ITEM = re.compile(
+    r"^\s*pub\s+(?:async\s+)?(?:unsafe\s+)?"
+    r"(fn|struct|enum|trait|mod|use|type|const|static)\b"
+)
+PUB_RESTRICTED = re.compile(r"^\s*pub\s*\(")
+
+
+def strip_strings_and_comments(text: str) -> str:
+    """Blank out string/char literals and comments, preserving newlines.
+
+    Brace-depth tracking (used to skip `#[cfg(test)]` modules) must not
+    count braces inside `"missing }"`-style literals or comments, or the
+    skipper desynchronizes and silently drops real public items from
+    the snapshot.
+    """
+    out = []
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        if text.startswith("//", i):
+            j = text.find("\n", i)
+            i = n if j < 0 else j
+            continue
+        if text.startswith("/*", i):
+            depth = 1
+            i += 2
+            while i < n and depth:
+                if text.startswith("/*", i):
+                    depth, i = depth + 1, i + 2
+                elif text.startswith("*/", i):
+                    depth, i = depth - 1, i + 2
+                else:
+                    if text[i] == "\n":
+                        out.append("\n")
+                    i += 1
+            continue
+        if c == '"':
+            # String literal (incl. the contents of raw strings minus
+            # their hash guards — good enough: we only need braces and
+            # newlines to survive accurately).
+            i += 1
+            while i < n:
+                if text[i] == "\\":
+                    i += 2
+                    continue
+                if text[i] == "\n":
+                    out.append("\n")
+                if text[i] == '"':
+                    i += 1
+                    break
+                i += 1
+            continue
+        if c == "'":
+            m = re.match(r"'(\\.|[^'\\])'", text[i:])
+            if m:
+                i += m.end()
+                continue
+            out.append(c)
+            i += 1
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def signature_lines(text: str):
+    """Yield normalized public item signatures from one source file."""
+    lines = strip_strings_and_comments(text).splitlines()
+    in_tests = False
+    depth_at_tests = 0
+    depth = 0
+    i = 0
+    while i < len(lines):
+        raw = lines[i]
+        stripped = raw.strip()
+        # Skip everything inside #[cfg(test)] mod ... { } blocks.
+        if not in_tests and stripped.startswith("#[cfg(test)]"):
+            in_tests = True
+            depth_at_tests = depth
+        depth += raw.count("{") - raw.count("}")
+        if in_tests and depth <= depth_at_tests and "{" in raw:
+            # The test module opened and closed on one line (unlikely).
+            in_tests = False
+        if in_tests:
+            if depth <= depth_at_tests and "}" in raw:
+                in_tests = False
+            i += 1
+            continue
+        if ITEM.match(raw) and not PUB_RESTRICTED.match(raw):
+            # Join continuation lines until the signature closes with
+            # `{`, `;`, or balanced parens at a line end.
+            sig = stripped
+            j = i
+            is_use = re.match(r"^\s*pub\s+use\b", raw) is not None
+            end = r";\s*$" if is_use else r"[{;]\s*$"
+            while not re.search(end, sig) and j + 1 < len(lines) and j - i < 12:
+                j += 1
+                sig += " " + lines[j].strip()
+            if not is_use:
+                sig = re.sub(r"\s*\{.*$", "", sig)  # drop bodies
+            sig = re.sub(r";\s*$", "", sig)
+            sig = re.sub(r"\s+", " ", sig).strip()
+            yield sig
+        i += 1
+
+
+def collect():
+    out = []
+    for path in sorted(SRC.rglob("*.rs")):
+        module = str(path.relative_to(SRC)).removesuffix(".rs")
+        module = module.removesuffix("/mod") or "lib"
+        module = module.replace("/", "::")
+        if module == "lib":
+            module = "recross"
+        else:
+            module = f"recross::{module}"
+        for sig in signature_lines(path.read_text(encoding="utf-8")):
+            out.append(f"{module} :: {sig}")
+    return sorted(set(out))
+
+
+def main():
+    mode = sys.argv[1] if len(sys.argv) > 1 else "--check"
+    current = "\n".join(collect()) + "\n"
+    if mode == "--bless":
+        SNAPSHOT.write_text(current, encoding="utf-8")
+        print(f"wrote {SNAPSHOT} ({current.count(chr(10))} items)")
+        return 0
+    if mode != "--check":
+        print(__doc__)
+        return 2
+    recorded = SNAPSHOT.read_text(encoding="utf-8") if SNAPSHOT.exists() else ""
+    if recorded == current:
+        print(f"public API snapshot OK ({current.count(chr(10))} items)")
+        return 0
+    print("public API changed — review the diff and re-bless if intended:")
+    print("    python3 rust/tools/public_api.py --bless\n")
+    for line in difflib.unified_diff(
+        recorded.splitlines(), current.splitlines(),
+        fromfile="rust/api.txt (recorded)", tofile="current source", lineterm="",
+    ):
+        print(line)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
