@@ -38,6 +38,7 @@ use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::drift::DriftMonitor;
 use crate::coordinator::EmbeddingStore;
 use crate::grouping::Mapping;
+use crate::obs::{names, Obs};
 use crate::sched::ExecStats;
 use crate::workload::{EmbeddingId, Query, Trace};
 use crate::Result;
@@ -282,6 +283,9 @@ pub struct Cluster {
     full: Option<Arc<EmbeddingStore>>,
     rebalance: RebalanceSettings,
     dim: usize,
+    /// Metrics/trace sink shared with every minted handle
+    /// ([`Cluster::attach_obs`]); disabled by default.
+    obs: Arc<Obs>,
 }
 
 impl std::fmt::Debug for Cluster {
@@ -372,7 +376,16 @@ impl Cluster {
                 dup_ratio,
             },
             dim,
+            obs: Obs::disabled(),
         })
+    }
+
+    /// Attach an observability handle ([`crate::obs`]): rebalances and
+    /// every handle minted *after* this call record scatter-gather
+    /// telemetry through it. Handles minted earlier keep the handle they
+    /// were born with, so attach before calling [`Cluster::handle`].
+    pub fn attach_obs(&mut self, obs: Arc<Obs>) {
+        self.obs = obs;
     }
 
     pub fn num_shards(&self) -> usize {
@@ -478,6 +491,8 @@ impl Cluster {
                 }
             }
         }
+        self.obs.incr(names::CLUSTER_REBALANCES, 1);
+        self.obs.gauge_set(names::CLUSTER_EPOCH, epoch as f64);
         Ok(epoch)
     }
 
@@ -490,6 +505,7 @@ impl Cluster {
             inflight: Arc::clone(&self.inflight),
             drift: self.drift.clone(),
             dim: self.dim,
+            obs: Arc::clone(&self.obs),
         }
     }
 }
@@ -516,6 +532,7 @@ pub struct ClusterHandle {
     inflight: Arc<Vec<AtomicU64>>,
     drift: Option<Arc<Mutex<DriftMonitor>>>,
     dim: usize,
+    obs: Arc<Obs>,
 }
 
 impl ClusterHandle {
@@ -610,6 +627,15 @@ impl ClusterHandle {
             }
             pending.push(receivers);
         }
+        // Sample the p2c load signal at its peak — after the whole batch
+        // scattered, before any gather decrements. Reads only; routing
+        // decisions were already made.
+        if self.obs.enabled() && first_err.is_none() {
+            for c in self.inflight.iter() {
+                self.obs
+                    .observe(names::CLUSTER_INFLIGHT, c.load(Ordering::Relaxed) as f64);
+            }
+        }
         // Gather phase: merge partials in ascending shard order (the
         // receivers were registered in shard order) for determinism.
         let mut out = Vec::with_capacity(queries.len());
@@ -658,6 +684,23 @@ impl ClusterHandle {
             let mut m = d.lock().expect("drift lock poisoned");
             for (q, r) in queries.iter().zip(&out) {
                 m.observe(r.activations, q.len());
+            }
+        }
+        // Harvest the batch's routing/fan-out telemetry from the merged
+        // responses — all values the gather already computed.
+        if self.obs.enabled() {
+            self.obs.gauge_set(names::CLUSTER_EPOCH, table.epoch as f64);
+            let route = match table.policy {
+                RoutePolicy::Pinned => names::CLUSTER_ROUTE_PINNED,
+                RoutePolicy::PowerOfTwo => names::CLUSTER_ROUTE_P2C,
+            };
+            self.obs.incr(route, out.len() as u64);
+            for r in &out {
+                self.obs.record_hist(names::CLUSTER_FANOUT, r.fanout as u64, 1);
+                self.obs.incr(names::CLUSTER_SUBQUERIES, r.fanout as u64);
+            }
+            if let Some(d) = self.drift_degradation() {
+                self.obs.gauge_set(names::DRIFT_DEGRADATION, d);
             }
         }
         Ok(out)

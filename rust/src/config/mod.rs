@@ -195,12 +195,49 @@ impl Default for WorkloadConfig {
     }
 }
 
+/// Observability configuration (see [`crate::obs`]). Off by default:
+/// a disabled plane costs one branch per would-be record call, which
+/// `benches/obs_overhead.rs` pins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Master switch for the metrics plane and the flight recorder.
+    pub enabled: bool,
+    /// Fraction of query ids whose spans the flight recorder samples,
+    /// in `[0, 1]` (deterministic in the query id; 1.0 = record all).
+    pub sample_rate: f64,
+    /// Flight-recorder ring capacity in spans (0 disables recording
+    /// while keeping the metrics plane).
+    pub ring_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            sample_rate: 1.0,
+            ring_capacity: 4_096,
+        }
+    }
+}
+
+impl ObsConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.sample_rate),
+            "obs.sample_rate {} outside [0,1]",
+            self.sample_rate
+        );
+        Ok(())
+    }
+}
+
 /// Top-level configuration bundle.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
     pub hardware: HardwareConfig,
     pub scheme: SchemeConfig,
     pub workload: WorkloadConfig,
+    pub obs: ObsConfig,
     /// Directory with AOT artifacts for the PJRT runtime.
     pub artifacts_dir: String,
 }
@@ -289,6 +326,11 @@ impl Config {
         wl.seed = doc.i64_or("workload.seed", wl.seed as i64) as u64;
         wl.dense_features = doc.usize_or("workload.dense_features", wl.dense_features);
 
+        let ob = &mut cfg.obs;
+        ob.enabled = doc.bool_or("obs.enabled", ob.enabled);
+        ob.sample_rate = doc.f64_or("obs.sample_rate", ob.sample_rate);
+        ob.ring_capacity = doc.usize_or("obs.ring_capacity", ob.ring_capacity);
+
         cfg.artifacts_dir = doc.str_or("artifacts_dir", &cfg.artifacts_dir);
         cfg.validate()?;
         Ok(cfg)
@@ -326,6 +368,17 @@ impl Config {
         if args.provided("artifacts") {
             self.artifacts_dir = args.get("artifacts").to_string();
         }
+        // `--obs` is a flag: presence enables, absence leaves the
+        // TOML/base decision alone (a flag cannot express "false").
+        if args.provided("obs") {
+            self.obs.enabled = true;
+        }
+        if args.provided("obs-sample") {
+            self.obs.sample_rate = parse(args, "obs-sample")?;
+        }
+        if args.provided("obs-ring") {
+            self.obs.ring_capacity = parse(args, "obs-ring")?;
+        }
         self.validate()
     }
 
@@ -333,6 +386,7 @@ impl Config {
     pub fn validate(&self) -> Result<()> {
         self.hardware.validate()?;
         self.scheme.validate()?;
+        self.obs.validate()?;
         anyhow::ensure!(self.workload.history_queries > 0, "empty history");
         anyhow::ensure!(self.workload.dense_features > 0, "zero dense features");
         Ok(())
@@ -434,6 +488,53 @@ mod tests {
         // wrapping to a deadline that never fires.
         let neg = Config::from_toml("[scheme]\nmax_wait_us = -1").unwrap();
         assert_eq!(neg.scheme.max_wait_us, 0);
+    }
+
+    #[test]
+    fn obs_defaults_off_and_toml_overrides() {
+        let c = Config::paper_default();
+        assert!(!c.obs.enabled);
+        assert_eq!(c.obs.sample_rate, 1.0);
+        assert_eq!(c.obs.ring_capacity, 4_096);
+        let c = Config::from_toml(
+            "[obs]\nenabled = true\nsample_rate = 0.25\nring_capacity = 128",
+        )
+        .unwrap();
+        assert!(c.obs.enabled);
+        assert_eq!(c.obs.sample_rate, 0.25);
+        assert_eq!(c.obs.ring_capacity, 128);
+        // Out-of-range sampling rate is rejected.
+        assert!(Config::from_toml("[obs]\nsample_rate = 1.5").is_err());
+        assert!(Config::from_toml("[obs]\nsample_rate = -0.1").is_err());
+    }
+
+    #[test]
+    fn obs_cli_overlay() {
+        use crate::util::cli::ArgSpec;
+        let spec = ArgSpec::new("t")
+            .flag("obs", "")
+            .opt("obs-sample", "1.0", "")
+            .opt("obs-ring", "4096", "");
+        let args = spec
+            .parse(
+                &["--obs", "--obs-sample", "0.5", "--obs-ring", "64"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect::<Vec<_>>(),
+            )
+            .unwrap();
+        let mut cfg = Config::serving_default();
+        cfg.overlay_cli(&args).unwrap();
+        assert!(cfg.obs.enabled);
+        assert_eq!(cfg.obs.sample_rate, 0.5);
+        assert_eq!(cfg.obs.ring_capacity, 64);
+        // Absent flags leave the base alone.
+        let none = spec.parse(&Vec::<String>::new()).unwrap();
+        let mut cfg = Config::serving_default();
+        cfg.obs.sample_rate = 0.75;
+        cfg.overlay_cli(&none).unwrap();
+        assert!(!cfg.obs.enabled);
+        assert_eq!(cfg.obs.sample_rate, 0.75);
     }
 
     #[test]

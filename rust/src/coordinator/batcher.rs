@@ -114,6 +114,14 @@ impl<T> Batcher<T> {
         self.ready_at().map(|t| t.saturating_sub(now_ns))
     }
 
+    /// The close policy this batcher was built with. Lets instrumented
+    /// call sites classify a close as size-triggered
+    /// (`len() >= policy().max_batch` at close time) vs deadline-
+    /// triggered without carrying the policy separately.
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+
     /// Pop up to `max_batch` requests as one batch (empty vec if none).
     pub fn take_batch(&mut self) -> Vec<T> {
         let n = self.queue.len().min(self.policy.max_batch);
@@ -210,6 +218,13 @@ mod tests {
         b.push_at(9, 42);
         assert!(b.ready(42));
         assert_eq!(b.ready_at(), Some(42));
+    }
+
+    #[test]
+    fn policy_accessor_reflects_construction() {
+        let b: Batcher<u8> = Batcher::new(policy(7, 3));
+        assert_eq!(b.policy().max_batch, 7);
+        assert_eq!(b.policy().max_wait_ns(), 3 * MS);
     }
 
     #[test]

@@ -22,13 +22,14 @@ use super::drift::DriftMonitor;
 use super::planner::Planner;
 use super::store::EmbeddingStore;
 use crate::engine::Engine;
+use crate::obs::{names, Obs, Stage};
 use crate::runtime::{DlrmParams, Runtime};
 use crate::sched::{ExecStats, Scratch};
 use crate::util::{Clock, WallClock};
 use crate::workload::Query;
 use crate::Result;
 use anyhow::anyhow;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// One inference request.
@@ -92,6 +93,9 @@ pub struct Pipeline {
     /// offline-phase baseline); `drift().regroup_due()` tells the operator
     /// the mapping has gone stale and the offline phase should re-run.
     drift: DriftMonitor,
+    /// Metrics/trace sink shared with the owning backend's clients
+    /// ([`Pipeline::with_obs`]); disabled by default.
+    obs: Arc<Obs>,
 }
 
 impl std::fmt::Debug for Pipeline {
@@ -136,7 +140,22 @@ impl Pipeline {
             // lookups (a healthy grouped mapping) and let rebaseline()
             // correct it after the offline validation run.
             drift: DriftMonitor::with_baseline(0.125),
+            obs: Obs::disabled(),
         })
+    }
+
+    /// Attach an observability handle ([`crate::obs`]): every served
+    /// batch harvests scheduler / crossbar / ADC / energy metrics and
+    /// the executor loop records batcher telemetry + sampled spans.
+    pub fn with_obs(mut self, obs: Arc<Obs>) -> Self {
+        self.obs = obs;
+        self
+    }
+
+    /// The attached observability handle (disabled unless
+    /// [`Pipeline::with_obs`] was called).
+    pub fn obs(&self) -> &Arc<Obs> {
+        &self.obs
     }
 
     /// The drift monitor (read-only view for operators/metrics).
@@ -226,6 +245,8 @@ impl Pipeline {
         let sim = self.engine.run_batch(&queries, &mut self.scratch);
         self.sim_stats.accumulate(&sim);
         self.batches += 1;
+        // Harvest at the batch seam — the cost is already computed.
+        self.obs.record_exec(&sim);
 
         // 5: feed the drift monitor (mapping staleness signal).
         let mut drift_scratch = Vec::new();
@@ -236,6 +257,8 @@ impl Pipeline {
                 .groups_touched(&q.items, &mut drift_scratch) as u64;
             self.drift.observe(acts, q.len());
         }
+        self.obs
+            .gauge_set(names::DRIFT_DEGRADATION, self.drift.degradation());
 
         let now = Instant::now();
         let mut scratch = Vec::new();
@@ -428,6 +451,7 @@ impl Drop for Server {
 fn executor_loop(pipeline: &mut Pipeline, rx: mpsc::Receiver<Msg>, policy: BatchPolicy) {
     type Pending = (Request, Instant, mpsc::Sender<Result<Response>>);
     let clock = WallClock::new();
+    let obs = Arc::clone(pipeline.obs());
     let mut batcher: Batcher<Pending> = Batcher::new(policy);
     loop {
         // Wait for work (or a deadline if requests are queued).
@@ -458,10 +482,46 @@ fn executor_loop(pipeline: &mut Pipeline, rx: mpsc::Receiver<Msg>, policy: Batch
             }
             None => {}
         }
-        // Serve every ready batch.
+        // Serve every ready batch. The instrumentation reads the close
+        // decision *after* the policy made it (depth at close, trigger
+        // classification, per-request formation wait) — batch boundaries
+        // are identical with observability on or off.
         while batcher.ready(clock.now_ns()) {
+            let close_ns = clock.now_ns();
+            let depth = batcher.len();
+            let size_close = depth >= batcher.policy().max_batch;
             let batch = batcher.take_batch();
+            let mut sampled: Vec<u64> = Vec::new();
+            if obs.enabled() {
+                obs.observe(names::BATCHER_QUEUE_DEPTH, depth as f64);
+                obs.record_hist(names::BATCHER_BATCH_SIZE, batch.len() as u64, 1);
+                obs.incr(
+                    if size_close {
+                        names::BATCHER_CLOSE_SIZE
+                    } else {
+                        names::BATCHER_CLOSE_DEADLINE
+                    },
+                    1,
+                );
+                for (req, at, _) in &batch {
+                    let at_ns = clock.instant_ns(*at);
+                    obs.observe(
+                        names::BATCHER_WAIT_NS,
+                        close_ns.saturating_sub(at_ns) as f64,
+                    );
+                    if obs.sampled(req.id) {
+                        obs.span(Stage::Enqueue, req.id, 0, at_ns, close_ns);
+                        sampled.push(req.id);
+                    }
+                }
+            }
             serve_batch(pipeline, batch);
+            if !sampled.is_empty() {
+                let end_ns = clock.now_ns();
+                for id in sampled {
+                    obs.span(Stage::Execute, id, 0, close_ns, end_ns);
+                }
+            }
         }
     }
 }

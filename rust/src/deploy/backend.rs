@@ -24,6 +24,7 @@ use crate::coordinator::{
 };
 use crate::engine::{Engine, Scheme};
 use crate::grouping::Mapping;
+use crate::obs::{names, MetricsSnapshot, Obs};
 use crate::sched::{ExecStats, Scheduler, Scratch};
 use crate::workload::{EmbeddingId, Query};
 use crate::xbar::CrossbarModel;
@@ -118,6 +119,48 @@ pub trait Backend {
     /// simulator) report zeroed counters — a drive's accounting lives in
     /// its [`crate::loadgen::OpenLoopReport`], not here.
     fn status(&self) -> Result<Vec<BackendStatus>>;
+
+    /// The observability handle attached to this backend, if any.
+    /// Backends that support [`crate::obs`] override this; the default
+    /// (no handle) keeps the trait object-safe and implementors free of
+    /// obs plumbing.
+    fn obs(&self) -> Option<&Arc<Obs>> {
+        None
+    }
+
+    /// One schema-versioned metrics snapshot for this backend: the
+    /// `status.*` counters distilled from [`Backend::status`] (summed
+    /// across executors), merged with everything the attached [`Obs`]
+    /// handle recorded. The two families stay under distinct prefixes —
+    /// on live backends the executor counters and the obs harvest cover
+    /// the *same* batches, so folding them into one name would double
+    /// count. Every backend emits the same `recross.metrics` schema, so
+    /// sim and live snapshots are directly diffable.
+    fn metrics(&self) -> Result<MetricsSnapshot> {
+        let mut snap = MetricsSnapshot::new(self.name());
+        let mut energy_pj = 0.0f64;
+        let mut epoch = 0u64;
+        let mut counter = |name: &str, by: u64| {
+            *snap.counters.entry(name.to_string()).or_insert(0) += by;
+        };
+        for row in self.status()? {
+            counter("status.queries", row.queries);
+            counter("status.lookups", row.lookups);
+            counter("status.batches", row.batches);
+            counter("status.activations", row.sim.activations);
+            counter("status.single_row", row.sim.single_row_activations);
+            counter("status.adc_mac", row.sim.mac_activations);
+            counter("status.adc_read", row.sim.read_activations);
+            energy_pj += row.sim.energy_pj;
+            epoch = epoch.max(row.epoch);
+        }
+        snap.gauges.insert("status.energy_pj".to_string(), energy_pj);
+        snap.gauges.insert("status.epoch".to_string(), epoch as f64);
+        if let Some(obs) = self.obs() {
+            snap.merge(&obs.snapshot(self.name()));
+        }
+        Ok(snap)
+    }
 }
 
 fn zero_status(executor: u32, hosted_groups: usize) -> BackendStatus {
@@ -160,6 +203,8 @@ pub struct SimBackend<'a> {
     locals: Vec<Replication>,
     store: Option<&'a EmbeddingStore>,
     label: String,
+    /// Metrics/trace sink; `None` (the default) costs nothing.
+    obs: Option<Arc<Obs>>,
 }
 
 impl<'a> SimBackend<'a> {
@@ -184,6 +229,7 @@ impl<'a> SimBackend<'a> {
             locals: Vec::new(),
             store: None,
             label: "sim".to_string(),
+            obs: None,
         }
     }
 
@@ -272,6 +318,16 @@ impl<'a> SimBackend<'a> {
         self
     }
 
+    /// Attach an observability handle: timed batches harvest scheduler /
+    /// crossbar / ADC / energy metrics through it, and the open-loop
+    /// driver ([`crate::loadgen::drive`]) picks it up via
+    /// [`Backend::obs`] to record batcher and span telemetry on the
+    /// same registry. A disabled handle records nothing.
+    pub fn with_obs(mut self, obs: Arc<Obs>) -> Self {
+        self.obs = Some(obs);
+        self
+    }
+
     fn executor_replication(&self, executor: usize) -> &Replication {
         match self.plan {
             None => self.replication,
@@ -306,13 +362,39 @@ impl Backend for SimBackend<'_> {
         // The scheduler is a pure function of (mapping, replicas, model);
         // rebuilding it per batch costs O(groups) — the same order as the
         // batch's own busy-table reset — and keeps the backend borrow-only.
-        Scheduler::new(
+        let sched = Scheduler::new(
             self.mapping,
             self.executor_replication(executor),
             self.model,
             self.dynamic_switch,
-        )
-        .run_batch_timed(queries, scratch, finish_rel)
+        );
+        match &self.obs {
+            Some(obs) if obs.enabled() => {
+                // Harvest at the batch seam: every recorded value is one
+                // the schedule already computed, so the schedule itself
+                // is bit-identical with recording on or off.
+                let (busy_flat, bus_flat) = sched.uses_flat_tables();
+                let before = scratch.comparisons();
+                let st = sched.run_batch_timed(queries, scratch, finish_rel);
+                obs.record_exec(&st);
+                obs.incr(
+                    names::SCHED_COMPARISONS,
+                    scratch.comparisons().saturating_sub(before),
+                );
+                for flat in [busy_flat, bus_flat] {
+                    obs.incr(
+                        if flat {
+                            names::SCHED_PATH_FLAT
+                        } else {
+                            names::SCHED_PATH_TREE
+                        },
+                        1,
+                    );
+                }
+                st
+            }
+            _ => sched.run_batch_timed(queries, scratch, finish_rel),
+        }
     }
 
     fn merge_cost(&self) -> (f64, f64) {
@@ -370,6 +452,10 @@ impl Backend for SimBackend<'_> {
                 .collect(),
         })
     }
+
+    fn obs(&self) -> Option<&Arc<Obs>> {
+        self.obs.as_ref()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -384,6 +470,9 @@ pub struct SinglePool {
     shared: PoolShared,
     scheme: Scheme,
     dense_features: usize,
+    /// Shared with the executor thread's pipeline: the executor records,
+    /// clients snapshot. Disabled unless `config.obs.enabled`.
+    obs: Arc<Obs>,
 }
 
 impl SinglePool {
@@ -396,14 +485,18 @@ impl SinglePool {
         let shared = PoolShared::from_engine(prepared.engine());
         let scheme = prepared.scheme();
         let dense_features = prepared.config().workload.dense_features;
+        let obs = Obs::from_config(&prepared.config().obs);
         let (cfg, offline, store) = prepared.into_offline();
-        let server =
-            Server::spawn(policy, move || build_pipeline_with_store(&cfg, offline, store))?;
+        let pipe_obs = Arc::clone(&obs);
+        let server = Server::spawn(policy, move || {
+            build_pipeline_with_store(&cfg, offline, store).map(|p| p.with_obs(pipe_obs))
+        })?;
         Ok(Self {
             server,
             shared,
             scheme,
             dense_features,
+            obs,
         })
     }
 
@@ -492,6 +585,10 @@ impl Backend for SinglePool {
             sim: s.sim,
         }])
     }
+
+    fn obs(&self) -> Option<&Arc<Obs>> {
+        Some(&self.obs)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -522,6 +619,10 @@ pub struct Sharded {
     handle: ClusterHandle,
     mode: ShardingMode,
     label: String,
+    /// Shared with the cluster and every minted handle: scatter-gather
+    /// clients record, callers snapshot. Disabled unless
+    /// `config.obs.enabled`.
+    obs: Arc<Obs>,
     /// Per-epoch timing-twin snapshot, cached so
     /// [`Backend::run_batch_timed`] does not rebuild O(groups) local
     /// tables every batch (the per-sub-batch rebuild PR 2 removed from
@@ -535,13 +636,17 @@ impl Sharded {
     /// prepared bundle stays borrowed so the caller keeps its traces for
     /// driving and verification.
     pub fn spawn(prepared: &super::Prepared, ccfg: &ClusterConfig) -> Result<Self> {
-        let cluster = cluster::assemble_cluster(
+        let obs = Obs::from_config(&prepared.config().obs);
+        let mut cluster = cluster::assemble_cluster(
             prepared.engine(),
             prepared.history(),
             prepared.eval(),
             prepared.store(),
             ccfg,
         )?;
+        // Attach before minting any handle so every scatter-gather
+        // client shares the sink.
+        cluster.attach_obs(Arc::clone(&obs));
         let handle = cluster.handle();
         let table = handle.routes();
         let twin = Mutex::new(Self::twin_snapshot(&cluster, &table));
@@ -550,6 +655,7 @@ impl Sharded {
             handle,
             mode: ccfg.mode,
             label: format!("sharded({})", ccfg.shards),
+            obs,
             twin,
         })
     }
@@ -695,5 +801,9 @@ impl Backend for Sharded {
                 sim: s.sim,
             })
             .collect())
+    }
+
+    fn obs(&self) -> Option<&Arc<Obs>> {
+        Some(&self.obs)
     }
 }

@@ -39,6 +39,12 @@
 //! wait + batch formation + scheduled service — reporting throughput and
 //! p50/p95/p99/p999 latency, bit-reproducibly.
 //!
+//! Cross-cutting the serving layers is the **observability plane**
+//! ([`obs`]): an off-by-default metrics registry plus a sampled
+//! per-query flight recorder, harvested at batch/wave seams so that
+//! observation never perturbs schedules or reductions, and exported as
+//! one schema-versioned JSON snapshot (`recross status --json`).
+//!
 //! The single front door to all of it is the **deployment facade**
 //! ([`deploy`]): `Deployment::of(config).scheme(..).build()?` runs the
 //! offline phase once, and the resulting [`deploy::Prepared`] bundle
@@ -56,6 +62,7 @@ pub mod graph;
 pub mod grouping;
 pub mod loadgen;
 pub mod metrics;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sched;

@@ -36,7 +36,8 @@
 use crate::cluster::{PoolShared, ShardPlan};
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::deploy::{Backend, BackendStatus, Reduction, SimBackend};
-use crate::metrics::percentile;
+use crate::metrics::{percentile, Summary};
+use crate::obs::{names, Stage};
 use crate::sched::{ExecStats, Scheduler, Scratch};
 use crate::workload::{EmbeddingId, Query};
 
@@ -61,7 +62,13 @@ pub struct ShardLoad {
 }
 
 impl ShardLoad {
-    /// Fraction of the horizon this executor spent serving.
+    /// Fraction of the horizon this executor spent serving, clamped to
+    /// `[0, 1]`.
+    ///
+    /// A non-positive horizon (an empty drive, or a degenerate caller
+    /// passing `0.0` / a negative span / `NEG_INFINITY`) reports `0.0`
+    /// utilization rather than dividing by it — an executor that never
+    /// had a horizon to be busy over was never busy.
     pub fn utilization(&self, horizon_ns: f64) -> f64 {
         if horizon_ns <= 0.0 {
             0.0
@@ -107,6 +114,10 @@ impl OpenLoopReport {
     }
 
     /// Achieved throughput over the makespan, queries/second.
+    ///
+    /// A zero-query drive (or one whose only queries were empty, leaving
+    /// the makespan at zero) reports `0.0` rather than `0/0 = NaN` —
+    /// nothing was achieved over no time.
     pub fn throughput_qps(&self) -> f64 {
         if self.horizon_ns <= 0.0 {
             0.0
@@ -116,6 +127,9 @@ impl OpenLoopReport {
     }
 
     /// Time-averaged queries in system (Little's law: L = Σ sojourn / T).
+    ///
+    /// With a zero makespan there was no interval to average over:
+    /// reports `0.0` instead of dividing by zero.
     pub fn mean_queue_depth(&self) -> f64 {
         if self.horizon_ns <= 0.0 {
             0.0
@@ -151,12 +165,22 @@ pub fn drive(
     let shards = backend.executors();
     assert!(shards > 0, "backend reports zero executors");
     let (add_ns, add_pj) = backend.merge_cost();
+    // Observability rides along when the backend carries an *enabled*
+    // handle: the driver records batcher / span / fan-out telemetry on
+    // the same registry the live executors use, so sim and live runs
+    // emit one schema. Everything recorded is read off values this
+    // function computes anyway — the drive's output is bit-identical
+    // with recording on or off (tests/obs_integration.rs pins this).
+    let obs = backend.obs().cloned();
+    let recording = obs.as_ref().map_or(false, |o| o.enabled());
 
     // Scatter: split every query at its arrival instant.
     let mut sub_queries: Vec<Vec<Query>> = vec![Vec::new(); shards];
     let mut sub_arrivals: Vec<Vec<(u64, usize)>> = vec![Vec::new(); shards];
     // (executor, local index) of every sub-query of each query.
     let mut subs_of_query: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+    // Global query index of each sub-query (span labels; recording only).
+    let mut sub_qi: Vec<Vec<usize>> = vec![Vec::new(); shards];
     for (qi, q) in queries.iter().enumerate() {
         if q.is_empty() {
             continue; // nothing to serve
@@ -171,6 +195,9 @@ pub fn drive(
             sub_arrivals[s].push((arrivals_ns[qi], li));
             sub_queries[s].push(Query::new(items));
             subs_of_query[qi].push((s, li));
+            if recording {
+                sub_qi[s].push(qi);
+            }
         }
     }
 
@@ -185,13 +212,55 @@ pub fn drive(
     for s in 0..shards {
         let mut finish = vec![0.0f64; sub_queries[s].len()];
         let mut local_stats = ExecStats::default();
-        let qstats = simulate_executor(&sub_arrivals[s], policy, &mut finish, |batch| {
+        // Per-shard formation-wait accumulator, merged into the shared
+        // registry once per shard (Summary::merge) instead of locking
+        // per sub-query.
+        let mut wait_local = Summary::new();
+        let qstats = simulate_executor(&sub_arrivals[s], policy, &mut finish, |t_close, batch| {
             let qs: Vec<Query> = batch.iter().map(|&i| sub_queries[s][i].clone()).collect();
             let st = backend.run_batch_timed(s, &qs, &mut scratch, &mut rel);
             local_stats.accumulate(&st);
+            if recording {
+                let o = obs.as_ref().expect("recording implies a handle");
+                for (&li, &r) in batch.iter().zip(&rel) {
+                    let (arr, _) = sub_arrivals[s][li];
+                    wait_local.add(t_close - arr as f64);
+                    let qid = sub_qi[s][li] as u64;
+                    if o.sampled(qid) {
+                        o.span(Stage::Enqueue, qid, s as u32, arr, t_close as u64);
+                        o.span(
+                            Stage::Execute,
+                            qid,
+                            s as u32,
+                            t_close as u64,
+                            (t_close + r) as u64,
+                        );
+                    }
+                }
+            }
             (st.completion_ns, rel.clone())
         });
         stats.merge_parallel(&local_stats);
+        if recording {
+            let o = obs.as_ref().expect("recording implies a handle");
+            o.merge_summary(names::BATCHER_WAIT_NS, &wait_local);
+            for &(_, depth) in &qstats.backlog_samples {
+                o.observe(names::BATCHER_QUEUE_DEPTH, depth as f64);
+                o.record_hist(
+                    names::BATCHER_BATCH_SIZE,
+                    depth.min(policy.max_batch) as u64,
+                    1,
+                );
+                o.incr(
+                    if depth >= policy.max_batch {
+                        names::BATCHER_CLOSE_SIZE
+                    } else {
+                        names::BATCHER_CLOSE_DEADLINE
+                    },
+                    1,
+                );
+            }
+        }
         let sub_sojourn: f64 = sub_arrivals[s]
             .iter()
             .map(|&(a, li)| finish[li] - a as f64)
@@ -225,9 +294,20 @@ pub fn drive(
             .iter()
             .map(|&(s, li)| sub_finish[s][li])
             .fold(f64::NEG_INFINITY, f64::max);
+        let served = f;
         if subs.len() > 1 {
             f += (subs.len() - 1) as f64 * add_ns;
             stats.energy_pj += (subs.len() - 1) as f64 * add_pj;
+        }
+        if recording && shards > 1 {
+            // The twin's scatter is ownership-pinned by contract.
+            let o = obs.as_ref().expect("recording implies a handle");
+            o.record_hist(names::CLUSTER_FANOUT, subs.len() as u64, 1);
+            o.incr(names::CLUSTER_SUBQUERIES, subs.len() as u64);
+            o.incr(names::CLUSTER_ROUTE_PINNED, 1);
+            if subs.len() > 1 && o.sampled(qi as u64) {
+                o.span(Stage::Merge, qi as u64, 0, served as u64, f as u64);
+            }
         }
         horizon = horizon.max(f);
         sojourn.push(f - a);
@@ -334,6 +414,13 @@ fn check_arrivals(num_queries: usize, arrivals_ns: &[u64]) {
     );
 }
 
+/// Offered load implied by the arrival stamps, queries/second.
+///
+/// Edge behavior, by span of the stamps:
+/// * empty or single-arrival stream → `0.0` (no interval ⇒ no rate);
+/// * `n > 1` arrivals all at one instant → `INFINITY` (an unbounded
+///   burst, not idle traffic);
+/// * otherwise the `n−1` inter-arrival gaps over the first→last span.
 fn offered_qps(arrivals_ns: &[u64]) -> f64 {
     match (arrivals_ns.first(), arrivals_ns.last()) {
         (Some(&a), Some(&b)) if b > a => {
@@ -359,9 +446,10 @@ struct ExecutorStats {
 /// Simulate one serial executor behind a dynamic batcher on virtual time.
 ///
 /// `arrivals` is `(arrival_ns, item id)`, sorted by time. `serve` is
-/// called once per closed batch with the item ids, and returns the
-/// batch's total service duration plus each item's finish offset within
-/// it; absolute finish times land in `finish_ns[item]`.
+/// called once per closed batch with the close time and the item ids,
+/// and returns the batch's total service duration plus each item's
+/// finish offset within it; absolute finish times land in
+/// `finish_ns[item]`.
 ///
 /// Batch-close rule (identical to the live executor loop): a batch
 /// closes at the earliest time `t ≥ executor_free` at which the queue
@@ -375,7 +463,7 @@ fn simulate_executor<F>(
     mut serve: F,
 ) -> ExecutorStats
 where
-    F: FnMut(&[usize]) -> (f64, Vec<f64>),
+    F: FnMut(f64, &[usize]) -> (f64, Vec<f64>),
 {
     debug_assert!(arrivals.windows(2).all(|w| w[0].0 <= w[1].0));
     let mut batcher: Batcher<usize> = Batcher::new(policy.clone());
@@ -412,7 +500,7 @@ where
         out.max_backlog = out.max_backlog.max(batcher.len());
         out.backlog_samples.push((t_close, batcher.len()));
         let batch = batcher.take_batch();
-        let (busy, rel) = serve(&batch);
+        let (busy, rel) = serve(t_close, &batch);
         assert_eq!(rel.len(), batch.len(), "one finish offset per batch item");
         for (&id, &r) in batch.iter().zip(&rel) {
             finish_ns[id] = t_close + r;
@@ -684,5 +772,64 @@ mod tests {
         assert_eq!(out[0].fanout, 2);
         assert_eq!(out[1].reduced, store.reduce_reference(&[1]));
         assert_eq!(out[1].fanout, 1);
+    }
+
+    #[test]
+    fn utilization_guards_non_positive_horizon() {
+        let sl = ShardLoad {
+            shard: 0,
+            sub_queries: 0,
+            batches: 0,
+            busy_ns: 5.0,
+            max_backlog: 0,
+            mean_backlog: 0.0,
+            backlog_samples: Vec::new(),
+        };
+        // Degenerate horizons: never divide, always 0.0.
+        assert_eq!(sl.utilization(0.0), 0.0);
+        assert_eq!(sl.utilization(-1.0), 0.0);
+        assert_eq!(sl.utilization(f64::NEG_INFINITY), 0.0);
+        // Healthy horizons: the plain ratio, capped at 1.
+        assert_eq!(sl.utilization(10.0), 0.5);
+        assert_eq!(sl.utilization(2.5), 1.0);
+    }
+
+    #[test]
+    fn report_edge_cases_on_zero_queries() {
+        let empty = OpenLoopReport {
+            sojourn_ns: Vec::new(),
+            stats: ExecStats::default(),
+            horizon_ns: 0.0,
+            offered_qps: 0.0,
+            shards: Vec::new(),
+        };
+        assert_eq!(empty.queries(), 0);
+        assert_eq!(empty.throughput_qps(), 0.0);
+        assert_eq!(empty.mean_queue_depth(), 0.0);
+        assert_eq!(empty.mean_sojourn_ns(), 0.0);
+        // Nearest-rank over an empty sample is 0.0 by percentile()'s
+        // own empty-slice contract.
+        assert_eq!(empty.percentile_ns(99.0), 0.0);
+        assert_eq!(empty.batches(), 0);
+    }
+
+    #[test]
+    fn offered_qps_classifies_bursts_and_idle() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let backend = SimBackend::from_parts(&map, &rep, &m, true);
+        let p = policy(8, 0);
+        // No arrivals / one arrival: no interval, rate 0.
+        let none = drive(&backend, &[], &[], &p);
+        assert_eq!(none.offered_qps, 0.0);
+        let one = drive(&backend, &some_queries(1), &[5], &p);
+        assert_eq!(one.offered_qps, 0.0);
+        // Same-instant burst of n > 1: unbounded offered load.
+        let burst = drive(&backend, &some_queries(3), &[7, 7, 7], &p);
+        assert_eq!(burst.offered_qps, f64::INFINITY);
+        // One query per second: 1 qps.
+        let paced = drive(&backend, &some_queries(2), &[0, 1_000_000_000], &p);
+        assert!((paced.offered_qps - 1.0).abs() < 1e-12);
     }
 }

@@ -10,6 +10,7 @@
 //! recross serve      --arrivals poisson --rate 50000  # open-loop latency sim
 //! recross cluster    --shards 4 --dataset software # sharded scatter-gather pool
 //! recross autotune   --dataset automotive          # pick dup ratio (knee)
+//! recross status     --json                        # obs-instrumented drive -> metrics snapshot
 //! ```
 //!
 //! Configuration flows through one precedence chain: built-in defaults
@@ -30,7 +31,10 @@ use recross::workload::{access_frequencies, DatasetSpec, Generator, Trace};
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let spec = ArgSpec::new("ReCross: ReRAM-crossbar embedding reduction (paper reproduction)")
-        .positional("command", "report | generate | analyze | serve | cluster | autotune")
+        .positional(
+            "command",
+            "report | generate | analyze | serve | cluster | autotune | status",
+        )
         .opt("config", "", "TOML config file (CLI flags override)")
         .opt("figure", "all", "report figure (fig2..fig11, table1, all, ablation)")
         .opt("dataset", "software", "dataset name (Table I)")
@@ -59,6 +63,11 @@ fn main() {
         .opt("vnodes", "128", "virtual nodes per shard on the hash ring")
         .opt("partition", "locality", "group->shard partitioner: locality|hash")
         .opt("slack", "0.10", "locality partitioner balance slack")
+        .opt("obs-sample", "1.0", "flight-recorder span sampling rate, 0..=1")
+        .opt("obs-ring", "4096", "flight-recorder ring capacity (events)")
+        .opt("trace", "", "write Chrome trace-event JSON here (status mode)")
+        .flag("obs", "enable the observability plane (metrics + flight recorder)")
+        .flag("json", "machine-readable metrics snapshot (status mode)")
         .flag(
             "replica-routing",
             "spread hot-group replicas across shards; route by power-of-two-choices",
@@ -84,6 +93,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
         "autotune" => cmd_autotune(&args),
+        "status" => cmd_status(&args),
         other => {
             eprintln!("unknown command {other:?}\n\n{}", spec.usage("recross"));
             std::process::exit(2);
@@ -419,6 +429,142 @@ fn cmd_serve_open_loop(
             fmt_ns(single_r.horizon_ns),
             single_r.batches(),
             sharded_r.batches()
+        );
+    }
+    Ok(())
+}
+
+/// Unified metrics-plane demo (`recross status`): run an
+/// obs-instrumented open-loop drive of the `--shards`-way simulated
+/// backend and print the one schema-versioned `recross.metrics`
+/// snapshot every backend emits — `--json` for the machine-readable
+/// form, `--trace <path>` to also dump the flight recorder's sampled
+/// spans as Chrome trace-event JSON (load in Perfetto / about:tracing).
+/// No PJRT artifacts needed; bit-reproducible for a fixed
+/// `(dataset, scheme, arrivals, rate, seed)`.
+fn cmd_status(args: &recross::util::cli::Args) -> anyhow::Result<()> {
+    use recross::deploy::Backend;
+    use recross::energy::{HostModel, HostParams, HostPlatform};
+    use recross::loadgen::{drive, ArrivalKind, Arrivals};
+    use recross::obs::{names, Obs};
+    use recross::util::fmt_ns;
+    use std::sync::Arc;
+
+    let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
+    let n_requests = args.get_positive("requests").map_err(anyhow::Error::msg)?;
+    let max_batch = args.get_positive("batch").map_err(anyhow::Error::msg)?;
+    let shards = args.get_positive("shards").map_err(anyhow::Error::msg)?;
+    let rate: f64 = args.get_as("rate").map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(rate > 0.0, "--rate must be positive");
+    let slack: f64 = args.get_as("slack").map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(slack >= 0.0, "--slack must be non-negative");
+    let scheme = parse_scheme(args)?;
+    anyhow::ensure!(
+        scheme != Scheme::Nmars,
+        "the open-loop driver serves the MAC dataflow; scheme {:?} is not supported here",
+        scheme.name()
+    );
+    // Status mode's closed-loop default makes no sense here: stamp the
+    // trace with a Poisson process unless another open-loop shape was
+    // asked for.
+    let kind = match args.get("arrivals") {
+        "closed" => ArrivalKind::Poisson,
+        name => ArrivalKind::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown arrival process {name:?} (try poisson|bursty|diurnal)")
+        })?,
+    };
+    let json = args.flag("json");
+
+    let mut cfg = cli_config(args, Config::open_loop_default())?;
+    // This subcommand *is* the observability demo: always observe
+    // (--obs-sample / --obs-ring still tune the recorder via the
+    // overlay).
+    cfg.obs.enabled = true;
+    let obs = Obs::from_config(&cfg.obs);
+    let seed = cfg.workload.seed;
+    let dataset = cfg.workload.dataset.clone();
+    let embedding_dim = cfg.hardware.embedding_dim;
+    if !json {
+        println!(
+            "status drive: dataset={dataset} scheme={} arrivals={} rate={rate}/s shards={shards} seed={seed}",
+            scheme.name(),
+            kind.name()
+        );
+    }
+    let prepared = Deployment::of(cfg).scheme(scheme).scale(scale).build()?;
+    let backend = prepared
+        .sim_sharded(shards, slack)?
+        .with_obs(Arc::clone(&obs));
+    // The host-baseline comparison gauge (DDR-fetch energy per lookup).
+    obs.gauge_set(
+        names::ENERGY_HOST_PJ_PER_LOOKUP,
+        HostModel::new(&HostParams::default(), embedding_dim).lookup_pj(HostPlatform::CpuOnly),
+    );
+
+    let spec = DatasetSpec::by_name(&dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset:?}"))?
+        .scaled(scale);
+    let gen = Generator::new(&spec, seed);
+    let trace = gen.trace(n_requests, seed.wrapping_add(3));
+    let arrivals = Arrivals::from_kind(kind, rate, seed).take(trace.queries.len());
+    let policy = BatchPolicy::from_config(prepared.config(), max_batch);
+    let report = drive(&backend, &trace.queries, &arrivals, &policy);
+    let snap = backend.metrics()?;
+
+    if json {
+        // Nothing else on stdout: `recross status --json > snap.json`
+        // must parse.
+        print!("{}", snap.to_json());
+    } else {
+        println!(
+            "\nmetrics snapshot (schema {} v{}, source {:?})",
+            recross::obs::MetricsSnapshot::SCHEMA,
+            recross::obs::MetricsSnapshot::VERSION,
+            snap.source
+        );
+        println!(
+            "drive: {} queries, {} batches, p99 sojourn {}",
+            report.queries(),
+            report.batches(),
+            fmt_ns(report.percentile_ns(99.0))
+        );
+        println!("\ncounters:");
+        for (name, v) in &snap.counters {
+            println!("  {name:<28} {v}");
+        }
+        println!("gauges:");
+        for (name, v) in &snap.gauges {
+            println!("  {name:<28} {v:.3}");
+        }
+        println!("summaries (count / mean / min / max):");
+        for (name, s) in &snap.summaries {
+            println!(
+                "  {name:<28} {} / {:.1} / {:.1} / {:.1}",
+                s.count(),
+                s.mean(),
+                s.min(),
+                s.max()
+            );
+        }
+        println!("histograms (value: count):");
+        for (name, buckets) in &snap.histograms {
+            let cells: Vec<String> = buckets.iter().map(|(v, c)| format!("{v}: {c}")).collect();
+            println!("  {name:<28} {}", cells.join("  "));
+        }
+        println!(
+            "flight recorder: {} spans held ({} recorded, {} dropped)",
+            obs.recorder().len(),
+            obs.recorder().recorded(),
+            obs.recorder().dropped()
+        );
+    }
+    let trace_out = args.get("trace");
+    if !trace_out.is_empty() {
+        std::fs::write(trace_out, obs.recorder().trace_json())?;
+        // Stderr keeps `--json` stdout pure.
+        eprintln!(
+            "wrote {trace_out}: {} spans (Chrome trace-event JSON)",
+            obs.recorder().len()
         );
     }
     Ok(())

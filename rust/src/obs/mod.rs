@@ -1,0 +1,285 @@
+//! Observability plane: live metrics + a per-query flight recorder.
+//!
+//! Two halves behind one handle ([`Obs`]):
+//!
+//! * **Metrics plane** ([`registry`]) — a [`MetricsRegistry`] of typed
+//!   counters / gauges / summaries / histograms harvested at the seams
+//!   of the serving stack (batcher closes, batch execution, cluster
+//!   scatter/gather, rebalances), snapshot-exportable as one
+//!   schema-versioned JSON (`recross.metrics` v1) from
+//!   `Backend::metrics()` and `recross status --json`. The loadgen
+//!   driver records through the *same* registry, so sim and live runs
+//!   emit the same schema and are directly diffable.
+//! * **Flight recorder** ([`recorder`]) — a fixed-capacity, sampled
+//!   ring of per-query [`SpanEvent`]s (enqueue → batch-form → schedule
+//!   → execute → merge) on injected-[`crate::util::Clock`] timestamps,
+//!   dumpable as Chrome trace-event JSON for Perfetto.
+//!
+//! **Off by default.** Construction is driven by
+//! [`crate::config::ObsConfig`]; a disabled [`Obs`] reduces every
+//! record call to one branch ([`Obs::enabled`] is a plain bool read —
+//! no lock, no allocation), which `benches/obs_overhead.rs` pins.
+//!
+//! **Observation never perturbs the system.** All instrumented call
+//! sites record *after* decisions are made, from values the serving
+//! path already computed; schedules and reductions stay bit-identical
+//! with recording enabled (see `tests/obs_integration.rs`).
+
+pub mod recorder;
+pub mod registry;
+
+pub use recorder::{FlightRecorder, SpanEvent, Stage};
+pub use registry::{MetricsRegistry, MetricsSnapshot};
+
+use crate::config::ObsConfig;
+use crate::metrics::Summary;
+use crate::sched::ExecStats;
+use std::sync::Arc;
+
+/// The metric catalogue: every name the serving stack records, in one
+/// place (units in DESIGN.md §Observability).
+pub mod names {
+    /// Queue depth at batch close (queries) — summary.
+    pub const BATCHER_QUEUE_DEPTH: &str = "batcher.queue_depth";
+    /// Closed batch size (queries) — histogram.
+    pub const BATCHER_BATCH_SIZE: &str = "batcher.batch_size";
+    /// Per-query batch-formation wait (ns) — summary.
+    pub const BATCHER_WAIT_NS: &str = "batcher.wait_ns";
+    /// Batches closed by the max-wait deadline — counter.
+    pub const BATCHER_CLOSE_DEADLINE: &str = "batcher.close_deadline";
+    /// Batches closed by reaching max_batch — counter.
+    pub const BATCHER_CLOSE_SIZE: &str = "batcher.close_size";
+
+    /// Batches scheduled — counter.
+    pub const SCHED_BATCHES: &str = "sched.batches";
+    /// Slot-selection float comparisons (replica + bus) — counter.
+    pub const SCHED_COMPARISONS: &str = "sched.comparisons";
+    /// Slot tables served by the flat scan layout — counter.
+    pub const SCHED_PATH_FLAT: &str = "sched.path_flat";
+    /// Slot tables served by the tournament tree — counter.
+    pub const SCHED_PATH_TREE: &str = "sched.path_tree";
+    /// Queries scheduled — counter.
+    pub const SCHED_QUERIES: &str = "sched.queries";
+    /// Embedding lookups served — counter.
+    pub const SCHED_LOOKUPS: &str = "sched.lookups";
+
+    /// Crossbar activations dispatched — counter.
+    pub const XBAR_ACTIVATIONS: &str = "xbar.activations";
+    /// Activations that touched exactly one row — counter.
+    pub const XBAR_SINGLE_ROW: &str = "xbar.single_row";
+    /// Rows activated per activation — summary.
+    pub const XBAR_ROWS_PER_ACTIVATION: &str = "xbar.rows_per_activation";
+
+    /// ADC conversions taken in full MAC mode — counter.
+    pub const ADC_MAC: &str = "adc.mac";
+    /// ADC conversions gated to read mode (dynamic switch) — counter.
+    pub const ADC_READ: &str = "adc.read";
+
+    /// Modeled crossbar energy (pJ), accumulated — gauge.
+    pub const ENERGY_TOTAL_PJ: &str = "energy.total_pj";
+    /// Host-baseline energy per lookup (pJ) for comparison — gauge.
+    pub const ENERGY_HOST_PJ_PER_LOOKUP: &str = "energy.host_pj_per_lookup";
+
+    /// Scatter fan-out per query (shards) — histogram.
+    pub const CLUSTER_FANOUT: &str = "cluster.fanout";
+    /// Sub-queries dispatched — counter.
+    pub const CLUSTER_SUBQUERIES: &str = "cluster.subqueries";
+    /// In-flight sub-queries per shard, sampled at scatter — summary.
+    pub const CLUSTER_INFLIGHT: &str = "cluster.inflight";
+    /// Queries routed under power-of-two-choices — counter.
+    pub const CLUSTER_ROUTE_P2C: &str = "cluster.route_p2c";
+    /// Queries routed under ownership pinning — counter.
+    pub const CLUSTER_ROUTE_PINNED: &str = "cluster.route_pinned";
+    /// Current placement epoch — gauge.
+    pub const CLUSTER_EPOCH: &str = "cluster.epoch";
+    /// Epoch-swap rebalances performed — counter.
+    pub const CLUSTER_REBALANCES: &str = "cluster.rebalances";
+
+    /// Latest drift degradation ratio (1.0 = baseline) — gauge.
+    pub const DRIFT_DEGRADATION: &str = "drift.degradation";
+}
+
+/// One shared handle over the metrics plane and the flight recorder.
+/// Cloneable via `Arc`; every record method is a no-op (single branch)
+/// when observability is disabled.
+#[derive(Debug)]
+pub struct Obs {
+    enabled: bool,
+    metrics: MetricsRegistry,
+    recorder: FlightRecorder,
+}
+
+impl Obs {
+    /// The do-nothing handle every serving path starts with.
+    pub fn disabled() -> Arc<Obs> {
+        Arc::new(Obs {
+            enabled: false,
+            metrics: MetricsRegistry::new(),
+            recorder: FlightRecorder::new(0, 0.0),
+        })
+    }
+
+    /// Build from config; `enabled: false` yields [`Obs::disabled`].
+    pub fn from_config(cfg: &ObsConfig) -> Arc<Obs> {
+        if !cfg.enabled {
+            return Self::disabled();
+        }
+        Arc::new(Obs {
+            enabled: true,
+            metrics: MetricsRegistry::new(),
+            recorder: FlightRecorder::new(cfg.ring_capacity, cfg.sample_rate),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    /// Snapshot the metrics plane, labelled with its source backend.
+    pub fn snapshot(&self, source: &str) -> MetricsSnapshot {
+        self.metrics.snapshot(source)
+    }
+
+    // ---- record methods (all single-branch no-ops when disabled) ----
+
+    pub fn incr(&self, name: &'static str, by: u64) {
+        if self.enabled {
+            self.metrics.incr(name, by);
+        }
+    }
+
+    pub fn gauge_set(&self, name: &'static str, value: f64) {
+        if self.enabled {
+            self.metrics.gauge_set(name, value);
+        }
+    }
+
+    pub fn gauge_add(&self, name: &'static str, value: f64) {
+        if self.enabled {
+            self.metrics.gauge_add(name, value);
+        }
+    }
+
+    pub fn observe(&self, name: &'static str, x: f64) {
+        if self.enabled {
+            self.metrics.observe(name, x);
+        }
+    }
+
+    pub fn merge_summary(&self, name: &'static str, local: &Summary) {
+        if self.enabled {
+            self.metrics.merge_summary(name, local);
+        }
+    }
+
+    pub fn record_hist(&self, name: &'static str, value: u64, n: u64) {
+        if self.enabled {
+            self.metrics.record_hist(name, value, n);
+        }
+    }
+
+    /// Harvest one executed batch's circuit-simulated cost into the
+    /// scheduler / crossbar / ADC / energy metric families. Called at
+    /// the batch seam from values [`ExecStats`] already carries — the
+    /// schedule itself is untouched.
+    pub fn record_exec(&self, st: &ExecStats) {
+        if !self.enabled {
+            return;
+        }
+        self.metrics.incr(names::SCHED_BATCHES, 1);
+        self.metrics.incr(names::SCHED_QUERIES, st.queries);
+        self.metrics.incr(names::SCHED_LOOKUPS, st.lookups);
+        self.metrics.incr(names::XBAR_ACTIVATIONS, st.activations);
+        self.metrics
+            .incr(names::XBAR_SINGLE_ROW, st.single_row_activations);
+        if st.activations > 0 {
+            self.metrics.observe(
+                names::XBAR_ROWS_PER_ACTIVATION,
+                st.rows_activated as f64 / st.activations as f64,
+            );
+        }
+        self.metrics.incr(names::ADC_MAC, st.mac_activations);
+        self.metrics.incr(names::ADC_READ, st.read_activations);
+        self.metrics.gauge_add(names::ENERGY_TOTAL_PJ, st.energy_pj);
+    }
+
+    /// Whether this query's spans should be recorded (deterministic in
+    /// the query id; always false when disabled).
+    pub fn sampled(&self, query: u64) -> bool {
+        self.enabled && self.recorder.sampled(query)
+    }
+
+    /// Record a span for an already-[`Obs::sampled`] query.
+    pub fn span(&self, stage: Stage, query: u64, lane: u32, start_ns: u64, end_ns: u64) {
+        if self.enabled {
+            self.recorder.record(SpanEvent {
+                stage,
+                query,
+                lane,
+                start_ns,
+                dur_ns: end_ns.saturating_sub(start_ns),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_records_nothing() {
+        let obs = Obs::disabled();
+        assert!(!obs.enabled());
+        obs.incr(names::SCHED_BATCHES, 5);
+        obs.observe(names::BATCHER_WAIT_NS, 1.0);
+        obs.gauge_add(names::ENERGY_TOTAL_PJ, 2.0);
+        obs.record_hist(names::CLUSTER_FANOUT, 2, 1);
+        obs.span(Stage::Execute, 1, 0, 0, 10);
+        assert!(!obs.sampled(0));
+        let snap = obs.snapshot("off");
+        assert!(snap.counters.is_empty());
+        assert!(snap.gauges.is_empty());
+        assert!(snap.summaries.is_empty());
+        assert!(snap.histograms.is_empty());
+        assert!(obs.recorder().is_empty());
+    }
+
+    #[test]
+    fn enabled_handle_records_everything() {
+        let cfg = ObsConfig {
+            enabled: true,
+            sample_rate: 1.0,
+            ring_capacity: 8,
+        };
+        let obs = Obs::from_config(&cfg);
+        assert!(obs.enabled());
+        obs.incr(names::SCHED_BATCHES, 2);
+        obs.gauge_set(names::CLUSTER_EPOCH, 3.0);
+        obs.observe(names::BATCHER_QUEUE_DEPTH, 4.0);
+        obs.record_hist(names::BATCHER_BATCH_SIZE, 32, 1);
+        assert!(obs.sampled(123));
+        obs.span(Stage::Enqueue, 123, 1, 100, 250);
+        let snap = obs.snapshot("sim");
+        assert_eq!(snap.counter(names::SCHED_BATCHES), 2);
+        assert_eq!(snap.gauge(names::CLUSTER_EPOCH), 3.0);
+        assert_eq!(snap.summaries[names::BATCHER_QUEUE_DEPTH].count(), 1);
+        assert_eq!(obs.recorder().len(), 1);
+        assert_eq!(obs.recorder().events()[0].dur_ns, 150);
+    }
+
+    #[test]
+    fn from_config_disabled_is_inert() {
+        let obs = Obs::from_config(&ObsConfig::default());
+        assert!(!obs.enabled());
+        assert_eq!(obs.recorder().capacity(), 0);
+    }
+}

@@ -1,0 +1,275 @@
+//! The flight recorder: a fixed-capacity, sampled ring buffer of
+//! structured per-query span events, dumpable as Chrome trace-event
+//! JSON (load the file in Perfetto / `chrome://tracing`).
+//!
+//! Every span carries timestamps from the serving stack's injected
+//! [`crate::util::Clock`] timeline (`u64` nanoseconds) — the recorder
+//! never reads a clock of its own, so a simulated drive produces the
+//! same trace on every run.
+//!
+//! Sampling is **deterministic in the query id**: a query is recorded
+//! iff `hash(qid) < rate * 2^64` with a fixed multiplicative hash, so
+//! re-running the same workload samples the same queries and the
+//! recorder adds no RNG state to the serving path.
+
+use std::sync::Mutex;
+
+/// Pipeline stage a span belongs to (the per-query lifecycle:
+/// enqueue → batch-form → schedule → execute → merge).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Waiting in the dynamic batcher (arrival → batch close).
+    Enqueue,
+    /// Batch formation (close decision; zero-duration marker spans).
+    BatchForm,
+    /// Scheduling / replica+channel selection for the batch.
+    Schedule,
+    /// Crossbar service (batch close → this query's finish).
+    Execute,
+    /// Scatter-gather merge (last sub-query finish → merged finish).
+    Merge,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Enqueue => "enqueue",
+            Stage::BatchForm => "batch-form",
+            Stage::Schedule => "schedule",
+            Stage::Execute => "execute",
+            Stage::Merge => "merge",
+        }
+    }
+}
+
+/// One recorded span on the injected-clock timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub stage: Stage,
+    /// Query id (the sampling key).
+    pub query: u64,
+    /// Lane the span ran on (shard / executor index); becomes the
+    /// trace-event `tid` so Perfetto draws one track per executor.
+    pub lane: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<SpanEvent>,
+    /// Next overwrite position once the buffer is full.
+    head: usize,
+    /// Total spans ever recorded (len + dropped).
+    recorded: u64,
+}
+
+/// Fixed-capacity ring of sampled [`SpanEvent`]s. Overwrites the oldest
+/// span once full — a crash/latency investigation always sees the most
+/// recent window.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    capacity: usize,
+    sample_rate: f64,
+    inner: Mutex<Ring>,
+}
+
+/// Fibonacci-hashing multiplier (same constant the cluster's routing
+/// salt uses) — decorrelates sequential query ids before the sampling
+/// threshold test.
+const SAMPLE_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+impl FlightRecorder {
+    /// `capacity` 0 disables recording entirely; `sample_rate` is the
+    /// sampled fraction of query ids in `[0, 1]` (≥ 1.0 records all).
+    pub fn new(capacity: usize, sample_rate: f64) -> Self {
+        Self {
+            capacity,
+            sample_rate,
+            inner: Mutex::new(Ring::default()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn sample_rate(&self) -> f64 {
+        self.sample_rate
+    }
+
+    /// Deterministic per-query sampling decision.
+    pub fn sampled(&self, query: u64) -> bool {
+        if self.capacity == 0 || self.sample_rate <= 0.0 {
+            return false;
+        }
+        if self.sample_rate >= 1.0 {
+            return true;
+        }
+        let threshold = (self.sample_rate * u64::MAX as f64) as u64;
+        query.wrapping_mul(SAMPLE_MIX) < threshold
+    }
+
+    /// Record one span (the caller has already checked [`Self::sampled`];
+    /// unsampled spans recorded anyway are kept — sampling is advisory).
+    pub fn record(&self, ev: SpanEvent) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.recorded += 1;
+        if g.buf.len() < self.capacity {
+            g.buf.push(ev);
+        } else {
+            let head = g.head;
+            g.buf[head] = ev;
+            g.head = (head + 1) % self.capacity;
+        }
+    }
+
+    /// Spans currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total spans ever recorded, including overwritten ones.
+    pub fn recorded(&self) -> u64 {
+        self.inner.lock().unwrap().recorded
+    }
+
+    /// Spans lost to ring overwrite.
+    pub fn dropped(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.recorded - g.buf.len() as u64
+    }
+
+    /// The held spans in record order (oldest first).
+    pub fn events(&self) -> Vec<SpanEvent> {
+        let g = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(g.buf.len());
+        out.extend_from_slice(&g.buf[g.head..]);
+        out.extend_from_slice(&g.buf[..g.head]);
+        out
+    }
+
+    /// Chrome trace-event JSON (`ph: "X"` complete events; `ts`/`dur`
+    /// in microseconds per the trace format). Open in Perfetto or
+    /// `chrome://tracing`.
+    pub fn trace_json(&self) -> String {
+        let events = self.events();
+        let mut out = String::new();
+        out.push_str("{\n\"displayTimeUnit\": \"ns\",\n\"traceEvents\": [\n");
+        for (i, ev) in events.iter().enumerate() {
+            out.push_str(&format!(
+                "{{\"name\": \"{}\", \"cat\": \"recross\", \"ph\": \"X\", \
+                 \"ts\": {:.3}, \"dur\": {:.3}, \"pid\": 0, \"tid\": {}, \
+                 \"args\": {{\"query\": {}}}}}{}\n",
+                ev.stage.name(),
+                ev.start_ns as f64 / 1e3,
+                ev.dur_ns as f64 / 1e3,
+                ev.lane,
+                ev.query,
+                if i + 1 == events.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(query: u64, start_ns: u64) -> SpanEvent {
+        SpanEvent {
+            stage: Stage::Execute,
+            query,
+            lane: 0,
+            start_ns,
+            dur_ns: 10,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let r = FlightRecorder::new(3, 1.0);
+        for q in 0..5 {
+            r.record(span(q, q * 100));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.recorded(), 5);
+        assert_eq!(r.dropped(), 2);
+        let qs: Vec<u64> = r.events().iter().map(|e| e.query).collect();
+        assert_eq!(qs, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn zero_capacity_records_nothing() {
+        let r = FlightRecorder::new(0, 1.0);
+        r.record(span(1, 0));
+        assert!(r.is_empty());
+        assert_eq!(r.recorded(), 0);
+        assert!(!r.sampled(1));
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_rate_shaped() {
+        let r = FlightRecorder::new(16, 0.25);
+        let first: Vec<bool> = (0..10_000).map(|q| r.sampled(q)).collect();
+        let second: Vec<bool> = (0..10_000).map(|q| r.sampled(q)).collect();
+        assert_eq!(first, second, "sampling must be deterministic");
+        let hits = first.iter().filter(|&&s| s).count();
+        // Multiplicative hashing over sequential ids is near-uniform.
+        assert!((1_500..=3_500).contains(&hits), "hit rate {hits}/10000");
+
+        let all = FlightRecorder::new(16, 1.0);
+        assert!((0..100).all(|q| all.sampled(q)));
+        let none = FlightRecorder::new(16, 0.0);
+        assert!(!(0..100).any(|q| none.sampled(q)));
+    }
+
+    #[test]
+    fn trace_json_is_chrome_format() {
+        let r = FlightRecorder::new(8, 1.0);
+        r.record(SpanEvent {
+            stage: Stage::Enqueue,
+            query: 7,
+            lane: 2,
+            start_ns: 1_500,
+            dur_ns: 2_000,
+        });
+        let js = r.trace_json();
+        assert!(js.contains("\"traceEvents\""));
+        assert!(js.contains("\"name\": \"enqueue\""));
+        assert!(js.contains("\"ph\": \"X\""));
+        assert!(js.contains("\"ts\": 1.500"));
+        assert!(js.contains("\"dur\": 2.000"));
+        assert!(js.contains("\"tid\": 2"));
+        assert!(js.contains("\"query\": 7"));
+        // Empty recorder still emits a valid document.
+        assert!(FlightRecorder::new(0, 0.0).trace_json().contains("traceEvents"));
+    }
+
+    #[test]
+    fn stage_names_cover_the_lifecycle() {
+        let names: Vec<&str> = [
+            Stage::Enqueue,
+            Stage::BatchForm,
+            Stage::Schedule,
+            Stage::Execute,
+            Stage::Merge,
+        ]
+        .iter()
+        .map(|s| s.name())
+        .collect();
+        assert_eq!(
+            names,
+            vec!["enqueue", "batch-form", "schedule", "execute", "merge"]
+        );
+    }
+}

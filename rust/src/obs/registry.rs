@@ -1,0 +1,331 @@
+//! The metrics plane: a typed, named registry of counters, gauges,
+//! summaries, and histograms, snapshot-exportable as one
+//! schema-versioned JSON document.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Never perturb the system.** Recording happens at batch/wave
+//!    boundaries only (the "seams" of the serving stack) and is purely
+//!    additive — no instrumented code path changes a float operation,
+//!    a batch boundary, or a scheduling decision.
+//! 2. **One schema for sim and live.** `MetricsSnapshot::to_json`
+//!    emits the same `recross.metrics` document whether the numbers
+//!    came from [`crate::loadgen::drive`] on virtual time or a live
+//!    executor thread, so the two are diffable.
+//! 3. **Zero dependencies.** JSON is hand-rolled (the same discipline
+//!    as `BENCH_sched.json`); non-finite floats serialize as `null`.
+//!
+//! The registry is `Sync` (a single `Mutex` over `BTreeMap`s — metric
+//! updates are seam-rate, not activation-rate, so one lock is cheap and
+//! keeps disabled-path overhead at a single branch in [`super::Obs`]).
+//! Per-shard collection merges local [`Summary`] accumulators through
+//! [`MetricsRegistry::merge_summary`] (Welford's parallel merge), so
+//! shards never contend on the lock inside their serving loops.
+
+use crate::metrics::{Histogram, Summary};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    summaries: BTreeMap<&'static str, Summary>,
+    histograms: BTreeMap<&'static str, Histogram>,
+}
+
+/// A process-wide registry of named metrics. Names are `&'static str`
+/// constants (see [`super::names`]) so registration is allocation-free.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `by` to a monotone counter.
+    pub fn incr(&self, name: &'static str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name).or_insert(0) += by;
+    }
+
+    /// Set a gauge to its latest value (last-write-wins).
+    pub fn gauge_set(&self, name: &'static str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name, value);
+    }
+
+    /// Accumulate into a gauge (for modeled totals like energy).
+    pub fn gauge_add(&self, name: &'static str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.gauges.entry(name).or_insert(0.0) += value;
+    }
+
+    /// Add one observation to a streaming [`Summary`].
+    pub fn observe(&self, name: &'static str, x: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.summaries.entry(name).or_insert_with(Summary::new).add(x);
+    }
+
+    /// Merge a locally-accumulated per-shard [`Summary`] into the
+    /// registry's stream (Welford parallel merge — the per-shard
+    /// collection path of the metrics plane).
+    pub fn merge_summary(&self, name: &'static str, local: &Summary) {
+        let mut g = self.inner.lock().unwrap();
+        g.summaries
+            .entry(name)
+            .or_insert_with(Summary::new)
+            .merge(local);
+    }
+
+    /// Record `n` observations of integer `value` into a histogram.
+    pub fn record_hist(&self, name: &'static str, value: u64, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms
+            .entry(name)
+            .or_insert_with(Histogram::new)
+            .add_n(value, n);
+    }
+
+    /// A consistent point-in-time copy of every metric.
+    pub fn snapshot(&self, source: &str) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        MetricsSnapshot {
+            source: source.to_string(),
+            counters: g.counters.iter().map(|(&k, &v)| (k.to_string(), v)).collect(),
+            gauges: g.gauges.iter().map(|(&k, &v)| (k.to_string(), v)).collect(),
+            summaries: g
+                .summaries
+                .iter()
+                .map(|(&k, v)| (k.to_string(), v.clone()))
+                .collect(),
+            histograms: g
+                .histograms
+                .iter()
+                .map(|(&k, v)| (k.to_string(), v.iter().collect()))
+                .collect(),
+        }
+    }
+}
+
+/// An exported point-in-time view of a [`MetricsRegistry`] (or of
+/// status-derived counters — see `Backend::metrics`). Serializes to the
+/// `recross.metrics` JSON schema documented in DESIGN.md §Observability.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// Which backend/run produced the numbers (`Backend::name()`).
+    pub source: String,
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub summaries: BTreeMap<String, Summary>,
+    /// Sparse `(value, count)` pairs in ascending value order.
+    pub histograms: BTreeMap<String, Vec<(u64, u64)>>,
+}
+
+impl MetricsSnapshot {
+    /// Schema identifier emitted in every JSON document.
+    pub const SCHEMA: &'static str = "recross.metrics";
+    /// Schema version; bump on any structural change.
+    pub const VERSION: u32 = 1;
+
+    pub fn new(source: &str) -> Self {
+        Self {
+            source: source.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Counter value, 0 if never recorded.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value, 0.0 if never recorded.
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Merge another snapshot into this one: counters add, gauges take
+    /// the other side's value (last-write-wins), summaries merge via
+    /// Welford, histogram counts add.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, v) in &other.summaries {
+            self.summaries
+                .entry(k.clone())
+                .or_insert_with(Summary::new)
+                .merge(v);
+        }
+        for (k, pairs) in &other.histograms {
+            let mine = self.histograms.entry(k.clone()).or_default();
+            // Merge two ascending sparse lists.
+            let mut merged: BTreeMap<u64, u64> = mine.iter().copied().collect();
+            for &(value, count) in pairs {
+                *merged.entry(value).or_insert(0) += count;
+            }
+            *mine = merged.into_iter().collect();
+        }
+    }
+
+    /// Hand-rolled, schema-versioned JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": \"{}\",\n", Self::SCHEMA));
+        out.push_str(&format!("  \"version\": {},\n", Self::VERSION));
+        out.push_str(&format!("  \"source\": \"{}\",\n", escape(&self.source)));
+        out.push_str("  \"counters\": {");
+        push_entries(&mut out, self.counters.iter(), |(k, v)| {
+            format!("\"{}\": {v}", escape(k))
+        });
+        out.push_str("},\n  \"gauges\": {");
+        push_entries(&mut out, self.gauges.iter(), |(k, v)| {
+            format!("\"{}\": {}", escape(k), json_f64(**v))
+        });
+        out.push_str("},\n  \"summaries\": {");
+        push_entries(&mut out, self.summaries.iter(), |(k, s)| {
+            format!(
+                "\"{}\": {{\"count\": {}, \"mean\": {}, \"stddev\": {}, \"min\": {}, \"max\": {}}}",
+                escape(k),
+                s.count(),
+                json_f64(s.mean()),
+                json_f64(s.stddev()),
+                json_f64(s.min()),
+                json_f64(s.max())
+            )
+        });
+        out.push_str("},\n  \"histograms\": {");
+        push_entries(&mut out, self.histograms.iter(), |(k, pairs)| {
+            let body: Vec<String> = pairs.iter().map(|(v, c)| format!("[{v}, {c}]")).collect();
+            format!("\"{}\": [{}]", escape(k), body.join(", "))
+        });
+        out.push_str("}\n}\n");
+        out
+    }
+}
+
+/// `f64` as a JSON number, or `null` for non-finite values (JSON has no
+/// NaN/Infinity literals).
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn push_entries<I, T, F>(out: &mut String, entries: I, render: F)
+where
+    I: Iterator<Item = T>,
+    F: Fn(&T) -> String,
+{
+    let rendered: Vec<String> = entries.map(|e| render(&e)).collect();
+    if rendered.is_empty() {
+        return;
+    }
+    out.push_str("\n    ");
+    out.push_str(&rendered.join(",\n    "));
+    out.push_str("\n  ");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_and_summaries_roundtrip() {
+        let r = MetricsRegistry::new();
+        r.incr("a.count", 2);
+        r.incr("a.count", 3);
+        r.gauge_set("g.latest", 1.5);
+        r.gauge_set("g.latest", 2.5);
+        r.gauge_add("g.total", 1.0);
+        r.gauge_add("g.total", 2.0);
+        r.observe("s.x", 1.0);
+        r.observe("s.x", 3.0);
+        r.record_hist("h.v", 7, 2);
+        let snap = r.snapshot("test");
+        assert_eq!(snap.counter("a.count"), 5);
+        assert_eq!(snap.gauge("g.latest"), 2.5);
+        assert_eq!(snap.gauge("g.total"), 3.0);
+        let s = &snap.summaries["s.x"];
+        assert_eq!(s.count(), 2);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(snap.histograms["h.v"], vec![(7, 2)]);
+        assert_eq!(snap.counter("missing"), 0);
+    }
+
+    #[test]
+    fn merge_summary_uses_welford_merge() {
+        let r = MetricsRegistry::new();
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for x in [1.0, 2.0] {
+            a.add(x);
+        }
+        for x in [3.0, 4.0] {
+            b.add(x);
+        }
+        r.merge_summary("s", &a);
+        r.merge_summary("s", &b);
+        let s = &r.snapshot("t").summaries["s"];
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn snapshot_merge_semantics() {
+        let r1 = MetricsRegistry::new();
+        let r2 = MetricsRegistry::new();
+        r1.incr("c", 1);
+        r2.incr("c", 2);
+        r1.gauge_set("g", 1.0);
+        r2.gauge_set("g", 9.0);
+        r1.record_hist("h", 5, 1);
+        r2.record_hist("h", 5, 2);
+        r2.record_hist("h", 8, 1);
+        r1.observe("s", 1.0);
+        r2.observe("s", 5.0);
+        let mut a = r1.snapshot("a");
+        a.merge(&r2.snapshot("b"));
+        assert_eq!(a.counter("c"), 3);
+        assert_eq!(a.gauge("g"), 9.0);
+        assert_eq!(a.histograms["h"], vec![(5, 3), (8, 1)]);
+        assert_eq!(a.summaries["s"].count(), 2);
+        assert_eq!(a.source, "a");
+    }
+
+    #[test]
+    fn json_is_schema_versioned_and_escapes() {
+        let r = MetricsRegistry::new();
+        r.incr("n", 1);
+        r.gauge_set("bad", f64::INFINITY);
+        let js = r.snapshot("sim\"x").to_json();
+        assert!(js.contains("\"schema\": \"recross.metrics\""));
+        assert!(js.contains("\"version\": 1"));
+        assert!(js.contains("\"source\": \"sim\\\"x\""));
+        assert!(js.contains("\"n\": 1"));
+        assert!(js.contains("\"bad\": null"));
+    }
+
+    #[test]
+    fn empty_snapshot_has_empty_sections() {
+        let js = MetricsRegistry::new().snapshot("none").to_json();
+        assert!(js.contains("\"counters\": {}"));
+        assert!(js.contains("\"histograms\": {}"));
+    }
+}

@@ -234,6 +234,15 @@ impl<'a> Scheduler<'a> {
         self.model
     }
 
+    /// Which slot-table layouts this scheduler decided on at
+    /// construction: `(replica_table_flat, bus_table_flat)`. `true`
+    /// means the flat-scan fast path, `false` the tournament tree —
+    /// the observability plane's `sched.path_flat` / `sched.path_tree`
+    /// counters report exactly this decision per scheduled batch.
+    pub fn uses_flat_tables(&self) -> (bool, bool) {
+        (self.busy_flat, self.bus_flat)
+    }
+
     /// Simulate one batch. All queries arrive at t=0 (the paper's
     /// batch-synchronous inference); the returned stats cover this batch.
     pub fn run_batch(&self, queries: &[Query], scratch: &mut Scratch) -> ExecStats {
@@ -701,6 +710,21 @@ mod tests {
         assert_eq!(scratch.comparisons(), 2 * once, "counters accumulate");
         scratch.reset_comparisons();
         assert_eq!(scratch.comparisons(), 0);
+    }
+
+    #[test]
+    fn flat_table_decision_is_exposed() {
+        let m = model();
+        let map = mapping_2x2();
+        // Identity copies (1 each) and 16 bus channels: both flat.
+        let rep = Replication::identity(2, 4);
+        let s = Scheduler::new(&map, &rep, &m, true);
+        assert_eq!(s.uses_flat_tables(), (true, true));
+        // 64 copies of a group exceed FLAT_CROSSOVER: replica table goes
+        // tree, bus table stays flat.
+        let rep = Replication::from_copies(vec![64, 1], 64);
+        let s = Scheduler::new(&map, &rep, &m, true);
+        assert_eq!(s.uses_flat_tables(), (false, true));
     }
 
     #[test]

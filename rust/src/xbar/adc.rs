@@ -29,6 +29,16 @@ pub enum AdcMode {
     Read,
 }
 
+impl AdcMode {
+    /// Stable lowercase label (metric names, reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Mac => "mac",
+            Self::Read => "read",
+        }
+    }
+}
+
 /// Cost of one ADC conversion.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AdcCost {
@@ -193,6 +203,12 @@ mod tests {
         let mac = ds.convert(2).energy_pj;
         let read = ds.convert(1).energy_pj;
         assert!((mac - read - ds.read_mode_saving_pj()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mode_names_are_stable() {
+        assert_eq!(AdcMode::Mac.name(), "mac");
+        assert_eq!(AdcMode::Read.name(), "read");
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! End-to-end contracts of the observability plane (`recross::obs`):
+//!
+//! * recording never perturbs the drive — reports are bit-identical
+//!   with a handle attached, disabled or enabled;
+//! * an enabled drive covers the metric catalogue, and the recorded
+//!   counters reconcile exactly with the report's own accounting;
+//! * a disabled handle records nothing;
+//! * `Backend::metrics` merges the `status.*` family with the obs
+//!   harvest into one schema-versioned snapshot;
+//! * the flight recorder emits Chrome trace-event JSON, and
+//!   `sample_rate: 0` keeps metrics while dropping spans.
+
+use recross::allocation::Replication;
+use recross::cluster::{PoolShared, ShardPlan};
+use recross::config::{HardwareConfig, ObsConfig};
+use recross::coordinator::BatchPolicy;
+use recross::deploy::{Backend, SimBackend};
+use recross::grouping::Mapping;
+use recross::loadgen::{drive, Arrivals};
+use recross::obs::{names, MetricsSnapshot, Obs};
+use recross::workload::Query;
+use recross::xbar::{CircuitParams, CrossbarModel};
+use std::sync::Arc;
+use std::time::Duration;
+
+const GROUPS: usize = 4;
+const GROUP_SIZE: usize = 4;
+
+fn shared() -> PoolShared {
+    let groups: Vec<Vec<u32>> = (0..GROUPS)
+        .map(|g| ((g * GROUP_SIZE) as u32..((g + 1) * GROUP_SIZE) as u32).collect())
+        .collect();
+    PoolShared {
+        mapping: Mapping::from_groups(groups, GROUP_SIZE, GROUPS * GROUP_SIZE),
+        replication: Replication::identity(GROUPS, 8),
+        model: CrossbarModel::new(&HardwareConfig::default(), &CircuitParams::default()),
+        dynamic_switch: true,
+    }
+}
+
+/// Alternating group ownership over two shards, so the pooling queries
+/// below always fan out to both (the merge path is exercised).
+fn plan2() -> ShardPlan {
+    ShardPlan::from_assignment(vec![0, 1, 0, 1], 2)
+}
+
+/// Every query touches groups 0, 1, 2 — shards 0 and 1 under [`plan2`].
+fn queries(n: usize) -> Vec<Query> {
+    (0..n)
+        .map(|i| {
+            let j = (i % GROUP_SIZE) as u32;
+            Query::new(vec![j, GROUP_SIZE as u32 + j, 2 * GROUP_SIZE as u32 + j])
+        })
+        .collect()
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_micros(5),
+    }
+}
+
+fn enabled_obs(sample_rate: f64) -> Arc<Obs> {
+    Obs::from_config(&ObsConfig {
+        enabled: true,
+        sample_rate,
+        ring_capacity: 1024,
+    })
+}
+
+#[test]
+fn recording_does_not_perturb_the_drive() {
+    let sh = shared();
+    let qs = queries(200);
+    let arrivals = Arrivals::poisson(2_000_000.0, 7).take(200);
+    let p = policy();
+    for sharded in [false, true] {
+        let make = || {
+            let b = SimBackend::single(&sh);
+            if sharded {
+                b.into_sharded(plan2())
+            } else {
+                b
+            }
+        };
+        let base = drive(&make(), &qs, &arrivals, &p);
+        let with_disabled = drive(&make().with_obs(Obs::disabled()), &qs, &arrivals, &p);
+        let with_enabled = drive(&make().with_obs(enabled_obs(1.0)), &qs, &arrivals, &p);
+        assert_eq!(base, with_disabled, "disabled handle perturbed the drive");
+        assert_eq!(base, with_enabled, "enabled handle perturbed the drive");
+    }
+}
+
+#[test]
+fn enabled_drive_covers_the_metric_catalogue() {
+    let sh = shared();
+    let obs = enabled_obs(1.0);
+    let backend = SimBackend::single(&sh)
+        .into_sharded(plan2())
+        .with_obs(Arc::clone(&obs));
+    let qs = queries(100);
+    let arrivals = Arrivals::poisson(2_000_000.0, 3).take(100);
+    let report = drive(&backend, &qs, &arrivals, &policy());
+    let snap = obs.snapshot("sim");
+
+    // Batcher seam: one queue-depth observation, one batch-size bucket,
+    // and one close-reason increment per batch close.
+    assert_eq!(
+        snap.summaries[names::BATCHER_QUEUE_DEPTH].count(),
+        report.batches()
+    );
+    let sizes: u64 = snap.histograms[names::BATCHER_BATCH_SIZE]
+        .iter()
+        .map(|&(_, c)| c)
+        .sum();
+    assert_eq!(sizes, report.batches());
+    assert_eq!(
+        snap.counter(names::BATCHER_CLOSE_SIZE) + snap.counter(names::BATCHER_CLOSE_DEADLINE),
+        report.batches()
+    );
+    // One formation-wait observation per served sub-query.
+    assert_eq!(
+        snap.summaries[names::BATCHER_WAIT_NS].count(),
+        report.stats.queries
+    );
+
+    // Scheduler / crossbar / ADC / energy: the harvest reconciles with
+    // the report's own ExecStats accounting, counter for counter.
+    assert_eq!(snap.counter(names::SCHED_BATCHES), report.batches());
+    assert_eq!(snap.counter(names::SCHED_QUERIES), report.stats.queries);
+    assert_eq!(snap.counter(names::SCHED_LOOKUPS), report.stats.lookups);
+    assert_eq!(
+        snap.counter(names::SCHED_PATH_FLAT) + snap.counter(names::SCHED_PATH_TREE),
+        2 * report.batches(),
+        "one busy-table + one bus-table path tag per batch"
+    );
+    assert!(snap.counter(names::SCHED_COMPARISONS) > 0);
+    assert_eq!(snap.counter(names::XBAR_ACTIVATIONS), report.stats.activations);
+    assert_eq!(
+        snap.counter(names::XBAR_SINGLE_ROW),
+        report.stats.single_row_activations
+    );
+    assert_eq!(snap.counter(names::ADC_MAC), report.stats.mac_activations);
+    assert_eq!(snap.counter(names::ADC_READ), report.stats.read_activations);
+    // The gauge holds crossbar service energy only; the report also
+    // charges the front-end merge adds.
+    let pj = snap.gauge(names::ENERGY_TOTAL_PJ);
+    assert!(pj > 0.0 && pj <= report.stats.energy_pj + 1e-9);
+
+    // Scatter-gather seam (every query here fans out to both shards).
+    assert_eq!(snap.counter(names::CLUSTER_ROUTE_PINNED), qs.len() as u64);
+    assert_eq!(
+        snap.counter(names::CLUSTER_SUBQUERIES),
+        report.stats.queries
+    );
+    let fanned: u64 = snap.histograms[names::CLUSTER_FANOUT]
+        .iter()
+        .map(|&(_, c)| c)
+        .sum();
+    assert_eq!(fanned, qs.len() as u64);
+    assert_eq!(snap.histograms[names::CLUSTER_FANOUT], vec![(2, qs.len() as u64)]);
+}
+
+#[test]
+fn disabled_handle_records_nothing_through_the_drive() {
+    let sh = shared();
+    let obs = Obs::disabled();
+    let backend = SimBackend::single(&sh).with_obs(Arc::clone(&obs));
+    let qs = queries(50);
+    let arrivals = Arrivals::poisson(1_000_000.0, 5).take(50);
+    drive(&backend, &qs, &arrivals, &policy());
+    let snap = obs.snapshot("off");
+    assert!(snap.counters.is_empty());
+    assert!(snap.gauges.is_empty());
+    assert!(snap.summaries.is_empty());
+    assert!(snap.histograms.is_empty());
+    assert!(obs.recorder().is_empty());
+}
+
+#[test]
+fn backend_metrics_merges_status_and_obs_families() {
+    let sh = shared();
+    // No handle: the default Backend::metrics still emits the status.*
+    // family (all zeros on the stateless simulator) under the schema.
+    let bare = SimBackend::single(&sh);
+    let snap = bare.metrics().expect("metrics");
+    assert_eq!(snap.source, "sim");
+    assert_eq!(snap.counter("status.queries"), 0);
+    assert_eq!(snap.counter("status.batches"), 0);
+    assert_eq!(snap.gauge("status.energy_pj"), 0.0);
+    assert_eq!(snap.counter(names::SCHED_BATCHES), 0);
+
+    // Enabled handle: one snapshot carries both families.
+    let obs = enabled_obs(1.0);
+    let backend = SimBackend::single(&sh).with_obs(Arc::clone(&obs));
+    let qs = queries(60);
+    let arrivals = Arrivals::poisson(1_000_000.0, 9).take(60);
+    let report = drive(&backend, &qs, &arrivals, &policy());
+    let snap = backend.metrics().expect("metrics");
+    assert!(snap.counters.contains_key("status.queries"));
+    assert_eq!(snap.counter(names::SCHED_BATCHES), report.batches());
+
+    let js = snap.to_json();
+    assert!(js.contains(&format!("\"schema\": \"{}\"", MetricsSnapshot::SCHEMA)));
+    assert!(js.contains(&format!("\"version\": {}", MetricsSnapshot::VERSION)));
+    assert!(js.contains("\"sched.batches\""));
+}
+
+#[test]
+fn flight_recorder_emits_chrome_trace_spans() {
+    let sh = shared();
+    let obs = enabled_obs(1.0);
+    let backend = SimBackend::single(&sh)
+        .into_sharded(plan2())
+        .with_obs(Arc::clone(&obs));
+    let qs = queries(40);
+    let arrivals = Arrivals::poisson(2_000_000.0, 1).take(40);
+    drive(&backend, &qs, &arrivals, &policy());
+
+    assert!(!obs.recorder().is_empty());
+    assert!(obs.recorder().recorded() > 0);
+    let js = obs.recorder().trace_json();
+    assert!(js.contains("\"traceEvents\""));
+    assert!(js.contains("\"ph\": \"X\""));
+    // The per-query lifecycle on this fixture: queue wait, crossbar
+    // service, and (fanout 2 everywhere) the scatter-gather merge.
+    assert!(js.contains("\"name\": \"enqueue\""));
+    assert!(js.contains("\"name\": \"execute\""));
+    assert!(js.contains("\"name\": \"merge\""));
+    // Spans land on their executor's track.
+    assert!(js.contains("\"tid\": 1"));
+}
+
+#[test]
+fn zero_sample_rate_keeps_metrics_and_drops_spans() {
+    let sh = shared();
+    let obs = enabled_obs(0.0);
+    let backend = SimBackend::single(&sh).with_obs(Arc::clone(&obs));
+    let qs = queries(50);
+    let arrivals = Arrivals::poisson(1_000_000.0, 2).take(50);
+    let report = drive(&backend, &qs, &arrivals, &policy());
+    let snap = obs.snapshot("sim");
+    assert_eq!(snap.counter(names::SCHED_BATCHES), report.batches());
+    assert!(obs.recorder().is_empty(), "no query may be sampled at rate 0");
+}

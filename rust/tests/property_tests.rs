@@ -11,6 +11,7 @@ use recross::coordinator::{EmbeddingStore, Planner};
 use recross::engine::{Engine, Scheme};
 use recross::graph::CoGraph;
 use recross::grouping::{CorrelationMapper, FrequencyMapper, Mapper, NaiveMapper};
+use recross::metrics::Summary;
 use recross::sched::Scratch;
 use recross::util::Rng;
 use recross::workload::{Query, Trace};
@@ -197,6 +198,59 @@ fn prop_planner_reduction_equals_reference() {
                 "seed {seed}: {a} vs {b} (n={n} dim={dim} rows={rows} gs={group_size})"
             );
         }
+    }
+}
+
+#[test]
+fn prop_summary_merge_matches_sequential_add() {
+    // The metrics plane's per-shard collection path: any partition of a
+    // stream into locally-accumulated Summaries, merged in order, must
+    // match feeding the whole stream through one Summary. Counts and
+    // extrema are exact; mean/variance are Welford-merged floats, so
+    // they match to tight relative tolerance.
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x5E_55);
+        let n = rng.range(1, 400) as usize;
+        // Mix scales so catastrophic cancellation would show up if the
+        // merge were naive (summing raw squares instead of Welford).
+        let scale = 10f64.powi(rng.range(0, 6) as i32);
+        let stream: Vec<f64> = (0..n).map(|_| rng.normal() * scale + scale).collect();
+
+        let mut sequential = Summary::new();
+        for &x in &stream {
+            sequential.add(x);
+        }
+
+        // Random partition: each element opens a new chunk with p ~ 1/4.
+        let mut merged = Summary::new();
+        let mut chunk = Summary::new();
+        for &x in &stream {
+            if chunk.count() > 0 && rng.below(4) == 0 {
+                merged.merge(&chunk);
+                chunk = Summary::new();
+            }
+            chunk.add(x);
+        }
+        merged.merge(&chunk);
+        // Merging an empty partition is a no-op.
+        merged.merge(&Summary::new());
+
+        assert_eq!(merged.count(), sequential.count(), "seed {seed}");
+        assert_eq!(merged.min(), sequential.min(), "seed {seed}");
+        assert_eq!(merged.max(), sequential.max(), "seed {seed}");
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+        assert!(
+            rel(merged.mean(), sequential.mean()) < 1e-9,
+            "seed {seed}: mean {} vs {}",
+            merged.mean(),
+            sequential.mean()
+        );
+        assert!(
+            rel(merged.variance(), sequential.variance()) < 1e-6,
+            "seed {seed}: variance {} vs {}",
+            merged.variance(),
+            sequential.variance()
+        );
     }
 }
 
