@@ -1,0 +1,292 @@
+//! Offline-phase refresh cost: full recompute vs incremental delta, with
+//! a machine-readable perf trajectory.
+//!
+//! Sweeps drift magnitude (what fraction of a window slide comes from a
+//! *rotated* popularity distribution) over synthetic Zipf workloads,
+//! measures a full offline rebuild (`CoGraph::build` + `Engine::prepare`)
+//! against `PreparedEngine::refresh` reacting to the same slide, gates on
+//! the identity contract (full-scope refresh bit-identical to a fresh
+//! prepare; the window graph bit-identical to a batch rebuild), and
+//! writes **`BENCH_offline.json`** at the repository root: per config,
+//! ns per rebuild/refresh plus the refresh's work counters (schema in
+//! DESIGN.md §"Incremental offline phase"). CI runs `--smoke`
+//! (seconds-scale) on every push and uploads the file as an artifact, so
+//! the trajectory accumulates across PRs.
+
+use recross::config::Config;
+use recross::engine::{Engine, PreparedEngine, RefreshReport, Scheme};
+use recross::graph::CoGraph;
+use recross::util::bench::black_box;
+use recross::util::{Rng, Zipf};
+use recross::workload::{Query, Trace};
+use std::time::Instant;
+
+#[derive(Clone, Copy)]
+struct SweepPoint {
+    name: &'static str,
+    embeddings: usize,
+    group_size: usize,
+    window: usize,
+    /// Queries per slide (added == retired, so the window length holds).
+    slide: usize,
+    /// Percent of each slide drawn from the rotated (drifted) popularity
+    /// order; the rest re-samples the base distribution.
+    drift_pct: u32,
+}
+
+fn pt(
+    name: &'static str,
+    embeddings: usize,
+    group_size: usize,
+    window: usize,
+    slide: usize,
+    drift_pct: u32,
+) -> SweepPoint {
+    SweepPoint {
+        name,
+        embeddings,
+        group_size,
+        window,
+        slide,
+        drift_pct,
+    }
+}
+
+fn full_points() -> Vec<SweepPoint> {
+    vec![
+        pt("drift-2pct", 4096, 32, 2048, 128, 2),
+        pt("drift-10pct", 4096, 32, 2048, 128, 10),
+        pt("drift-50pct", 4096, 32, 2048, 128, 50),
+        pt("big-table", 16384, 64, 4096, 128, 10),
+    ]
+}
+
+fn smoke_points() -> Vec<SweepPoint> {
+    vec![
+        pt("drift-2pct", 512, 16, 256, 32, 2),
+        pt("drift-10pct", 512, 16, 256, 32, 10),
+        pt("drift-50pct", 512, 16, 256, 32, 50),
+    ]
+}
+
+/// Mean wall-clock ns per call of `f`, with warm-up.
+fn measure<F: FnMut()>(mut f: F, measure_ns: u64, min_iters: u64) -> f64 {
+    let warm = Instant::now();
+    let warm_budget = std::time::Duration::from_nanos(measure_ns / 4);
+    let mut warm_iters = 0u64;
+    while warm.elapsed() < warm_budget || warm_iters < 1 {
+        f();
+        warm_iters += 1;
+    }
+    let start = Instant::now();
+    let budget = std::time::Duration::from_nanos(measure_ns);
+    let mut iters = 0u64;
+    while start.elapsed() < budget || iters < min_iters {
+        f();
+        iters += 1;
+    }
+    start.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn zipf_trace(rng: &mut Rng, zipf: &Zipf, perm: &[u32], queries: usize, pooling: usize) -> Trace {
+    Trace {
+        num_embeddings: perm.len() as u32,
+        queries: (0..queries)
+            .map(|_| {
+                Query::new((0..pooling).map(|_| perm[zipf.sample(rng)]).collect())
+            })
+            .collect(),
+    }
+}
+
+/// One slide's worth of added queries: the first `drift_pct` percent
+/// from the rotated popularity order, the rest from the base order.
+fn slide_batch(
+    rng: &mut Rng,
+    zipf: &Zipf,
+    base: &[u32],
+    drifted: &[u32],
+    pt: &SweepPoint,
+) -> Vec<Query> {
+    let n_drift = pt.slide * pt.drift_pct as usize / 100;
+    let mut qs = zipf_trace(rng, zipf, drifted, n_drift, 4).queries;
+    qs.extend(zipf_trace(rng, zipf, base, pt.slide - n_drift, 4).queries);
+    qs
+}
+
+struct Row {
+    point: SweepPoint,
+    full_ns: f64,
+    inc_ns: f64,
+    report: RefreshReport,
+}
+
+fn run_point(pt: &SweepPoint, measure_ns: u64, seed: u64) -> Row {
+    let n = pt.embeddings;
+    let mut cfg = Config::paper_default();
+    cfg.scheme.group_size = pt.group_size;
+    cfg.scheme.batch_size = 256;
+
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(n, 1.05);
+    let base: Vec<u32> = (0..n as u32).collect();
+    let drifted: Vec<u32> = (0..n as u32).map(|i| (i + n as u32 / 3) % n as u32).collect();
+    let window = zipf_trace(&mut rng, &zipf, &base, pt.window, 4);
+
+    // A small cycle of pregenerated slides keeps every measured refresh
+    // at the same magnitude without the window drifting unboundedly.
+    let slides: Vec<Vec<Query>> = (0..8)
+        .map(|_| slide_batch(&mut rng, &zipf, &base, &drifted, pt))
+        .collect();
+
+    // Correctness gate: a benchmark of a wrong refresh is worthless.
+    // (a) Full-scope refresh is bit-identical to a fresh prepare.
+    let mut slid = window.clone();
+    slid.queries.drain(..pt.slide);
+    slid.queries.extend_from_slice(&slides[0]);
+    let mut gate = PreparedEngine::prepare(Scheme::ReCross, &window, &cfg);
+    gate.refresh_full(&slides[0], pt.slide);
+    let oracle = Engine::prepare(Scheme::ReCross, &CoGraph::build(&slid), &slid, &cfg);
+    assert_eq!(
+        gate.engine().mapping().groups,
+        oracle.mapping().groups,
+        "{}: full-scope refresh diverged from fresh prepare",
+        pt.name
+    );
+    assert_eq!(
+        gate.engine().replication().copies,
+        oracle.replication().copies,
+        "{}: full-scope replication diverged from fresh prepare",
+        pt.name
+    );
+    // (b) The incrementally maintained graph equals a batch rebuild.
+    let mut pe = PreparedEngine::prepare(Scheme::ReCross, &window, &cfg);
+    let report = pe.refresh(&slides[0], pt.slide);
+    assert_eq!(
+        pe.window_graph().to_cograph(),
+        CoGraph::build(&slid),
+        "{}: window graph diverged from batch rebuild",
+        pt.name
+    );
+
+    // Incremental side: one slide per iteration, cycling the batch pool.
+    let mut i = 0usize;
+    let inc_ns = measure(
+        || {
+            black_box(pe.refresh(&slides[i % slides.len()], pt.slide));
+            i += 1;
+        },
+        measure_ns,
+        2,
+    );
+
+    // Full side: the O(table) recompute the refresh replaces — rebuild
+    // the affinity graph and re-run the whole offline pipeline over the
+    // same (slid) window.
+    let full_ns = measure(
+        || {
+            black_box(Engine::prepare(
+                Scheme::ReCross,
+                &CoGraph::build(&slid),
+                &slid,
+                &cfg,
+            ));
+        },
+        measure_ns,
+        2,
+    );
+
+    Row {
+        point: *pt,
+        full_ns,
+        inc_ns,
+        report,
+    }
+}
+
+fn json(rows: &[Row], smoke: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"offline_phase\",\n");
+    out.push_str("  \"version\": 1,\n");
+    out.push_str(&format!("  \"mode\": \"{}\",\n", if smoke { "smoke" } else { "full" }));
+    out.push_str("  \"configs\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let p = &r.point;
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"name\": \"{}\",\n", p.name));
+        out.push_str(&format!(
+            "      \"embeddings\": {}, \"group_size\": {}, \"window_queries\": {}, \
+             \"slide_queries\": {}, \"drift_pct\": {},\n",
+            p.embeddings, p.group_size, p.window, p.slide, p.drift_pct
+        ));
+        out.push_str(&format!(
+            "      \"full\": {{\"ns_per_rebuild\": {:.1}, \"rebuilds_per_sec\": {:.2}}},\n",
+            r.full_ns,
+            1e9 / r.full_ns
+        ));
+        out.push_str(&format!(
+            "      \"incremental\": {{\"ns_per_refresh\": {:.1}, \"refreshes_per_sec\": {:.2}, \
+             \"dirty_nodes\": {}, \"groups_changed\": {}, \"groups_total\": {}, \
+             \"ids_moved\": {}, \"ids_total\": {}}},\n",
+            r.inc_ns,
+            1e9 / r.inc_ns,
+            r.report.dirty_nodes,
+            r.report.groups_changed,
+            r.report.groups_total,
+            r.report.ids_moved,
+            r.report.ids_total
+        ));
+        out.push_str(&format!(
+            "      \"speedup\": {:.3}\n",
+            r.full_ns / r.inc_ns
+        ));
+        out.push_str(if i + 1 == rows.len() { "    }\n" } else { "    },\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (points, measure_ns) = if smoke {
+        (smoke_points(), 60_000_000u64) // 60 ms/side/config: seconds total
+    } else {
+        (full_points(), 1_000_000_000u64)
+    };
+
+    println!(
+        "== offline phase: full rebuild vs incremental refresh, {} mode ==\n",
+        if smoke { "smoke" } else { "full" }
+    );
+    println!(
+        "{:<12} {:>8} {:>7} {:>7} {:>6} {:>12} {:>12} {:>8} {:>14}",
+        "config", "embeds", "window", "slide", "drift", "rebuild ns", "refresh ns", "speedup",
+        "ids moved/total"
+    );
+
+    let mut rows = Vec::new();
+    for (i, pt) in points.iter().enumerate() {
+        let row = run_point(pt, measure_ns, 0x0FF1_1E + i as u64);
+        println!(
+            "{:<12} {:>8} {:>7} {:>7} {:>5}% {:>12.0} {:>12.0} {:>7.2}x {:>7}/{:<6}",
+            pt.name,
+            pt.embeddings,
+            pt.window,
+            pt.slide,
+            pt.drift_pct,
+            row.full_ns,
+            row.inc_ns,
+            row.full_ns / row.inc_ns,
+            row.report.ids_moved,
+            row.report.ids_total,
+        );
+        rows.push(row);
+    }
+
+    // The perf trajectory lands at the repository root so it diffs and
+    // uploads uniformly across PRs regardless of cargo's working dir.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_offline.json");
+    std::fs::write(&path, json(&rows, smoke)).expect("writing BENCH_offline.json");
+    println!("\nwrote {}", path.display());
+}

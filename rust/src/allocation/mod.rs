@@ -135,16 +135,57 @@ pub fn linear_copies(freq: u64, freq_max: u64, max_copies: u32) -> u32 {
 /// round-robin over the eligible groups, so a tight budget replicates the
 /// hottest groups first rather than fully replicating one group.
 pub fn plan_replication(freqs: &[u64], batch_size: usize, dup_ratio: f64) -> Replication {
+    // The full plan is the delta plan with every group dirty over an
+    // identity baseline — one code path, so the incremental re-solve and
+    // this oracle cannot drift apart.
+    let identity = Replication::identity(freqs.len(), batch_size);
+    let all_dirty = vec![true; freqs.len()];
+    plan_replication_delta(&identity, freqs, &all_dirty, batch_size, dup_ratio)
+}
+
+/// Re-solve Eq. 1 **only for the dirty groups**, holding every clean
+/// group's copy count from `prev` fixed.
+///
+/// The held copies are charged against the `dup_ratio` budget first;
+/// dirty groups share whatever remains, granted hottest-first
+/// round-robin exactly like [`plan_replication`] (with everything dirty
+/// the two are bit-identical — `plan_replication` literally calls this).
+/// When the catalogue shrank (trailing groups trimmed by the delta
+/// regroup), `prev` entries past `freqs.len()` drop off.
+///
+/// Holding clean copies means the plan can transiently exceed a *newly
+/// lowered* budget (held extras are never confiscated); the bound is
+/// restored by the next full re-plan.
+pub fn plan_replication_delta(
+    prev: &Replication,
+    freqs: &[u64],
+    dirty: &[bool],
+    batch_size: usize,
+    dup_ratio: f64,
+) -> Replication {
     let num_groups = freqs.len();
+    assert_eq!(dirty.len(), num_groups, "dirty flags do not match freqs");
     let freq_total: u64 = freqs.iter().sum();
     let budget = ((num_groups as f64) * dup_ratio).floor() as usize;
-    let mut copies = vec![1u32; num_groups];
-    if budget == 0 || freq_total == 0 {
-        return Replication {
-            copies,
-            total_crossbars: num_groups,
-            batch_size,
-        };
+
+    // Clean groups keep their copies; dirty groups restart from 1.
+    let copies: Vec<u32> = (0..num_groups)
+        .map(|g| {
+            if dirty[g] {
+                1
+            } else {
+                prev.copies.get(g).copied().unwrap_or(1)
+            }
+        })
+        .collect();
+    let mut copies = copies;
+    let held: usize = (0..num_groups)
+        .filter(|&g| !dirty[g])
+        .map(|g| (copies[g] - 1) as usize)
+        .sum();
+    let mut remaining = budget.saturating_sub(held);
+    if remaining == 0 || freq_total == 0 {
+        return Replication::from_copies(copies, batch_size);
     }
 
     // Desired copies per Eq. 1.
@@ -153,14 +194,14 @@ pub fn plan_replication(freqs: &[u64], batch_size: usize, dup_ratio: f64) -> Rep
         .map(|&f| log_scaled_copies(f, freq_total, batch_size))
         .collect();
 
-    // Hottest groups first.
-    let mut order: Vec<usize> = (0..num_groups).collect();
+    // Hottest dirty groups first (stable: ties stay in ascending id
+    // order, matching the full plan).
+    let mut order: Vec<usize> = (0..num_groups).filter(|&g| dirty[g]).collect();
     order.sort_by_key(|&g| std::cmp::Reverse(freqs[g]));
 
     // Round-robin grant: every pass gives one extra copy to each group that
     // still wants one, until the budget runs out. This matches the paper's
     // "balanced distribution of duplicated embeddings across crossbars".
-    let mut remaining = budget;
     'outer: loop {
         let mut granted_any = false;
         for &g in &order {
@@ -178,12 +219,7 @@ pub fn plan_replication(freqs: &[u64], batch_size: usize, dup_ratio: f64) -> Rep
         }
     }
 
-    let total = copies.iter().map(|&c| c as usize).sum();
-    Replication {
-        copies,
-        total_crossbars: total,
-        batch_size,
-    }
+    Replication::from_copies(copies, batch_size)
 }
 
 #[cfg(test)]
@@ -280,5 +316,69 @@ mod tests {
         let r = Replication::identity(5, 64);
         assert_eq!(r.total_crossbars, 5);
         assert_eq!(r.copies_of(3), 1);
+    }
+
+    #[test]
+    fn delta_all_dirty_matches_full_plan() {
+        for seed in [1u64, 7, 42] {
+            let mut s = seed;
+            let freqs: Vec<u64> = (0..64)
+                .map(|_| {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    (s >> 33) % 10_000
+                })
+                .collect();
+            let full = plan_replication(&freqs, 256, 0.15);
+            let prev = Replication::identity(freqs.len(), 256);
+            let delta =
+                plan_replication_delta(&prev, &freqs, &vec![true; freqs.len()], 256, 0.15);
+            assert_eq!(full.copies, delta.copies, "seed {seed}");
+            assert_eq!(full.total_crossbars, delta.total_crossbars);
+        }
+    }
+
+    #[test]
+    fn delta_holds_clean_copies_fixed() {
+        let freqs = vec![1000u64, 900, 800, 10, 5, 1, 1, 1, 1, 1];
+        let prev = plan_replication(&freqs, 256, 0.3); // budget = 3
+        assert!(prev.duplicated_groups() > 0);
+        // Only group 3 dirty, with a new hot frequency.
+        let mut new_freqs = freqs.clone();
+        new_freqs[3] = 2000;
+        let mut dirty = vec![false; freqs.len()];
+        dirty[3] = true;
+        let r = plan_replication_delta(&prev, &new_freqs, &dirty, 256, 0.3);
+        for g in 0..freqs.len() {
+            if g != 3 {
+                assert_eq!(r.copies[g], prev.copies[g], "clean group {g} re-planned");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_budget_charges_held_copies() {
+        let freqs = vec![1000u64, 900, 800, 700, 1, 1, 1, 1, 1, 1];
+        let prev = plan_replication(&freqs, 256, 0.3); // budget = 3, all spent
+        let held: usize = prev.copies.iter().map(|&c| (c - 1) as usize).sum();
+        assert_eq!(held, 3);
+        // Dirty a cold group: no budget remains, so it stays at 1 copy
+        // and the total never exceeds groups + budget.
+        let mut dirty = vec![false; freqs.len()];
+        dirty[4] = true;
+        let mut new_freqs = freqs.clone();
+        new_freqs[4] = 5000;
+        let r = plan_replication_delta(&prev, &new_freqs, &dirty, 256, 0.3);
+        assert_eq!(r.copies[4], 1);
+        assert!(r.total_crossbars <= freqs.len() + 3);
+    }
+
+    #[test]
+    fn delta_survives_trimmed_catalogue() {
+        // The new mapping has fewer groups than prev: trailing prev
+        // entries just drop off, no panic.
+        let prev = plan_replication(&[1000u64, 900, 10, 5], 256, 0.5);
+        let r = plan_replication_delta(&prev, &[1000, 900, 10], &[false, true, false], 256, 0.5);
+        assert_eq!(r.copies.len(), 3);
+        assert_eq!(r.copies[0], prev.copies[0]);
     }
 }

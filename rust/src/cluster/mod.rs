@@ -40,8 +40,8 @@ pub mod shard;
 pub use hashring::HashRing;
 pub use partition::{ReplicaPlan, ShardPlan};
 pub use server::{
-    Cluster, ClusterConfig, ClusterHandle, ClusterResponse, PartitionPolicy, RouteOptions,
-    RoutePolicy, RouteTable, ShardingMode,
+    Cluster, ClusterConfig, ClusterHandle, ClusterResponse, PartitionPolicy, RebalanceReport,
+    RouteOptions, RoutePolicy, RouteTable, ShardingMode,
 };
 pub use shard::{
     partition_store, partition_store_with_replicas, PoolShared, ShardPartial, ShardStatus,
@@ -105,7 +105,10 @@ pub(crate) fn assemble_cluster(
     };
     let shared = PoolShared::from_engine(engine);
     if ccfg.mode.replica_routing() || ccfg.mode.rebalance() {
-        let freqs = crate::allocation::group_frequencies(mapping, history);
+        // One counting pass for the whole offline phase: the engine
+        // caches the per-group frequencies it derived during prepare, so
+        // the placement layer reuses them instead of re-walking history.
+        let freqs = engine.group_freqs(history).to_vec();
         let replicas = if ccfg.mode.replica_routing() {
             ReplicaPlan::spread(&plan, &shared.replication, &freqs)
         } else {
@@ -125,7 +128,14 @@ pub(crate) fn assemble_cluster(
             } else {
                 acts as f64 / lks as f64
             };
-            Some(DriftMonitor::new(baseline.max(1e-6), 1.3, 0.05, 128))
+            // Cooldown + recent-query ring arm the incremental path:
+            // the ring is the delta window, the cooldown keeps an
+            // oscillating workload from re-firing right after a swap.
+            Some(
+                DriftMonitor::new(baseline.max(1e-6), 1.3, 0.05, 128)
+                    .with_cooldown(256)
+                    .with_window(2048),
+            )
         } else {
             None
         };
@@ -135,6 +145,7 @@ pub(crate) fn assemble_cluster(
             slack: ccfg.slack,
             dup_ratio: None,
             drift,
+            baseline_freqs: Some(freqs),
         };
         Cluster::spawn_routed(shared, store, plan, replicas, opts, ccfg.batch.clone())
     } else {

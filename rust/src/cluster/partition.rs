@@ -208,21 +208,66 @@ impl ReplicaPlan {
     /// the pass co-optimises with the partition's load cap instead of
     /// fighting it. Fully deterministic.
     pub fn spread(plan: &ShardPlan, replication: &Replication, freqs: &[u64]) -> Self {
+        Self::spread_scoped(plan, replication, freqs, None)
+    }
+
+    /// Re-place copies for the **dirty** groups only; clean groups keep
+    /// their holder lists from `prev` verbatim (their tiles stay where
+    /// they are).
+    ///
+    /// Caller contract: `plan` keeps clean groups' owners and
+    /// `replication` holds clean groups' copy counts from the previous
+    /// round (the delta pipeline guarantees both); every clean group must
+    /// exist in `prev`. With every group dirty this is bit-identical to
+    /// [`ReplicaPlan::spread`] — same code path.
+    pub fn spread_subset(
+        plan: &ShardPlan,
+        replication: &Replication,
+        freqs: &[u64],
+        prev: &ReplicaPlan,
+        dirty: &[bool],
+    ) -> Self {
+        Self::spread_scoped(plan, replication, freqs, Some((prev, dirty)))
+    }
+
+    fn spread_scoped(
+        plan: &ShardPlan,
+        replication: &Replication,
+        freqs: &[u64],
+        scope: Option<(&ReplicaPlan, &[bool])>,
+    ) -> Self {
         let n = plan.num_groups();
         assert_eq!(replication.copies.len(), n, "replication/plan mismatch");
         assert_eq!(freqs.len(), n, "frequency/plan mismatch");
+        if let Some((_, dirty)) = scope {
+            assert_eq!(dirty.len(), n, "dirty flags/plan mismatch");
+        }
         let shards = plan.shards;
+        let is_dirty = |g: usize| scope.map_or(true, |(_, d)| d[g]);
         let mut holders: Vec<Vec<u32>> = (0..n)
-            .map(|g| vec![plan.shard_of(g as u32)])
+            .map(|g| match scope {
+                Some((prev, dirty)) if !dirty[g] => prev.holders[g].clone(),
+                _ => vec![plan.shard_of(g as u32)],
+            })
             .collect();
-        // Each shard starts with the owner copy of everything it owns.
+        // Each shard starts with the owner copy of every dirty group it
+        // owns, plus every already-placed copy of the clean groups.
         let mut load = vec![0.0f64; shards];
         for g in 0..n {
-            load[plan.shard_of(g as u32) as usize] +=
-                freqs[g] as f64 / replication.copies[g].max(1) as f64;
+            if is_dirty(g) {
+                load[plan.shard_of(g as u32) as usize] +=
+                    freqs[g] as f64 / replication.copies[g].max(1) as f64;
+            } else {
+                let share = freqs[g] as f64 / holders[g].len().max(1) as f64;
+                for &s in &holders[g] {
+                    load[s as usize] += share;
+                }
+            }
         }
         // Hottest replicated groups place first (they move the most load).
-        let mut order: Vec<usize> = (0..n).filter(|&g| replication.copies[g] > 1).collect();
+        let mut order: Vec<usize> = (0..n)
+            .filter(|&g| is_dirty(g) && replication.copies[g] > 1)
+            .collect();
         order.sort_by_key(|&g| (std::cmp::Reverse(freqs[g]), g));
         for &g in &order {
             let share = freqs[g] as f64 / replication.copies[g] as f64;
@@ -446,6 +491,34 @@ mod tests {
         for g in 0..6u32 {
             assert!(hosted.iter().any(|h| h.contains(&g)));
         }
+    }
+
+    #[test]
+    fn spread_subset_all_dirty_matches_spread() {
+        let plan = ShardPlan::from_assignment(vec![0, 1, 0, 1, 0, 1], 2);
+        let rep = Replication::from_copies(vec![2, 2, 1, 1, 3, 1], 32);
+        let freqs = vec![500, 400, 9, 8, 300, 7];
+        let prev = ReplicaPlan::pinned(&plan, &rep); // content irrelevant at full scope
+        let full = ReplicaPlan::spread(&plan, &rep, &freqs);
+        let sub = ReplicaPlan::spread_subset(&plan, &rep, &freqs, &prev, &[true; 6]);
+        assert_eq!(full, sub);
+    }
+
+    #[test]
+    fn spread_subset_keeps_clean_holders_verbatim() {
+        let plan = ShardPlan::from_assignment(vec![0, 1, 2, 3], 4);
+        let rep = Replication::from_copies(vec![4, 2, 1, 1], 64);
+        let freqs = vec![1000u64, 500, 10, 10];
+        let prev = ReplicaPlan::spread(&plan, &rep, &freqs);
+        // Only group 1 dirty, with a hotter frequency.
+        let new_freqs = vec![1000u64, 2000, 10, 10];
+        let dirty = [false, true, false, false];
+        let sub = ReplicaPlan::spread_subset(&plan, &rep, &new_freqs, &prev, &dirty);
+        for g in [0usize, 2, 3] {
+            assert_eq!(sub.holders[g], prev.holders[g], "clean group {g} moved");
+        }
+        assert_eq!(sub.holders[1].len(), 2);
+        assert_eq!(sub.holders[1][0], 1, "owner keeps the first copy");
     }
 
     #[test]

@@ -33,10 +33,11 @@ use super::shard::{
     partition_store_with_replicas, spawn_shard, PoolShared, ShardExecutor, ShardMsg, ShardStatus,
     ShardStore,
 };
-use crate::allocation;
+use crate::allocation::{self, Replication};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::drift::DriftMonitor;
 use crate::coordinator::EmbeddingStore;
+use crate::graph::DeltaParams;
 use crate::grouping::Mapping;
 use crate::obs::{names, Obs};
 use crate::sched::ExecStats;
@@ -247,6 +248,11 @@ pub struct RouteOptions {
     pub dup_ratio: Option<f64>,
     /// Armed drift monitor (None = no online staleness tracking).
     pub drift: Option<DriftMonitor>,
+    /// Per-group frequencies the *initial* plan was derived from. Seeds
+    /// the delta baseline so the first
+    /// [`Cluster::rebalance_incremental`] can diff against it instead of
+    /// falling back to full scope.
+    pub baseline_freqs: Option<Vec<u64>>,
 }
 
 impl Default for RouteOptions {
@@ -257,6 +263,7 @@ impl Default for RouteOptions {
             slack: 0.10,
             dup_ratio: None,
             drift: None,
+            baseline_freqs: None,
         }
     }
 }
@@ -267,6 +274,38 @@ struct RebalanceSettings {
     partition: PartitionPolicy,
     slack: f64,
     dup_ratio: f64,
+}
+
+/// What the last installed plan was derived from — the diff base for
+/// [`Cluster::rebalance_incremental`]'s per-group dirty detection.
+#[derive(Debug, Clone)]
+struct PlanBaseline {
+    /// Per-group activation frequencies behind the installed plan.
+    freqs: Vec<u64>,
+    /// The installed global replication plan (clean groups hold these
+    /// copy counts across delta re-plans).
+    replication: Replication,
+}
+
+/// What one rebalance did — the placement-side work counters.
+#[derive(Debug, Clone)]
+pub struct RebalanceReport {
+    /// The epoch the swap installed.
+    pub epoch: u64,
+    /// True when the rebalance ran at full scope (no usable baseline, or
+    /// invoked via [`Cluster::rebalance`]).
+    pub full: bool,
+    /// Groups covered by the plan.
+    pub groups_total: usize,
+    /// Groups whose frequency drifted past the thresholds (re-placed and
+    /// re-replicated).
+    pub groups_changed: usize,
+    /// Shards that received a tile install this round.
+    pub shards_installed: usize,
+    /// Tiles (hosted groups) shipped to those shards.
+    pub tiles_installed: usize,
+    /// Tiles hosted across the whole cluster after the swap.
+    pub tiles_total: usize,
 }
 
 /// A running sharded pool: executors + epoch-versioned routing state.
@@ -281,6 +320,9 @@ pub struct Cluster {
     /// only kept when the drift monitor is armed, so the common static
     /// pool does not hold a second copy of the whole table.
     full: Option<Arc<EmbeddingStore>>,
+    /// Frequencies + replication behind the installed plan (diff base
+    /// for incremental rebalances); `None` until seeded or first swap.
+    last_plan: Mutex<Option<PlanBaseline>>,
     rebalance: RebalanceSettings,
     dim: usize,
     /// Metrics/trace sink shared with every minted handle
@@ -363,6 +405,10 @@ impl Cluster {
         // pools with an armed drift monitor ever rebalance, so only they
         // pay for the retained copy.
         let full = opts.drift.as_ref().map(|_| Arc::new(store.clone()));
+        let last_plan = opts.baseline_freqs.map(|freqs| PlanBaseline {
+            freqs,
+            replication: shared.replication.clone(),
+        });
         Ok(Self {
             shards,
             routes: Arc::new(RwLock::new(Arc::new(table))),
@@ -370,6 +416,7 @@ impl Cluster {
             inflight,
             drift: opts.drift.map(|d| Arc::new(Mutex::new(d))),
             full,
+            last_plan: Mutex::new(last_plan),
             rebalance: RebalanceSettings {
                 partition: opts.partition,
                 slack: opts.slack,
@@ -422,39 +469,140 @@ impl Cluster {
     /// sub-queries); a sub-query racing the swap is answered with an
     /// error, never with a wrong value — shards refuse foreign items.
     /// Returns the new epoch.
+    ///
+    /// This is the *full-scope* remap: every group is re-planned and
+    /// every shard reinstalls its tiles (all shard status epochs equal
+    /// the new epoch afterwards). It is the oracle the incremental path
+    /// is checked against — both run through [`Cluster::rebalance_scoped`].
     pub fn rebalance(&self, recent: &Trace) -> Result<u64> {
+        self.rebalance_scoped(recent, None).map(|r| r.epoch)
+    }
+
+    /// Delta-scoped remap: diff recent traffic's per-group frequencies
+    /// against the installed plan's baseline, re-place and re-replicate
+    /// only the groups whose load moved past `params`, and ship tiles
+    /// only to shards whose hosted set or local replica table actually
+    /// changed. Falls back to full scope when no baseline exists yet.
+    ///
+    /// The routing table still swaps atomically to a new epoch for
+    /// everyone; shards skipped by the install keep serving their
+    /// bit-identical tiles and merely report the older epoch in
+    /// [`ClusterHandle::shard_status`] (cosmetic — their content and
+    /// local replica tables are unchanged by construction).
+    ///
+    /// The group *membership* delta is the engine layer's job
+    /// ([`crate::engine::PreparedEngine::refresh`]); the live mapping is
+    /// shared immutably with the shard threads, so this path owns the
+    /// placement delta only.
+    pub fn rebalance_incremental(
+        &self,
+        recent: &Trace,
+        params: &DeltaParams,
+    ) -> Result<RebalanceReport> {
+        self.rebalance_scoped(recent, Some(params))
+    }
+
+    fn rebalance_scoped(
+        &self,
+        recent: &Trace,
+        scope: Option<&DeltaParams>,
+    ) -> Result<RebalanceReport> {
         anyhow::ensure!(!recent.queries.is_empty(), "rebalance needs recent traffic");
-        let full = self.full.as_ref().ok_or_else(|| {
+        let full_store = self.full.as_ref().ok_or_else(|| {
             anyhow!("rebalance requires an armed drift monitor (RouteOptions::drift)")
         })?;
         let cur = self.routes();
         let mapping = &self.shared.mapping;
-        let freqs = allocation::group_frequencies(mapping, recent);
+        // One trace walk serves both the partitioner and the replication
+        // re-plan (`GroupStats::freqs` == `allocation::group_frequencies`).
+        let stats = mapping.group_stats(recent);
+        let freqs = &stats.freqs;
+        let num_groups = freqs.len();
+        let batch_size = self.shared.replication.batch_size;
+
+        let baseline = self
+            .last_plan
+            .lock()
+            .expect("plan baseline poisoned")
+            .clone();
+        // Dirty = per-group |Δfreq| past the thresholds, judged against
+        // the frequencies the installed plan was derived from. Without a
+        // baseline (or at full scope) everything is dirty.
+        let (dirty, full_scope) = match (scope, &baseline) {
+            (Some(p), Some(base)) if base.freqs.len() == num_groups => {
+                let dirty: Vec<bool> = (0..num_groups)
+                    .map(|g| {
+                        let change = freqs[g].abs_diff(base.freqs[g]);
+                        change > p.abs_floor
+                            && (change as f64) > p.rel_threshold * base.freqs[g] as f64
+                    })
+                    .collect();
+                (dirty, false)
+            }
+            _ => (vec![true; num_groups], true),
+        };
+        let groups_changed = dirty.iter().filter(|&&d| d).count();
+
         let plan = match self.rebalance.partition {
-            PartitionPolicy::Locality => ShardPlan::by_locality(
-                mapping,
-                recent,
-                cur.plan.shards,
-                self.rebalance.slack,
-            ),
+            PartitionPolicy::Locality => {
+                let keep = if full_scope {
+                    None
+                } else {
+                    Some((cur.plan.shard_of_group.as_slice(), dirty.as_slice()))
+                };
+                ShardPlan::from_assignment(
+                    mapping.partition_with(&stats, cur.plan.shards, self.rebalance.slack, keep),
+                    cur.plan.shards,
+                )
+            }
             PartitionPolicy::Hash => (*cur.plan).clone(),
         };
-        let batch_size = self.shared.replication.batch_size;
-        let replication =
-            allocation::plan_replication(&freqs, batch_size, self.rebalance.dup_ratio);
-        let replicas = match cur.policy {
-            RoutePolicy::Pinned => ReplicaPlan::pinned(&plan, &replication),
-            RoutePolicy::PowerOfTwo => ReplicaPlan::spread(&plan, &replication, &freqs),
+        let prev_replication = baseline
+            .as_ref()
+            .map(|b| &b.replication)
+            .unwrap_or(&self.shared.replication);
+        let replication = if full_scope {
+            allocation::plan_replication(freqs, batch_size, self.rebalance.dup_ratio)
+        } else {
+            allocation::plan_replication_delta(
+                prev_replication,
+                freqs,
+                &dirty,
+                batch_size,
+                self.rebalance.dup_ratio,
+            )
+        };
+        let replicas = match (cur.policy, full_scope) {
+            (RoutePolicy::Pinned, _) => ReplicaPlan::pinned(&plan, &replication),
+            (RoutePolicy::PowerOfTwo, true) => ReplicaPlan::spread(&plan, &replication, freqs),
+            (RoutePolicy::PowerOfTwo, false) => {
+                ReplicaPlan::spread_subset(&plan, &replication, freqs, &cur.replicas, &dirty)
+            }
         };
         let epoch = cur.epoch + 1;
 
-        // Install every shard's new tiles + local replica table, then
-        // wait for all acks before exposing the new routes.
+        // Install new tiles + local replica tables, then wait for every
+        // ack before exposing the new routes. At full scope every shard
+        // reinstalls; at delta scope a shard whose hosted set and local
+        // replica table are both unchanged is skipped — its tiles are
+        // bit-identical, only the front-end routing table moves.
+        let mut tiles_total = 0usize;
+        let mut shards_installed = 0usize;
+        let mut tiles_installed = 0usize;
         let mut acks = Vec::with_capacity(self.shards.len());
         for (s, exec) in self.shards.iter().enumerate() {
             let hosted = replicas.groups_hosted_by(s as u32);
-            let sstore = ShardStore::from_store(full, &hosted);
             let local = replicas.local_replication(s as u32, batch_size);
+            tiles_total += hosted.len();
+            if !full_scope
+                && hosted == cur.replicas.groups_hosted_by(s as u32)
+                && local.copies == cur.replicas.local_replication(s as u32, batch_size).copies
+            {
+                continue;
+            }
+            shards_installed += 1;
+            tiles_installed += hosted.len();
+            let sstore = ShardStore::from_store(full_store, &hosted);
             let (atx, arx) = mpsc::channel();
             exec.tx
                 .send(ShardMsg::Install {
@@ -479,10 +627,16 @@ impl Cluster {
             policy: cur.policy,
         };
         *self.routes.write().expect("route lock poisoned") = Arc::new(table);
+        *self.last_plan.lock().expect("plan baseline poisoned") = Some(PlanBaseline {
+            freqs: stats.freqs,
+            replication,
+        });
 
         // Re-arm the drift monitor at the drifted workload's level: the
         // remap fixed the load imbalance; activations-per-lookup is a
         // property of the mapping, so the new normal is the current EMA.
+        // `rebaseline` also starts the monitor's cooldown, so an
+        // oscillating window cannot re-fire immediately.
         if let Some(d) = &self.drift {
             let mut m = d.lock().expect("drift lock poisoned");
             if let Some(e) = m.current() {
@@ -493,7 +647,29 @@ impl Cluster {
         }
         self.obs.incr(names::CLUSTER_REBALANCES, 1);
         self.obs.gauge_set(names::CLUSTER_EPOCH, epoch as f64);
-        Ok(epoch)
+        if full_scope {
+            self.obs.incr(names::OFFLINE_FULL_REBUILDS, 1);
+        } else {
+            self.obs.incr(names::OFFLINE_REFRESHES, 1);
+        }
+        self.obs
+            .incr(names::OFFLINE_GROUPS_TOUCHED, groups_changed as u64);
+        self.obs
+            .gauge_set(names::OFFLINE_GROUPS_TOTAL, num_groups as f64);
+        self.obs
+            .incr(names::OFFLINE_TILES_INSTALLED, tiles_installed as u64);
+        self.obs
+            .gauge_set(names::OFFLINE_TILES_TOTAL, tiles_total as f64);
+
+        Ok(RebalanceReport {
+            epoch,
+            full: full_scope,
+            groups_total: num_groups,
+            groups_changed,
+            shards_installed,
+            tiles_installed,
+            tiles_total,
+        })
     }
 
     /// Cloneable client handle.
@@ -574,6 +750,18 @@ impl ClusterHandle {
         self.drift
             .as_ref()
             .map(|d| d.lock().expect("drift lock poisoned").degradation())
+    }
+
+    /// The drift monitor's retained recent queries as a trace — the
+    /// window [`Cluster::rebalance_incremental`] consumes. `None` when
+    /// no monitor is armed, the monitor keeps no window, or nothing has
+    /// been observed since the last rebaseline.
+    pub fn drift_window(&self) -> Option<Trace> {
+        self.drift.as_ref().and_then(|d| {
+            d.lock()
+                .expect("drift lock poisoned")
+                .recent_window(self.shared.mapping.num_embeddings() as u32)
+        })
     }
 
     /// Scatter-gather one query (blocking).
@@ -683,7 +871,7 @@ impl ClusterHandle {
         if let Some(d) = &self.drift {
             let mut m = d.lock().expect("drift lock poisoned");
             for (q, r) in queries.iter().zip(&out) {
-                m.observe(r.activations, q.len());
+                m.observe_query(q, r.activations, q.len());
             }
         }
         // Harvest the batch's routing/fan-out telemetry from the merged

@@ -10,6 +10,22 @@
 //! the serving layer can then rebuild the co-occurrence graph from recent
 //! traffic and swap mappings at a batch boundary.
 
+//! Two serving-loop affordances ride on top of the detector:
+//!
+//! * **Hysteresis** ([`DriftMonitor::with_cooldown`]): after a
+//!   [`DriftMonitor::rebaseline`], `regroup_due` is suppressed until a
+//!   cooldown's worth of *fresh* queries has been observed, so an
+//!   oscillating window (or a swap that only partially helped) cannot
+//!   re-fire a rebalance immediately after the last one landed.
+//! * **Recent-query ring** ([`DriftMonitor::with_window`]): the monitor
+//!   retains the last N observed queries, which is exactly the window
+//!   the incremental offline path (`PreparedEngine::refresh`,
+//!   `Cluster::rebalance_incremental`) consumes — the drift signal and
+//!   the delta input come from the same stream.
+
+use crate::workload::{Query, Trace};
+use std::collections::VecDeque;
+
 /// Online drift detector over activations-per-lookup.
 #[derive(Debug, Clone)]
 pub struct DriftMonitor {
@@ -23,6 +39,15 @@ pub struct DriftMonitor {
     observed_queries: u64,
     /// Minimum queries before the monitor may trigger (EMA warm-up).
     warmup: u64,
+    /// Post-rebaseline trigger suppression (queries); 0 = no hysteresis.
+    cooldown: u64,
+    /// True once a rebaseline has occurred: the trigger floor is then
+    /// `max(warmup, cooldown)` fresh queries (equivalent to `warmup`
+    /// again once the cooldown has been served).
+    cooling: bool,
+    /// Capacity of the recent-query ring; 0 = keep none.
+    window_capacity: usize,
+    recent: VecDeque<Query>,
 }
 
 impl DriftMonitor {
@@ -40,7 +65,27 @@ impl DriftMonitor {
             ema: None,
             observed_queries: 0,
             warmup,
+            cooldown: 0,
+            cooling: false,
+            window_capacity: 0,
+            recent: VecDeque::new(),
         }
+    }
+
+    /// Require at least `queries` fresh observations after each
+    /// [`DriftMonitor::rebaseline`] before `regroup_due` may fire again
+    /// (effective minimum is `max(warmup, cooldown)` while cooling).
+    pub fn with_cooldown(mut self, queries: u64) -> Self {
+        self.cooldown = queries;
+        self
+    }
+
+    /// Keep the last `capacity` observed queries for the delta path;
+    /// see [`DriftMonitor::recent_window`].
+    pub fn with_window(mut self, capacity: usize) -> Self {
+        self.window_capacity = capacity;
+        self.recent = VecDeque::with_capacity(capacity);
+        self
     }
 
     /// Defaults tuned for batch-256 serving: 30% degradation over a
@@ -62,6 +107,34 @@ impl DriftMonitor {
         self.observed_queries += 1;
     }
 
+    /// [`DriftMonitor::observe`] plus ring retention: remembers `q` (up
+    /// to the configured window capacity) so the incremental offline
+    /// path can regroup from the same traffic that tripped the signal.
+    pub fn observe_query(&mut self, q: &Query, activations: u64, lookups: usize) {
+        if self.window_capacity > 0 {
+            if self.recent.len() == self.window_capacity {
+                self.recent.pop_front();
+            }
+            self.recent.push_back(q.clone());
+        }
+        self.observe(activations, lookups);
+    }
+
+    /// The retained recent queries as a trace over an `num_embeddings`
+    /// catalogue — the window [`crate::engine::PreparedEngine::refresh`]
+    /// and `Cluster::rebalance_incremental` consume. `None` when nothing
+    /// is retained (no capacity configured, or right after a
+    /// rebaseline).
+    pub fn recent_window(&self, num_embeddings: u32) -> Option<Trace> {
+        if self.recent.is_empty() {
+            return None;
+        }
+        Some(Trace {
+            num_embeddings,
+            queries: self.recent.iter().cloned().collect(),
+        })
+    }
+
     /// Current EMA of activations per lookup (None before first sample).
     pub fn current(&self) -> Option<f64> {
         self.ema
@@ -76,8 +149,18 @@ impl DriftMonitor {
     }
 
     /// True when the mapping is stale and a regroup is recommended.
+    ///
+    /// While cooling (between a [`DriftMonitor::rebaseline`] and the end
+    /// of its cooldown) the trigger needs `max(warmup, cooldown)` fresh
+    /// queries instead of just `warmup` — back-to-back rebalances on an
+    /// oscillating window are suppressed by construction.
     pub fn regroup_due(&self) -> bool {
-        self.observed_queries >= self.warmup && self.degradation() >= self.threshold
+        let min_queries = if self.cooling {
+            self.warmup.max(self.cooldown)
+        } else {
+            self.warmup
+        };
+        self.observed_queries >= min_queries && self.degradation() >= self.threshold
     }
 
     /// Queries observed since the last (re)baseline.
@@ -96,11 +179,21 @@ impl DriftMonitor {
     }
 
     /// Reset after a regroup with the new baseline.
+    ///
+    /// Semantics: the EMA and the query counter restart from zero (the
+    /// old distribution's samples are meaningless against the new
+    /// layout), the recent-query ring is cleared (the next trigger must
+    /// hand only post-swap traffic to the delta path), and the monitor
+    /// enters its cooldown — `regroup_due` stays false until
+    /// `max(warmup, cooldown)` fresh queries have been observed, even if
+    /// they are immediately as bad as before.
     pub fn rebaseline(&mut self, baseline: f64) {
         assert!(baseline > 0.0);
         self.baseline = baseline;
         self.ema = None;
         self.observed_queries = 0;
+        self.recent.clear();
+        self.cooling = self.cooldown > 0;
     }
 }
 
@@ -155,6 +248,43 @@ mod tests {
         m.rebaseline(4.0);
         assert!(!m.regroup_due());
         assert_eq!(m.current(), None);
+    }
+
+    #[test]
+    fn oscillating_window_respects_cooldown() {
+        // Reactive EMA so degradation registers immediately; warmup 10,
+        // cooldown 500.
+        let mut m = DriftMonitor::new(2.0, 1.3, 0.5, 10).with_cooldown(500);
+        for _ in 0..20 {
+            m.observe(40, 10);
+        }
+        assert!(m.regroup_due(), "first trigger gated by warmup only");
+        m.rebaseline(2.0);
+        assert!(!m.regroup_due());
+        // The window oscillates right back to bad traffic: the monitor
+        // must NOT re-fire until the cooldown's worth of fresh queries.
+        for i in 0..499 {
+            m.observe(40, 10);
+            assert!(!m.regroup_due(), "re-fired during cooldown at {i}");
+        }
+        m.observe(40, 10);
+        assert!(m.regroup_due(), "persistent drift must re-fire after cooldown");
+    }
+
+    #[test]
+    fn recent_window_keeps_last_capacity_queries() {
+        let mut m = DriftMonitor::new(2.0, 1.3, 0.5, 10).with_window(3);
+        assert!(m.recent_window(8).is_none());
+        for i in 0..5u32 {
+            m.observe_query(&Query::new(vec![i]), 1, 1);
+        }
+        let t = m.recent_window(8).unwrap();
+        assert_eq!(t.num_embeddings, 8);
+        let items: Vec<u32> = t.queries.iter().map(|q| q.items[0]).collect();
+        assert_eq!(items, vec![2, 3, 4], "ring keeps the newest queries");
+        assert_eq!(m.observed_queries(), 5);
+        m.rebaseline(2.0);
+        assert!(m.recent_window(8).is_none(), "ring cleared on rebaseline");
     }
 
     #[test]

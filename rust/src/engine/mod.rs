@@ -14,6 +14,10 @@
 //! Ablation variants (`recross-nodup`, `recross-noswitch`, `recross-linear`)
 //! support Fig. 10 and the design-choice ablations in DESIGN.md.
 
+pub mod refresh;
+
+pub use refresh::{PreparedEngine, RefreshReport};
+
 use crate::allocation::{self, Replication};
 use crate::config::Config;
 use crate::graph::CoGraph;
@@ -21,6 +25,7 @@ use crate::grouping::{CorrelationMapper, FrequencyMapper, Mapper, Mapping, Naive
 use crate::sched::{ExecStats, Scheduler, Scratch};
 use crate::workload::{Query, Trace};
 use crate::xbar::{CircuitParams, CrossbarModel};
+use std::sync::OnceLock;
 
 /// Scheme selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -96,7 +101,7 @@ enum Dataflow {
 }
 
 /// A fully prepared engine: offline phase done, ready to serve batches.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Engine {
     scheme: Scheme,
     mapping: Mapping,
@@ -104,6 +109,11 @@ pub struct Engine {
     model: CrossbarModel,
     dynamic_switch: bool,
     dataflow: Dataflow,
+    /// Per-group activation frequencies over the preparation history,
+    /// cached so downstream consumers (cluster assembly, refresh) reuse
+    /// the counting pass `prepare` already paid for instead of walking
+    /// the whole trace again.
+    group_freqs: OnceLock<Vec<u64>>,
 }
 
 impl Engine {
@@ -139,14 +149,20 @@ impl Engine {
             | Scheme::ReCrossLinear => CorrelationMapper.map(graph, group_size),
         };
 
+        let group_freqs: OnceLock<Vec<u64>> = OnceLock::new();
         let replication = match scheme {
             Scheme::ReCross | Scheme::ReCrossNoSwitch => {
                 let freqs = allocation::group_frequencies(&mapping, history);
-                allocation::plan_replication(&freqs, cfg.scheme.batch_size, cfg.scheme.dup_ratio)
+                let plan =
+                    allocation::plan_replication(&freqs, cfg.scheme.batch_size, cfg.scheme.dup_ratio);
+                let _ = group_freqs.set(freqs);
+                plan
             }
             Scheme::ReCrossLinear => {
                 let freqs = allocation::group_frequencies(&mapping, history);
-                plan_linear(&freqs, cfg.scheme.batch_size, cfg.scheme.dup_ratio)
+                let plan = plan_linear(&freqs, cfg.scheme.batch_size, cfg.scheme.dup_ratio);
+                let _ = group_freqs.set(freqs);
+                plan
             }
             _ => Replication::identity(mapping.num_groups(), cfg.scheme.batch_size),
         };
@@ -170,7 +186,19 @@ impl Engine {
             model,
             dynamic_switch,
             dataflow,
+            group_freqs,
         }
+    }
+
+    /// Per-group activation frequencies over the preparation history.
+    ///
+    /// For duplication schemes this is the exact vector `prepare` already
+    /// counted (cached, not recounted); otherwise it is computed once on
+    /// first use. `history` must be the same trace the engine was
+    /// prepared on — the cache does not re-key on its argument.
+    pub fn group_freqs(&self, history: &Trace) -> &[u64] {
+        self.group_freqs
+            .get_or_init(|| allocation::group_frequencies(&self.mapping, history))
     }
 
     pub fn scheme(&self) -> Scheme {
@@ -300,6 +328,24 @@ mod tests {
         let mut cfg = Config::paper_default();
         cfg.scheme.batch_size = 64;
         (graph, history, eval, cfg)
+    }
+
+    #[test]
+    fn group_freqs_cache_matches_direct_count() {
+        // The dedup contract: the frequencies the engine caches at
+        // prepare (or lazily derives) are exactly what a fresh counting
+        // pass over the same trace produces — downstream layers may use
+        // either interchangeably.
+        let (graph, history, _eval, cfg) = setup();
+        for scheme in [Scheme::ReCross, Scheme::Naive] {
+            let engine = Engine::prepare(scheme, &graph, &history, &cfg);
+            let direct = crate::allocation::group_frequencies(engine.mapping(), &history);
+            assert_eq!(
+                engine.group_freqs(&history),
+                direct.as_slice(),
+                "cached freqs diverge from a direct count ({scheme:?})"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,368 @@
+//! Incremental offline phase — refresh a prepared engine in place.
+//!
+//! [`Engine::prepare`] recomputes the whole offline pipeline (graph →
+//! grouping → replication) from scratch; under drift that is O(table)
+//! work to react to an O(window) change. [`PreparedEngine`] keeps the
+//! offline-phase *state* — the sliding query window, its
+//! [`WindowGraph`], the mapping, and the replication plan — and exposes
+//! [`PreparedEngine::refresh`], which reacts to a window slide by
+//! re-deriving only what the slide touched:
+//!
+//! 1. [`WindowGraph::apply_window`] updates freqs/edges in O(window)
+//!    and reports per-node net change ([`crate::graph::GraphDelta`]).
+//! 2. Nodes past the [`DeltaParams`] thresholds mark their groups
+//!    dirty; [`regroup_subset`] re-runs Algorithm 1 over exactly those
+//!    groups. Clean groups keep ids and row layout bit-identically.
+//! 3. [`crate::allocation::plan_replication_delta`] re-solves Eq. 1 for
+//!    the dirty groups only, holding clean groups' copies fixed.
+//!
+//! **Identity contract** (the differential-fuzz oracle,
+//! `tests/offline_delta.rs`): [`PreparedEngine::refresh_full`] — the
+//! same pipeline with every node dirty — produces the *bit-identical*
+//! mapping and replication plan as a fresh [`Engine::prepare`] over the
+//! slid window, because each delta stage is the generalisation the full
+//! stage delegates to (same code path, scoped to "everything"). The
+//! graph layer is exact at any scope: per-query content-seeded pair
+//! sampling makes add/retire true inverses, so the window graph always
+//! equals a batch rebuild. Partial-scope refreshes trade plan
+//! optimality (clean groups hold possibly-stale copies) for O(delta)
+//! work — never correctness of the layout contract.
+
+use super::{Engine, Scheme};
+use crate::allocation::{self, Replication};
+use crate::config::Config;
+use crate::graph::{DeltaParams, WindowGraph};
+use crate::grouping::{regroup_subset, GroupingDelta};
+use crate::obs::{names, Obs};
+use crate::workload::{Query, Trace};
+use std::sync::{Arc, OnceLock};
+
+/// What one [`PreparedEngine::refresh`] call did — the work counters the
+/// delta contract is asserted on (incremental work must scale with the
+/// delta, not the table).
+#[derive(Debug, Clone)]
+pub struct RefreshReport {
+    /// True when the refresh ran at full scope (every node dirty).
+    pub full: bool,
+    /// Nodes whose net graph change passed the [`DeltaParams`] scope.
+    pub dirty_nodes: usize,
+    /// Groups whose membership was re-derived.
+    pub groups_changed: usize,
+    /// Groups in the refreshed mapping.
+    pub groups_total: usize,
+    /// Embedding rows re-placed (tile rows that moved).
+    pub ids_moved: usize,
+    /// Embedding rows in the catalogue.
+    pub ids_total: usize,
+    /// The grouping delta itself (changed group ids, moved embedding
+    /// ids) — what a placement layer needs to re-install tiles.
+    pub grouping: GroupingDelta,
+}
+
+/// An engine plus the offline-phase state needed to refresh it
+/// incrementally when the query window slides.
+#[derive(Debug)]
+pub struct PreparedEngine {
+    engine: Engine,
+    cfg: Config,
+    window: Trace,
+    wgraph: WindowGraph,
+    obs: Arc<Obs>,
+}
+
+impl PreparedEngine {
+    /// Run the offline phase over `window` and keep the state for later
+    /// refreshes. Only the correlation-grouped schemes are supported —
+    /// the delta stages are defined in terms of Algorithm 1 groups.
+    pub fn prepare(scheme: Scheme, window: &Trace, cfg: &Config) -> Self {
+        assert!(
+            matches!(
+                scheme,
+                Scheme::ReCross | Scheme::ReCrossNoDup | Scheme::ReCrossNoSwitch
+            ),
+            "incremental refresh is defined for the correlation-grouped schemes \
+             (recross / recross-nodup / recross-noswitch), not {scheme:?}"
+        );
+        let wgraph = WindowGraph::from_trace(window);
+        let engine = Engine::prepare(scheme, &wgraph.to_cograph(), window, cfg);
+        Self {
+            engine,
+            cfg: cfg.clone(),
+            window: window.clone(),
+            wgraph,
+            obs: Obs::disabled(),
+        }
+    }
+
+    /// Attach an observability handle; refreshes record the `offline.*`
+    /// metrics family on it.
+    pub fn with_obs(mut self, obs: Arc<Obs>) -> Self {
+        self.obs = obs;
+        self
+    }
+
+    /// The live engine (mapping/replication reflect the last refresh).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// The current sliding window the offline state corresponds to.
+    pub fn window(&self) -> &Trace {
+        &self.window
+    }
+
+    /// The incrementally maintained affinity graph.
+    pub fn window_graph(&self) -> &WindowGraph {
+        &self.wgraph
+    }
+
+    /// Give up refreshability and keep just the engine.
+    pub fn into_engine(self) -> Engine {
+        self.engine
+    }
+
+    /// Slide the window (`added` appended, the oldest `retire` queries
+    /// dropped) and refresh the offline products at the default
+    /// [`DeltaParams`] scope.
+    pub fn refresh(&mut self, added: &[Query], retire: usize) -> RefreshReport {
+        self.refresh_impl(added, retire, Some(&DeltaParams::default()))
+    }
+
+    /// As [`PreparedEngine::refresh`] with explicit scoping thresholds.
+    pub fn refresh_with(
+        &mut self,
+        added: &[Query],
+        retire: usize,
+        params: &DeltaParams,
+    ) -> RefreshReport {
+        self.refresh_impl(added, retire, Some(params))
+    }
+
+    /// Slide the window and re-derive **everything** through the same
+    /// delta code path — the full-recompute oracle. Bit-identical to a
+    /// fresh [`Engine::prepare`] over the slid window.
+    pub fn refresh_full(&mut self, added: &[Query], retire: usize) -> RefreshReport {
+        self.refresh_impl(added, retire, None)
+    }
+
+    fn refresh_impl(
+        &mut self,
+        added: &[Query],
+        retire: usize,
+        scope: Option<&DeltaParams>,
+    ) -> RefreshReport {
+        assert!(
+            retire <= self.window.queries.len(),
+            "cannot retire {retire} of {} window queries",
+            self.window.queries.len()
+        );
+        // The window is a FIFO: retirement always drops the oldest
+        // prefix, so the retired queries are by construction a
+        // sub-multiset of what was added.
+        let retired = Trace {
+            num_embeddings: self.window.num_embeddings,
+            queries: self.window.queries[..retire].to_vec(),
+        };
+        let added_trace = Trace {
+            num_embeddings: self.window.num_embeddings,
+            queries: added.to_vec(),
+        };
+        let gdelta = self.wgraph.apply_window(&added_trace, &retired);
+        self.window.queries.drain(..retire);
+        self.window.queries.extend_from_slice(added);
+
+        let n = self.wgraph.num_nodes();
+        let dirty: Vec<u32> = match scope {
+            Some(p) => gdelta.dirty_nodes(p),
+            None => (0..n as u32).collect(),
+        };
+        let (mapping, grouping) = regroup_subset(&self.wgraph, &self.engine.mapping, &dirty);
+
+        // One counting pass over the slid window serves both the delta
+        // re-plan and the engine's cached `group_freqs`.
+        let freqs = allocation::group_frequencies(&mapping, &self.window);
+        let replication = match self.engine.scheme {
+            Scheme::ReCrossNoDup => {
+                Replication::identity(mapping.num_groups(), self.cfg.scheme.batch_size)
+            }
+            _ => {
+                let mut dirty_groups = vec![false; mapping.num_groups()];
+                for &g in &grouping.changed_groups {
+                    if let Some(flag) = dirty_groups.get_mut(g as usize) {
+                        *flag = true;
+                    }
+                }
+                allocation::plan_replication_delta(
+                    &self.engine.replication,
+                    &freqs,
+                    &dirty_groups,
+                    self.cfg.scheme.batch_size,
+                    self.cfg.scheme.dup_ratio,
+                )
+            }
+        };
+
+        let report = RefreshReport {
+            full: scope.is_none(),
+            dirty_nodes: dirty.len(),
+            groups_changed: grouping.changed_groups.len(),
+            groups_total: mapping.num_groups(),
+            ids_moved: grouping.moved_ids.len(),
+            ids_total: n,
+            grouping,
+        };
+
+        self.engine.mapping = mapping;
+        self.engine.replication = replication;
+        self.engine.group_freqs = OnceLock::from(freqs);
+
+        if report.full {
+            self.obs.incr(names::OFFLINE_FULL_REBUILDS, 1);
+        } else {
+            self.obs.incr(names::OFFLINE_REFRESHES, 1);
+        }
+        self.obs
+            .incr(names::OFFLINE_GROUPS_TOUCHED, report.groups_changed as u64);
+        self.obs
+            .gauge_set(names::OFFLINE_GROUPS_TOTAL, report.groups_total as f64);
+        self.obs.incr(names::OFFLINE_IDS_MOVED, report.ids_moved as u64);
+        self.obs
+            .gauge_set(names::OFFLINE_IDS_TOTAL, report.ids_total as f64);
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::CoGraph;
+
+    fn cfg() -> Config {
+        let mut cfg = Config::paper_default();
+        cfg.scheme.group_size = 4;
+        cfg.scheme.batch_size = 64;
+        cfg
+    }
+
+    fn trace(n: u32, queries: Vec<Vec<u32>>) -> Trace {
+        Trace {
+            num_embeddings: n,
+            queries: queries.into_iter().map(Query::new).collect(),
+        }
+    }
+
+    fn base_window() -> Trace {
+        let mut qs = Vec::new();
+        for _ in 0..12 {
+            qs.push(vec![0, 1, 2, 3]);
+            qs.push(vec![4, 5, 6, 7]);
+            qs.push(vec![8, 9, 10, 11]);
+        }
+        qs.push(vec![12, 13]);
+        qs.push(vec![14, 15]);
+        trace(16, qs)
+    }
+
+    fn drift_queries() -> Vec<Query> {
+        (0..20).map(|_| Query::new(vec![0, 8, 12, 14])).collect()
+    }
+
+    fn assert_engines_equal(a: &Engine, b: &Engine) {
+        assert_eq!(a.mapping().groups, b.mapping().groups);
+        assert_eq!(a.mapping().slot, b.mapping().slot);
+        assert_eq!(a.replication().copies, b.replication().copies);
+        assert_eq!(
+            a.replication().total_crossbars,
+            b.replication().total_crossbars
+        );
+    }
+
+    #[test]
+    fn prepare_matches_plain_engine_prepare() {
+        let w = base_window();
+        let cfg = cfg();
+        let pe = PreparedEngine::prepare(Scheme::ReCross, &w, &cfg);
+        let oracle = Engine::prepare(Scheme::ReCross, &CoGraph::build(&w), &w, &cfg);
+        assert_engines_equal(pe.engine(), &oracle);
+    }
+
+    #[test]
+    fn full_refresh_matches_fresh_prepare() {
+        let w = base_window();
+        let cfg = cfg();
+        for scheme in [Scheme::ReCross, Scheme::ReCrossNoDup, Scheme::ReCrossNoSwitch] {
+            let mut pe = PreparedEngine::prepare(scheme, &w, &cfg);
+            let added = drift_queries();
+            let report = pe.refresh_full(&added, 10);
+
+            let mut slid = w.clone();
+            slid.queries.drain(..10);
+            slid.queries.extend_from_slice(&added);
+            let oracle = Engine::prepare(scheme, &CoGraph::build(&slid), &slid, &cfg);
+            assert_engines_equal(pe.engine(), &oracle);
+            assert!(report.full);
+            assert_eq!(report.ids_total, 16);
+        }
+    }
+
+    #[test]
+    fn noop_slide_touches_nothing() {
+        let w = base_window();
+        let cfg = cfg();
+        let mut pe = PreparedEngine::prepare(Scheme::ReCross, &w, &cfg);
+        let before = pe.engine().clone();
+        let report = pe.refresh(&[], 0);
+        assert_eq!(report.groups_changed, 0);
+        assert_eq!(report.ids_moved, 0);
+        assert_engines_equal(pe.engine(), &before);
+    }
+
+    #[test]
+    fn localized_drift_keeps_clean_groups() {
+        let w = base_window();
+        let cfg = cfg();
+        let mut pe = PreparedEngine::prepare(Scheme::ReCross, &w, &cfg);
+        let before = pe.engine().clone();
+        // Hammer the cold tail only; the hot cliques must keep their
+        // exact groups and replication.
+        let added: Vec<Query> = (0..30).map(|_| Query::new(vec![12, 14, 15])).collect();
+        let report = pe.refresh_with(&added, 0, &DeltaParams::sensitive());
+        assert!(report.ids_moved < report.ids_total, "everything moved");
+        for v in 0..16u32 {
+            if !report.grouping.moved_ids.contains(&v) {
+                assert_eq!(
+                    pe.engine().mapping().slot_of(v),
+                    before.mapping().slot_of(v),
+                    "clean id {v} moved"
+                );
+            }
+        }
+        for g in 0..pe.engine().mapping().num_groups() as u32 {
+            if !report.grouping.changed_groups.contains(&g) {
+                assert_eq!(
+                    pe.engine().replication().copies_of(g),
+                    before.replication().copies_of(g),
+                    "clean group {g} re-planned"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn window_state_tracks_slides() {
+        let w = base_window();
+        let cfg = cfg();
+        let mut pe = PreparedEngine::prepare(Scheme::ReCross, &w, &cfg);
+        let added = drift_queries();
+        pe.refresh(&added, 5);
+        assert_eq!(pe.window().queries.len(), w.queries.len() - 5 + added.len());
+        assert_eq!(pe.window_graph().num_queries(), pe.window().queries.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "correlation-grouped")]
+    fn naive_scheme_rejected() {
+        let w = base_window();
+        PreparedEngine::prepare(Scheme::Naive, &w, &cfg());
+    }
+}

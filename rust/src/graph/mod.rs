@@ -15,15 +15,51 @@
 //! subsamples pairs of very long queries to bound build cost, which
 //! preserves the heavy co-occurrence structure (hot pairs recur across
 //! many queries and survive sampling).
+//!
+//! Sampling is seeded **per query from the query's content** (not from a
+//! shared sequential stream), so a query's pair contribution is a pure
+//! function of `(seed, items)`. Two consequences the delta pipeline
+//! depends on: the graph is invariant under query reordering, and adding
+//! then retiring a query cancels exactly — which is what lets
+//! [`WindowGraph::apply_window`] maintain the graph incrementally with
+//! bit-exact agreement against a batch [`CoGraph::build_capped`] over the
+//! same window.
 
 use crate::util::{FxHashMap, Rng};
 use crate::workload::Trace;
 
+pub mod window;
+
+pub use window::{DeltaParams, GraphDelta, NodeDelta, WindowGraph};
+
 /// Default cap on sampled pairs per query.
 pub const DEFAULT_PAIR_CAP: usize = 1024;
 
+/// Read-only affinity view shared by [`CoGraph`] (batch CSR build) and
+/// [`WindowGraph`] (incrementally maintained): per-node access frequency
+/// plus the sorted `(neighbor, weight)` adjacency that Algorithm 1's
+/// inner loop consumes. Grouping is generic over this trait so the delta
+/// path regroups straight off the incremental structure without
+/// materialising a CSR first.
+pub trait Affinity {
+    /// Number of nodes (embedding-table rows).
+    fn num_nodes(&self) -> usize;
+    /// Access frequency of `v` over the trace.
+    fn freq(&self, v: u32) -> u64;
+    /// Neighbors of `v` as `(neighbor, weight)`, sorted by neighbor id.
+    fn neighbors(&self, v: u32) -> &[(u32, u32)];
+
+    /// Node ids sorted by descending access frequency (ties by id) —
+    /// the `sorted(embeddingList)` of Algorithm 1.
+    fn ids_by_frequency(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = (0..self.num_nodes() as u32).collect();
+        ids.sort_by_key(|&v| (std::cmp::Reverse(self.freq(v)), v));
+        ids
+    }
+}
+
 /// Co-occurrence graph over embeddings.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CoGraph {
     /// Number of nodes (embedding-table rows).
     n: usize,
@@ -42,6 +78,12 @@ impl CoGraph {
     }
 
     /// Build with an explicit per-query pair cap and sampling seed.
+    ///
+    /// Each over-cap query is subsampled by an RNG seeded from
+    /// `(seed, items)` — see [`query_seed`] — so its contribution does not
+    /// depend on where in the trace it sits. The result is therefore
+    /// invariant under query reordering, and identical to replaying the
+    /// same queries through [`WindowGraph::apply_window`].
     pub fn build_capped(trace: &Trace, pair_cap: usize, seed: u64) -> Self {
         let n = trace.num_embeddings as usize;
         let mut freq = vec![0u64; n];
@@ -49,37 +91,14 @@ impl CoGraph {
         // ops on self-generated keys (§Perf iteration 1).
         let mut pairs: FxHashMap<u64, u32> = FxHashMap::default();
         pairs.reserve(trace.queries.len().saturating_mul(pair_cap / 2));
-        let mut rng = Rng::new(seed);
 
         for q in &trace.queries {
             for &it in &q.items {
                 freq[it as usize] += 1;
             }
-            let len = q.items.len();
-            if len < 2 {
-                continue;
-            }
-            let total_pairs = len * (len - 1) / 2;
-            if total_pairs <= pair_cap {
-                for i in 0..len {
-                    for j in (i + 1)..len {
-                        *pairs.entry(key(q.items[i], q.items[j])).or_insert(0) += 1;
-                    }
-                }
-            } else {
-                // Deterministic subsample of `pair_cap` random pairs.
-                // Weight each sampled pair by total/cap so accumulated
-                // weights stay on the same scale as exact counting.
-                let w = (total_pairs as f64 / pair_cap as f64).round().max(1.0) as u32;
-                for _ in 0..pair_cap {
-                    let i = rng.index(len);
-                    let mut j = rng.index(len - 1);
-                    if j >= i {
-                        j += 1;
-                    }
-                    *pairs.entry(key(q.items[i], q.items[j])).or_insert(0) += w;
-                }
-            }
+            for_each_query_pair(&q.items, pair_cap, seed, |k, w| {
+                *pairs.entry(k).or_insert(0) += w;
+            });
         }
 
         // Degree count -> CSR.
@@ -162,14 +181,81 @@ impl CoGraph {
     }
 }
 
+impl Affinity for CoGraph {
+    fn num_nodes(&self) -> usize {
+        CoGraph::num_nodes(self)
+    }
+    fn freq(&self, v: u32) -> u64 {
+        CoGraph::freq(self, v)
+    }
+    fn neighbors(&self, v: u32) -> &[(u32, u32)] {
+        CoGraph::neighbors(self, v)
+    }
+}
+
+/// Sampling seed for one query: a SplitMix64 fold of the build seed and
+/// the query's (canonically sorted) item list. Seeding per query instead
+/// of drawing from one sequential stream makes each query's sampled pair
+/// set a pure function of its content — the property the incremental
+/// window update relies on to retire a query's contribution exactly.
+/// Duplicate-content queries deliberately sample identical pairs.
 #[inline]
-fn key(a: u32, b: u32) -> u64 {
+pub(crate) fn query_seed(seed: u64, items: &[u32]) -> u64 {
+    use crate::util::rng::splitmix64;
+    let mut h = seed ^ 0x5851_F42D_4C95_7F2D ^ items.len() as u64;
+    for &it in items {
+        let mut s = h.wrapping_add(it as u64);
+        h = splitmix64(&mut s);
+    }
+    h
+}
+
+/// Emit every `(pair key, weight)` contribution of one query: exact
+/// double loop when the query has at most `pair_cap` pairs, otherwise
+/// `pair_cap` content-seeded random draws each weighted by
+/// `round(total_pairs / pair_cap)` so accumulated weights stay on the
+/// scale of exact counting. Single source of truth for both the batch
+/// CSR build and the incremental window update — their agreement is
+/// bit-exact because they share this pass.
+pub(crate) fn for_each_query_pair(
+    items: &[u32],
+    pair_cap: usize,
+    seed: u64,
+    mut emit: impl FnMut(u64, u32),
+) {
+    let len = items.len();
+    if len < 2 {
+        return;
+    }
+    let total_pairs = len * (len - 1) / 2;
+    if total_pairs <= pair_cap {
+        for i in 0..len {
+            for j in (i + 1)..len {
+                emit(key(items[i], items[j]), 1);
+            }
+        }
+    } else {
+        let w = (total_pairs as f64 / pair_cap as f64).round().max(1.0) as u32;
+        let mut rng = Rng::new(query_seed(seed, items));
+        for _ in 0..pair_cap {
+            let i = rng.index(len);
+            let mut j = rng.index(len - 1);
+            if j >= i {
+                j += 1;
+            }
+            emit(key(items[i], items[j]), w);
+        }
+    }
+}
+
+#[inline]
+pub(crate) fn key(a: u32, b: u32) -> u64 {
     let (lo, hi) = if a < b { (a, b) } else { (b, a) };
     ((lo as u64) << 32) | hi as u64
 }
 
 #[inline]
-fn unkey(k: u64) -> (u32, u32) {
+pub(crate) fn unkey(k: u64) -> (u32, u32) {
     ((k >> 32) as u32, k as u32)
 }
 
@@ -255,5 +341,83 @@ mod tests {
         let a = CoGraph::build_capped(&t, 10, 7);
         let b = CoGraph::build_capped(&t, 10, 7);
         assert_eq!(a.adj, b.adj);
+    }
+
+    #[test]
+    fn pinned_seed_full_graph_reproducibility() {
+        // The whole graph (offsets, adjacency, frequencies) — not just the
+        // edge list — is a pure function of (trace, cap, seed).
+        let t = Trace {
+            num_embeddings: 64,
+            queries: vec![(0..60).collect::<Vec<u32>>(), (4..40).collect(), vec![1, 2]]
+                .into_iter()
+                .map(Query::new)
+                .collect(),
+        };
+        assert_eq!(
+            CoGraph::build_capped(&t, 16, 7),
+            CoGraph::build_capped(&t, 16, 7)
+        );
+        // A different sampling seed draws different pairs for the over-cap
+        // queries (16 of 1770 colliding across seeds is astronomically
+        // unlikely), while the exact branch and frequencies are unaffected.
+        let other = CoGraph::build_capped(&t, 16, 8);
+        assert_ne!(CoGraph::build_capped(&t, 16, 7).adj, other.adj);
+        assert_eq!(CoGraph::build_capped(&t, 16, 7).freqs(), other.freqs());
+        assert_eq!(other.weight(1, 2), 1);
+    }
+
+    #[test]
+    fn capped_sampling_conserves_weight_mass() {
+        // The sampling contract: an over-cap query contributes exactly
+        // `pair_cap` draws, each weighted round(total/cap), so its total
+        // edge mass is pinned regardless of which pairs were drawn.
+        let t = Trace {
+            num_embeddings: 64,
+            queries: vec![Query::new((0..60).collect())],
+        };
+        let g = CoGraph::build_capped(&t, 100, 1);
+        // total_pairs = 60*59/2 = 1770, w = round(17.7) = 18.
+        let mass: u64 = (0..64u32)
+            .flat_map(|v| g.neighbors(v).iter().map(|&(_, w)| w as u64))
+            .sum();
+        assert_eq!(mass / 2, 100 * 18);
+    }
+
+    #[test]
+    fn exact_branch_ignores_seed() {
+        // Queries at or below the cap are counted exactly; the seed only
+        // drives the subsampler.
+        let t = trace(vec![vec![0, 1, 2, 3], vec![2, 3, 4]]);
+        assert_eq!(
+            CoGraph::build_capped(&t, 1024, 1),
+            CoGraph::build_capped(&t, 1024, 999)
+        );
+    }
+
+    #[test]
+    fn query_order_invariance() {
+        // Per-query content seeding makes the graph invariant under trace
+        // reordering even when the subsampled branch fires — the property
+        // the incremental window update is built on.
+        let qs: Vec<Vec<u32>> = vec![
+            (0..50).collect(),
+            (10..70).collect(),
+            vec![1, 2, 3],
+            (20..75).collect(),
+            vec![7, 8],
+        ];
+        let fwd = Trace {
+            num_embeddings: 80,
+            queries: qs.iter().cloned().map(Query::new).collect(),
+        };
+        let rev = Trace {
+            num_embeddings: 80,
+            queries: qs.iter().rev().cloned().map(Query::new).collect(),
+        };
+        assert_eq!(
+            CoGraph::build_capped(&fwd, 16, 42),
+            CoGraph::build_capped(&rev, 16, 42)
+        );
     }
 }

@@ -1,0 +1,470 @@
+//! Incrementally maintained co-occurrence graph over a sliding trace
+//! window — the O(window) front of the delta offline phase.
+//!
+//! [`CoGraph::build`] walks the entire history on every rebalance; at
+//! millions-of-rows table sizes that makes adaptation itself the
+//! bottleneck. [`WindowGraph`] keeps the same frequencies and edge
+//! weights as mutable state and updates them with
+//! [`WindowGraph::apply_window`]: the added queries' pair contributions
+//! are accumulated, the retired queries' contributions subtracted, and
+//! nothing else is touched.
+//!
+//! **Exactness.** Both paths share one per-query pair pass
+//! ([`super::for_each_query_pair`]), whose subsampler is seeded from the
+//! query's content. A query therefore contributes the same pairs whether
+//! it is counted forward (batch build), incrementally added, or retired —
+//! so add/retire cancel exactly and, for any add/retire sequence reaching
+//! the same window, [`WindowGraph::to_cograph`] is **bit-identical** to
+//! `CoGraph::build_capped` over that window. The differential fuzz in
+//! `tests/offline_delta.rs` holds this identity over hundreds of drifting
+//! workloads.
+//!
+//! The adjacency is stored per node as a sorted `(neighbor, weight)` row,
+//! which is exactly the shape Algorithm 1's inner loop consumes — so
+//! [`WindowGraph`] implements [`Affinity`] and the grouping delta runs
+//! directly on it, never materialising a CSR.
+
+use super::{for_each_query_pair, unkey, Affinity, CoGraph, DEFAULT_PAIR_CAP};
+use crate::util::FxHashMap;
+use crate::workload::Trace;
+
+/// Scoping thresholds deciding which net-changed nodes are *dirty*
+/// (worth regrouping). A node is dirty when its absolute change
+/// `|Δfreq| + Σ|Δweight|` exceeds `abs_floor` **and** exceeds
+/// `rel_threshold` of its pre-update mass (frequency + incident weight
+/// sum). Both gates exist: the relative one keeps hot nodes from
+/// thrashing on proportionally tiny shifts, the absolute floor keeps
+/// cold nodes from regrouping on single-query noise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeltaParams {
+    /// Dirty requires `change > rel_threshold * old_mass`.
+    pub rel_threshold: f64,
+    /// ...and `change > abs_floor`.
+    pub abs_floor: u64,
+}
+
+impl Default for DeltaParams {
+    fn default() -> Self {
+        Self {
+            rel_threshold: 0.25,
+            abs_floor: 8,
+        }
+    }
+}
+
+impl DeltaParams {
+    /// Maximal sensitivity: every net-changed node counts as dirty.
+    /// (A *full* recompute is a separate, explicit API — threshold
+    /// scoping can only ever see nodes the update touched.)
+    pub fn sensitive() -> Self {
+        Self {
+            rel_threshold: 0.0,
+            abs_floor: 0,
+        }
+    }
+}
+
+/// Net change recorded for one node by [`WindowGraph::apply_window`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeDelta {
+    pub node: u32,
+    /// |net access-frequency change| across the update.
+    pub dfreq: u64,
+    /// Sum of |net weight change| over the node's incident edges.
+    pub dweight: u64,
+    /// Pre-update mass (frequency + incident weight sum) — the
+    /// denominator for relative-change scoping.
+    pub old_mass: u64,
+}
+
+/// What one [`WindowGraph::apply_window`] call changed, in a form the
+/// grouping delta can scope from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GraphDelta {
+    /// Nodes with a non-zero net change, ascending by id.
+    pub nodes: Vec<NodeDelta>,
+    pub queries_added: usize,
+    pub queries_retired: usize,
+}
+
+impl GraphDelta {
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Nodes whose affinity neighborhood changed enough (per `params`)
+    /// to warrant re-deriving their groups.
+    pub fn dirty_nodes(&self, params: &DeltaParams) -> Vec<u32> {
+        self.nodes
+            .iter()
+            .filter(|nd| {
+                let change = nd.dfreq + nd.dweight;
+                change > params.abs_floor
+                    && (change as f64) > params.rel_threshold * nd.old_mass as f64
+            })
+            .map(|nd| nd.node)
+            .collect()
+    }
+}
+
+/// Co-occurrence frequencies and edge weights over a sliding window,
+/// maintained in O(added + retired) per update.
+#[derive(Debug, Clone)]
+pub struct WindowGraph {
+    n: usize,
+    pair_cap: usize,
+    seed: u64,
+    freq: Vec<u64>,
+    /// Incident edge-weight sum per node (kept alongside so `old_mass`
+    /// is O(1) at delta time).
+    wsum: Vec<u64>,
+    /// Sorted `(neighbor, weight)` row per node.
+    adj: Vec<Vec<(u32, u32)>>,
+    queries: usize,
+}
+
+impl WindowGraph {
+    /// Empty window over a catalogue of `num_embeddings` rows, with the
+    /// same default pair cap and seed as [`CoGraph::build`].
+    pub fn new(num_embeddings: u32) -> Self {
+        Self::with_params(num_embeddings, DEFAULT_PAIR_CAP, 0x9E3779B9)
+    }
+
+    /// Empty window with an explicit per-query pair cap and sampling seed.
+    pub fn with_params(num_embeddings: u32, pair_cap: usize, seed: u64) -> Self {
+        let n = num_embeddings as usize;
+        Self {
+            n,
+            pair_cap,
+            seed,
+            freq: vec![0; n],
+            wsum: vec![0; n],
+            adj: vec![Vec::new(); n],
+            queries: 0,
+        }
+    }
+
+    /// Window initialised from a trace — bit-identical to
+    /// `CoGraph::build(window)` when converted via [`Self::to_cograph`].
+    pub fn from_trace(window: &Trace) -> Self {
+        Self::from_trace_capped(window, DEFAULT_PAIR_CAP, 0x9E3779B9)
+    }
+
+    /// Window initialised from a trace with explicit cap and seed.
+    pub fn from_trace_capped(window: &Trace, pair_cap: usize, seed: u64) -> Self {
+        let mut g = Self::with_params(window.num_embeddings, pair_cap, seed);
+        let empty = Trace {
+            num_embeddings: window.num_embeddings,
+            queries: Vec::new(),
+        };
+        g.apply_window(window, &empty);
+        g
+    }
+
+    /// Number of nodes (embedding-table rows).
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Queries currently accounted in the window.
+    pub fn num_queries(&self) -> usize {
+        self.queries
+    }
+
+    /// Per-query pair cap this window samples with.
+    pub fn pair_cap(&self) -> usize {
+        self.pair_cap
+    }
+
+    /// Content-seeding base for the subsampler.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Slide the window: add `added`'s contributions, subtract
+    /// `retired`'s. O(added + retired) work, independent of catalogue and
+    /// window size. `retired` must be a sub-multiset of the queries the
+    /// window currently accounts for (panics otherwise — weights would
+    /// go negative).
+    ///
+    /// Returns the net per-node change for delta scoping.
+    pub fn apply_window(&mut self, added: &Trace, retired: &Trace) -> GraphDelta {
+        assert_eq!(
+            added.num_embeddings as usize, self.n,
+            "added trace catalogue does not match the window"
+        );
+        assert_eq!(
+            retired.num_embeddings as usize, self.n,
+            "retired trace catalogue does not match the window"
+        );
+        assert!(
+            retired.queries.len() <= self.queries,
+            "retiring {} queries from a window of {}",
+            retired.queries.len(),
+            self.queries
+        );
+
+        // Signed net deltas first: a query added and retired in the same
+        // call cancels here and touches nothing below.
+        let mut dfreq: FxHashMap<u32, i64> = FxHashMap::default();
+        let mut dpair: FxHashMap<u64, i64> = FxHashMap::default();
+        for (trace, sign) in [(added, 1i64), (retired, -1i64)] {
+            for q in &trace.queries {
+                for &it in &q.items {
+                    *dfreq.entry(it).or_insert(0) += sign;
+                }
+                for_each_query_pair(&q.items, self.pair_cap, self.seed, |k, w| {
+                    *dpair.entry(k).or_insert(0) += sign * w as i64;
+                });
+            }
+        }
+
+        // Per-node change magnitudes + pre-update mass, before mutating.
+        let mut acc: FxHashMap<u32, (u64, u64)> = FxHashMap::default();
+        for (&v, &d) in &dfreq {
+            if d != 0 {
+                acc.entry(v).or_insert((0, 0)).0 = d.unsigned_abs();
+            }
+        }
+        for (&k, &d) in &dpair {
+            if d != 0 {
+                let (a, b) = unkey(k);
+                acc.entry(a).or_insert((0, 0)).1 += d.unsigned_abs();
+                acc.entry(b).or_insert((0, 0)).1 += d.unsigned_abs();
+            }
+        }
+        let mut nodes: Vec<NodeDelta> = acc
+            .iter()
+            .map(|(&v, &(df, dw))| NodeDelta {
+                node: v,
+                dfreq: df,
+                dweight: dw,
+                old_mass: self.freq[v as usize] + self.wsum[v as usize],
+            })
+            .collect();
+        nodes.sort_unstable_by_key(|nd| nd.node);
+
+        // Apply.
+        for (&v, &d) in &dfreq {
+            let next = self.freq[v as usize] as i64 + d;
+            assert!(
+                next >= 0,
+                "retired trace is not a sub-multiset of the window (freq of {v} would go negative)"
+            );
+            self.freq[v as usize] = next as u64;
+        }
+        for (&k, &d) in &dpair {
+            if d != 0 {
+                self.edge_apply(k, d);
+            }
+        }
+        self.queries = self.queries + added.queries.len() - retired.queries.len();
+
+        GraphDelta {
+            nodes,
+            queries_added: added.queries.len(),
+            queries_retired: retired.queries.len(),
+        }
+    }
+
+    fn edge_apply(&mut self, k: u64, d: i64) {
+        let (a, b) = unkey(k);
+        let row = &self.adj[a as usize];
+        let cur = match row.binary_search_by_key(&b, |&(nb, _)| nb) {
+            Ok(i) => row[i].1 as i64,
+            Err(_) => 0,
+        };
+        let next = cur + d;
+        assert!(
+            next >= 0,
+            "retired trace is not a sub-multiset of the window (edge ({a},{b}) would go negative)"
+        );
+        let next = next as u32;
+        Self::set_weight(&mut self.adj[a as usize], b, next);
+        Self::set_weight(&mut self.adj[b as usize], a, next);
+        self.wsum[a as usize] = (self.wsum[a as usize] as i64 + d) as u64;
+        self.wsum[b as usize] = (self.wsum[b as usize] as i64 + d) as u64;
+    }
+
+    /// Set, insert, or (on zero) remove one entry of a sorted row.
+    fn set_weight(row: &mut Vec<(u32, u32)>, nb: u32, w: u32) {
+        match row.binary_search_by_key(&nb, |&(x, _)| x) {
+            Ok(i) => {
+                if w == 0 {
+                    row.remove(i);
+                } else {
+                    row[i].1 = w;
+                }
+            }
+            Err(i) => {
+                if w > 0 {
+                    row.insert(i, (nb, w));
+                }
+            }
+        }
+    }
+
+    /// Number of undirected edges currently in the window.
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(Vec::len).sum::<usize>() / 2
+    }
+
+    /// Edge weight between `a` and `b` (0 when not adjacent).
+    pub fn weight(&self, a: u32, b: u32) -> u32 {
+        let row = &self.adj[a as usize];
+        match row.binary_search_by_key(&b, |&(nb, _)| nb) {
+            Ok(i) => row[i].1,
+            Err(_) => 0,
+        }
+    }
+
+    /// Incident edge-weight sum of `v`.
+    pub fn weight_sum(&self, v: u32) -> u64 {
+        self.wsum[v as usize]
+    }
+
+    /// Materialise the window as a batch [`CoGraph`] — bit-identical to
+    /// `CoGraph::build_capped` over the same window contents, which is
+    /// what the differential fuzz pins. Used by the full-recompute oracle
+    /// path; the incremental path groups off [`Affinity`] directly.
+    pub fn to_cograph(&self) -> CoGraph {
+        let mut off = vec![0usize; self.n + 1];
+        for v in 0..self.n {
+            off[v + 1] = off[v] + self.adj[v].len();
+        }
+        let mut adj = Vec::with_capacity(off[self.n]);
+        for row in &self.adj {
+            adj.extend_from_slice(row);
+        }
+        CoGraph {
+            n: self.n,
+            off,
+            adj,
+            freq: self.freq.clone(),
+        }
+    }
+}
+
+impl Affinity for WindowGraph {
+    fn num_nodes(&self) -> usize {
+        self.n
+    }
+    fn freq(&self, v: u32) -> u64 {
+        self.freq[v as usize]
+    }
+    fn neighbors(&self, v: u32) -> &[(u32, u32)] {
+        &self.adj[v as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Query;
+
+    fn trace(n: u32, queries: Vec<Vec<u32>>) -> Trace {
+        Trace {
+            num_embeddings: n,
+            queries: queries.into_iter().map(Query::new).collect(),
+        }
+    }
+
+    /// Mixed-length workload: short exact queries plus over-cap sampled
+    /// ones (cap 16 below), deterministically derived from `salt`.
+    fn wave(n: u32, salt: u64, count: usize) -> Trace {
+        let mut rng = crate::util::Rng::new(salt);
+        let queries = (0..count)
+            .map(|_| {
+                let len = 2 + rng.index(30);
+                (0..len).map(|_| rng.index(n as usize) as u32).collect()
+            })
+            .collect();
+        trace(n, queries)
+    }
+
+    fn concat(a: &Trace, b: &Trace) -> Trace {
+        let mut queries = a.queries.clone();
+        queries.extend(b.queries.iter().cloned());
+        Trace {
+            num_embeddings: a.num_embeddings,
+            queries,
+        }
+    }
+
+    #[test]
+    fn from_trace_matches_batch_build() {
+        let t = wave(48, 1, 40);
+        assert_eq!(
+            WindowGraph::from_trace_capped(&t, 16, 7).to_cograph(),
+            CoGraph::build_capped(&t, 16, 7)
+        );
+    }
+
+    #[test]
+    fn incremental_slide_matches_batch_build() {
+        // Slide through three waves with a 2-wave window; after each
+        // slide the incremental state must equal the batch build over
+        // exactly the live window.
+        let waves: Vec<Trace> = (0..4).map(|i| wave(48, 100 + i, 25)).collect();
+        let mut g = WindowGraph::from_trace_capped(&concat(&waves[0], &waves[1]), 16, 7);
+        for i in 2..4 {
+            g.apply_window(&waves[i], &waves[i - 2]);
+            let live = concat(&waves[i - 1], &waves[i]);
+            assert_eq!(g.to_cograph(), CoGraph::build_capped(&live, 16, 7), "wave {i}");
+            assert_eq!(g.num_queries(), live.queries.len());
+        }
+    }
+
+    #[test]
+    fn retire_everything_empties_the_window() {
+        let t = wave(32, 5, 20);
+        let mut g = WindowGraph::from_trace_capped(&t, 16, 7);
+        let empty = trace(32, vec![]);
+        g.apply_window(&empty, &t);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.num_queries(), 0);
+        assert_eq!(g.to_cograph(), CoGraph::build_capped(&empty, 16, 7));
+    }
+
+    #[test]
+    fn delta_reports_net_change_and_old_mass() {
+        let mut g = WindowGraph::from_trace_capped(&trace(8, vec![vec![0, 1], vec![0, 1]]), 16, 7);
+        // Old mass of node 0: freq 2 + incident weight 2.
+        let d = g.apply_window(&trace(8, vec![vec![0, 2]]), &trace(8, vec![vec![0, 1]]));
+        let n0 = d.nodes.iter().find(|nd| nd.node == 0).unwrap();
+        assert_eq!(n0.old_mass, 4);
+        assert_eq!(n0.dfreq, 0); // -1 retired +1 added: net zero
+        assert_eq!(n0.dweight, 2); // edge (0,1) -1, edge (0,2) +1
+        assert_eq!(g.weight(0, 1), 1);
+        assert_eq!(g.weight(0, 2), 1);
+        // Node ids come out ascending.
+        let ids: Vec<u32> = d.nodes.iter().map(|nd| nd.node).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+    }
+
+    #[test]
+    fn dirty_nodes_respect_thresholds() {
+        let base: Vec<Vec<u32>> = (0..20).map(|_| vec![0, 1]).collect();
+        let mut g = WindowGraph::from_trace_capped(&trace(8, base), 16, 7);
+        // One query touching (2,3) is a big relative change for cold
+        // nodes but below any reasonable absolute floor.
+        let d = g.apply_window(&trace(8, vec![vec![2, 3]]), &trace(8, vec![]));
+        assert!(d.dirty_nodes(&DeltaParams::default()).is_empty());
+        assert_eq!(d.dirty_nodes(&DeltaParams::sensitive()), vec![2, 3]);
+        // Hot nodes need a proportionally large change: 3 more (0,1)
+        // queries is under 25% of mass 40, 30 more is far over.
+        let d = g.apply_window(&trace(8, (0..3).map(|_| vec![0, 1]).collect()), &trace(8, vec![]));
+        assert!(d.dirty_nodes(&DeltaParams::default()).is_empty());
+        let d = g.apply_window(&trace(8, (0..30).map(|_| vec![0, 1]).collect()), &trace(8, vec![]));
+        assert_eq!(d.dirty_nodes(&DeltaParams::default()), vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sub-multiset")]
+    fn retiring_a_query_never_added_panics() {
+        let mut g = WindowGraph::from_trace_capped(&trace(8, vec![vec![0, 1]]), 16, 7);
+        g.apply_window(&trace(8, vec![]), &trace(8, vec![vec![2, 3]]));
+    }
+}

@@ -17,7 +17,7 @@
 //! `candidateList` never yields a usable candidate.
 
 use super::{Mapper, Mapping};
-use crate::graph::CoGraph;
+use crate::graph::{Affinity, CoGraph};
 use crate::util::FxHashMap;
 use std::collections::BinaryHeap;
 
@@ -34,46 +34,8 @@ impl Mapper for CorrelationMapper {
         assert!(group_size > 0);
         let n = graph.num_nodes();
         let mut grouped = vec![false; n];
-        let mut groups: Vec<Vec<u32>> = Vec::with_capacity(n.div_ceil(group_size));
-
-        // Reusable per-group state (cleared between groups).
-        // candidate weight-to-group; lazy max-heap of (weight, candidate).
-        let mut cand_weight: FxHashMap<u32, u64> = FxHashMap::default();
-        let mut heap: BinaryHeap<(u64, u32)> = BinaryHeap::new();
-
         let order = graph.ids_by_frequency();
-        for &seed in &order {
-            if grouped[seed as usize] {
-                continue;
-            }
-            // --- start a new group at `seed` ---
-            let mut group = Vec::with_capacity(group_size);
-            group.push(seed);
-            grouped[seed as usize] = true;
-            cand_weight.clear();
-            heap.clear();
-            relax_neighbors(graph, seed, &grouped, &mut cand_weight, &mut heap);
-
-            while group.len() < group_size {
-                // Pop until a live entry: current weight matches and the
-                // candidate is still ungrouped (lazy deletion).
-                let mut best: Option<u32> = None;
-                while let Some((w, c)) = heap.pop() {
-                    if !grouped[c as usize] && cand_weight.get(&c) == Some(&w) {
-                        best = Some(c);
-                        break;
-                    }
-                }
-                let Some(chosen) = best else {
-                    break; // candidate list exhausted (Alg. 1 line 10 miss)
-                };
-                group.push(chosen);
-                grouped[chosen as usize] = true;
-                cand_weight.remove(&chosen);
-                relax_neighbors(graph, chosen, &grouped, &mut cand_weight, &mut heap);
-            }
-            groups.push(group);
-        }
+        let groups = form_groups(graph, group_size, &order, &mut grouped);
 
         // Compact trailing partial groups of isolated embeddings: the loop
         // above creates one group per isolated seed; merge them so cold
@@ -83,10 +45,69 @@ impl Mapper for CorrelationMapper {
     }
 }
 
+/// The Algorithm 1 grouping loop over an explicit candidate-seed order.
+///
+/// Nodes already marked in `grouped` are invisible: they never seed a
+/// group, never enter a candidate pool. The full mapping is
+/// `form_groups(graph, gs, ids_by_frequency(), all-false)`; the delta
+/// path calls it with only the *moved* ids unmarked (in the same
+/// frequency order), which regroups exactly those ids while clean groups
+/// keep their membership — bit-identically, because this is the same
+/// code either way. Generic over [`Affinity`] so the incremental
+/// `WindowGraph` is grouped directly, no CSR materialisation.
+pub(crate) fn form_groups<G: Affinity>(
+    graph: &G,
+    group_size: usize,
+    order: &[u32],
+    grouped: &mut [bool],
+) -> Vec<Vec<u32>> {
+    assert!(group_size > 0);
+    let mut groups: Vec<Vec<u32>> = Vec::with_capacity(order.len().div_ceil(group_size));
+
+    // Reusable per-group state (cleared between groups).
+    // candidate weight-to-group; lazy max-heap of (weight, candidate).
+    let mut cand_weight: FxHashMap<u32, u64> = FxHashMap::default();
+    let mut heap: BinaryHeap<(u64, u32)> = BinaryHeap::new();
+
+    for &seed in order {
+        if grouped[seed as usize] {
+            continue;
+        }
+        // --- start a new group at `seed` ---
+        let mut group = Vec::with_capacity(group_size);
+        group.push(seed);
+        grouped[seed as usize] = true;
+        cand_weight.clear();
+        heap.clear();
+        relax_neighbors(graph, seed, grouped, &mut cand_weight, &mut heap);
+
+        while group.len() < group_size {
+            // Pop until a live entry: current weight matches and the
+            // candidate is still ungrouped (lazy deletion).
+            let mut best: Option<u32> = None;
+            while let Some((w, c)) = heap.pop() {
+                if !grouped[c as usize] && cand_weight.get(&c) == Some(&w) {
+                    best = Some(c);
+                    break;
+                }
+            }
+            let Some(chosen) = best else {
+                break; // candidate list exhausted (Alg. 1 line 10 miss)
+            };
+            group.push(chosen);
+            grouped[chosen as usize] = true;
+            cand_weight.remove(&chosen);
+            relax_neighbors(graph, chosen, grouped, &mut cand_weight, &mut heap);
+        }
+        groups.push(group);
+    }
+    groups
+}
+
 /// Add/update the group's candidate pool with `v`'s neighborhood
 /// (Alg. 1 lines 6–8 and 16: `Merge(candidateList, neighbors(...))`).
-fn relax_neighbors(
-    graph: &CoGraph,
+fn relax_neighbors<G: Affinity>(
+    graph: &G,
     v: u32,
     grouped: &[bool],
     cand_weight: &mut FxHashMap<u32, u64>,
@@ -105,7 +126,7 @@ fn relax_neighbors(
 /// Greedily merge under-filled groups (first-fit-decreasing) so that only
 /// the final group may be partial. Keeps full groups untouched: member
 /// order (and hence crossbar rows) of well-correlated groups is preserved.
-fn compact_partial_groups(groups: Vec<Vec<u32>>, group_size: usize) -> Vec<Vec<u32>> {
+pub(crate) fn compact_partial_groups(groups: Vec<Vec<u32>>, group_size: usize) -> Vec<Vec<u32>> {
     let (full, partial): (Vec<_>, Vec<_>) =
         groups.into_iter().partition(|g| g.len() == group_size);
     let mut out = full;

@@ -1,0 +1,223 @@
+//! Delta regrouping — Algorithm 1 re-derived only where affinity moved.
+//!
+//! [`regroup_subset`] takes the previous [`Mapping`], the current affinity
+//! graph, and the set of *dirty* nodes (from
+//! [`crate::graph::GraphDelta::dirty_nodes`]), and re-runs the grouping
+//! loop over exactly the groups those nodes live in. Everything else is
+//! untouched:
+//!
+//! * **Clean groups keep their group id, membership, and row order
+//!   bit-identically** — their crossbar tiles need no re-install.
+//! * Dirty groups' members are pooled and regrouped by the *same*
+//!   [`super::correlation::form_groups`] loop the full mapper uses, in
+//!   the same frequency order, then refilled into the vacated group ids
+//!   ascending. Leftover vacated ids become empty groups; empty **dirty**
+//!   groups at the tail are trimmed (clean groups never renumber).
+//!
+//! With every group dirty this reproduces
+//! [`super::CorrelationMapper::map`] bit-exactly — same loop, same order,
+//! same compaction — which is what lets the full recompute survive as the
+//! differential-fuzz oracle (`tests/offline_delta.rs`).
+
+use super::correlation::{compact_partial_groups, form_groups};
+use super::Mapping;
+use crate::graph::Affinity;
+use std::cmp::Reverse;
+
+/// What one [`regroup_subset`] call changed.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GroupingDelta {
+    /// Group ids whose membership was re-derived (ascending). Ids at the
+    /// tail may have been trimmed from the new mapping entirely.
+    pub changed_groups: Vec<u32>,
+    /// Embedding ids re-placed by this regroup (ascending) — the tile
+    /// rows that moved. Everything not listed kept its exact slot.
+    pub moved_ids: Vec<u32>,
+}
+
+impl GroupingDelta {
+    pub fn is_empty(&self) -> bool {
+        self.changed_groups.is_empty()
+    }
+}
+
+/// Re-derive groups for the dirty nodes' groups only; see the module
+/// docs for the identity contract. `graph` is the *current* affinity
+/// state (typically a [`crate::graph::WindowGraph`] after
+/// `apply_window`); `prev` supplies the group size and the clean layout.
+pub fn regroup_subset<G: Affinity>(
+    graph: &G,
+    prev: &Mapping,
+    dirty_nodes: &[u32],
+) -> (Mapping, GroupingDelta) {
+    let n = prev.num_embeddings();
+    assert_eq!(
+        graph.num_nodes(),
+        n,
+        "affinity graph does not match the previous mapping's catalogue"
+    );
+    let group_size = prev.group_size;
+
+    // Dirty groups: every group containing a dirty node.
+    let mut dirty: Vec<u32> = dirty_nodes
+        .iter()
+        .filter(|&&v| (v as usize) < n)
+        .map(|&v| prev.slot_of(v).group)
+        .collect();
+    dirty.sort_unstable();
+    dirty.dedup();
+    if dirty.is_empty() {
+        return (prev.clone(), GroupingDelta::default());
+    }
+    let mut is_dirty = vec![false; prev.num_groups()];
+    for &g in &dirty {
+        is_dirty[g as usize] = true;
+    }
+
+    // Whole dirty groups are re-derived: a group's internal row order is
+    // a product of the grouping walk, so partial in-place edits would
+    // diverge from what a fresh Algorithm 1 run produces.
+    let mut moved: Vec<u32> = dirty
+        .iter()
+        .flat_map(|&g| prev.groups[g as usize].iter().copied())
+        .collect();
+    moved.sort_unstable();
+
+    let mut grouped = vec![true; n];
+    for &v in &moved {
+        grouped[v as usize] = false;
+    }
+    // The same candidate order Algorithm 1 uses, restricted to the moved
+    // ids — with every group dirty this equals `ids_by_frequency()`, so
+    // full scope reproduces `CorrelationMapper::map` bit-identically.
+    let mut order = moved.clone();
+    order.sort_by_key(|&v| (Reverse(graph.freq(v)), v));
+
+    let regrouped = form_groups(graph, group_size, &order, &mut grouped);
+    let regrouped = compact_partial_groups(regrouped, group_size);
+    debug_assert!(
+        regrouped.len() <= dirty.len(),
+        "regrouping produced more groups than it vacated"
+    );
+
+    // Refill vacated ids ascending; trim empty dirty groups off the tail
+    // only, so clean groups never renumber.
+    let mut groups = prev.groups.clone();
+    let mut fresh = regrouped.into_iter();
+    for &g in &dirty {
+        groups[g as usize] = fresh.next().unwrap_or_default();
+    }
+    while let Some(last) = groups.last() {
+        if last.is_empty() && is_dirty[groups.len() - 1] {
+            groups.pop();
+        } else {
+            break;
+        }
+    }
+
+    let mapping = Mapping::from_groups_complete(groups, group_size, n);
+    let delta = GroupingDelta {
+        changed_groups: dirty,
+        moved_ids: moved,
+    };
+    (mapping, delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{CoGraph, WindowGraph};
+    use crate::grouping::{CorrelationMapper, Mapper};
+    use crate::workload::{Query, Trace};
+
+    fn trace(n: u32, queries: Vec<Vec<u32>>) -> Trace {
+        Trace {
+            num_embeddings: n,
+            queries: queries.into_iter().map(Query::new).collect(),
+        }
+    }
+
+    /// Two hot cliques + background noise.
+    fn base_trace() -> Trace {
+        let mut qs = Vec::new();
+        for _ in 0..10 {
+            qs.push(vec![0, 1, 2, 3]);
+            qs.push(vec![4, 5, 6, 7]);
+        }
+        qs.push(vec![8, 9]);
+        qs.push(vec![10, 11]);
+        trace(16, qs)
+    }
+
+    fn assert_same_mapping(a: &Mapping, b: &Mapping) {
+        assert_eq!(a.groups, b.groups);
+        assert_eq!(a.slot, b.slot);
+        assert_eq!(a.group_size, b.group_size);
+    }
+
+    #[test]
+    fn empty_dirty_set_is_identity() {
+        let g = CoGraph::build(&base_trace());
+        let prev = CorrelationMapper.map(&g, 4);
+        let (m, d) = regroup_subset(&g, &prev, &[]);
+        assert!(d.is_empty());
+        assert_same_mapping(&m, &prev);
+    }
+
+    #[test]
+    fn full_scope_reproduces_map_bit_identically() {
+        // Regroup everything against a *changed* graph: must equal a
+        // fresh CorrelationMapper run on that graph.
+        let t1 = base_trace();
+        let g1 = CoGraph::build(&t1);
+        let prev = CorrelationMapper.map(&g1, 4);
+
+        let mut t2 = base_trace();
+        for _ in 0..20 {
+            t2.queries.push(Query::new(vec![0, 8, 12]));
+        }
+        let w = WindowGraph::from_trace(&t2);
+        let all: Vec<u32> = (0..16).collect();
+        let (m, d) = regroup_subset(&w, &prev, &all);
+        let oracle = CorrelationMapper.map(&CoGraph::build(&t2), 4);
+        assert_same_mapping(&m, &oracle);
+        assert_eq!(d.moved_ids, all);
+    }
+
+    #[test]
+    fn clean_groups_keep_rows_bit_identically() {
+        let t = base_trace();
+        let g = CoGraph::build(&t);
+        let prev = CorrelationMapper.map(&g, 4);
+        // Dirty only node 8: exactly its group is re-derived.
+        let (m, d) = regroup_subset(&g, &prev, &[8]);
+        let dirty_group = prev.slot_of(8).group;
+        assert_eq!(d.changed_groups, vec![dirty_group]);
+        for (gi, members) in prev.groups.iter().enumerate() {
+            if gi as u32 != dirty_group {
+                assert_eq!(&m.groups[gi], members, "clean group {gi} changed");
+            }
+        }
+        // Clean ids keep their exact slot.
+        for v in 0..16u32 {
+            if !d.moved_ids.contains(&v) {
+                assert_eq!(m.slot_of(v), prev.slot_of(v), "clean id {v} moved");
+            }
+        }
+        // Moved ids are exactly the dirty group's former members.
+        let mut expect: Vec<u32> = prev.groups[dirty_group as usize].clone();
+        expect.sort_unstable();
+        assert_eq!(d.moved_ids, expect);
+    }
+
+    #[test]
+    fn regrouping_never_grows_the_group_count() {
+        let t = base_trace();
+        let g = CoGraph::build(&t);
+        let prev = CorrelationMapper.map(&g, 4);
+        for dirty in [vec![0u32], vec![0, 4], vec![0, 4, 8, 10], (0..16).collect()] {
+            let (m, _) = regroup_subset(&g, &prev, &dirty);
+            assert!(m.num_groups() <= prev.num_groups());
+        }
+    }
+}

@@ -13,10 +13,12 @@
 //!   grouping (Algorithm 1) over the co-occurrence graph.
 
 pub mod correlation;
+pub mod delta;
 pub mod frequency;
 pub mod naive;
 
 pub use correlation::CorrelationMapper;
+pub use delta::{regroup_subset, GroupingDelta};
 pub use frequency::FrequencyMapper;
 pub use naive::NaiveMapper;
 
@@ -177,26 +179,29 @@ impl Mapping {
         scratch.len()
     }
 
-    /// Group-level co-access graph over a trace: `adj[g]` lists
-    /// `(neighbour, weight)` pairs where `weight` counts queries touching
-    /// both groups. This is the co-occurrence graph *lifted* from
-    /// embeddings to crossbars — the signal the shard partitioner uses to
-    /// keep correlated crossbars on the same shard.
-    pub fn group_adjacency(&self, trace: &Trace) -> Vec<Vec<(u32, u64)>> {
+    /// Per-group activation load **and** co-access adjacency in a single
+    /// trace walk. `freqs` equals [`crate::allocation::group_frequencies`]
+    /// and `adj` equals [`Mapping::group_adjacency`] (a regression test
+    /// pins both); the shard partitioner and the rebalance path used to
+    /// compute them in two separate walks over the same trace.
+    pub fn group_stats(&self, trace: &Trace) -> GroupStats {
+        let n = self.num_groups();
+        let mut freqs = vec![0u64; n];
         let mut weights: FxHashMap<u64, u64> = FxHashMap::default();
         // Epoch-stamped accumulation (like `allocation::group_frequencies`):
-        // this walks the whole history trace on every replanning pass, so
-        // the per-query sort+dedup is replaced by an O(k) TouchSet with
-        // only the ≤k distinct groups sorted for canonical pair order.
+        // this walks the whole trace on every replanning pass, so the
+        // per-query sort+dedup is replaced by an O(k) TouchSet with only
+        // the ≤k distinct groups sorted for canonical pair order.
         let mut touch = TouchSet::default();
         for q in &trace.queries {
-            touch.begin(self.num_groups());
+            touch.begin(n);
             for &e in &q.items {
                 touch.add(self.slot_of(e).group);
             }
             touch.sort_touched();
             let groups = touch.touched();
             for (i, &a) in groups.iter().enumerate() {
+                freqs[a as usize] += 1;
                 for &b in &groups[i + 1..] {
                     // sorted ascending, so (a, b) is already canonical.
                     let key = ((a as u64) << 32) | b as u64;
@@ -204,7 +209,7 @@ impl Mapping {
                 }
             }
         }
-        let mut adj: Vec<Vec<(u32, u64)>> = vec![Vec::new(); self.num_groups()];
+        let mut adj: Vec<Vec<(u32, u64)>> = vec![Vec::new(); n];
         for (key, w) in weights {
             let a = (key >> 32) as u32;
             let b = key as u32;
@@ -215,7 +220,18 @@ impl Mapping {
         for nbrs in &mut adj {
             nbrs.sort_unstable();
         }
-        adj
+        GroupStats { freqs, adj }
+    }
+
+    /// Group-level co-access graph over a trace: `adj[g]` lists
+    /// `(neighbour, weight)` pairs where `weight` counts queries touching
+    /// both groups. This is the co-occurrence graph *lifted* from
+    /// embeddings to crossbars — the signal the shard partitioner uses to
+    /// keep correlated crossbars on the same shard. (Convenience wrapper;
+    /// callers that also need per-group loads should take one
+    /// [`Mapping::group_stats`] pass instead.)
+    pub fn group_adjacency(&self, trace: &Trace) -> Vec<Vec<(u32, u64)>> {
+        self.group_stats(trace).adj
     }
 
     /// Shard-aware partitioner: assign every group to one of `shards`
@@ -228,29 +244,66 @@ impl Mapping {
     /// summed load and its group count (ties broken toward the emptier
     /// shard, then the lower shard id — fully deterministic).
     pub fn partition_across(&self, trace: &Trace, shards: usize, slack: f64) -> Vec<u32> {
+        // Per-group activation load — the same metric the replication
+        // planner and the cluster report use — plus the co-access
+        // adjacency, in one trace walk.
+        let stats = self.group_stats(trace);
+        self.partition_with(&stats, shards, slack, None)
+    }
+
+    /// [`Mapping::partition_across`] over precomputed [`GroupStats`], with
+    /// an optional *hold* set: `keep = (prior, dirty)` pins every clean
+    /// group (`!dirty[g]`) to its prior shard and re-places only the dirty
+    /// ones, against load/count caps computed over the **total** load.
+    /// This is the delta rebalance's partitioner — with `keep = None` (or
+    /// everything dirty) it reduces to the full greedy pass bit-exactly,
+    /// which is what lets the full recompute survive as the oracle.
+    pub fn partition_with(
+        &self,
+        stats: &GroupStats,
+        shards: usize,
+        slack: f64,
+        keep: Option<(&[u32], &[bool])>,
+    ) -> Vec<u32> {
         assert!(shards > 0, "need at least one shard");
         assert!(slack >= 0.0, "negative balance slack");
         let n = self.num_groups();
         if shards == 1 || n == 0 {
             return vec![0; n];
         }
-
-        // Per-group activation load — the same metric the replication
-        // planner and the cluster report use.
-        let load = crate::allocation::group_frequencies(self, trace);
-        let adj = self.group_adjacency(trace);
+        let load = &stats.freqs;
+        let adj = &stats.adj;
+        assert_eq!(load.len(), n, "stats do not match this mapping");
+        assert_eq!(adj.len(), n, "stats do not match this mapping");
 
         let total: u64 = load.iter().sum();
         let load_cap = ((total as f64 * (1.0 + slack)) / shards as f64).ceil() as u64;
         let count_cap = ((n as f64 * (1.0 + slack)) / shards as f64).ceil().max(1.0) as usize;
 
-        let mut order: Vec<u32> = (0..n as u32).collect();
-        order.sort_by_key(|&g| (Reverse(load[g as usize]), g));
-
         let mut shard_of = vec![u32::MAX; n];
         let mut shard_load = vec![0u64; shards];
         let mut shard_count = vec![0usize; shards];
         let mut affinity = vec![0u64; shards];
+
+        let mut order: Vec<u32> = match keep {
+            None => (0..n as u32).collect(),
+            Some((prior, dirty)) => {
+                assert_eq!(prior.len(), n, "prior assignment does not match");
+                assert_eq!(dirty.len(), n, "dirty flags do not match");
+                for g in 0..n {
+                    if !dirty[g] {
+                        let s = prior[g] as usize;
+                        assert!(s < shards, "prior shard {s} out of range");
+                        shard_of[g] = prior[g];
+                        shard_load[s] += load[g];
+                        shard_count[s] += 1;
+                    }
+                }
+                (0..n as u32).filter(|&g| dirty[g as usize]).collect()
+            }
+        };
+        order.sort_by_key(|&g| (Reverse(load[g as usize]), g));
+
         for &g in &order {
             for a in &mut affinity {
                 *a = 0;
@@ -294,6 +347,18 @@ impl Mapping {
         }
         shard_of
     }
+}
+
+/// Per-group activation load and co-access adjacency over one trace,
+/// computed by a single [`Mapping::group_stats`] walk. The two fields
+/// are definitionally equal to [`crate::allocation::group_frequencies`]
+/// and [`Mapping::group_adjacency`] respectively.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupStats {
+    /// Queries touching each group (distinct-groups-per-query counting).
+    pub freqs: Vec<u64>,
+    /// `(neighbour, weight)` co-access lists, sorted, both directions.
+    pub adj: Vec<Vec<(u32, u64)>>,
 }
 
 /// Epoch-stamped distinct-group accumulator — the sort-free core of the
@@ -499,6 +564,46 @@ mod tests {
     fn single_shard_is_trivial() {
         let (m, t) = co_access_fixture();
         assert_eq!(m.partition_across(&t, 1, 0.0), vec![0; 4]);
+    }
+
+    #[test]
+    fn group_stats_matches_the_two_single_purpose_passes() {
+        // The deduplicated one-pass counter must agree exactly with the
+        // passes it replaced, on a trace with repeats, singletons, and
+        // out-of-catalogue ids.
+        let (m, mut t) = co_access_fixture();
+        t.queries.push(crate::workload::Query::new(vec![0]));
+        t.queries.push(crate::workload::Query::new(vec![0, 1, 4, 1_000_000]));
+        let stats = m.group_stats(&t);
+        assert_eq!(stats.freqs, crate::allocation::group_frequencies(&m, &t));
+        assert_eq!(stats.adj, m.group_adjacency(&t));
+    }
+
+    #[test]
+    fn partition_with_all_dirty_matches_partition_across() {
+        let (m, t) = co_access_fixture();
+        let stats = m.group_stats(&t);
+        let full = m.partition_across(&t, 2, 0.5);
+        let prior = vec![0u32; m.num_groups()];
+        let dirty = vec![true; m.num_groups()];
+        assert_eq!(
+            m.partition_with(&stats, 2, 0.5, Some((&prior, &dirty))),
+            full
+        );
+        assert_eq!(m.partition_with(&stats, 2, 0.5, None), full);
+    }
+
+    #[test]
+    fn partition_with_holds_clean_groups() {
+        let (m, t) = co_access_fixture();
+        let stats = m.group_stats(&t);
+        let prior = m.partition_across(&t, 2, 0.5);
+        // Only group 3 is dirty: groups 0..3 must keep their shard.
+        let mut dirty = vec![false; 4];
+        dirty[3] = true;
+        let out = m.partition_with(&stats, 2, 0.5, Some((&prior, &dirty)));
+        assert_eq!(out[..3], prior[..3]);
+        assert!((out[3] as usize) < 2);
     }
 
     #[test]

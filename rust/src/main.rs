@@ -587,6 +587,7 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         report as cluster_report, simulate_with_replicas, ClusterConfig, PartitionPolicy,
         ReplicaPlan, RoutePolicy,
     };
+    use recross::graph::DeltaParams;
     use recross::metrics::Histogram;
     use recross::workload::Query;
 
@@ -719,15 +720,29 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
             recent.extend_from_slice(chunk);
             if handle.rebalance_due() {
                 let degradation = handle.drift_degradation().unwrap_or(1.0);
-                let window = Trace {
+                // Prefer the drift monitor's own recent-query ring (the
+                // traffic that tripped the signal); the accumulated wave
+                // window is the fallback when the ring is unarmed.
+                let window = handle.drift_window().unwrap_or_else(|| Trace {
                     num_embeddings: prepared.eval().num_embeddings,
                     queries: std::mem::take(&mut recent),
-                };
-                let epoch = pool.cluster().rebalance(&window)?;
+                });
+                recent.clear();
+                let report = pool
+                    .cluster()
+                    .rebalance_incremental(&window, &DeltaParams::default())?;
                 swaps += 1;
                 println!(
-                    "drift detected (degradation {degradation:.2}, {} recent queries) -> rebalanced to epoch {epoch}",
-                    window.queries.len()
+                    "drift detected (degradation {degradation:.2}, {} recent queries) -> {} to epoch {} \
+                     ({}/{} groups re-planned, {} shard installs, {}/{} tiles shipped)",
+                    window.queries.len(),
+                    if report.full { "full rebalance" } else { "delta rebalance" },
+                    report.epoch,
+                    report.groups_changed,
+                    report.groups_total,
+                    report.shards_installed,
+                    report.tiles_installed,
+                    report.tiles_total,
                 );
             }
         }

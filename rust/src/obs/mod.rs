@@ -97,6 +97,23 @@ pub mod names {
 
     /// Latest drift degradation ratio (1.0 = baseline) — gauge.
     pub const DRIFT_DEGRADATION: &str = "drift.degradation";
+
+    /// Incremental offline refreshes performed — counter.
+    pub const OFFLINE_REFRESHES: &str = "offline.refreshes";
+    /// Full-scope offline rebuilds performed — counter.
+    pub const OFFLINE_FULL_REBUILDS: &str = "offline.full_rebuilds";
+    /// Groups re-derived across refreshes — counter.
+    pub const OFFLINE_GROUPS_TOUCHED: &str = "offline.groups_touched";
+    /// Groups in the current mapping — gauge.
+    pub const OFFLINE_GROUPS_TOTAL: &str = "offline.groups_total";
+    /// Embedding rows re-placed across refreshes — counter.
+    pub const OFFLINE_IDS_MOVED: &str = "offline.ids_moved";
+    /// Embedding rows in the catalogue — gauge.
+    pub const OFFLINE_IDS_TOTAL: &str = "offline.ids_total";
+    /// Shard tiles (re)installed by rebalances — counter.
+    pub const OFFLINE_TILES_INSTALLED: &str = "offline.tiles_installed";
+    /// Shard tiles across the cluster after the last rebalance — gauge.
+    pub const OFFLINE_TILES_TOTAL: &str = "offline.tiles_total";
 }
 
 /// One shared handle over the metrics plane and the flight recorder.
