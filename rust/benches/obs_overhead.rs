@@ -11,23 +11,24 @@
 //!    with recording on or off (asserted here before any measurement).
 //!
 //! Runs the open-loop driver over a synthetic Zipf workload on the
-//! single-executor and 4-shard simulators, three ways each — no handle,
-//! disabled handle, enabled handle (full sampling) — and writes
-//! **`BENCH_obs.json`** at the repository root. CI runs `--smoke` on
-//! every push and uploads the file as an artifact. The `disabled/none`
-//! ratio is asserted `< 1.25` in full mode only (smoke budgets are too
-//! short to bound noise).
+//! single-executor and 4-shard simulators, four ways each — no handle,
+//! disabled handle, enabled handle (full sampling), and enabled handle
+//! plus a per-drive telemetry tick (snapshot diff + SLO evaluation) —
+//! and writes **`BENCH_obs.json`** at the repository root. CI runs
+//! `--smoke` on every push and uploads the file as an artifact. The
+//! `disabled/none` ratio is asserted `< 1.25` in full mode only (smoke
+//! budgets are too short to bound noise).
 
 use recross::allocation::Replication;
 use recross::cluster::{PoolShared, ShardPlan};
-use recross::config::{HardwareConfig, ObsConfig};
+use recross::config::{HardwareConfig, ObsConfig, SloConfig, WatchConfig};
 use recross::coordinator::BatchPolicy;
-use recross::deploy::SimBackend;
+use recross::deploy::{Backend, SimBackend};
 use recross::grouping::Mapping;
 use recross::loadgen::{drive, Arrivals};
-use recross::obs::Obs;
+use recross::obs::{Obs, Watcher};
 use recross::util::bench::black_box;
-use recross::util::{Rng, Zipf};
+use recross::util::{Clock, Rng, SimClock, Zipf};
 use recross::workload::Query;
 use recross::xbar::{CircuitParams, CrossbarModel};
 use std::time::{Duration, Instant};
@@ -98,6 +99,9 @@ struct Row {
     none_ns: f64,
     disabled_ns: f64,
     enabled_ns: f64,
+    /// Enabled handle + one telemetry tick (snapshot, window diff, SLO
+    /// evaluation) per drive — the watch loop's steady-state cost.
+    ticked_ns: f64,
 }
 
 fn run_point(name: &'static str, fx: &Fixture, shards: usize, measure_ns: u64) -> Row {
@@ -131,6 +135,14 @@ fn run_point(name: &'static str, fx: &Fixture, shards: usize, measure_ns: u64) -
     let under_enabled = drive(&enabled, &fx.queries, &fx.arrivals, &fx.policy);
     assert_eq!(base, under_disabled, "{name}: disabled obs perturbed the drive");
     assert_eq!(base, under_enabled, "{name}: enabled obs perturbed the drive");
+    // ...and neither must a telemetry tick between drives: snapshots
+    // are read-only on the serving path.
+    let mut watcher = Watcher::from_config(&WatchConfig::default(), &SloConfig::default());
+    let clock = SimClock::new();
+    clock.advance(1_000_000);
+    black_box(watcher.tick(clock.now_ns(), &enabled.metrics().expect("snapshot")));
+    let after_tick = drive(&enabled, &fx.queries, &fx.arrivals, &fx.policy);
+    assert_eq!(base, after_tick, "{name}: watcher tick perturbed a subsequent drive");
 
     let time = |b: &SimBackend| {
         measure(
@@ -141,13 +153,27 @@ fn run_point(name: &'static str, fx: &Fixture, shards: usize, measure_ns: u64) -
             3,
         )
     };
+    let none_ns = time(&none);
+    let disabled_ns = time(&disabled);
+    let enabled_ns = time(&enabled);
+    let ticked_ns = measure(
+        || {
+            black_box(drive(&enabled, &fx.queries, &fx.arrivals, &fx.policy));
+            clock.advance(1_000_000);
+            let snap = enabled.metrics().expect("snapshot");
+            black_box(watcher.tick(clock.now_ns(), &snap));
+        },
+        measure_ns,
+        3,
+    );
     Row {
         name,
         shards,
         queries: fx.queries.len(),
-        none_ns: time(&none),
-        disabled_ns: time(&disabled),
-        enabled_ns: time(&enabled),
+        none_ns,
+        disabled_ns,
+        enabled_ns,
+        ticked_ns,
     }
 }
 
@@ -155,7 +181,7 @@ fn json(rows: &[Row], smoke: bool) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"obs_overhead\",\n");
-    out.push_str("  \"version\": 1,\n");
+    out.push_str("  \"version\": 2,\n");
     out.push_str(&format!("  \"mode\": \"{}\",\n", if smoke { "smoke" } else { "full" }));
     out.push_str("  \"configs\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -166,13 +192,15 @@ fn json(rows: &[Row], smoke: bool) -> String {
         ));
         out.push_str(&format!(
             "      \"none_ns_per_drive\": {:.1}, \"disabled_ns_per_drive\": {:.1}, \
-             \"enabled_ns_per_drive\": {:.1},\n",
-            r.none_ns, r.disabled_ns, r.enabled_ns
+             \"enabled_ns_per_drive\": {:.1}, \"ticked_ns_per_drive\": {:.1},\n",
+            r.none_ns, r.disabled_ns, r.enabled_ns, r.ticked_ns
         ));
         out.push_str(&format!(
-            "      \"disabled_over_none\": {:.4}, \"enabled_over_none\": {:.4}\n",
+            "      \"disabled_over_none\": {:.4}, \"enabled_over_none\": {:.4}, \
+             \"ticked_over_none\": {:.4}\n",
             r.disabled_ns / r.none_ns,
-            r.enabled_ns / r.none_ns
+            r.enabled_ns / r.none_ns,
+            r.ticked_ns / r.none_ns
         ));
         out.push_str(if i + 1 == rows.len() { "    }\n" } else { "    },\n" });
     }
@@ -189,28 +217,30 @@ fn main() {
     };
 
     println!(
-        "== observability overhead: none vs disabled vs enabled handle, {} mode ==\n",
+        "== observability overhead: none vs disabled vs enabled vs ticked handle, {} mode ==\n",
         if smoke { "smoke" } else { "full" }
     );
     println!(
-        "{:<10} {:>6} {:>8} {:>14} {:>14} {:>14} {:>10} {:>10}",
-        "config", "shards", "queries", "none ns", "disabled ns", "enabled ns", "dis/none",
-        "en/none"
+        "{:<10} {:>6} {:>8} {:>13} {:>13} {:>13} {:>13} {:>9} {:>9} {:>9}",
+        "config", "shards", "queries", "none ns", "disabled ns", "enabled ns", "ticked ns",
+        "dis/none", "en/none", "tick/none"
     );
 
     let mut rows = Vec::new();
     for (name, shards) in [("single", 1usize), ("sharded4", 4)] {
         let row = run_point(name, &fx, shards, measure_ns);
         println!(
-            "{:<10} {:>6} {:>8} {:>14.0} {:>14.0} {:>14.0} {:>9.3}x {:>9.3}x",
+            "{:<10} {:>6} {:>8} {:>13.0} {:>13.0} {:>13.0} {:>13.0} {:>8.3}x {:>8.3}x {:>8.3}x",
             row.name,
             row.shards,
             row.queries,
             row.none_ns,
             row.disabled_ns,
             row.enabled_ns,
+            row.ticked_ns,
             row.disabled_ns / row.none_ns,
             row.enabled_ns / row.none_ns,
+            row.ticked_ns / row.none_ns,
         );
         rows.push(row);
     }

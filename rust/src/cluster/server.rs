@@ -486,9 +486,10 @@ impl Cluster {
     ///
     /// The routing table still swaps atomically to a new epoch for
     /// everyone; shards skipped by the install keep serving their
-    /// bit-identical tiles and merely report the older epoch in
-    /// [`ClusterHandle::shard_status`] (cosmetic — their content and
-    /// local replica tables are unchanged by construction).
+    /// bit-identical tiles (no drain, no scheduler rebuild) but adopt
+    /// the new epoch number via a [`ShardMsg::BumpEpoch`] ack before the
+    /// swap, so [`ClusterHandle::shard_status`] reports one uniform
+    /// epoch across the pool.
     ///
     /// The group *membership* delta is the engine layer's job
     /// ([`crate::engine::PreparedEngine::refresh`]); the live mapping is
@@ -584,8 +585,9 @@ impl Cluster {
         // Install new tiles + local replica tables, then wait for every
         // ack before exposing the new routes. At full scope every shard
         // reinstalls; at delta scope a shard whose hosted set and local
-        // replica table are both unchanged is skipped — its tiles are
-        // bit-identical, only the front-end routing table moves.
+        // replica table are both unchanged skips the install — its tiles
+        // are bit-identical — and only bumps its reported epoch so the
+        // pool's status rows stay uniform after the swap.
         let mut tiles_total = 0usize;
         let mut shards_installed = 0usize;
         let mut tiles_installed = 0usize;
@@ -598,6 +600,11 @@ impl Cluster {
                 && hosted == cur.replicas.groups_hosted_by(s as u32)
                 && local.copies == cur.replicas.local_replication(s as u32, batch_size).copies
             {
+                let (atx, arx) = mpsc::channel();
+                exec.tx
+                    .send(ShardMsg::BumpEpoch { epoch, reply: atx })
+                    .map_err(|_| anyhow!("shard {s} is down"))?;
+                acks.push((s, arx));
                 continue;
             }
             shards_installed += 1;

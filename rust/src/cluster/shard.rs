@@ -178,6 +178,14 @@ pub(crate) enum ShardMsg {
         replication: Replication,
         reply: mpsc::Sender<u64>,
     },
+    /// Epoch bump without a tile swap: a delta rebalance left this
+    /// shard's hosted set untouched, so there is nothing to drain or
+    /// rebuild — the shard just adopts the new epoch number and acks,
+    /// keeping `shard_status` epochs uniform across the pool.
+    BumpEpoch {
+        epoch: u64,
+        reply: mpsc::Sender<u64>,
+    },
     Shutdown,
 }
 
@@ -298,6 +306,12 @@ fn shard_loop(
                     let _ = reply.send(epoch);
                     current = Some((new_store, replication));
                     continue 'epoch;
+                }
+                Some(ShardMsg::BumpEpoch { epoch, reply }) => {
+                    // No tile change — queued work stays valid and the
+                    // scheduler stands; only the reported epoch moves.
+                    state.epoch = epoch;
+                    let _ = reply.send(epoch);
                 }
                 None => {}
             }

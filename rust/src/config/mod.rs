@@ -231,6 +231,102 @@ impl ObsConfig {
     }
 }
 
+/// Service-level objectives evaluated by the telemetry watch loop
+/// (see [`crate::obs::slo`]). Thresholds feed the default objective set
+/// ([`crate::obs::SloTracker`]`::from_config`); the burn-rate shape is
+/// shared by every objective.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloConfig {
+    /// `sojourn-p99` objective: per-window p99 sojourn must stay below
+    /// this (ns).
+    pub p99_sojourn_ns: f64,
+    /// `queue-depth` objective: window-mean batcher queue depth must
+    /// stay below this (queries).
+    pub max_queue_depth: f64,
+    /// Fast burn-rate rule (severity `page`): this many consecutive
+    /// breached windows fire.
+    pub fast_windows: usize,
+    /// Slow burn-rate rule (severity `warn`): evaluated over this many
+    /// trailing windows.
+    pub slow_windows: usize,
+    /// Slow rule: breached fraction that fires, in `(0, 1]`.
+    pub slow_burn: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        Self {
+            p99_sojourn_ns: 5_000_000.0,
+            max_queue_depth: 64.0,
+            fast_windows: 1,
+            slow_windows: 12,
+            slow_burn: 0.5,
+        }
+    }
+}
+
+impl SloConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.p99_sojourn_ns > 0.0,
+            "slo.p99_sojourn_ns {} must be positive",
+            self.p99_sojourn_ns
+        );
+        anyhow::ensure!(
+            self.max_queue_depth > 0.0,
+            "slo.max_queue_depth {} must be positive",
+            self.max_queue_depth
+        );
+        anyhow::ensure!(self.fast_windows >= 1, "slo.fast_windows must be >= 1");
+        anyhow::ensure!(
+            self.slow_windows >= self.fast_windows,
+            "slo.slow_windows {} must span at least slo.fast_windows {}",
+            self.slow_windows,
+            self.fast_windows
+        );
+        anyhow::ensure!(
+            self.slow_burn > 0.0 && self.slow_burn <= 1.0,
+            "slo.slow_burn {} outside (0,1]",
+            self.slow_burn
+        );
+        Ok(())
+    }
+}
+
+/// Telemetry watch-loop configuration (`recross status --watch` and the
+/// cluster drift loop's tick cadence).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WatchConfig {
+    /// Tick interval, ms. On the simulated watch clock one tick always
+    /// advances exactly this far, so tick sequences are reproducible.
+    pub interval_ms: u64,
+    /// Time-series ring capacity: windows retained per metric.
+    pub ring_capacity: usize,
+    /// Watch ticks before exiting; 0 streams until interrupted.
+    pub ticks: usize,
+}
+
+impl Default for WatchConfig {
+    fn default() -> Self {
+        Self {
+            interval_ms: 1_000,
+            ring_capacity: 512,
+            ticks: 0,
+        }
+    }
+}
+
+impl WatchConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.interval_ms > 0, "watch.interval_ms must be positive");
+        anyhow::ensure!(
+            self.ring_capacity >= 1,
+            "watch.ring_capacity must be >= 1"
+        );
+        Ok(())
+    }
+}
+
 /// Top-level configuration bundle.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
@@ -238,6 +334,8 @@ pub struct Config {
     pub scheme: SchemeConfig,
     pub workload: WorkloadConfig,
     pub obs: ObsConfig,
+    pub slo: SloConfig,
+    pub watch: WatchConfig,
     /// Directory with AOT artifacts for the PJRT runtime.
     pub artifacts_dir: String,
 }
@@ -331,6 +429,18 @@ impl Config {
         ob.sample_rate = doc.f64_or("obs.sample_rate", ob.sample_rate);
         ob.ring_capacity = doc.usize_or("obs.ring_capacity", ob.ring_capacity);
 
+        let sl = &mut cfg.slo;
+        sl.p99_sojourn_ns = doc.f64_or("slo.p99_sojourn_ns", sl.p99_sojourn_ns);
+        sl.max_queue_depth = doc.f64_or("slo.max_queue_depth", sl.max_queue_depth);
+        sl.fast_windows = doc.usize_or("slo.fast_windows", sl.fast_windows);
+        sl.slow_windows = doc.usize_or("slo.slow_windows", sl.slow_windows);
+        sl.slow_burn = doc.f64_or("slo.slow_burn", sl.slow_burn);
+
+        let wa = &mut cfg.watch;
+        wa.interval_ms = doc.i64_or("watch.interval_ms", wa.interval_ms as i64).max(0) as u64;
+        wa.ring_capacity = doc.usize_or("watch.ring_capacity", wa.ring_capacity);
+        wa.ticks = doc.usize_or("watch.ticks", wa.ticks);
+
         cfg.artifacts_dir = doc.str_or("artifacts_dir", &cfg.artifacts_dir);
         cfg.validate()?;
         Ok(cfg)
@@ -379,6 +489,18 @@ impl Config {
         if args.provided("obs-ring") {
             self.obs.ring_capacity = parse(args, "obs-ring")?;
         }
+        if args.provided("interval") {
+            self.watch.interval_ms = parse(args, "interval")?;
+        }
+        if args.provided("ticks") {
+            self.watch.ticks = parse(args, "ticks")?;
+        }
+        if args.provided("slo-p99-ns") {
+            self.slo.p99_sojourn_ns = parse(args, "slo-p99-ns")?;
+        }
+        if args.provided("slo-depth") {
+            self.slo.max_queue_depth = parse(args, "slo-depth")?;
+        }
         self.validate()
     }
 
@@ -387,6 +509,8 @@ impl Config {
         self.hardware.validate()?;
         self.scheme.validate()?;
         self.obs.validate()?;
+        self.slo.validate()?;
+        self.watch.validate()?;
         anyhow::ensure!(self.workload.history_queries > 0, "empty history");
         anyhow::ensure!(self.workload.dense_features > 0, "zero dense features");
         Ok(())
@@ -535,6 +659,64 @@ mod tests {
         cfg.overlay_cli(&none).unwrap();
         assert!(!cfg.obs.enabled);
         assert_eq!(cfg.obs.sample_rate, 0.75);
+    }
+
+    #[test]
+    fn slo_watch_defaults_toml_and_validation() {
+        let c = Config::paper_default();
+        assert_eq!(c.slo.p99_sojourn_ns, 5_000_000.0);
+        assert_eq!(c.slo.fast_windows, 1);
+        assert_eq!(c.slo.slow_windows, 12);
+        assert_eq!(c.watch.interval_ms, 1_000);
+        assert_eq!(c.watch.ring_capacity, 512);
+        assert_eq!(c.watch.ticks, 0);
+        let c = Config::from_toml(
+            "[slo]\np99_sojourn_ns = 2e6\nmax_queue_depth = 32.0\nslow_windows = 6\n\
+             slow_burn = 0.75\n[watch]\ninterval_ms = 250\nring_capacity = 64\nticks = 10",
+        )
+        .unwrap();
+        assert_eq!(c.slo.p99_sojourn_ns, 2e6);
+        assert_eq!(c.slo.max_queue_depth, 32.0);
+        assert_eq!(c.slo.slow_windows, 6);
+        assert_eq!(c.slo.slow_burn, 0.75);
+        assert_eq!(c.watch.interval_ms, 250);
+        assert_eq!(c.watch.ring_capacity, 64);
+        assert_eq!(c.watch.ticks, 10);
+        // Degenerate rules are rejected through the one validate chain.
+        assert!(Config::from_toml("[slo]\nslow_burn = 0.0").is_err());
+        assert!(Config::from_toml("[slo]\nfast_windows = 0").is_err());
+        assert!(Config::from_toml("[slo]\nfast_windows = 4\nslow_windows = 2").is_err());
+        assert!(Config::from_toml("[watch]\ninterval_ms = 0").is_err());
+        assert!(Config::from_toml("[watch]\nring_capacity = 0").is_err());
+    }
+
+    #[test]
+    fn watch_cli_overlay_beats_toml() {
+        use crate::util::cli::ArgSpec;
+        let spec = ArgSpec::new("t")
+            .opt("interval", "1000", "")
+            .opt("ticks", "0", "")
+            .opt("slo-p99-ns", "5000000", "")
+            .opt("slo-depth", "64", "");
+        let argv: Vec<String> = ["--interval", "100", "--ticks", "5", "--slo-p99-ns", "1e6"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = spec.parse(&argv).unwrap();
+        let mut cfg = Config::from_toml_with_base(
+            "[watch]\ninterval_ms = 400\n[slo]\nmax_queue_depth = 16.0",
+            Config::open_loop_default(),
+        )
+        .unwrap();
+        cfg.overlay_cli(&args).unwrap();
+        // Explicit CLI beats TOML...
+        assert_eq!(cfg.watch.interval_ms, 100);
+        assert_eq!(cfg.watch.ticks, 5);
+        assert_eq!(cfg.slo.p99_sojourn_ns, 1e6);
+        // ...declared defaults do not clobber TOML, and untouched knobs
+        // keep the base.
+        assert_eq!(cfg.slo.max_queue_depth, 16.0);
+        assert_eq!(cfg.watch.ring_capacity, 512);
     }
 
     #[test]

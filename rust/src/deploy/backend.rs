@@ -24,7 +24,7 @@ use crate::coordinator::{
 };
 use crate::engine::{Engine, Scheme};
 use crate::grouping::Mapping;
-use crate::obs::{names, MetricsSnapshot, Obs};
+use crate::obs::{names, Alert, MetricsSnapshot, Obs};
 use crate::sched::{ExecStats, Scheduler, Scratch};
 use crate::workload::{EmbeddingId, Query};
 use crate::xbar::CrossbarModel;
@@ -160,6 +160,17 @@ pub trait Backend {
             snap.merge(&obs.snapshot(self.name()));
         }
         Ok(snap)
+    }
+
+    /// Alerts this backend has raised on its own behalf. The default is
+    /// empty: backends are passive metric sources, and SLO evaluation
+    /// lives in the watch loop's [`crate::obs::Watcher`], which diffs
+    /// [`Backend::metrics`] snapshots externally. A backend with an
+    /// embedded tracker (e.g. a future autoscaler) overrides this to
+    /// surface its own `recross.alerts` v1 events; the default keeps the
+    /// trait object-safe and implementors alert-free.
+    fn alerts(&self) -> Vec<Alert> {
+        Vec::new()
     }
 }
 

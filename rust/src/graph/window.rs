@@ -62,6 +62,29 @@ impl DeltaParams {
             abs_floor: 0,
         }
     }
+
+    /// Derive the relative threshold from a *measured* drift-degradation
+    /// series (the `drift.degradation` gauge ring the watch loop keeps:
+    /// activations-per-lookup EMA over its rebaselined value, 1.0 = no
+    /// drift). The threshold is set to twice the series' median distance
+    /// from 1.0 — twice the typical excursion, so routine wobble stays
+    /// below the gate and only genuinely atypical drift dirties nodes —
+    /// clamped to `[0.05, 0.5]` (never hair-trigger, never inert). The
+    /// absolute floor is noise-driven, not drift-driven, and keeps its
+    /// default. An empty series carries no evidence and yields the
+    /// default parameters unchanged.
+    pub fn from_observed(degradation: &[f64]) -> Self {
+        if degradation.is_empty() {
+            return Self::default();
+        }
+        let mut dist: Vec<f64> = degradation.iter().map(|d| (d - 1.0).abs()).collect();
+        dist.sort_by(|a, b| a.partial_cmp(b).expect("degradation must be finite"));
+        let median = dist[dist.len() / 2];
+        Self {
+            rel_threshold: (2.0 * median).clamp(0.05, 0.5),
+            ..Self::default()
+        }
+    }
 }
 
 /// Net change recorded for one node by [`WindowGraph::apply_window`].
@@ -389,6 +412,24 @@ mod tests {
             num_embeddings: a.num_embeddings,
             queries,
         }
+    }
+
+    #[test]
+    fn from_observed_scales_with_measured_drift() {
+        // No evidence: defaults untouched.
+        assert_eq!(DeltaParams::from_observed(&[]), DeltaParams::default());
+        // Quiet pool (degradation hugs 1.0): clamped to the floor, well
+        // below the default 0.25 — rebalances scope tighter.
+        let quiet = DeltaParams::from_observed(&[1.0, 1.01, 0.99, 1.02, 1.0]);
+        assert_eq!(quiet.rel_threshold, 0.05);
+        // Typical excursion 0.1 → threshold 2x = 0.2.
+        let moving = DeltaParams::from_observed(&[1.1, 0.9, 1.1, 1.12, 0.88]);
+        assert!((moving.rel_threshold - 0.2).abs() < 1e-2);
+        // Violent drift: capped at 0.5, never inert.
+        let wild = DeltaParams::from_observed(&[2.0, 3.0, 0.2]);
+        assert_eq!(wild.rel_threshold, 0.5);
+        // The absolute floor is noise-driven and never moves.
+        assert_eq!(wild.abs_floor, DeltaParams::default().abs_floor);
     }
 
     #[test]

@@ -43,7 +43,13 @@
 //! ([`obs`]): an off-by-default metrics registry plus a sampled
 //! per-query flight recorder, harvested at batch/wave seams so that
 //! observation never perturbs schedules or reductions, and exported as
-//! one schema-versioned JSON snapshot (`recross status --json`).
+//! one schema-versioned JSON snapshot (`recross status --json`). On
+//! top of the snapshots sits the **signal plane** ([`obs::timeseries`]
+//! + [`obs::slo`]): clock-injected ticks diff snapshots into windowed
+//! rings, declarative SLOs are evaluated with multi-window burn-rate
+//! rules into a deterministic `recross.alerts` v1 stream
+//! (`recross status --watch`), and the measured drift series feeds the
+//! delta pipeline's thresholds ([`graph::DeltaParams::from_observed`]).
 //!
 //! The single front door to all of it is the **deployment facade**
 //! ([`deploy`]): `Deployment::of(config).scheme(..).build()?` runs the

@@ -83,6 +83,10 @@ impl ShardLoad {
 pub struct OpenLoopReport {
     /// Per-query sojourn time (finish − arrival), ns, in arrival order.
     pub sojourn_ns: Vec<f64>,
+    /// Arrival timestamps, ns, aligned with `sojourn_ns` — copied from
+    /// the drive's input so [`OpenLoopReport::windows`] can re-slice the
+    /// run into time windows after the fact.
+    pub arrivals_ns: Vec<u64>,
     /// Service-side accounting: counters sum over everything served;
     /// `completion_ns` accumulates per executor and maxes across shards
     /// (the executors run concurrently).
@@ -141,6 +145,83 @@ impl OpenLoopReport {
     /// Total batches closed across executors.
     pub fn batches(&self) -> u64 {
         self.shards.iter().map(|s| s.batches).sum()
+    }
+
+    /// Re-slice the drive into fixed-width arrival windows.
+    ///
+    /// Window `i` covers arrivals in `[i·window_ns, (i+1)·window_ns)`;
+    /// the result spans the first to the last occupied window
+    /// contiguously, so lulls inside the run appear as empty windows
+    /// (their percentiles read 0 by [`percentile`]'s empty-slice
+    /// contract) rather than silently vanishing from the timeline. A
+    /// zero-query drive has no timeline and returns no windows. This is
+    /// a pure view of the report — the watch loop feeds one window per
+    /// tick into the SLO tracker ([`crate::obs::Watcher`]), and tests
+    /// use it to localise an injected overload phase.
+    pub fn windows(&self, window_ns: u64) -> Vec<ReportWindow> {
+        assert!(window_ns > 0, "window width must be positive");
+        let (Some(&first), Some(&last)) = (self.arrivals_ns.first(), self.arrivals_ns.last())
+        else {
+            return Vec::new();
+        };
+        let lo = first / window_ns;
+        let hi = last / window_ns;
+        let mut out: Vec<ReportWindow> = (lo..=hi)
+            .map(|index| ReportWindow {
+                index,
+                start_ns: index * window_ns,
+                end_ns: (index + 1) * window_ns,
+                sojourn_ns: Vec::new(),
+            })
+            .collect();
+        for (&a, &s) in self.arrivals_ns.iter().zip(&self.sojourn_ns) {
+            out[(a / window_ns - lo) as usize].sojourn_ns.push(s);
+        }
+        out
+    }
+}
+
+/// One fixed-width arrival window of an [`OpenLoopReport`] — the
+/// per-tick sub-report the watch loop turns into `loadgen.*` gauges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReportWindow {
+    /// Window ordinal: `start_ns / window_ns`.
+    pub index: u64,
+    /// Window start, ns (inclusive).
+    pub start_ns: u64,
+    /// Window end, ns (exclusive).
+    pub end_ns: u64,
+    /// Sojourns of the queries that *arrived* in this window, ns, in
+    /// arrival order.
+    pub sojourn_ns: Vec<f64>,
+}
+
+impl ReportWindow {
+    pub fn queries(&self) -> usize {
+        self.sojourn_ns.len()
+    }
+
+    /// Sojourn percentile, ns (nearest-rank; 0.0 for an empty window).
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        percentile(&self.sojourn_ns, p)
+    }
+
+    pub fn mean_sojourn_ns(&self) -> f64 {
+        if self.sojourn_ns.is_empty() {
+            0.0
+        } else {
+            self.sojourn_ns.iter().sum::<f64>() / self.sojourn_ns.len() as f64
+        }
+    }
+
+    /// Arrival rate over the window span, queries/second.
+    pub fn arrival_qps(&self) -> f64 {
+        let span_ns = (self.end_ns - self.start_ns) as f64;
+        if span_ns <= 0.0 {
+            0.0
+        } else {
+            self.queries() as f64 / (span_ns / 1e9)
+        }
     }
 }
 
@@ -322,6 +403,7 @@ pub fn drive(
     OpenLoopReport {
         offered_qps: offered_qps(arrivals_ns),
         sojourn_ns: sojourn,
+        arrivals_ns: arrivals_ns.to_vec(),
         stats,
         horizon_ns: horizon,
         shards: shard_loads,
@@ -798,6 +880,7 @@ mod tests {
     fn report_edge_cases_on_zero_queries() {
         let empty = OpenLoopReport {
             sojourn_ns: Vec::new(),
+            arrivals_ns: Vec::new(),
             stats: ExecStats::default(),
             horizon_ns: 0.0,
             offered_qps: 0.0,
@@ -811,6 +894,56 @@ mod tests {
         // own empty-slice contract.
         assert_eq!(empty.percentile_ns(99.0), 0.0);
         assert_eq!(empty.batches(), 0);
+        // No timeline, no windows.
+        assert!(empty.windows(1_000).is_empty());
+    }
+
+    #[test]
+    fn windows_partition_queries_and_keep_lulls() {
+        let m = model();
+        let map = mapping_2x2();
+        let rep = Replication::identity(2, 4);
+        let backend = SimBackend::from_parts(&map, &rep, &m, true);
+        // 6 queries: a pair in window 1, a lull across windows 2-3, a
+        // quad in window 4 (1 ms windows).
+        let queries = some_queries(6);
+        let arrivals: Vec<u64> =
+            vec![1_100_000, 1_900_000, 4_000_000, 4_200_000, 4_400_000, 4_600_000];
+        let report = drive(&backend, &queries, &arrivals, &policy(4, 100));
+        let ws = report.windows(1_000_000);
+        // Contiguous indexes 1..=4, lull windows present but empty.
+        assert_eq!(ws.iter().map(|w| w.index).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        assert_eq!(ws[0].queries(), 2);
+        assert_eq!(ws[1].queries(), 0);
+        assert_eq!(ws[2].queries(), 0);
+        assert_eq!(ws[3].queries(), 4);
+        assert_eq!(ws[0].start_ns, 1_000_000);
+        assert_eq!(ws[0].end_ns, 2_000_000);
+        // Windows partition the report: same sojourns, same order.
+        let regathered: Vec<f64> = ws.iter().flat_map(|w| w.sojourn_ns.clone()).collect();
+        assert_eq!(regathered, report.sojourn_ns);
+        // Empty windows read zero percentiles and rates; occupied ones
+        // agree with a direct nearest-rank over their slice.
+        assert_eq!(ws[1].percentile_ns(99.0), 0.0);
+        assert_eq!(ws[1].arrival_qps(), 0.0);
+        assert_eq!(ws[3].percentile_ns(50.0), percentile(&report.sojourn_ns[2..], 50.0));
+        assert!((ws[3].arrival_qps() - 4_000.0).abs() < 1e-9);
+        let mean_tail = report.sojourn_ns[2..].iter().sum::<f64>() / 4.0;
+        assert!((ws[3].mean_sojourn_ns() - mean_tail).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "window width must be positive")]
+    fn windows_reject_zero_width() {
+        let report = OpenLoopReport {
+            sojourn_ns: vec![1.0],
+            arrivals_ns: vec![0],
+            stats: ExecStats::default(),
+            horizon_ns: 1.0,
+            offered_qps: 0.0,
+            shards: Vec::new(),
+        };
+        report.windows(0);
     }
 
     #[test]

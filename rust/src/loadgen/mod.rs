@@ -30,6 +30,6 @@ pub mod arrival;
 pub mod driver;
 
 pub use arrival::{ArrivalKind, Arrivals};
-pub use driver::{drive, OpenLoopReport, ShardLoad};
+pub use driver::{drive, OpenLoopReport, ReportWindow, ShardLoad};
 #[allow(deprecated)]
 pub use driver::{drive_sharded, drive_single};

@@ -11,6 +11,7 @@
 //! recross cluster    --shards 4 --dataset software # sharded scatter-gather pool
 //! recross autotune   --dataset automotive          # pick dup ratio (knee)
 //! recross status     --json                        # obs-instrumented drive -> metrics snapshot
+//! recross status     --watch --interval 500        # streaming windowed telemetry + SLO alerts
 //! ```
 //!
 //! Configuration flows through one precedence chain: built-in defaults
@@ -66,8 +67,17 @@ fn main() {
         .opt("obs-sample", "1.0", "flight-recorder span sampling rate, 0..=1")
         .opt("obs-ring", "4096", "flight-recorder ring capacity (events)")
         .opt("trace", "", "write Chrome trace-event JSON here (status mode)")
+        .opt("interval", "1000", "watch tick interval, ms (watch.interval_ms)")
+        .opt("ticks", "0", "watch ticks before exiting; 0 streams until interrupted")
+        .opt("slo-p99-ns", "5000000", "SLO: per-window p99 sojourn ceiling, ns")
+        .opt("slo-depth", "64", "SLO: per-window mean queue-depth ceiling")
+        .opt("alerts", "", "write the recross.alerts v1 JSON-lines stream here (watch mode)")
         .flag("obs", "enable the observability plane (metrics + flight recorder)")
         .flag("json", "machine-readable metrics snapshot (status mode)")
+        .flag(
+            "watch",
+            "stream windowed telemetry + SLO burn-rate alerts (status mode)",
+        )
         .flag(
             "replica-routing",
             "spread hot-group replicas across shards; route by power-of-two-choices",
@@ -505,9 +515,14 @@ fn cmd_status(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset:?}"))?
         .scaled(scale);
     let gen = Generator::new(&spec, seed);
+    let policy = BatchPolicy::from_config(prepared.config(), max_batch);
+
+    if args.flag("watch") {
+        return run_watch(args, &prepared, &backend, &obs, &gen, kind, rate, json, &policy);
+    }
+
     let trace = gen.trace(n_requests, seed.wrapping_add(3));
     let arrivals = Arrivals::from_kind(kind, rate, seed).take(trace.queries.len());
-    let policy = BatchPolicy::from_config(prepared.config(), max_batch);
     let report = drive(&backend, &trace.queries, &arrivals, &policy);
     let snap = backend.metrics()?;
 
@@ -551,6 +566,41 @@ fn cmd_status(args: &recross::util::cli::Args) -> anyhow::Result<()> {
             let cells: Vec<String> = buckets.iter().map(|(v, c)| format!("{v}: {c}")).collect();
             println!("  {name:<28} {}", cells.join("  "));
         }
+        // The PR 7 incremental-offline family, zero-filled: the generic
+        // loops above only show metrics the drive actually touched, and a
+        // plain status drive never rebalances — render the section anyway
+        // so the family is discoverable (units in DESIGN.md's catalogue).
+        let ctr = |n: &str| snap.counters.get(n).copied().unwrap_or(0);
+        let gauge = |n: &str| snap.gauges.get(n).copied().unwrap_or(0.0);
+        let pct = |num: u64, den: f64| if den > 0.0 { 100.0 * num as f64 / den } else { 0.0 };
+        println!("offline phase (zeros until a rebalance runs):");
+        println!(
+            "  {:<28} {} / {}",
+            "refreshes / full rebuilds",
+            ctr(names::OFFLINE_REFRESHES),
+            ctr(names::OFFLINE_FULL_REBUILDS)
+        );
+        println!(
+            "  {:<28} {} / {:.0} ({:.1}%)",
+            "groups touched / total",
+            ctr(names::OFFLINE_GROUPS_TOUCHED),
+            gauge(names::OFFLINE_GROUPS_TOTAL),
+            pct(ctr(names::OFFLINE_GROUPS_TOUCHED), gauge(names::OFFLINE_GROUPS_TOTAL))
+        );
+        println!(
+            "  {:<28} {} / {:.0} ({:.1}%)",
+            "ids moved / total",
+            ctr(names::OFFLINE_IDS_MOVED),
+            gauge(names::OFFLINE_IDS_TOTAL),
+            pct(ctr(names::OFFLINE_IDS_MOVED), gauge(names::OFFLINE_IDS_TOTAL))
+        );
+        println!(
+            "  {:<28} {} / {:.0} ({:.1}%)",
+            "tiles installed / total",
+            ctr(names::OFFLINE_TILES_INSTALLED),
+            gauge(names::OFFLINE_TILES_TOTAL),
+            pct(ctr(names::OFFLINE_TILES_INSTALLED), gauge(names::OFFLINE_TILES_TOTAL))
+        );
         println!(
             "flight recorder: {} spans held ({} recorded, {} dropped)",
             obs.recorder().len(),
@@ -570,6 +620,140 @@ fn cmd_status(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Streaming watch mode (`recross status --watch`): every tick drives a
+/// fresh seeded burst through the backend, advances a *simulated* clock
+/// by `watch.interval_ms`, diffs the backend's metrics snapshot into a
+/// telemetry [`recross::obs::Window`], and evaluates the SLO burn-rate
+/// rules — emitting `recross.watch` v1 JSON-lines (`--json`) or a
+/// redrawn `top`-style table. The wall-clock sleep only paces the loop;
+/// every byte on stdout is a function of `(config, seed, tick)`, so two
+/// runs with identical flags produce identical streams. `--ticks N`
+/// bounds the run; `--alerts <path>` writes the `recross.alerts` v1
+/// event stream on exit.
+#[allow(clippy::too_many_arguments)]
+fn run_watch(
+    args: &recross::util::cli::Args,
+    prepared: &recross::deploy::Prepared,
+    backend: &dyn recross::deploy::Backend,
+    obs: &recross::obs::Obs,
+    gen: &Generator,
+    kind: recross::loadgen::ArrivalKind,
+    rate: f64,
+    json: bool,
+    policy: &BatchPolicy,
+) -> anyhow::Result<()> {
+    use recross::loadgen::{drive, Arrivals};
+    use recross::obs::slo::{ALERTS_SCHEMA, ALERTS_VERSION};
+    use recross::obs::{names, Watcher};
+    use recross::util::{Clock, SimClock};
+
+    let n_requests = args.get_positive("requests").map_err(anyhow::Error::msg)?;
+    let wcfg = prepared.config().watch.clone();
+    let scfg = prepared.config().slo.clone();
+    let seed = prepared.config().workload.seed;
+    let mut watcher = Watcher::from_config(&wcfg, &scfg);
+    // Simulated time owns the windowing: ticks land on exact interval
+    // multiples regardless of host scheduling jitter.
+    let clock = SimClock::new();
+    let mut alert_log = String::new();
+    let mut tick: usize = 0;
+    loop {
+        tick += 1;
+        // Fresh traffic each tick, salted by the tick index: the stream
+        // is deterministic yet every window sees new queries.
+        let salt = seed.wrapping_add(1_000 + tick as u64);
+        let trace = gen.trace(n_requests, salt);
+        let arrivals = Arrivals::from_kind(kind, rate, salt).take(trace.queries.len());
+        let report = drive(backend, &trace.queries, &arrivals, policy);
+        obs.gauge_set(names::LOADGEN_SOJOURN_P50_NS, report.percentile_ns(50.0));
+        obs.gauge_set(names::LOADGEN_SOJOURN_P99_NS, report.percentile_ns(99.0));
+        obs.gauge_set(names::LOADGEN_THROUGHPUT_QPS, report.throughput_qps());
+        obs.incr(names::LOADGEN_QUERIES, report.queries() as u64);
+
+        clock.advance(wcfg.interval_ms.saturating_mul(1_000_000));
+        let snap = backend.metrics()?;
+        let (window, alerts) = watcher.tick(clock.now_ns(), &snap);
+        for a in &alerts {
+            alert_log.push_str(&a.to_json_line());
+            alert_log.push('\n');
+        }
+        if json {
+            println!("{}", Watcher::watch_line(&window, &alerts));
+        } else {
+            print_watch_table(&window, &alerts);
+        }
+        if wcfg.ticks > 0 && tick >= wcfg.ticks {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(wcfg.interval_ms));
+    }
+
+    let alerts_out = args.get("alerts");
+    if !alerts_out.is_empty() {
+        std::fs::write(alerts_out, &alert_log)?;
+        // Stderr keeps `--json` stdout pure.
+        eprintln!(
+            "wrote {alerts_out}: {} alert events ({ALERTS_SCHEMA} v{ALERTS_VERSION})",
+            watcher.tracker().emitted()
+        );
+    }
+    Ok(())
+}
+
+/// One `recross top`-style frame for the human watch mode: clears and
+/// redraws when stdout is a terminal, appends frames when piped.
+fn print_watch_table(w: &recross::obs::Window, alerts: &[recross::obs::Alert]) {
+    use recross::obs::names;
+    use recross::util::fmt_ns;
+    use std::io::IsTerminal;
+
+    if std::io::stdout().is_terminal() {
+        print!("\x1b[2J\x1b[H");
+    }
+    println!(
+        "recross watch — window {} @ {:.1}s (dt {} ms)",
+        w.index,
+        w.t_ns as f64 / 1e9,
+        w.dt_ns / 1_000_000
+    );
+    let gauge_ns = |name| w.gauge(name).map_or_else(|| "-".into(), fmt_ns);
+    println!("  {:<26} {:>12}", "sojourn p50", gauge_ns(names::LOADGEN_SOJOURN_P50_NS));
+    println!("  {:<26} {:>12}", "sojourn p99", gauge_ns(names::LOADGEN_SOJOURN_P99_NS));
+    let num = |v: Option<f64>| v.map_or_else(|| "-".into(), |x| format!("{x:.1}"));
+    println!(
+        "  {:<26} {:>12}",
+        "throughput q/s",
+        num(w.gauge(names::LOADGEN_THROUGHPUT_QPS))
+    );
+    println!(
+        "  {:<26} {:>12}",
+        "driven q/s",
+        num(w.counter_rate(names::LOADGEN_QUERIES))
+    );
+    println!(
+        "  {:<26} {:>12}",
+        "queue depth (mean)",
+        num(w.summary_mean(names::BATCHER_QUEUE_DEPTH))
+    );
+    println!(
+        "  {:<26} {:>12}",
+        "batch size (p99)",
+        num(w.percentile(names::BATCHER_BATCH_SIZE, 99.0))
+    );
+    for a in alerts {
+        println!(
+            "  [{}] {} {}: value {:.1} vs threshold {:.1} (burn {:.2} over {} windows)",
+            a.severity.as_str(),
+            a.objective,
+            a.state.as_str(),
+            a.value,
+            a.threshold,
+            a.burn,
+            a.windows,
+        );
+    }
+}
+
 /// Sharded serving demo: partition the pool across `--shards` executor
 /// threads, drive the held-out eval trace through the scatter-gather
 /// front-end, verify the merged reductions against the single-pool
@@ -587,8 +771,11 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         report as cluster_report, simulate_with_replicas, ClusterConfig, PartitionPolicy,
         ReplicaPlan, RoutePolicy,
     };
+    use recross::deploy::Backend;
     use recross::graph::DeltaParams;
     use recross::metrics::Histogram;
+    use recross::obs::{names, Watcher};
+    use recross::util::{Clock, SimClock};
     use recross::workload::Query;
 
     let scale: f64 = args.get_as("scale").map_err(anyhow::Error::msg)?;
@@ -611,7 +798,13 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         scheme.name()
     );
 
-    let cfg = cli_config(args, Config::serving_default())?;
+    let mut cfg = cli_config(args, Config::serving_default())?;
+    // The drift loop below feeds measured telemetry (the degradation
+    // series) into the delta-rebalance thresholds, so the pool must
+    // observe itself: force the metrics plane on for this subcommand.
+    cfg.obs.enabled = true;
+    let wcfg = cfg.watch.clone();
+    let scfg = cfg.slo.clone();
     let slack: f64 = args.get_as("slack").map_err(anyhow::Error::msg)?;
     anyhow::ensure!(slack >= 0.0, "--slack must be non-negative");
     let ccfg = ClusterConfig {
@@ -706,6 +899,12 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         queries.extend(drifted.queries);
     }
     let wave = (max_batch * pool.cluster().num_shards()).max(64);
+    // Telemetry watcher over the pool's own snapshots: one simulated
+    // tick per serving wave diffs the metrics into windows, evaluates
+    // the SLO burn-rate rules, and accumulates the drift-degradation
+    // series that sizes the delta-rebalance thresholds below.
+    let mut watcher = Watcher::from_config(&wcfg, &scfg);
+    let wclock = SimClock::new();
     let mut responses = Vec::with_capacity(queries.len());
     // Traffic window since the last epoch swap — the sample the remap's
     // frequencies/partition are recomputed from. A single wave (64-ish
@@ -716,6 +915,20 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     for chunk in queries.chunks(wave) {
         responses.extend(handle.reduce_many(chunk)?);
+        wclock.advance(wcfg.interval_ms.saturating_mul(1_000_000));
+        let (_, wave_alerts) = watcher.tick(wclock.now_ns(), &pool.metrics()?);
+        for a in &wave_alerts {
+            println!(
+                "  slo [{}] {} {}: {:.1} vs {:.1} (burn {:.2}/{} windows)",
+                a.severity.as_str(),
+                a.objective,
+                a.state.as_str(),
+                a.value,
+                a.threshold,
+                a.burn,
+                a.windows,
+            );
+        }
         if mode.rebalance() {
             recent.extend_from_slice(chunk);
             if handle.rebalance_due() {
@@ -728,14 +941,20 @@ fn cmd_cluster(args: &recross::util::cli::Args) -> anyhow::Result<()> {
                     queries: std::mem::take(&mut recent),
                 });
                 recent.clear();
-                let report = pool
-                    .cluster()
-                    .rebalance_incremental(&window, &DeltaParams::default())?;
+                // Thresholds from telemetry, not constants: the watched
+                // degradation series decides how far a group must drift
+                // before its tiles are re-derived (PR 7 follow-up).
+                let params = DeltaParams::from_observed(
+                    &watcher.series().gauge_values(names::DRIFT_DEGRADATION),
+                );
+                let report = pool.cluster().rebalance_incremental(&window, &params)?;
                 swaps += 1;
                 println!(
-                    "drift detected (degradation {degradation:.2}, {} recent queries) -> {} to epoch {} \
+                    "drift detected (degradation {degradation:.2}, {} recent queries, \
+                     rel threshold {:.2}) -> {} to epoch {} \
                      ({}/{} groups re-planned, {} shard installs, {}/{} tiles shipped)",
                     window.queries.len(),
+                    params.rel_threshold,
                     if report.full { "full rebalance" } else { "delta rebalance" },
                     report.epoch,
                     report.groups_changed,

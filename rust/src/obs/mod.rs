@@ -15,6 +15,14 @@
 //!   → execute → merge) on injected-[`crate::util::Clock`] timestamps,
 //!   dumpable as Chrome trace-event JSON for Perfetto.
 //!
+//! On top of the snapshot sits the **signal plane**: [`timeseries`]
+//! diffs successive snapshots on injected clock ticks into fixed-
+//! capacity per-metric rings (counter rates, gauge series, windowed
+//! summary means, exact windowed histogram percentiles), and [`slo`]
+//! evaluates declarative objectives over those windows with multi-window
+//! burn-rate rules, emitting a deterministic `recross.alerts` v1 stream
+//! (`recross status --watch`).
+//!
 //! **Off by default.** Construction is driven by
 //! [`crate::config::ObsConfig`]; a disabled [`Obs`] reduces every
 //! record call to one branch ([`Obs::enabled`] is a plain bool read —
@@ -27,9 +35,13 @@
 
 pub mod recorder;
 pub mod registry;
+pub mod slo;
+pub mod timeseries;
 
 pub use recorder::{FlightRecorder, SpanEvent, Stage};
 pub use registry::{MetricsRegistry, MetricsSnapshot};
+pub use slo::{Alert, Objective, SloTracker, Watcher};
+pub use timeseries::{TimeSeries, Window};
 
 use crate::config::ObsConfig;
 use crate::metrics::Summary;
@@ -114,6 +126,15 @@ pub mod names {
     pub const OFFLINE_TILES_INSTALLED: &str = "offline.tiles_installed";
     /// Shard tiles across the cluster after the last rebalance — gauge.
     pub const OFFLINE_TILES_TOTAL: &str = "offline.tiles_total";
+
+    /// Watch-loop p50 sojourn of the last drive window (ns) — gauge.
+    pub const LOADGEN_SOJOURN_P50_NS: &str = "loadgen.sojourn_p50_ns";
+    /// Watch-loop p99 sojourn of the last drive window (ns) — gauge.
+    pub const LOADGEN_SOJOURN_P99_NS: &str = "loadgen.sojourn_p99_ns";
+    /// Watch-loop achieved throughput of the last drive (qps) — gauge.
+    pub const LOADGEN_THROUGHPUT_QPS: &str = "loadgen.throughput_qps";
+    /// Queries driven through the watch loop — counter.
+    pub const LOADGEN_QUERIES: &str = "loadgen.queries";
 }
 
 /// One shared handle over the metrics plane and the flight recorder.

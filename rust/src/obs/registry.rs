@@ -152,8 +152,12 @@ impl MetricsSnapshot {
     /// the other side's value (last-write-wins), summaries merge via
     /// Welford, histogram counts add.
     pub fn merge(&mut self, other: &MetricsSnapshot) {
+        // Counters and bucket counts saturate rather than wrap: a merge
+        // of adversarial (or corrupted) near-`u64::MAX` snapshots must
+        // stay monotone, never jump backwards past zero.
         for (k, v) in &other.counters {
-            *self.counters.entry(k.clone()).or_insert(0) += v;
+            let c = self.counters.entry(k.clone()).or_insert(0);
+            *c = c.saturating_add(*v);
         }
         for (k, v) in &other.gauges {
             self.gauges.insert(k.clone(), *v);
@@ -169,7 +173,8 @@ impl MetricsSnapshot {
             // Merge two ascending sparse lists.
             let mut merged: BTreeMap<u64, u64> = mine.iter().copied().collect();
             for &(value, count) in pairs {
-                *merged.entry(value).or_insert(0) += count;
+                let c = merged.entry(value).or_insert(0);
+                *c = c.saturating_add(count);
             }
             *mine = merged.into_iter().collect();
         }

@@ -1,0 +1,677 @@
+//! Declarative SLOs over the telemetry time-series, evaluated with
+//! multi-window burn-rate rules, emitting a deterministic
+//! **`recross.alerts` v1** stream.
+//!
+//! An [`Objective`] names a windowed signal ([`SloSignal`] — a gauge, a
+//! counter rate, a summary's window mean, or an exact windowed histogram
+//! percentile), a threshold, and the side the signal must stay on
+//! ([`Cmp`]). Each [`SloTracker::evaluate`] call samples every objective
+//! against one [`Window`] and updates two Google-SRE-style burn-rate
+//! rules per objective:
+//!
+//! * **fast** (severity `page`): the last `fast_windows` consecutive
+//!   windows all breached — catches a sharp overload within one or two
+//!   ticks;
+//! * **slow** (severity `warn`): at least `slow_burn` of the last
+//!   `slow_windows` windows breached — catches a slow sustained burn
+//!   that never trips the fast rule.
+//!
+//! Alerts are **edge-triggered**: one `firing` event when a rule starts
+//! to fire, one `resolved` event when it stops. The stream is a pure
+//! function of the tick sequence — same windows in, same alert bytes
+//! out ([`Alert::to_json_line`] uses the same non-finite→`null` float
+//! rules as the metrics snapshot exporter).
+//!
+//! [`Watcher`] bundles a [`TimeSeries`] with a tracker — the composition
+//! `recross status --watch` and the cluster drift loop both run.
+
+use std::collections::VecDeque;
+
+use super::timeseries::{TimeSeries, Window};
+use crate::config::{SloConfig, WatchConfig};
+use crate::obs::{names, MetricsSnapshot};
+
+/// Schema tag of every alert event.
+pub const ALERTS_SCHEMA: &str = "recross.alerts";
+/// Alert stream schema version.
+pub const ALERTS_VERSION: u32 = 1;
+
+/// Which windowed signal an objective watches.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SloSignal {
+    /// Sampled gauge value.
+    Gauge { metric: String },
+    /// Counter increments per second over the window.
+    CounterRate { metric: String },
+    /// Summary mean over the window (`Δsum / Δcount`).
+    SummaryMean { metric: String },
+    /// Exact windowed percentile of a histogram metric.
+    HistogramPercentile { metric: String, p: f64 },
+}
+
+impl SloSignal {
+    /// Stable human/machine label, e.g. `p99(batcher.batch_size)`.
+    pub fn label(&self) -> String {
+        match self {
+            SloSignal::Gauge { metric } => format!("gauge({metric})"),
+            SloSignal::CounterRate { metric } => format!("rate({metric})"),
+            SloSignal::SummaryMean { metric } => format!("mean({metric})"),
+            SloSignal::HistogramPercentile { metric, p } => format!("p{p}({metric})"),
+        }
+    }
+
+    /// Sample the signal from one window; `None` when the metric is
+    /// absent (that window is not counted against the objective).
+    pub fn sample(&self, w: &Window) -> Option<f64> {
+        match self {
+            SloSignal::Gauge { metric } => w.gauge(metric),
+            SloSignal::CounterRate { metric } => w.counter_rate(metric),
+            SloSignal::SummaryMean { metric } => w.summary_mean(metric),
+            SloSignal::HistogramPercentile { metric, p } => w.percentile(metric, *p),
+        }
+    }
+}
+
+/// Side of the threshold the signal is *supposed* to stay on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    /// Healthy while `value <= threshold` (latency, depth, error rate).
+    Below,
+    /// Healthy while `value >= threshold` (throughput floors).
+    Above,
+}
+
+/// Alert severity, one per burn-rate rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Fast-burn rule tripped: page.
+    Page,
+    /// Slow-burn rule tripped: warn.
+    Warn,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Page => "page",
+            Severity::Warn => "warn",
+        }
+    }
+}
+
+/// Edge direction of an alert event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertState {
+    Firing,
+    Resolved,
+}
+
+impl AlertState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AlertState::Firing => "firing",
+            AlertState::Resolved => "resolved",
+        }
+    }
+}
+
+/// One declarative service-level objective.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Objective {
+    /// Stable name carried on every alert, e.g. `sojourn-p99`.
+    pub name: String,
+    pub signal: SloSignal,
+    pub cmp: Cmp,
+    pub threshold: f64,
+    /// Fast rule: this many consecutive breached windows page.
+    pub fast_windows: usize,
+    /// Slow rule: evaluated over this many trailing windows.
+    pub slow_windows: usize,
+    /// Slow rule: breached fraction that warns, in `(0, 1]`.
+    pub slow_burn: f64,
+}
+
+impl Objective {
+    /// Objective with the default burn-rate rules (fast 1-window page,
+    /// slow 12-window ≥ 50 % warn).
+    pub fn new(name: &str, signal: SloSignal, cmp: Cmp, threshold: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            signal,
+            cmp,
+            threshold,
+            fast_windows: 1,
+            slow_windows: 12,
+            slow_burn: 0.5,
+        }
+    }
+
+    /// Override both burn-rate rules.
+    pub fn with_burn_rules(
+        mut self,
+        fast_windows: usize,
+        slow_windows: usize,
+        slow_burn: f64,
+    ) -> Self {
+        assert!(fast_windows >= 1, "fast rule needs at least one window");
+        assert!(
+            slow_windows >= fast_windows,
+            "slow rule must span at least the fast rule"
+        );
+        assert!(
+            slow_burn > 0.0 && slow_burn <= 1.0,
+            "slow_burn is a fraction in (0, 1]"
+        );
+        self.fast_windows = fast_windows;
+        self.slow_windows = slow_windows;
+        self.slow_burn = slow_burn;
+        self
+    }
+
+    fn breached(&self, value: f64) -> bool {
+        match self.cmp {
+            Cmp::Below => value > self.threshold,
+            Cmp::Above => value < self.threshold,
+        }
+    }
+}
+
+/// One edge-triggered alert event (`recross.alerts` v1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Alert {
+    /// Monotone sequence number within one tracker's stream.
+    pub seq: u64,
+    /// Tick time of the evaluating window, ns.
+    pub t_ns: u64,
+    pub objective: String,
+    /// Signal label ([`SloSignal::label`]).
+    pub signal: String,
+    pub severity: Severity,
+    pub state: AlertState,
+    /// The signal's sample in the evaluating window.
+    pub value: f64,
+    pub threshold: f64,
+    /// Breached fraction over the rule's window span.
+    pub burn: f64,
+    /// The rule's window span.
+    pub windows: usize,
+}
+
+impl Alert {
+    /// One `recross.alerts` v1 event as a single JSON line (no trailing
+    /// newline). Non-finite floats serialize as `null`, matching the
+    /// metrics snapshot exporter, so the stream is byte-deterministic.
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"schema\": \"{}\", \"version\": {}, \"seq\": {}, \"t_ns\": {}, \
+             \"objective\": \"{}\", \"signal\": \"{}\", \"severity\": \"{}\", \
+             \"state\": \"{}\", \"value\": {}, \"threshold\": {}, \"burn\": {}, \
+             \"windows\": {}}}",
+            ALERTS_SCHEMA,
+            ALERTS_VERSION,
+            self.seq,
+            self.t_ns,
+            escape(&self.objective),
+            escape(&self.signal),
+            self.severity.as_str(),
+            self.state.as_str(),
+            json_f64(self.value),
+            json_f64(self.threshold),
+            json_f64(self.burn),
+            self.windows,
+        )
+    }
+}
+
+/// Rolling per-objective rule state.
+#[derive(Debug)]
+struct ObjectiveState {
+    /// Trailing breach flags, newest last, capped at `slow_windows`.
+    breaches: VecDeque<bool>,
+    fast_firing: bool,
+    slow_firing: bool,
+}
+
+/// Evaluates a set of [`Objective`]s window by window.
+#[derive(Debug, Default)]
+pub struct SloTracker {
+    objectives: Vec<Objective>,
+    states: Vec<ObjectiveState>,
+    seq: u64,
+}
+
+impl SloTracker {
+    /// Tracker with no objectives (evaluates to an empty stream).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one objective (builder style).
+    pub fn with_objective(mut self, o: Objective) -> Self {
+        self.states.push(ObjectiveState {
+            breaches: VecDeque::with_capacity(o.slow_windows),
+            fast_firing: false,
+            slow_firing: false,
+        });
+        self.objectives.push(o);
+        self
+    }
+
+    /// The default objective set from the `slo.*` config block:
+    ///
+    /// * `sojourn-p99` — the watch loop's per-window p99 sojourn gauge
+    ///   ([`names::LOADGEN_SOJOURN_P99_NS`]) stays below
+    ///   `slo.p99_sojourn_ns`;
+    /// * `queue-depth` — the window mean of
+    ///   [`names::BATCHER_QUEUE_DEPTH`] stays below
+    ///   `slo.max_queue_depth`.
+    pub fn from_config(slo: &SloConfig) -> Self {
+        Self::new()
+            .with_objective(
+                Objective::new(
+                    "sojourn-p99",
+                    SloSignal::Gauge {
+                        metric: names::LOADGEN_SOJOURN_P99_NS.to_string(),
+                    },
+                    Cmp::Below,
+                    slo.p99_sojourn_ns,
+                )
+                .with_burn_rules(slo.fast_windows, slo.slow_windows, slo.slow_burn),
+            )
+            .with_objective(
+                Objective::new(
+                    "queue-depth",
+                    SloSignal::SummaryMean {
+                        metric: names::BATCHER_QUEUE_DEPTH.to_string(),
+                    },
+                    Cmp::Below,
+                    slo.max_queue_depth,
+                )
+                .with_burn_rules(slo.fast_windows, slo.slow_windows, slo.slow_burn),
+            )
+    }
+
+    pub fn objectives(&self) -> &[Objective] {
+        &self.objectives
+    }
+
+    /// Alert events emitted so far (= next sequence number).
+    pub fn emitted(&self) -> u64 {
+        self.seq
+    }
+
+    /// Sample every objective against one window and return the alert
+    /// events whose rules changed state, in declaration order (fast rule
+    /// before slow rule per objective).
+    pub fn evaluate(&mut self, w: &Window) -> Vec<Alert> {
+        let mut out = Vec::new();
+        for (o, st) in self.objectives.iter().zip(&mut self.states) {
+            let Some(value) = o.signal.sample(w) else {
+                continue; // metric absent: the window is not counted
+            };
+            if st.breaches.len() == o.slow_windows {
+                st.breaches.pop_front();
+            }
+            st.breaches.push_back(o.breached(value));
+
+            // Fast rule: the last `fast_windows` samples all breached.
+            let have_fast = st.breaches.len() >= o.fast_windows;
+            let fast_hits = st
+                .breaches
+                .iter()
+                .rev()
+                .take(o.fast_windows)
+                .filter(|&&b| b)
+                .count();
+            let fast_now = have_fast && fast_hits == o.fast_windows;
+            let fast_burn = fast_hits as f64 / o.fast_windows as f64;
+
+            // Slow rule: breached fraction over the full slow span.
+            let have_slow = st.breaches.len() >= o.slow_windows;
+            let slow_hits = st.breaches.iter().filter(|&&b| b).count();
+            let slow_burn = slow_hits as f64 / o.slow_windows as f64;
+            let slow_now = have_slow && slow_burn >= o.slow_burn;
+
+            for (rule_now, firing, severity, burn, windows) in [
+                (fast_now, &mut st.fast_firing, Severity::Page, fast_burn, o.fast_windows),
+                (slow_now, &mut st.slow_firing, Severity::Warn, slow_burn, o.slow_windows),
+            ] {
+                if rule_now == *firing {
+                    continue; // no edge
+                }
+                *firing = rule_now;
+                out.push(Alert {
+                    seq: self.seq,
+                    t_ns: w.t_ns,
+                    objective: o.name.clone(),
+                    signal: o.signal.label(),
+                    severity,
+                    state: if rule_now {
+                        AlertState::Firing
+                    } else {
+                        AlertState::Resolved
+                    },
+                    value,
+                    threshold: o.threshold,
+                    burn,
+                    windows,
+                });
+                self.seq += 1;
+            }
+        }
+        out
+    }
+}
+
+/// A [`TimeSeries`] and an [`SloTracker`] ticking together — the closed
+/// signal plane `recross status --watch` and the cluster drift loop run.
+#[derive(Debug)]
+pub struct Watcher {
+    series: TimeSeries,
+    tracker: SloTracker,
+}
+
+/// Schema tag of every `--watch` JSON line.
+pub const WATCH_SCHEMA: &str = "recross.watch";
+/// Watch stream schema version.
+pub const WATCH_VERSION: u32 = 1;
+
+impl Watcher {
+    pub fn new(ring_capacity: usize, tracker: SloTracker) -> Self {
+        Self {
+            series: TimeSeries::new(ring_capacity),
+            tracker,
+        }
+    }
+
+    /// Watcher from the `watch.*` / `slo.*` config blocks.
+    pub fn from_config(watch: &WatchConfig, slo: &SloConfig) -> Self {
+        Self::new(watch.ring_capacity, SloTracker::from_config(slo))
+    }
+
+    /// One tick: diff the snapshot into the rings, evaluate every
+    /// objective, return the window and its (possibly empty) alerts.
+    pub fn tick(&mut self, now_ns: u64, snap: &MetricsSnapshot) -> (Window, Vec<Alert>) {
+        let w = self.series.tick(now_ns, snap);
+        let alerts = self.tracker.evaluate(&w);
+        (w, alerts)
+    }
+
+    pub fn series(&self) -> &TimeSeries {
+        &self.series
+    }
+
+    pub fn tracker(&self) -> &SloTracker {
+        &self.tracker
+    }
+
+    /// One `recross.watch` v1 JSON line for a tick: the full window
+    /// (counter deltas/rates, gauges, windowed summary means, windowed
+    /// p50/p90/p99 per histogram) plus the tick's alert events inline.
+    /// Byte-deterministic: BTreeMap ordering, snapshot-exporter float
+    /// rules.
+    pub fn watch_line(w: &Window, alerts: &[Alert]) -> String {
+        let mut out = String::with_capacity(512);
+        out.push_str(&format!(
+            "{{\"schema\": \"{}\", \"version\": {}, \"tick\": {}, \"t_ns\": {}, \"dt_ns\": {}",
+            WATCH_SCHEMA, WATCH_VERSION, w.index, w.t_ns, w.dt_ns
+        ));
+        out.push_str(", \"counters\": {");
+        push_join(&mut out, w.counters.iter(), |(k, c)| {
+            format!(
+                "\"{}\": {{\"delta\": {}, \"rate_per_sec\": {}}}",
+                escape(k),
+                c.delta,
+                json_f64(c.rate_per_sec)
+            )
+        });
+        out.push_str("}, \"gauges\": {");
+        push_join(&mut out, w.gauges.iter(), |(k, v)| {
+            format!("\"{}\": {}", escape(k), json_f64(*v))
+        });
+        out.push_str("}, \"summaries\": {");
+        push_join(&mut out, w.summaries.iter(), |(k, s)| {
+            format!(
+                "\"{}\": {{\"count\": {}, \"mean\": {}}}",
+                escape(k),
+                s.count,
+                json_f64(s.mean)
+            )
+        });
+        out.push_str("}, \"percentiles\": {");
+        push_join(
+            &mut out,
+            w.histograms.iter().filter(|(_, h)| h.total() > 0),
+            |(k, h)| {
+                format!(
+                    "\"{}\": {{\"p50\": {}, \"p90\": {}, \"p99\": {}}}",
+                    escape(k),
+                    h.percentile(50.0),
+                    h.percentile(90.0),
+                    h.percentile(99.0)
+                )
+            },
+        );
+        out.push_str("}, \"alerts\": [");
+        push_join(&mut out, alerts.iter(), Alert::to_json_line);
+        out.push_str("]}");
+        out
+    }
+}
+
+fn push_join<I, T, F>(out: &mut String, items: I, render: F)
+where
+    I: IntoIterator<Item = T>,
+    F: Fn(T) -> String,
+{
+    for (i, item) in items.into_iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&render(item));
+    }
+}
+
+/// Finite floats print shortest-round-trip; NaN/∞ are not JSON — `null`.
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn gauge_window(index: u64, t_ns: u64, name: &str, value: f64) -> Window {
+        let mut gauges = BTreeMap::new();
+        gauges.insert(name.to_string(), value);
+        Window {
+            index,
+            t_ns,
+            dt_ns: 1_000,
+            counters: BTreeMap::new(),
+            gauges,
+            summaries: BTreeMap::new(),
+            histograms: BTreeMap::new(),
+        }
+    }
+
+    fn latency_objective(fast: usize, slow: usize, burn: f64) -> Objective {
+        Objective::new("lat", SloSignal::Gauge { metric: "g".into() }, Cmp::Below, 100.0)
+            .with_burn_rules(fast, slow, burn)
+    }
+
+    #[test]
+    fn fast_rule_pages_on_the_breach_and_resolves_after() {
+        let mut t = SloTracker::new().with_objective(latency_objective(1, 4, 0.75));
+        // Healthy windows: silence.
+        for i in 0..3 {
+            assert!(t.evaluate(&gauge_window(i, i * 10, "g", 50.0)).is_empty());
+        }
+        // One breach: the 1-window fast rule pages immediately.
+        let a = t.evaluate(&gauge_window(3, 30, "g", 250.0));
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].severity, Severity::Page);
+        assert_eq!(a[0].state, AlertState::Firing);
+        assert_eq!(a[0].objective, "lat");
+        assert_eq!(a[0].value, 250.0);
+        assert_eq!(a[0].burn, 1.0);
+        // Recovery: one resolved event, then silence.
+        let r = t.evaluate(&gauge_window(4, 40, "g", 50.0));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].state, AlertState::Resolved);
+        assert!(t.evaluate(&gauge_window(5, 50, "g", 50.0)).is_empty());
+        assert_eq!(t.emitted(), 2);
+    }
+
+    #[test]
+    fn slow_rule_warns_on_sustained_burn_only() {
+        // fast=2 so isolated breaches never page; slow: ≥3 of 4 warn.
+        let mut t = SloTracker::new().with_objective(latency_objective(2, 4, 0.75));
+        // Alternating breaches: 2 of any 4, never 2 consecutive — silent.
+        for i in 0..8u64 {
+            let v = if i % 2 == 0 { 250.0 } else { 50.0 };
+            assert!(t.evaluate(&gauge_window(i, i * 10, "g", v)).is_empty());
+        }
+        // Now a sustained burn: breach 3 of the last 4.
+        assert!(t.evaluate(&gauge_window(8, 80, "g", 250.0)).is_empty());
+        let a = t.evaluate(&gauge_window(9, 90, "g", 250.0));
+        // Two consecutive breaches trip fast(2); 3-of-4 trips slow.
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].severity, Severity::Page);
+        assert_eq!(a[1].severity, Severity::Warn);
+        assert_eq!(a[1].burn, 0.75);
+        assert_eq!(a[1].windows, 4);
+    }
+
+    #[test]
+    fn above_objectives_breach_below_the_floor() {
+        let o = Objective::new(
+            "tput",
+            SloSignal::CounterRate { metric: "c".into() },
+            Cmp::Above,
+            10.0,
+        );
+        assert!(o.breached(5.0));
+        assert!(!o.breached(10.0));
+        assert!(!o.breached(50.0));
+    }
+
+    #[test]
+    fn missing_metric_windows_are_not_counted() {
+        let mut t = SloTracker::new().with_objective(latency_objective(1, 2, 1.0));
+        // The gauge never appears: no samples, no alerts.
+        for i in 0..5 {
+            assert!(t.evaluate(&gauge_window(i, i * 10, "other", 1e9)).is_empty());
+        }
+        assert_eq!(t.emitted(), 0);
+    }
+
+    #[test]
+    fn alert_stream_is_byte_deterministic() {
+        let run = || {
+            let mut t = SloTracker::new().with_objective(latency_objective(1, 3, 0.67));
+            let mut lines = String::new();
+            for i in 0..10u64 {
+                let v = if (4..8).contains(&i) { 300.0 } else { 10.0 };
+                for a in t.evaluate(&gauge_window(i, i * 1_000, "g", v)) {
+                    lines.push_str(&a.to_json_line());
+                    lines.push('\n');
+                }
+            }
+            lines
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert!(a.contains("\"schema\": \"recross.alerts\""));
+        assert!(a.contains("\"version\": 1"));
+        assert!(a.contains("\"state\": \"firing\""));
+        assert!(a.contains("\"state\": \"resolved\""));
+    }
+
+    #[test]
+    fn non_finite_samples_serialize_as_null() {
+        let a = Alert {
+            seq: 0,
+            t_ns: 5,
+            objective: "x".into(),
+            signal: "gauge(g)".into(),
+            severity: Severity::Page,
+            state: AlertState::Firing,
+            value: f64::NAN,
+            threshold: f64::INFINITY,
+            burn: 1.0,
+            windows: 1,
+        };
+        let js = a.to_json_line();
+        assert!(js.contains("\"value\": null"));
+        assert!(js.contains("\"threshold\": null"));
+        assert!(js.contains("\"burn\": 1"));
+    }
+
+    #[test]
+    fn watch_line_carries_every_family_and_inline_alerts() {
+        use crate::metrics::Histogram;
+        use crate::obs::timeseries::CounterWindow;
+        let mut w = gauge_window(2, 2_000, "g", 1.5);
+        w.counters.insert(
+            "c".into(),
+            CounterWindow {
+                delta: 7,
+                rate_per_sec: 3.5,
+            },
+        );
+        let mut h = Histogram::new();
+        h.add_n(4, 10);
+        w.histograms.insert("h".into(), h);
+        w.histograms.insert("empty".into(), Histogram::new());
+        let alerts = vec![Alert {
+            seq: 0,
+            t_ns: 2_000,
+            objective: "lat".into(),
+            signal: "gauge(g)".into(),
+            severity: Severity::Warn,
+            state: AlertState::Firing,
+            value: 1.5,
+            threshold: 1.0,
+            burn: 0.5,
+            windows: 4,
+        }];
+        let line = Watcher::watch_line(&w, &alerts);
+        assert!(line.starts_with("{\"schema\": \"recross.watch\", \"version\": 1"));
+        assert!(line.contains("\"tick\": 2"));
+        assert!(line.contains("\"c\": {\"delta\": 7, \"rate_per_sec\": 3.5}"));
+        assert!(line.contains("\"g\": 1.5"));
+        assert!(line.contains("\"h\": {\"p50\": 4, \"p90\": 4, \"p99\": 4}"));
+        // Histograms empty this window are omitted, not zero-filled.
+        assert!(!line.contains("\"empty\""));
+        assert!(line.contains("\"alerts\": [{\"schema\": \"recross.alerts\""));
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn watcher_composes_series_and_tracker() {
+        let mut w = Watcher::new(
+            8,
+            SloTracker::new().with_objective(latency_objective(1, 2, 1.0)),
+        );
+        let mut snap = MetricsSnapshot::new("t");
+        snap.gauges.insert("g".into(), 10.0);
+        let (win, alerts) = w.tick(0, &snap);
+        assert_eq!(win.index, 0);
+        assert!(alerts.is_empty());
+        snap.gauges.insert("g".into(), 500.0);
+        let (_, alerts) = w.tick(1_000, &snap);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(w.series().ticks(), 2);
+        assert_eq!(w.tracker().emitted(), 1);
+    }
+}

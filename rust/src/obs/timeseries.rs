@@ -1,0 +1,441 @@
+//! Windowed telemetry time-series: [`MetricsSnapshot`] diffs on injected
+//! clock ticks.
+//!
+//! A [`MetricsSnapshot`] is one cumulative point in time; everything the
+//! closed-loop consumers need — rates, windowed percentiles, sustained
+//! breach detection — lives in the *difference* between successive
+//! snapshots. [`TimeSeries::tick`] takes the current simulated-or-wall
+//! time (an injected [`crate::util::Clock`] reading, so sim and live
+//! share one code path and a [`crate::util::SimClock`] makes tick
+//! sequences bit-reproducible) plus the current snapshot, diffs it
+//! against the previous tick, and produces one [`Window`]:
+//!
+//! * **counters** (monotone) → per-window delta and rate/s
+//!   (`saturating_sub`, so a registry reset degrades to a zero window
+//!   instead of an underflow);
+//! * **gauges** → the sampled value;
+//! * **summaries** → per-window count and mean recovered from the
+//!   Welford accumulators (`Δsum / Δcount`; extrema are cumulative and
+//!   are not windowable, so they are deliberately absent);
+//! * **histograms** → sparse bucket subtraction rebuilt into a
+//!   [`Histogram`], so windowed percentiles are *exact* nearest-rank
+//!   over exactly the window's observations.
+//!
+//! Each window is also retained in fixed-capacity per-metric rings
+//! ([`Ring`]; oldest point evicted first), which is what
+//! [`super::slo::SloTracker`] burn-rate rules and
+//! [`crate::graph::DeltaParams::from_observed`] read.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::metrics::Histogram;
+use crate::obs::MetricsSnapshot;
+
+/// Fixed-capacity series of `(t_ns, value)` points, oldest evicted first.
+#[derive(Debug, Clone)]
+pub struct Ring {
+    capacity: usize,
+    points: VecDeque<(u64, f64)>,
+}
+
+impl Ring {
+    /// Empty ring holding at most `capacity` points (`capacity >= 1`).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "a zero-capacity ring can hold nothing");
+        Self {
+            capacity,
+            points: VecDeque::with_capacity(capacity),
+        }
+    }
+
+    fn push(&mut self, t_ns: u64, value: f64) {
+        if self.points.len() == self.capacity {
+            self.points.pop_front();
+        }
+        self.points.push_back((t_ns, value));
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Points oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, f64)> + '_ {
+        self.points.iter().copied()
+    }
+
+    /// Values only, oldest → newest.
+    pub fn values(&self) -> Vec<f64> {
+        self.points.iter().map(|&(_, v)| v).collect()
+    }
+
+    /// Most recent point, if any.
+    pub fn latest(&self) -> Option<(u64, f64)> {
+        self.points.back().copied()
+    }
+}
+
+/// One counter over one window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CounterWindow {
+    /// Increment over the window (0 if the counter reset).
+    pub delta: u64,
+    /// `delta` per second of window time (0 for a zero-length window).
+    pub rate_per_sec: f64,
+}
+
+/// One summary over one window, recovered from the cumulative Welford
+/// state: `count = Δcount`, `mean = Δsum / Δcount`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SummaryWindow {
+    pub count: u64,
+    pub sum: f64,
+    pub mean: f64,
+}
+
+/// The product of one [`TimeSeries::tick`]: every metric family diffed
+/// over `[t_ns - dt_ns, t_ns]`.
+#[derive(Debug, Clone)]
+pub struct Window {
+    /// 0-based tick index.
+    pub index: u64,
+    /// Tick time (window end), ns on the injected clock.
+    pub t_ns: u64,
+    /// Window length, ns (0 on the first tick — its baseline is empty).
+    pub dt_ns: u64,
+    pub counters: BTreeMap<String, CounterWindow>,
+    pub gauges: BTreeMap<String, f64>,
+    pub summaries: BTreeMap<String, SummaryWindow>,
+    /// Exactly the window's observations, per histogram metric.
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl Window {
+    pub fn counter_delta(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).map(|c| c.delta)
+    }
+
+    pub fn counter_rate(&self, name: &str) -> Option<f64> {
+        self.counters.get(name).map(|c| c.rate_per_sec)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn summary_mean(&self, name: &str) -> Option<f64> {
+        self.summaries.get(name).map(|s| s.mean)
+    }
+
+    /// Exact windowed percentile of a histogram metric, or `None` if the
+    /// metric is absent or recorded nothing this window.
+    pub fn percentile(&self, name: &str, p: f64) -> Option<f64> {
+        let h = self.histograms.get(name)?;
+        if h.total() == 0 {
+            None
+        } else {
+            Some(h.percentile(p) as f64)
+        }
+    }
+}
+
+/// Per-metric windowed rings fed by snapshot diffs on clock ticks.
+#[derive(Debug)]
+pub struct TimeSeries {
+    capacity: usize,
+    ticks: u64,
+    last: Option<(u64, MetricsSnapshot)>,
+    counter_deltas: BTreeMap<String, Ring>,
+    counter_rates: BTreeMap<String, Ring>,
+    gauges: BTreeMap<String, Ring>,
+    summary_means: BTreeMap<String, Ring>,
+    histograms: BTreeMap<String, VecDeque<(u64, Histogram)>>,
+}
+
+impl TimeSeries {
+    /// Empty pipeline whose per-metric rings hold `capacity` windows.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "time-series rings need capacity >= 1");
+        Self {
+            capacity,
+            ticks: 0,
+            last: None,
+            counter_deltas: BTreeMap::new(),
+            counter_rates: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            summary_means: BTreeMap::new(),
+            histograms: BTreeMap::new(),
+        }
+    }
+
+    /// Ticks taken so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Ring capacity (windows retained per metric).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Diff `snap` against the previous tick's snapshot and absorb the
+    /// resulting [`Window`] into the rings.
+    ///
+    /// The first tick has no baseline: its deltas are taken from an
+    /// empty snapshot (i.e. "everything since start") over a zero-length
+    /// window, so its rates are 0. `now_ns` must be non-decreasing
+    /// across ticks (same contract as [`crate::util::SimClock::set`]).
+    pub fn tick(&mut self, now_ns: u64, snap: &MetricsSnapshot) -> Window {
+        let prev = self.last.take();
+        let prev_t = prev.as_ref().map_or(now_ns, |&(t, _)| t);
+        assert!(
+            now_ns >= prev_t,
+            "TimeSeries::tick({now_ns}) would rewind past {prev_t}"
+        );
+        let dt_ns = now_ns - prev_t;
+        let secs = dt_ns as f64 / 1e9;
+        let prev_snap = prev.as_ref().map(|(_, s)| s);
+
+        let mut w = Window {
+            index: self.ticks,
+            t_ns: now_ns,
+            dt_ns,
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            summaries: BTreeMap::new(),
+            histograms: BTreeMap::new(),
+        };
+
+        for (k, &cur) in &snap.counters {
+            let before = prev_snap.map_or(0, |p| p.counter(k));
+            let delta = cur.saturating_sub(before);
+            let rate = if secs > 0.0 { delta as f64 / secs } else { 0.0 };
+            w.counters.insert(
+                k.clone(),
+                CounterWindow {
+                    delta,
+                    rate_per_sec: rate,
+                },
+            );
+        }
+        for (k, &v) in &snap.gauges {
+            w.gauges.insert(k.clone(), v);
+        }
+        for (k, cur) in &snap.summaries {
+            let (n0, s0) = prev_snap
+                .and_then(|p| p.summaries.get(k))
+                .map_or((0, 0.0), |s| (s.count(), s.sum()));
+            let count = cur.count().saturating_sub(n0);
+            let sum = cur.sum() - s0;
+            let mean = if count > 0 { sum / count as f64 } else { 0.0 };
+            w.summaries.insert(k.clone(), SummaryWindow { count, sum, mean });
+        }
+        for (k, pairs) in &snap.histograms {
+            let before: BTreeMap<u64, u64> = prev_snap
+                .and_then(|p| p.histograms.get(k))
+                .map_or_else(BTreeMap::new, |v| v.iter().copied().collect());
+            let mut h = Histogram::new();
+            for &(value, count) in pairs {
+                let delta = count.saturating_sub(before.get(&value).copied().unwrap_or(0));
+                h.add_n(value, delta);
+            }
+            w.histograms.insert(k.clone(), h);
+        }
+
+        let cap = self.capacity;
+        for (k, c) in &w.counters {
+            ring_entry(&mut self.counter_deltas, k, cap).push(now_ns, c.delta as f64);
+            ring_entry(&mut self.counter_rates, k, cap).push(now_ns, c.rate_per_sec);
+        }
+        for (k, &v) in &w.gauges {
+            ring_entry(&mut self.gauges, k, cap).push(now_ns, v);
+        }
+        for (k, s) in &w.summaries {
+            ring_entry(&mut self.summary_means, k, cap).push(now_ns, s.mean);
+        }
+        for (k, h) in &w.histograms {
+            let ring = self
+                .histograms
+                .entry(k.clone())
+                .or_insert_with(|| VecDeque::with_capacity(cap));
+            if ring.len() == cap {
+                ring.pop_front();
+            }
+            ring.push_back((now_ns, h.clone()));
+        }
+
+        self.last = Some((now_ns, snap.clone()));
+        self.ticks += 1;
+        w
+    }
+
+    /// Per-window increment series of a counter.
+    pub fn counter_deltas(&self, name: &str) -> Option<&Ring> {
+        self.counter_deltas.get(name)
+    }
+
+    /// Per-window rate/s series of a counter.
+    pub fn counter_rates(&self, name: &str) -> Option<&Ring> {
+        self.counter_rates.get(name)
+    }
+
+    /// Sampled gauge series.
+    pub fn gauge_series(&self, name: &str) -> Option<&Ring> {
+        self.gauges.get(name)
+    }
+
+    /// Per-window mean series of a summary.
+    pub fn summary_means(&self, name: &str) -> Option<&Ring> {
+        self.summary_means.get(name)
+    }
+
+    /// Retained `(t_ns, windowed Histogram)` pairs, oldest → newest.
+    pub fn histogram_windows(&self, name: &str) -> Option<&VecDeque<(u64, Histogram)>> {
+        self.histograms.get(name)
+    }
+
+    /// Gauge values oldest → newest (empty if the gauge never appeared) —
+    /// the shape [`crate::graph::DeltaParams::from_observed`] consumes.
+    pub fn gauge_values(&self, name: &str) -> Vec<f64> {
+        self.gauges.get(name).map_or_else(Vec::new, Ring::values)
+    }
+}
+
+fn ring_entry<'a>(
+    map: &'a mut BTreeMap<String, Ring>,
+    name: &str,
+    capacity: usize,
+) -> &'a mut Ring {
+    if !map.contains_key(name) {
+        map.insert(name.to_string(), Ring::new(capacity));
+    }
+    map.get_mut(name).expect("just inserted")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Summary;
+
+    fn snap_with(counters: &[(&str, u64)], gauges: &[(&str, f64)]) -> MetricsSnapshot {
+        let mut s = MetricsSnapshot::new("test");
+        for &(k, v) in counters {
+            s.counters.insert(k.to_string(), v);
+        }
+        for &(k, v) in gauges {
+            s.gauges.insert(k.to_string(), v);
+        }
+        s
+    }
+
+    #[test]
+    fn counters_diff_into_deltas_and_rates() {
+        let mut ts = TimeSeries::new(8);
+        let w0 = ts.tick(0, &snap_with(&[("c", 100)], &[]));
+        // First tick: delta from the empty baseline, zero-length window.
+        assert_eq!(w0.counter_delta("c"), Some(100));
+        assert_eq!(w0.counter_rate("c"), Some(0.0));
+        let w1 = ts.tick(2_000_000_000, &snap_with(&[("c", 160)], &[]));
+        assert_eq!(w1.counter_delta("c"), Some(60));
+        assert!((w1.counter_rate("c").unwrap() - 30.0).abs() < 1e-12);
+        // A counter reset (monotonicity violated) degrades to zero.
+        let w2 = ts.tick(3_000_000_000, &snap_with(&[("c", 40)], &[]));
+        assert_eq!(w2.counter_delta("c"), Some(0));
+        assert_eq!(w2.counter_rate("c"), Some(0.0));
+        assert_eq!(ts.ticks(), 3);
+        assert_eq!(ts.counter_deltas("c").unwrap().values(), vec![100.0, 60.0, 0.0]);
+        assert_eq!(ts.counter_rates("c").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn gauges_sample_and_rings_evict_oldest() {
+        let mut ts = TimeSeries::new(2);
+        for i in 0..5u64 {
+            let w = ts.tick(i * 10, &snap_with(&[], &[("g", i as f64)]));
+            assert_eq!(w.gauge("g"), Some(i as f64));
+        }
+        let ring = ts.gauge_series("g").unwrap();
+        assert_eq!(ring.capacity(), 2);
+        assert_eq!(ring.values(), vec![3.0, 4.0]);
+        assert_eq!(ring.latest(), Some((40, 4.0)));
+        assert_eq!(ts.gauge_values("g"), vec![3.0, 4.0]);
+        assert!(ts.gauge_values("missing").is_empty());
+    }
+
+    #[test]
+    fn summaries_recover_window_count_and_mean() {
+        let mut cum = Summary::new();
+        cum.add(10.0);
+        cum.add(20.0);
+        let mut s0 = MetricsSnapshot::new("t");
+        s0.summaries.insert("s".into(), cum.clone());
+        let mut ts = TimeSeries::new(4);
+        ts.tick(0, &s0);
+        // Second window adds 30 and 50: count 2, mean 40.
+        cum.add(30.0);
+        cum.add(50.0);
+        let mut s1 = MetricsSnapshot::new("t");
+        s1.summaries.insert("s".into(), cum);
+        let w = ts.tick(1_000, &s1);
+        let sw = w.summaries["s"];
+        assert_eq!(sw.count, 2);
+        assert!((sw.mean - 40.0).abs() < 1e-9);
+        assert!((sw.sum - 80.0).abs() < 1e-9);
+        assert_eq!(w.summary_mean("s"), Some(sw.mean));
+    }
+
+    #[test]
+    fn histogram_windows_give_exact_windowed_percentiles() {
+        let mut s0 = MetricsSnapshot::new("t");
+        s0.histograms.insert("h".into(), vec![(1, 5), (10, 1)]);
+        let mut ts = TimeSeries::new(4);
+        let w0 = ts.tick(0, &s0);
+        assert_eq!(w0.percentile("h", 50.0), Some(1.0));
+        // Window 1 adds 99 copies of value 100 and 1 more of value 1:
+        // the windowed p50 sees only those 100 observations.
+        let mut s1 = MetricsSnapshot::new("t");
+        s1.histograms.insert("h".into(), vec![(1, 6), (10, 1), (100, 99)]);
+        let w1 = ts.tick(1_000, &s1);
+        let h = &w1.histograms["h"];
+        assert_eq!(h.total(), 100);
+        assert_eq!(h.count(1), 1);
+        assert_eq!(h.count(100), 99);
+        assert_eq!(w1.percentile("h", 50.0), Some(100.0));
+        assert_eq!(w1.percentile("h", 99.0), Some(100.0));
+        // An untouched histogram yields an empty window: no percentile.
+        let w2 = ts.tick(2_000, &s1);
+        assert_eq!(w2.percentile("h", 99.0), None);
+        assert_eq!(ts.histogram_windows("h").unwrap().len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "would rewind")]
+    fn tick_rejects_time_travel() {
+        let mut ts = TimeSeries::new(2);
+        ts.tick(100, &MetricsSnapshot::new("t"));
+        ts.tick(99, &MetricsSnapshot::new("t"));
+    }
+
+    #[test]
+    fn tick_is_deterministic() {
+        let run = || {
+            let mut ts = TimeSeries::new(4);
+            let mut out = Vec::new();
+            for i in 0..6u64 {
+                let s = snap_with(&[("c", i * i * 7)], &[("g", i as f64 * 0.5)]);
+                let w = ts.tick(i * 1_000_000, &s);
+                out.push((w.counter_delta("c"), w.gauge("g")));
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+}

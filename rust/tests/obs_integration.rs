@@ -12,12 +12,13 @@
 
 use recross::allocation::Replication;
 use recross::cluster::{PoolShared, ShardPlan};
-use recross::config::{HardwareConfig, ObsConfig};
+use recross::config::{HardwareConfig, ObsConfig, SloConfig, WatchConfig};
 use recross::coordinator::BatchPolicy;
 use recross::deploy::{Backend, SimBackend};
 use recross::grouping::Mapping;
-use recross::loadgen::{drive, Arrivals};
-use recross::obs::{names, MetricsSnapshot, Obs};
+use recross::loadgen::{drive, Arrivals, ReportWindow};
+use recross::obs::{names, MetricsSnapshot, Obs, Objective, SloTracker, TimeSeries, Watcher};
+use recross::util::{Clock, SimClock};
 use recross::workload::Query;
 use recross::xbar::{CircuitParams, CrossbarModel};
 use std::sync::Arc;
@@ -243,4 +244,141 @@ fn zero_sample_rate_keeps_metrics_and_drops_spans() {
     let snap = obs.snapshot("sim");
     assert_eq!(snap.counter(names::SCHED_BATCHES), report.batches());
     assert!(obs.recorder().is_empty(), "no query may be sampled at rate 0");
+}
+
+#[test]
+fn ticking_watcher_never_perturbs_the_drive() {
+    // Observation-never-perturbs, extended to the signal plane: the
+    // drive's report is bit-identical with the watcher off, with a
+    // ticking time-series, and with ticking + SLO evaluation — the
+    // watcher only ever *reads* snapshots between drives.
+    let sh = shared();
+    let qs = queries(200);
+    let arrivals = Arrivals::poisson(2_000_000.0, 7).take(200);
+    let p = policy();
+    for sharded in [false, true] {
+        let make = || {
+            let b = SimBackend::single(&sh);
+            let b = if sharded { b.into_sharded(plan2()) } else { b };
+            b.with_obs(enabled_obs(1.0))
+        };
+
+        // Watcher off.
+        let off = drive(&make(), &qs, &arrivals, &p);
+
+        // Ticking: three drive rounds, a time-series diff after each.
+        let backend = make();
+        let clock = SimClock::new();
+        let mut series = TimeSeries::new(64);
+        let mut ticking = None;
+        for _ in 0..3 {
+            ticking = Some(drive(&backend, &qs, &arrivals, &p));
+            clock.advance(10_000_000);
+            series.tick(clock.now_ns(), &backend.metrics().expect("snapshot"));
+        }
+        assert_eq!(off, ticking.unwrap(), "ticking time-series perturbed the drive");
+        assert_eq!(series.ticks(), 3);
+
+        // Ticking + SLO evaluation over the default objectives.
+        let backend = make();
+        let clock = SimClock::new();
+        let mut watcher = Watcher::from_config(&WatchConfig::default(), &SloConfig::default());
+        let mut evaluated = None;
+        for _ in 0..3 {
+            evaluated = Some(drive(&backend, &qs, &arrivals, &p));
+            clock.advance(10_000_000);
+            let _ = watcher.tick(clock.now_ns(), &backend.metrics().expect("snapshot"));
+        }
+        assert_eq!(off, evaluated.unwrap(), "SLO evaluation perturbed the drive");
+    }
+}
+
+#[test]
+fn overload_phase_fires_the_fast_burn_alert_deterministically() {
+    use recross::obs::slo::{Cmp, SloSignal};
+
+    // Hand-stamped arrival plan: a steady phase (batch-sized groups of
+    // 4, one group per ms, so every batch closes on size and sojourn is
+    // pure service time), then an injected overload at 250 ms — 200
+    // queries all offered in one instant, so the queue drains serially
+    // and that window's p99 sojourn carries ~50 batch services of wait.
+    const WINDOW_NS: u64 = 10_000_000;
+    let sh = shared();
+    let p = policy();
+    let qs = queries(400);
+    let mut arrivals: Vec<u64> = (0..200u64).map(|i| (i / 4) * 1_000_000).collect();
+    arrivals.resize(400, 250_000_000);
+    let backend = SimBackend::single(&sh);
+    let report = drive(&backend, &qs, &arrivals, &p);
+
+    let windows = report.windows(WINDOW_NS);
+    assert_eq!(windows.first().expect("windows").index, 0);
+    assert_eq!(windows.last().expect("windows").index, 25);
+    let steady_max = windows[..5]
+        .iter()
+        .map(|w| w.percentile_ns(99.0))
+        .fold(0.0f64, f64::max);
+    let burst = windows.last().expect("windows");
+    assert_eq!(burst.queries(), 200);
+    let burst_p99 = burst.percentile_ns(99.0);
+    assert!(
+        burst_p99 > steady_max,
+        "overload must degrade windowed p99: {burst_p99} vs {steady_max}"
+    );
+    let threshold = (steady_max + burst_p99) / 2.0;
+
+    let objective = || {
+        Objective::new(
+            "sojourn-p99",
+            SloSignal::Gauge {
+                metric: names::LOADGEN_SOJOURN_P99_NS.to_string(),
+            },
+            Cmp::Below,
+            threshold,
+        )
+        .with_burn_rules(1, 4, 0.5)
+    };
+    // One tick per report window, the gauge stamped from the window's
+    // own percentile — exactly the feeding the watch loop does live.
+    let run = |windows: &[ReportWindow]| {
+        let mut watcher = Watcher::new(64, SloTracker::new().with_objective(objective()));
+        let clock = SimClock::new();
+        let mut stream = String::new();
+        for w in windows {
+            clock.advance(WINDOW_NS);
+            let mut snap = MetricsSnapshot::default();
+            snap.gauges
+                .insert(names::LOADGEN_SOJOURN_P99_NS.to_string(), w.percentile_ns(99.0));
+            let (_, alerts) = watcher.tick(clock.now_ns(), &snap);
+            for a in &alerts {
+                stream.push_str(&a.to_json_line());
+                stream.push('\n');
+            }
+        }
+        stream
+    };
+
+    let first = run(&windows);
+    let second = run(&windows);
+    assert_eq!(first, second, "alert stream must be byte-identical across runs");
+    assert!(
+        first.contains("\"severity\": \"page\"") && first.contains("\"state\": \"firing\""),
+        "the overload window must trip the fast-burn page:\n{first}"
+    );
+
+    // A steady-state run at the same seed fires nothing.
+    let steady_only = run(&windows[..5]);
+    assert!(steady_only.is_empty(), "steady state must stay silent: {steady_only}");
+}
+
+#[test]
+fn backend_alerts_default_to_empty() {
+    // Backends are passive metric sources: the trait-level default for
+    // `Backend::alerts` surfaces no events, SLO evaluation lives in the
+    // external watcher.
+    let sh = shared();
+    let bare = SimBackend::single(&sh);
+    assert!(bare.alerts().is_empty());
+    let observed = SimBackend::single(&sh).with_obs(enabled_obs(1.0));
+    assert!(observed.alerts().is_empty());
 }

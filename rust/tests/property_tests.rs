@@ -12,6 +12,7 @@ use recross::engine::{Engine, Scheme};
 use recross::graph::CoGraph;
 use recross::grouping::{CorrelationMapper, FrequencyMapper, Mapper, NaiveMapper};
 use recross::metrics::Summary;
+use recross::obs::{MetricsRegistry, MetricsSnapshot};
 use recross::sched::Scratch;
 use recross::util::Rng;
 use recross::workload::{Query, Trace};
@@ -252,6 +253,58 @@ fn prop_summary_merge_matches_sequential_add() {
             sequential.variance()
         );
     }
+}
+
+#[test]
+fn prop_snapshot_merge_identity_saturation_and_null_gauges() {
+    // Export-side counterparts of the Summary property above, for
+    // `MetricsSnapshot::merge`: the empty snapshot is a two-sided
+    // identity (byte-identical JSON), counter and histogram-bucket
+    // unions saturate near `u64::MAX` instead of wrapping, and a
+    // non-finite gauge survives merge + export as JSON `null`.
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed ^ 0x0B5E);
+        let r = MetricsRegistry::new();
+        for _ in 0..rng.range(1, 16) {
+            r.incr("c", rng.below(1_000));
+            r.gauge_set("g", rng.normal());
+            r.observe("s", rng.normal());
+            r.record_hist("h", rng.below(64), 1 + rng.below(8));
+        }
+        let snap = r.snapshot("shard");
+        let empty = MetricsRegistry::new().snapshot("shard");
+
+        // Merge-of-empty identity, both sides: JSON equality is byte
+        // equality (BTreeMap ordering is deterministic).
+        let mut a = snap.clone();
+        a.merge(&empty);
+        assert_eq!(a.to_json(), snap.to_json(), "seed {seed}: right identity");
+        let mut b = empty.clone();
+        b.merge(&snap);
+        assert_eq!(b.to_json(), snap.to_json(), "seed {seed}: left identity");
+    }
+
+    // Counter totals and bucket-count unions near u64::MAX clamp
+    // instead of wrapping past zero.
+    let mut near = MetricsSnapshot::default();
+    near.counters.insert("c".into(), u64::MAX - 1);
+    near.histograms.insert("h".into(), vec![(7, u64::MAX - 1)]);
+    let mut more = MetricsSnapshot::default();
+    more.counters.insert("c".into(), 5);
+    more.histograms.insert("h".into(), vec![(7, 5), (9, 1)]);
+    near.merge(&more);
+    assert_eq!(near.counters["c"], u64::MAX);
+    assert_eq!(near.histograms["h"], vec![(7, u64::MAX), (9, 1)]);
+
+    // Non-finite gauges export as JSON null, merged or not.
+    let nan = MetricsRegistry::new();
+    nan.gauge_set("g", f64::NAN);
+    let mut merged = MetricsRegistry::new().snapshot("shard");
+    merged.merge(&nan.snapshot("shard"));
+    assert!(
+        merged.to_json().contains("\"g\": null"),
+        "NaN gauge must export as null"
+    );
 }
 
 #[test]

@@ -16,6 +16,7 @@ use recross::cluster::{
 };
 use recross::config::Config;
 use recross::coordinator::{BatchPolicy, DriftMonitor, EmbeddingStore};
+use recross::graph::DeltaParams;
 use recross::engine::{Engine, Scheme};
 use recross::graph::CoGraph;
 use recross::workload::{generate, DatasetSpec, Query, Trace};
@@ -145,6 +146,45 @@ fn prop_routed_cluster_bit_identical_across_epoch_swaps() {
             assert_eq!(st.epoch, 2, "case {case}: shard {} stale", st.shard);
         }
     }
+}
+
+#[test]
+fn delta_skipped_shards_adopt_the_new_epoch() {
+    // Regression: shards whose tiles a delta rebalance leaves untouched
+    // used to keep reporting the older epoch in `shard_status` after the
+    // routing-table swap. They now adopt the new epoch via an ack-gated
+    // bump, so status rows stay uniform across the pool.
+    let f = fixture(42);
+    let drift = DriftMonitor::new(1e-3, 1.3, 0.5, 16);
+    let cluster = spawn_routed(&f, 4, Some(drift));
+
+    // A full swap seeds the delta baseline at epoch 1.
+    let recent = Trace {
+        num_embeddings: f.history.num_embeddings,
+        queries: f.history.queries.iter().take(200).cloned().collect(),
+    };
+    assert_eq!(cluster.rebalance(&recent).unwrap(), 1);
+
+    // Delta rebalance on the *same* window: no group drifts past the
+    // thresholds, so no shard receives a tile install — exactly the case
+    // that used to leave every status row at the old epoch.
+    let report = cluster
+        .rebalance_incremental(&recent, &DeltaParams::default())
+        .unwrap();
+    assert_eq!(report.epoch, 2);
+    assert!(!report.full);
+    assert_eq!(
+        report.shards_installed, 0,
+        "an identical window must skip every install"
+    );
+    assert_eq!(cluster.epoch(), 2);
+    for st in cluster.handle().shard_status().unwrap() {
+        assert_eq!(st.epoch, 2, "shard {} reports a stale epoch", st.shard);
+    }
+
+    // Skipped shards kept their tiles: serving stays bit-identical.
+    let wave: Vec<Query> = f.eval.queries.iter().take(64).cloned().collect();
+    assert_bit_identical(&f, &cluster, &wave, "post-delta epoch 2");
 }
 
 #[test]
