@@ -6,6 +6,10 @@
 //!            activation-set computation, replica selection
 //! * serving: planner pass construction, tile gathering, and (when
 //!            artifacts exist) a real PJRT reduce invocation
+//!
+//! `--smoke` shrinks the workload and the per-section budgets to a
+//! seconds-scale run — the CI smoke step builds and drives every bench
+//! the same way.
 
 use recross::config::Config;
 use recross::coordinator::{EmbeddingStore, Planner};
@@ -18,30 +22,41 @@ use recross::workload::{generate, DatasetSpec, Query};
 use std::time::Duration;
 
 fn main() {
-    let spec = DatasetSpec::by_name("software").unwrap().scaled(0.2);
-    let (history, eval) = generate(&spec, 4_000, 512, 42);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (scale, n_history, n_eval) = if smoke { (0.05, 800, 512) } else { (0.2, 4_000, 512) };
+    let spec = DatasetSpec::by_name("software").unwrap().scaled(scale);
+    let (history, eval) = generate(&spec, n_history, n_eval, 42);
     let cfg = Config::paper_default();
 
-    let mut bench = Bench::with_config(BenchConfig {
-        warmup: Duration::from_millis(200),
-        measure: Duration::from_secs(1),
-        max_iters: 10_000,
-        min_iters: 3,
+    let mut bench = Bench::with_config(if smoke {
+        BenchConfig {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            max_iters: 1_000,
+            min_iters: 2,
+        }
+    } else {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            max_iters: 10_000,
+            min_iters: 3,
+        }
     });
 
     // --- offline phase -----------------------------------------------------
-    bench.run("offline/cograph(4k queries)", || {
+    bench.run("offline/cograph(history)", || {
         black_box(CoGraph::build(&history))
     });
     let graph = CoGraph::build(&history);
-    bench.run("offline/alg1(5.4k nodes)", || {
+    bench.run("offline/alg1(full prepare)", || {
         black_box(Engine::prepare(Scheme::ReCross, &graph, &history, &cfg))
     });
 
     // --- online phase ------------------------------------------------------
     let engine = Engine::prepare(Scheme::ReCross, &graph, &history, &cfg);
     let mut scratch = Scratch::default();
-    let batch: Vec<Query> = eval.queries[..256].to_vec();
+    let batch: Vec<Query> = eval.queries[..256.min(eval.queries.len())].to_vec();
     bench.run("online/run_batch(256 queries)", || {
         black_box(engine.run_batch(&batch, &mut scratch))
     });

@@ -8,16 +8,20 @@
 //! the identity contract (full-scope refresh bit-identical to a fresh
 //! prepare; the window graph bit-identical to a batch rebuild), and
 //! writes **`BENCH_offline.json`** at the repository root: per config,
-//! ns per rebuild/refresh plus the refresh's work counters (schema in
-//! DESIGN.md §"Incremental offline phase"). CI runs `--smoke`
-//! (seconds-scale) on every push and uploads the file as an artifact, so
-//! the trajectory accumulates across PRs.
+//! ns per rebuild/refresh plus the refresh's work counters (schema v2 in
+//! DESIGN.md §"Parallel offline phase & SIMD kernels"). Every side is
+//! measured twice — serial (`offline.workers = 1`) and parallel
+//! (`offline.workers = 0`, all cores) — after a gate asserting the two
+//! widths produce bit-identical mappings and plans; `par_speedup`
+//! records what the worker pool buys. CI runs `--smoke` (seconds-scale)
+//! on every push, feeds the file through `tools/perf_gate.py`, and
+//! uploads it as an artifact, so the trajectory accumulates across PRs.
 
 use recross::config::Config;
 use recross::engine::{Engine, PreparedEngine, RefreshReport, Scheme};
 use recross::graph::CoGraph;
 use recross::util::bench::black_box;
-use recross::util::{Rng, Zipf};
+use recross::util::{par, Rng, Zipf};
 use recross::workload::{Query, Trace};
 use std::time::Instant;
 
@@ -116,8 +120,12 @@ fn slide_batch(
 
 struct Row {
     point: SweepPoint,
+    /// Serial (1 worker) ns per full rebuild / incremental refresh.
     full_ns: f64,
     inc_ns: f64,
+    /// Parallel (all cores) ns per full rebuild / incremental refresh.
+    full_par_ns: f64,
+    inc_par_ns: f64,
     report: RefreshReport,
 }
 
@@ -126,6 +134,14 @@ fn run_point(pt: &SweepPoint, measure_ns: u64, seed: u64) -> Row {
     let mut cfg = Config::paper_default();
     cfg.scheme.group_size = pt.group_size;
     cfg.scheme.batch_size = 256;
+    // Two configs, identical but for the substrate width: serial pins
+    // one worker, parallel uses every core (0 = auto).
+    let cfg_ser = {
+        let mut c = cfg.clone();
+        c.offline.workers = 1;
+        c
+    };
+    cfg.offline.workers = 0;
 
     let mut rng = Rng::new(seed);
     let zipf = Zipf::new(n, 1.05);
@@ -168,12 +184,43 @@ fn run_point(pt: &SweepPoint, measure_ns: u64, seed: u64) -> Row {
         "{}: window graph diverged from batch rebuild",
         pt.name
     );
+    // (c) Parallel output is bit-identical to serial — a speedup of a
+    // wrong answer is worthless. One worker vs all cores, same input.
+    par::set_default_workers(1);
+    let ser = Engine::prepare(Scheme::ReCross, &CoGraph::build(&slid), &slid, &cfg_ser);
+    par::set_default_workers(0);
+    let par_e = Engine::prepare(Scheme::ReCross, &CoGraph::build(&slid), &slid, &cfg);
+    assert_eq!(
+        ser.mapping().groups,
+        par_e.mapping().groups,
+        "{}: parallel grouping diverged from serial",
+        pt.name
+    );
+    assert_eq!(
+        ser.replication().copies,
+        par_e.replication().copies,
+        "{}: parallel replication diverged from serial",
+        pt.name
+    );
 
-    // Incremental side: one slide per iteration, cycling the batch pool.
+    // Incremental side, serial then parallel: one slide per iteration,
+    // cycling the batch pool. Each PreparedEngine::prepare threads its
+    // config's worker count into the substrate.
+    let mut pe_ser = PreparedEngine::prepare(Scheme::ReCross, &window, &cfg_ser);
     let mut i = 0usize;
     let inc_ns = measure(
         || {
-            black_box(pe.refresh(&slides[i % slides.len()], pt.slide));
+            black_box(pe_ser.refresh(&slides[i % slides.len()], pt.slide));
+            i += 1;
+        },
+        measure_ns,
+        2,
+    );
+    let mut pe_par = PreparedEngine::prepare(Scheme::ReCross, &window, &cfg);
+    let mut i = 0usize;
+    let inc_par_ns = measure(
+        || {
+            black_box(pe_par.refresh(&slides[i % slides.len()], pt.slide));
             i += 1;
         },
         measure_ns,
@@ -182,8 +229,22 @@ fn run_point(pt: &SweepPoint, measure_ns: u64, seed: u64) -> Row {
 
     // Full side: the O(table) recompute the refresh replaces — rebuild
     // the affinity graph and re-run the whole offline pipeline over the
-    // same (slid) window.
+    // same (slid) window. Serial first, then all cores.
+    par::set_default_workers(1);
     let full_ns = measure(
+        || {
+            black_box(Engine::prepare(
+                Scheme::ReCross,
+                &CoGraph::build(&slid),
+                &slid,
+                &cfg_ser,
+            ));
+        },
+        measure_ns,
+        2,
+    );
+    par::set_default_workers(0);
+    let full_par_ns = measure(
         || {
             black_box(Engine::prepare(
                 Scheme::ReCross,
@@ -200,16 +261,19 @@ fn run_point(pt: &SweepPoint, measure_ns: u64, seed: u64) -> Row {
         point: *pt,
         full_ns,
         inc_ns,
+        full_par_ns,
+        inc_par_ns,
         report,
     }
 }
 
-fn json(rows: &[Row], smoke: bool) -> String {
+fn json(rows: &[Row], smoke: bool, workers: usize) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"offline_phase\",\n");
-    out.push_str("  \"version\": 1,\n");
+    out.push_str("  \"version\": 2,\n");
     out.push_str(&format!("  \"mode\": \"{}\",\n", if smoke { "smoke" } else { "full" }));
+    out.push_str(&format!("  \"workers\": {workers},\n"));
     out.push_str("  \"configs\": [\n");
     for (i, r) in rows.iter().enumerate() {
         let p = &r.point;
@@ -226,6 +290,11 @@ fn json(rows: &[Row], smoke: bool) -> String {
             1e9 / r.full_ns
         ));
         out.push_str(&format!(
+            "      \"full_parallel\": {{\"ns_per_rebuild\": {:.1}, \"rebuilds_per_sec\": {:.2}}},\n",
+            r.full_par_ns,
+            1e9 / r.full_par_ns
+        ));
+        out.push_str(&format!(
             "      \"incremental\": {{\"ns_per_refresh\": {:.1}, \"refreshes_per_sec\": {:.2}, \
              \"dirty_nodes\": {}, \"groups_changed\": {}, \"groups_total\": {}, \
              \"ids_moved\": {}, \"ids_total\": {}}},\n",
@@ -238,8 +307,22 @@ fn json(rows: &[Row], smoke: bool) -> String {
             r.report.ids_total
         ));
         out.push_str(&format!(
-            "      \"speedup\": {:.3}\n",
+            "      \"incremental_parallel\": {{\"ns_per_refresh\": {:.1}, \
+             \"refreshes_per_sec\": {:.2}}},\n",
+            r.inc_par_ns,
+            1e9 / r.inc_par_ns
+        ));
+        out.push_str(&format!(
+            "      \"speedup\": {:.3},\n",
             r.full_ns / r.inc_ns
+        ));
+        out.push_str(&format!(
+            "      \"par_speedup\": {:.3},\n",
+            r.full_ns / r.full_par_ns
+        ));
+        out.push_str(&format!(
+            "      \"par_speedup_refresh\": {:.3}\n",
+            r.inc_ns / r.inc_par_ns
         ));
         out.push_str(if i + 1 == rows.len() { "    }\n" } else { "    },\n" });
     }
@@ -255,31 +338,34 @@ fn main() {
         (full_points(), 1_000_000_000u64)
     };
 
+    // Effective all-cores worker count, reported in the JSON header.
+    par::set_default_workers(0);
+    let workers = par::default_workers();
     println!(
-        "== offline phase: full rebuild vs incremental refresh, {} mode ==\n",
-        if smoke { "smoke" } else { "full" }
+        "== offline phase: full rebuild vs incremental refresh, {} mode, {} workers ==\n",
+        if smoke { "smoke" } else { "full" },
+        workers
     );
     println!(
-        "{:<12} {:>8} {:>7} {:>7} {:>6} {:>12} {:>12} {:>8} {:>14}",
-        "config", "embeds", "window", "slide", "drift", "rebuild ns", "refresh ns", "speedup",
-        "ids moved/total"
+        "{:<12} {:>8} {:>7} {:>6} {:>12} {:>12} {:>8} {:>8} {:>8}",
+        "config", "embeds", "window", "drift", "rebuild ns", "refresh ns", "speedup", "par-full",
+        "par-inc"
     );
 
     let mut rows = Vec::new();
     for (i, pt) in points.iter().enumerate() {
         let row = run_point(pt, measure_ns, 0x0FF1_1E + i as u64);
         println!(
-            "{:<12} {:>8} {:>7} {:>7} {:>5}% {:>12.0} {:>12.0} {:>7.2}x {:>7}/{:<6}",
+            "{:<12} {:>8} {:>7} {:>5}% {:>12.0} {:>12.0} {:>7.2}x {:>7.2}x {:>7.2}x",
             pt.name,
             pt.embeddings,
             pt.window,
-            pt.slide,
             pt.drift_pct,
             row.full_ns,
             row.inc_ns,
             row.full_ns / row.inc_ns,
-            row.report.ids_moved,
-            row.report.ids_total,
+            row.full_ns / row.full_par_ns,
+            row.inc_ns / row.inc_par_ns,
         );
         rows.push(row);
     }
@@ -287,6 +373,6 @@ fn main() {
     // The perf trajectory lands at the repository root so it diffs and
     // uploads uniformly across PRs regardless of cargo's working dir.
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_offline.json");
-    std::fs::write(&path, json(&rows, smoke)).expect("writing BENCH_offline.json");
+    std::fs::write(&path, json(&rows, smoke, workers)).expect("writing BENCH_offline.json");
     println!("\nwrote {}", path.display());
 }

@@ -8,10 +8,14 @@
 //! (`sched::ReferenceScheduler`), asserts their schedules are
 //! bit-identical, and writes **`BENCH_sched.json`** at the repository
 //! root: per config, simulated-queries/second and slot-comparison counts
-//! for both implementations (schema in DESIGN.md §"Simulator
-//! performance"). CI runs `--smoke` (seconds-scale) on every push and
-//! uploads the file as an artifact, so the perf trajectory accumulates
-//! across PRs.
+//! for both implementations (schema v2 in DESIGN.md §"Parallel offline
+//! phase & SIMD kernels"). A second sweep times the f32 reduce kernel —
+//! the SIMD `add_assign_4wide` dispatch vs a naive scalar loop, gated on
+//! bit-identity — and lands as the top-level `"reduce"` array (SIMD
+//! lanes are the data-parallel axis here; the scheduler itself stays
+//! serial). CI runs `--smoke` (seconds-scale) on every push, feeds the
+//! file through `tools/perf_gate.py`, and uploads it as an artifact, so
+//! the perf trajectory accumulates across PRs.
 
 use recross::allocation::{self, Replication};
 use recross::config::HardwareConfig;
@@ -196,11 +200,116 @@ fn run_point(pt: &SweepPoint, measure_ns: u64, seed: u64) -> Row {
     }
 }
 
-fn json(rows: &[Row], smoke: bool) -> String {
+/// One reduce-kernel measurement: the SIMD `add_assign_4wide` dispatch
+/// vs a naive scalar loop, summing `rows` embedding rows of width `dim`
+/// into one accumulator.
+struct ReduceRow {
+    name: &'static str,
+    dim: usize,
+    rows: usize,
+    scalar_ns: f64,
+    simd_ns: f64,
+}
+
+/// The widest lane set the dispatching entry point resolves to on this
+/// host (mirrors `util::accum`'s feature-detection order).
+fn reduce_kernel_name() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            "avx2"
+        } else {
+            "sse2"
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        "blocked"
+    }
+}
+
+fn run_reduce_point(
+    name: &'static str,
+    dim: usize,
+    rows: usize,
+    measure_ns: u64,
+    seed: u64,
+) -> ReduceRow {
+    use recross::util::accum::add_assign_4wide;
+    let mut rng = Rng::new(seed);
+    let table: Vec<Vec<f32>> = (0..rows)
+        .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+        .collect();
+
+    let scalar = |out: &mut [f32]| {
+        for r in &table {
+            for (o, &s) in out.iter_mut().zip(r) {
+                *o += s;
+            }
+        }
+    };
+    let simd = |out: &mut [f32]| {
+        for r in &table {
+            add_assign_4wide(out, r);
+        }
+    };
+
+    // Correctness gate: the SIMD dispatch must match the scalar loop
+    // bit-for-bit before its timing means anything.
+    let mut a = vec![0.0f32; dim];
+    let mut b = vec![0.0f32; dim];
+    scalar(&mut a);
+    simd(&mut b);
+    assert_eq!(a, b, "{name}: SIMD reduce diverged from scalar");
+
+    let mut acc = vec![0.0f32; dim];
+    let scalar_ns = measure(
+        || {
+            acc.fill(0.0);
+            scalar(&mut acc);
+            black_box(&acc);
+        },
+        measure_ns,
+        3,
+    );
+    let simd_ns = measure(
+        || {
+            acc.fill(0.0);
+            simd(&mut acc);
+            black_box(&acc);
+        },
+        measure_ns,
+        3,
+    );
+    ReduceRow {
+        name,
+        dim,
+        rows,
+        scalar_ns,
+        simd_ns,
+    }
+}
+
+/// Reduce sweep: the paper dim (16), a wide dim hitting the 8-lane path
+/// hard (64), and an odd dim exercising every remainder tail (67).
+fn reduce_points(smoke: bool) -> Vec<(&'static str, usize, usize)> {
+    if smoke {
+        vec![("dim16", 16, 64), ("dim64", 64, 64), ("dim67-tail", 67, 64)]
+    } else {
+        vec![
+            ("dim16", 16, 512),
+            ("dim64", 64, 512),
+            ("dim67-tail", 67, 512),
+            ("dim256", 256, 512),
+        ]
+    }
+}
+
+fn json(rows: &[Row], reduce: &[ReduceRow], smoke: bool) -> String {
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str("  \"bench\": \"sched_throughput\",\n");
-    out.push_str("  \"version\": 1,\n");
+    out.push_str("  \"version\": 2,\n");
     out.push_str(&format!("  \"mode\": \"{}\",\n", if smoke { "smoke" } else { "full" }));
     out.push_str("  \"configs\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -229,6 +338,29 @@ fn json(rows: &[Row], smoke: bool) -> String {
             r.reference.comparisons as f64 / (r.optimized.comparisons.max(1)) as f64
         ));
         out.push_str(if i + 1 == rows.len() { "    }\n" } else { "    },\n" });
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"reduce\": [\n");
+    let kernel = reduce_kernel_name();
+    for (i, r) in reduce.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!(
+            "      \"name\": \"{}\", \"dim\": {}, \"rows\": {},\n",
+            r.name, r.dim, r.rows
+        ));
+        out.push_str(&format!(
+            "      \"scalar\": {{\"ns_per_reduce\": {:.1}}},\n",
+            r.scalar_ns
+        ));
+        out.push_str(&format!(
+            "      \"simd\": {{\"ns_per_reduce\": {:.1}, \"kernel\": \"{kernel}\"}},\n",
+            r.simd_ns
+        ));
+        out.push_str(&format!(
+            "      \"par_speedup\": {:.3}\n",
+            r.scalar_ns / r.simd_ns
+        ));
+        out.push_str(if i + 1 == reduce.len() { "    }\n" } else { "    },\n" });
     }
     out.push_str("  ]\n}\n");
     out
@@ -271,9 +403,32 @@ fn main() {
         rows.push(row);
     }
 
+    println!(
+        "\n== reduce kernel: scalar vs {} ==\n",
+        reduce_kernel_name()
+    );
+    println!(
+        "{:<12} {:>5} {:>6} {:>12} {:>12} {:>8}",
+        "config", "dim", "rows", "scalar ns", "simd ns", "speedup"
+    );
+    let mut reduce = Vec::new();
+    for (i, &(name, dim, nrows)) in reduce_points(smoke).iter().enumerate() {
+        let r = run_reduce_point(name, dim, nrows, measure_ns / 4, 0xADD + i as u64);
+        println!(
+            "{:<12} {:>5} {:>6} {:>12.1} {:>12.1} {:>7.2}x",
+            r.name,
+            r.dim,
+            r.rows,
+            r.scalar_ns,
+            r.simd_ns,
+            r.scalar_ns / r.simd_ns
+        );
+        reduce.push(r);
+    }
+
     // The perf trajectory lands at the repository root so it diffs and
     // uploads uniformly across PRs regardless of cargo's working dir.
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sched.json");
-    std::fs::write(&path, json(&rows, smoke)).expect("writing BENCH_sched.json");
+    std::fs::write(&path, json(&rows, reduce.as_slice(), smoke)).expect("writing BENCH_sched.json");
     println!("\nwrote {}", path.display());
 }

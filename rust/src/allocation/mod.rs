@@ -21,7 +21,9 @@ pub mod autotune;
 
 pub use autotune::{tune_dup_ratio, TunePoint, TuneResult};
 
+use crate::graph::PAR_MIN_QUERIES;
 use crate::grouping::Mapping;
+use crate::util::par;
 use crate::workload::Trace;
 
 /// Replication plan layered on top of a [`Mapping`].
@@ -86,17 +88,35 @@ impl Replication {
 /// each query's distinct groups in O(k) instead of the old
 /// sort+dedup's O(k log k) — this runs over the *whole history trace*
 /// on every (re)planning pass, so it is offline-phase hot. The counts
-/// are identical (integer increments, order-independent).
+/// are identical (integer increments, order-independent), which also
+/// makes the walk safe to fan out over [`crate::util::par`]: each
+/// worker counts a private frequency vector over its query range and
+/// the partials merge by addition in worker order.
 pub fn group_frequencies(mapping: &Mapping, trace: &Trace) -> Vec<u64> {
-    let mut freq = vec![0u64; mapping.num_groups()];
-    let mut touch = crate::grouping::TouchSet::default();
-    for q in &trace.queries {
-        touch.begin(mapping.num_groups());
-        for &e in &q.items {
-            touch.add(mapping.slot_of(e).group);
-        }
-        for &g in touch.touched() {
-            freq[g as usize] += 1;
+    let n = mapping.num_groups();
+    let partials = par::map_ranges(
+        trace.queries.len(),
+        par::default_workers(),
+        PAR_MIN_QUERIES,
+        |_, range| {
+            let mut freq = vec![0u64; n];
+            let mut touch = crate::grouping::TouchSet::default();
+            for q in &trace.queries[range] {
+                touch.begin(n);
+                for &e in &q.items {
+                    touch.add(mapping.slot_of(e).group);
+                }
+                for &g in touch.touched() {
+                    freq[g as usize] += 1;
+                }
+            }
+            freq
+        },
+    );
+    let mut freq = vec![0u64; n];
+    for pfreq in partials {
+        for (f, pf) in freq.iter_mut().zip(&pfreq) {
+            *f += pf;
         }
     }
     freq
@@ -188,11 +208,24 @@ pub fn plan_replication_delta(
         return Replication::from_copies(copies, batch_size);
     }
 
-    // Desired copies per Eq. 1.
-    let desired: Vec<u32> = freqs
-        .iter()
-        .map(|&f| log_scaled_copies(f, freq_total, batch_size))
-        .collect();
+    // Desired copies per Eq. 1. The scoring is elementwise over `freqs`,
+    // so it fans out over chunks concatenated in worker order — the
+    // result is the same vector the serial map produced. (The grant loop
+    // below stays serial: it is a stateful round-robin over the budget.)
+    let desired: Vec<u32> = par::map_ranges(
+        num_groups,
+        par::default_workers(),
+        PAR_MIN_QUERIES,
+        |_, range| {
+            freqs[range]
+                .iter()
+                .map(|&f| log_scaled_copies(f, freq_total, batch_size))
+                .collect::<Vec<u32>>()
+        },
+    )
+    .into_iter()
+    .flatten()
+    .collect();
 
     // Hottest dirty groups first (stable: ties stay in ascending id
     // order, matching the full plan).

@@ -327,6 +327,23 @@ impl WatchConfig {
     }
 }
 
+/// Offline-phase execution configuration (see [`crate::util::par`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OfflineConfig {
+    /// Worker threads for the offline phase's data-parallel passes
+    /// (graph build, regrouping, replication scoring). `0` means "use
+    /// every available core". Any value produces **bit-identical**
+    /// results — the parallel substrate merges partials in a fixed
+    /// order — so this knob trades wall-clock for cores, never output.
+    pub workers: usize,
+}
+
+impl Default for OfflineConfig {
+    fn default() -> Self {
+        Self { workers: 0 }
+    }
+}
+
 /// Top-level configuration bundle.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
@@ -336,6 +353,7 @@ pub struct Config {
     pub obs: ObsConfig,
     pub slo: SloConfig,
     pub watch: WatchConfig,
+    pub offline: OfflineConfig,
     /// Directory with AOT artifacts for the PJRT runtime.
     pub artifacts_dir: String,
 }
@@ -441,6 +459,8 @@ impl Config {
         wa.ring_capacity = doc.usize_or("watch.ring_capacity", wa.ring_capacity);
         wa.ticks = doc.usize_or("watch.ticks", wa.ticks);
 
+        cfg.offline.workers = doc.usize_or("offline.workers", cfg.offline.workers);
+
         cfg.artifacts_dir = doc.str_or("artifacts_dir", &cfg.artifacts_dir);
         cfg.validate()?;
         Ok(cfg)
@@ -500,6 +520,10 @@ impl Config {
         }
         if args.provided("slo-depth") {
             self.slo.max_queue_depth = parse(args, "slo-depth")?;
+        }
+        // 0 is legal (= all cores), so this parses as a plain usize.
+        if args.provided("workers") {
+            self.offline.workers = parse(args, "workers")?;
         }
         self.validate()
     }
@@ -717,6 +741,37 @@ mod tests {
         // keep the base.
         assert_eq!(cfg.slo.max_queue_depth, 16.0);
         assert_eq!(cfg.watch.ring_capacity, 512);
+    }
+
+    #[test]
+    fn offline_workers_defaults_toml_and_cli() {
+        use crate::util::cli::ArgSpec;
+        // Default: 0 = use every available core.
+        let c = Config::paper_default();
+        assert_eq!(c.offline.workers, 0);
+        // TOML sets it...
+        let c = Config::from_toml("[offline]\nworkers = 4").unwrap();
+        assert_eq!(c.offline.workers, 4);
+        // ...explicit CLI beats TOML, and 0 is a legal explicit value.
+        let spec = ArgSpec::new("t").opt("workers", "0", "");
+        let argv: Vec<String> = ["--workers", "2"].iter().map(|s| s.to_string()).collect();
+        let args = spec.parse(&argv).unwrap();
+        let mut cfg = Config::from_toml_with_base(
+            "[offline]\nworkers = 8",
+            Config::serving_default(),
+        )
+        .unwrap();
+        cfg.overlay_cli(&args).unwrap();
+        assert_eq!(cfg.offline.workers, 2);
+        // The declared CLI default does not clobber TOML.
+        let none = spec.parse(&Vec::<String>::new()).unwrap();
+        let mut cfg = Config::from_toml_with_base(
+            "[offline]\nworkers = 8",
+            Config::serving_default(),
+        )
+        .unwrap();
+        cfg.overlay_cli(&none).unwrap();
+        assert_eq!(cfg.offline.workers, 8);
     }
 
     #[test]

@@ -49,6 +49,10 @@ impl OfflinePhase {
     /// Run the offline phase for `scheme` per the config's workload.
     /// `scale` shrinks the dataset (1.0 = paper scale).
     pub fn run(cfg: &Config, scheme: Scheme, scale: f64) -> Result<Self> {
+        // Thread the configured worker count into the data-parallel
+        // substrate before any counting pass runs. Output is
+        // bit-identical for every width, so this only shapes wall-clock.
+        crate::util::par::set_default_workers(cfg.offline.workers);
         let spec = DatasetSpec::by_name(&cfg.workload.dataset)
             .with_context(|| format!("unknown dataset {:?}", cfg.workload.dataset))?
             .scaled(scale);

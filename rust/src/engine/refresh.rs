@@ -83,6 +83,10 @@ impl PreparedEngine {
             "incremental refresh is defined for the correlation-grouped schemes \
              (recross / recross-nodup / recross-noswitch), not {scheme:?}"
         );
+        // Honor the configured worker count on this entry point too —
+        // callers that skip `OfflinePhase::run` (the incremental path,
+        // benches) still get the parallel substrate shaped by config.
+        crate::util::par::set_default_workers(cfg.offline.workers);
         let wgraph = WindowGraph::from_trace(window);
         let engine = Engine::prepare(scheme, &wgraph.to_cograph(), window, cfg);
         Self {

@@ -25,7 +25,7 @@
 //! bit-exact agreement against a batch [`CoGraph::build_capped`] over the
 //! same window.
 
-use crate::util::{FxHashMap, Rng};
+use crate::util::{par, FxHashMap, Rng};
 use crate::workload::Trace;
 
 pub mod window;
@@ -34,6 +34,10 @@ pub use window::{DeltaParams, GraphDelta, NodeDelta, WindowGraph};
 
 /// Default cap on sampled pairs per query.
 pub const DEFAULT_PAIR_CAP: usize = 1024;
+
+/// Minimum queries per worker chunk for the parallel counting passes —
+/// below this the hash-map merge costs more than the count saves.
+pub(crate) const PAR_MIN_QUERIES: usize = 32;
 
 /// Read-only affinity view shared by [`CoGraph`] (batch CSR build) and
 /// [`WindowGraph`] (incrementally maintained): per-node access frequency
@@ -84,21 +88,49 @@ impl CoGraph {
     /// depend on where in the trace it sits. The result is therefore
     /// invariant under query reordering, and identical to replaying the
     /// same queries through [`WindowGraph::apply_window`].
+    ///
+    /// The counting pass partitions the query stream across
+    /// [`par::default_workers`] workers (content-seeded sampling makes
+    /// each query's contribution position-independent, so partitioning
+    /// is safe) into per-worker sparse partials merged in worker order.
+    /// Partials combine by integer addition, so the merged counts — and
+    /// hence the whole graph — are bit-identical for any worker count.
     pub fn build_capped(trace: &Trace, pair_cap: usize, seed: u64) -> Self {
         let n = trace.num_embeddings as usize;
-        let mut freq = vec![0u64; n];
         // FxHash + generous pre-size: this map sees tens of millions of
         // ops on self-generated keys (§Perf iteration 1).
+        let partials = par::map_ranges(
+            trace.queries.len(),
+            par::default_workers(),
+            PAR_MIN_QUERIES,
+            |_, range| {
+                let mut freq = vec![0u64; n];
+                let mut pairs: FxHashMap<u64, u32> = FxHashMap::default();
+                pairs.reserve(range.len().saturating_mul(pair_cap / 2));
+                for q in &trace.queries[range] {
+                    for &it in &q.items {
+                        freq[it as usize] += 1;
+                    }
+                    for_each_query_pair(&q.items, pair_cap, seed, |k, w| {
+                        *pairs.entry(k).or_insert(0) += w;
+                    });
+                }
+                (freq, pairs)
+            },
+        );
+        let mut freq = vec![0u64; n];
         let mut pairs: FxHashMap<u64, u32> = FxHashMap::default();
-        pairs.reserve(trace.queries.len().saturating_mul(pair_cap / 2));
-
-        for q in &trace.queries {
-            for &it in &q.items {
-                freq[it as usize] += 1;
+        for (pfreq, ppairs) in partials {
+            if pairs.is_empty() {
+                pairs = ppairs; // adopt the first partial wholesale
+            } else {
+                for (k, w) in ppairs {
+                    *pairs.entry(k).or_insert(0) += w;
+                }
             }
-            for_each_query_pair(&q.items, pair_cap, seed, |k, w| {
-                *pairs.entry(k).or_insert(0) += w;
-            });
+            for (f, pf) in freq.iter_mut().zip(&pfreq) {
+                *f += pf;
+            }
         }
 
         // Degree count -> CSR.

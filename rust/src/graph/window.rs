@@ -24,8 +24,8 @@
 //! [`WindowGraph`] implements [`Affinity`] and the grouping delta runs
 //! directly on it, never materialising a CSR.
 
-use super::{for_each_query_pair, unkey, Affinity, CoGraph, DEFAULT_PAIR_CAP};
-use crate::util::FxHashMap;
+use super::{for_each_query_pair, unkey, Affinity, CoGraph, DEFAULT_PAIR_CAP, PAR_MIN_QUERIES};
+use crate::util::{par, FxHashMap};
 use crate::workload::Trace;
 
 /// Scoping thresholds deciding which net-changed nodes are *dirty*
@@ -228,17 +228,40 @@ impl WindowGraph {
         );
 
         // Signed net deltas first: a query added and retired in the same
-        // call cancels here and touches nothing below.
+        // call cancels here and touches nothing below. The counting
+        // fans out across `par::default_workers` (content-seeded
+        // sampling makes contributions position-independent); partials
+        // merge by signed integer addition in worker order, so the net
+        // deltas are bit-identical for any worker count.
+        let (pair_cap, seed) = (self.pair_cap, self.seed);
         let mut dfreq: FxHashMap<u32, i64> = FxHashMap::default();
         let mut dpair: FxHashMap<u64, i64> = FxHashMap::default();
         for (trace, sign) in [(added, 1i64), (retired, -1i64)] {
-            for q in &trace.queries {
-                for &it in &q.items {
-                    *dfreq.entry(it).or_insert(0) += sign;
+            let partials = par::map_ranges(
+                trace.queries.len(),
+                par::default_workers(),
+                PAR_MIN_QUERIES,
+                |_, range| {
+                    let mut pfreq: FxHashMap<u32, i64> = FxHashMap::default();
+                    let mut ppair: FxHashMap<u64, i64> = FxHashMap::default();
+                    for q in &trace.queries[range] {
+                        for &it in &q.items {
+                            *pfreq.entry(it).or_insert(0) += sign;
+                        }
+                        for_each_query_pair(&q.items, pair_cap, seed, |k, w| {
+                            *ppair.entry(k).or_insert(0) += sign * w as i64;
+                        });
+                    }
+                    (pfreq, ppair)
+                },
+            );
+            for (pfreq, ppair) in partials {
+                for (v, d) in pfreq {
+                    *dfreq.entry(v).or_insert(0) += d;
                 }
-                for_each_query_pair(&q.items, self.pair_cap, self.seed, |k, w| {
-                    *dpair.entry(k).or_insert(0) += sign * w as i64;
-                });
+                for (k, d) in ppair {
+                    *dpair.entry(k).or_insert(0) += d;
+                }
             }
         }
 

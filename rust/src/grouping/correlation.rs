@@ -18,7 +18,7 @@
 
 use super::{Mapper, Mapping};
 use crate::graph::{Affinity, CoGraph};
-use crate::util::FxHashMap;
+use crate::util::{par, FxHashMap};
 use std::collections::BinaryHeap;
 
 /// Algorithm 1 mapper.
@@ -55,13 +55,41 @@ impl Mapper for CorrelationMapper {
 /// keep their membership — bit-identically, because this is the same
 /// code either way. Generic over [`Affinity`] so the incremental
 /// `WindowGraph` is grouped directly, no CSR materialisation.
-pub(crate) fn form_groups<G: Affinity>(
+///
+/// **Parallelism.** Groups never span connected components of the
+/// ungrouped-node subgraph (candidates only ever enter via member
+/// neighborhoods), so when that subgraph has several components —
+/// the delta path's common case: many small dirty clusters — each
+/// component's grouping walk runs on its own worker and the component
+/// outputs merge sorted by each group's seed position in `order`. That
+/// merge reproduces the serial walk's interleaving exactly (a serial
+/// scan pushes groups in strictly increasing seed position), so the
+/// result is **bit-identical for any worker count**, which the
+/// worker-sweep fuzz in `tests/offline_delta.rs` pins. One giant
+/// component (typical for a full build) falls back to the serial walk.
+pub(crate) fn form_groups<G: Affinity + Sync>(
     graph: &G,
     group_size: usize,
     order: &[u32],
     grouped: &mut [bool],
 ) -> Vec<Vec<u32>> {
     assert!(group_size > 0);
+    let workers = par::default_workers();
+    if workers > 1 && order.len() > 1 {
+        if let Some(groups) = form_groups_parallel(graph, group_size, order, grouped, workers) {
+            return groups;
+        }
+    }
+    form_groups_serial(graph, group_size, order, grouped)
+}
+
+/// The serial Algorithm 1 walk (also each parallel worker's inner loop).
+fn form_groups_serial<G: Affinity>(
+    graph: &G,
+    group_size: usize,
+    order: &[u32],
+    grouped: &mut [bool],
+) -> Vec<Vec<u32>> {
     let mut groups: Vec<Vec<u32>> = Vec::with_capacity(order.len().div_ceil(group_size));
 
     // Reusable per-group state (cleared between groups).
@@ -102,6 +130,102 @@ pub(crate) fn form_groups<G: Affinity>(
         groups.push(group);
     }
     groups
+}
+
+/// Connected-component parallel path; `None` when the ungrouped
+/// subgraph is one component (or empty) and the serial walk should run.
+///
+/// Each worker clones the `grouped` mask and walks its components
+/// serially (components are disjoint, so one mask per worker is safe);
+/// the merge sorts all produced groups by their seed's position in
+/// `order` — the exact serial push order — and writes the final marks
+/// back into the caller's mask.
+fn form_groups_parallel<G: Affinity + Sync>(
+    graph: &G,
+    group_size: usize,
+    order: &[u32],
+    grouped: &mut [bool],
+    workers: usize,
+) -> Option<Vec<Vec<u32>>> {
+    let n = grouped.len();
+
+    // Union-find over the ungrouped-node subgraph. Components are
+    // computed over *all* unmarked nodes (not just `order`): an unmarked
+    // node outside `order` can still be pulled into a group as a
+    // candidate, so it must travel with its component.
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], mut v: u32) -> u32 {
+        while parent[v as usize] != v {
+            let up = parent[parent[v as usize] as usize];
+            parent[v as usize] = up;
+            v = up;
+        }
+        v
+    }
+    for v in 0..n as u32 {
+        if grouped[v as usize] {
+            continue;
+        }
+        for &(nb, _) in graph.neighbors(v) {
+            if grouped[nb as usize] {
+                continue;
+            }
+            let (ra, rb) = (find(&mut parent, v), find(&mut parent, nb));
+            if ra != rb {
+                // Root at the smaller id: deterministic, input-order free.
+                let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+                parent[hi as usize] = lo;
+            }
+        }
+    }
+
+    // Partition `order` by component, components sequenced by first
+    // appearance in `order` (only cosmetic — the final sort by seed
+    // position is what fixes the output order).
+    let mut comp_index: FxHashMap<u32, usize> = FxHashMap::default();
+    let mut components: Vec<Vec<u32>> = Vec::new();
+    for &v in order {
+        if grouped[v as usize] {
+            continue;
+        }
+        let root = find(&mut parent, v);
+        let ci = *comp_index.entry(root).or_insert_with(|| {
+            components.push(Vec::new());
+            components.len() - 1
+        });
+        components[ci].push(v);
+    }
+    if components.len() < 2 {
+        return None;
+    }
+
+    // Each worker takes a contiguous run of components with its own
+    // mask copy; results carry (seed position, group).
+    let mut pos = vec![usize::MAX; n];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v as usize] = pos[v as usize].min(i);
+    }
+    let base_mask: &[bool] = grouped;
+    let partials = par::map_ranges(components.len(), workers, 1, |_, range| {
+        let mut mask = base_mask.to_vec();
+        let mut out: Vec<(usize, Vec<u32>)> = Vec::new();
+        for comp in &components[range] {
+            for group in form_groups_serial(graph, group_size, comp, &mut mask) {
+                out.push((pos[group[0] as usize], group));
+            }
+        }
+        out
+    });
+
+    let mut tagged: Vec<(usize, Vec<u32>)> = partials.into_iter().flatten().collect();
+    tagged.sort_unstable_by_key(|&(seed_pos, _)| seed_pos);
+    let groups: Vec<Vec<u32>> = tagged.into_iter().map(|(_, g)| g).collect();
+    for g in &groups {
+        for &v in g {
+            grouped[v as usize] = true;
+        }
+    }
+    Some(groups)
 }
 
 /// Add/update the group's candidate pool with `v`'s neighborhood

@@ -45,7 +45,7 @@ impl GroupingDelta {
 /// docs for the identity contract. `graph` is the *current* affinity
 /// state (typically a [`crate::graph::WindowGraph`] after
 /// `apply_window`); `prev` supplies the group size and the clean layout.
-pub fn regroup_subset<G: Affinity>(
+pub fn regroup_subset<G: Affinity + Sync>(
     graph: &G,
     prev: &Mapping,
     dirty_nodes: &[u32],

@@ -22,8 +22,8 @@ pub use delta::{regroup_subset, GroupingDelta};
 pub use frequency::FrequencyMapper;
 pub use naive::NaiveMapper;
 
-use crate::graph::CoGraph;
-use crate::util::FxHashMap;
+use crate::graph::{CoGraph, PAR_MIN_QUERIES};
+use crate::util::{par, FxHashMap};
 use crate::workload::{EmbeddingId, Trace};
 use std::cmp::Reverse;
 
@@ -186,27 +186,55 @@ impl Mapping {
     /// compute them in two separate walks over the same trace.
     pub fn group_stats(&self, trace: &Trace) -> GroupStats {
         let n = self.num_groups();
-        let mut freqs = vec![0u64; n];
-        let mut weights: FxHashMap<u64, u64> = FxHashMap::default();
         // Epoch-stamped accumulation (like `allocation::group_frequencies`):
         // this walks the whole trace on every replanning pass, so the
         // per-query sort+dedup is replaced by an O(k) TouchSet with only
         // the ≤k distinct groups sorted for canonical pair order.
-        let mut touch = TouchSet::default();
-        for q in &trace.queries {
-            touch.begin(n);
-            for &e in &q.items {
-                touch.add(self.slot_of(e).group);
-            }
-            touch.sort_touched();
-            let groups = touch.touched();
-            for (i, &a) in groups.iter().enumerate() {
-                freqs[a as usize] += 1;
-                for &b in &groups[i + 1..] {
-                    // sorted ascending, so (a, b) is already canonical.
-                    let key = ((a as u64) << 32) | b as u64;
-                    *weights.entry(key).or_insert(0) += 1;
+        //
+        // The trace walk fans out over [`crate::util::par`]: each worker
+        // accumulates a private (freqs, weights) partial over its query
+        // range, merged by integer addition in worker order. Per-query
+        // contributions are position-independent counts, so any partition
+        // of the stream sums to the same totals bit-identically.
+        let partials = par::map_ranges(
+            trace.queries.len(),
+            par::default_workers(),
+            PAR_MIN_QUERIES,
+            |_, range| {
+                let mut freqs = vec![0u64; n];
+                let mut weights: FxHashMap<u64, u64> = FxHashMap::default();
+                let mut touch = TouchSet::default();
+                for q in &trace.queries[range] {
+                    touch.begin(n);
+                    for &e in &q.items {
+                        touch.add(self.slot_of(e).group);
+                    }
+                    touch.sort_touched();
+                    let groups = touch.touched();
+                    for (i, &a) in groups.iter().enumerate() {
+                        freqs[a as usize] += 1;
+                        for &b in &groups[i + 1..] {
+                            // sorted ascending, so (a, b) is already canonical.
+                            let key = ((a as u64) << 32) | b as u64;
+                            *weights.entry(key).or_insert(0) += 1;
+                        }
+                    }
                 }
+                (freqs, weights)
+            },
+        );
+        let mut freqs = vec![0u64; n];
+        let mut weights: FxHashMap<u64, u64> = FxHashMap::default();
+        for (pfreqs, pweights) in partials {
+            if weights.is_empty() {
+                weights = pweights; // adopt the first partial wholesale
+            } else {
+                for (k, w) in pweights {
+                    *weights.entry(k).or_insert(0) += w;
+                }
+            }
+            for (f, pf) in freqs.iter_mut().zip(&pfreqs) {
+                *f += pf;
             }
         }
         let mut adj: Vec<Vec<(u32, u64)>> = vec![Vec::new(); n];

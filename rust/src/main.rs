@@ -59,6 +59,11 @@ fn main() {
             "dynamic-batcher max wait, µs (scheme.max_wait_us; live default 2000, open-loop 5)",
         )
         .opt("scheme", "recross", "serving scheme: recross|naive|frequency|nmars")
+        .opt(
+            "workers",
+            "0",
+            "offline-phase worker threads (offline.workers; 0 = all cores)",
+        )
         .opt("artifacts", "artifacts", "AOT artifacts directory")
         .opt("shards", "4", "shard executors for the cluster mode")
         .opt("vnodes", "128", "virtual nodes per shard on the hash ring")
@@ -574,6 +579,12 @@ fn cmd_status(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         let gauge = |n: &str| snap.gauges.get(n).copied().unwrap_or(0.0);
         let pct = |num: u64, den: f64| if den > 0.0 { 100.0 * num as f64 / den } else { 0.0 };
         println!("offline phase (zeros until a rebalance runs):");
+        println!(
+            "  {:<28} {} (offline.workers = {})",
+            "effective workers",
+            recross::util::par::default_workers(),
+            prepared.config().offline.workers
+        );
         println!(
             "  {:<28} {} / {}",
             "refreshes / full rebuilds",

@@ -17,12 +17,16 @@
 //!   `rust/benches/*` (warm-up, iterations, mean/stddev/median reporting).
 //! * [`fxhash`] — a fast multiplicative hasher for trusted integer keys
 //!   (the graph build's hot path).
+//! * [`par`] — deterministic scoped fork-join with fixed-order merge; the
+//!   offline phase's data-parallel substrate (bit-identical results for
+//!   any worker count).
 
 pub mod accum;
 pub mod bench;
 pub mod cli;
 pub mod clock;
 pub mod fxhash;
+pub mod par;
 pub mod rng;
 pub mod zipf;
 

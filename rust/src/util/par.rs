@@ -1,0 +1,196 @@
+//! Deterministic data-parallel substrate: scoped fork-join with
+//! **fixed-order merge**.
+//!
+//! Every parallel pass in the offline phase follows the same shape:
+//! partition an index range into contiguous chunks, compute an
+//! order-independent partial per chunk on its own thread, then merge the
+//! partials **in chunk order** on the calling thread. Because
+//!
+//! 1. chunk boundaries depend only on `(len, workers, min_chunk)` — never
+//!    on thread scheduling — and
+//! 2. partials are merged in chunk order, not completion order,
+//!
+//! the result is a pure function of the inputs and the worker count, and
+//! every caller in this crate additionally arranges its partials to be
+//! *merge-order independent* (integer sums, disjoint index sets), making
+//! the result bit-identical for **any** worker count including 1. That
+//! stronger per-call-site property is what `tests/offline_delta.rs`
+//! fuzzes across worker counts {1, 2, 8}.
+//!
+//! The substrate is intentionally tiny: no pool, no work stealing, no
+//! channels. [`map_ranges`] spawns scoped threads (`std::thread::scope`)
+//! for all chunks but the first, computes the first chunk on the calling
+//! thread, and joins in spawn order. A single-chunk split (short input,
+//! `workers == 1`) runs entirely inline — the serial path *is* the
+//! parallel path at width 1, so there is no second implementation to
+//! drift.
+//!
+//! The process-wide default worker count is a plain atomic
+//! ([`set_default_workers`] / [`default_workers`]), threaded from
+//! `offline.workers` config (0 = one worker per available core). Races
+//! on the setting are benign by construction: any in-flight pass
+//! observes *some* valid width, and all widths produce bit-identical
+//! results.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide default worker count; 0 = resolve from
+/// `available_parallelism` at use time.
+static DEFAULT_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide default worker count for offline-phase parallel
+/// passes. `0` means "one worker per available core" (resolved lazily by
+/// [`default_workers`]). Threaded from `offline.workers` config by the
+/// deployment builder and `PreparedEngine::prepare`.
+pub fn set_default_workers(n: usize) {
+    DEFAULT_WORKERS.store(n, Ordering::Relaxed);
+}
+
+/// The effective default worker count: the configured value, or (when
+/// configured as 0) the machine's available parallelism. Always ≥ 1.
+pub fn default_workers() -> usize {
+    match DEFAULT_WORKERS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        n => n,
+    }
+}
+
+/// Split `0..len` into at most `workers` contiguous chunks of at least
+/// `min_chunk` elements each (except possibly when `len < min_chunk`,
+/// which yields one short chunk). Deterministic in the arguments: the
+/// first `len % k` chunks get one extra element.
+pub fn chunk_ranges(len: usize, workers: usize, min_chunk: usize) -> Vec<Range<usize>> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1);
+    let grain_cap = len.div_ceil(min_chunk.max(1));
+    let k = workers.min(grain_cap).max(1);
+    let base = len / k;
+    let extra = len % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+/// Fork-join map over the chunks of `0..len`: runs `f(chunk_index,
+/// range)` for each chunk of [`chunk_ranges`] and returns the results
+/// **in chunk order** regardless of completion order. A single-chunk
+/// split runs inline with no thread spawned, so `workers == 1` is the
+/// plain serial loop.
+///
+/// Panics in a worker propagate to the caller (matching what the same
+/// code running inline would do).
+pub fn map_ranges<R, F>(len: usize, workers: usize, min_chunk: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, Range<usize>) -> R + Sync,
+{
+    let chunks = chunk_ranges(len, workers, min_chunk);
+    if chunks.len() <= 1 {
+        return chunks.into_iter().map(|r| f(0, r)).collect();
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut iter = chunks.into_iter();
+        let first = iter.next().expect("chunk_ranges returned >= 2 chunks");
+        let handles: Vec<_> = iter
+            .enumerate()
+            .map(|(i, r)| s.spawn(move || f(i + 1, r)))
+            .collect();
+        let mut out = Vec::with_capacity(handles.len() + 1);
+        out.push(f(0, first));
+        for h in handles {
+            out.push(h.join().expect("offline-phase worker panicked"));
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_the_range_exactly() {
+        for len in [0usize, 1, 7, 31, 32, 33, 100, 257] {
+            for workers in [1usize, 2, 3, 8, 64] {
+                for min_chunk in [1usize, 16, 32] {
+                    let chunks = chunk_ranges(len, workers, min_chunk);
+                    let total: usize = chunks.iter().map(|r| r.len()).sum();
+                    assert_eq!(total, len, "len {len} workers {workers}");
+                    let mut next = 0;
+                    for r in &chunks {
+                        assert_eq!(r.start, next, "chunks not contiguous");
+                        assert!(!r.is_empty(), "empty chunk at len {len}");
+                        next = r.end;
+                    }
+                    assert!(chunks.len() <= workers.max(1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn min_chunk_bounds_the_split() {
+        // 100 elements at grain 32 can sustain at most ceil(100/32) = 4
+        // chunks no matter how many workers are offered.
+        assert_eq!(chunk_ranges(100, 64, 32).len(), 4);
+        // A short input still yields one (short) chunk.
+        assert_eq!(chunk_ranges(5, 8, 32), vec![0..5]);
+    }
+
+    #[test]
+    fn map_ranges_returns_in_chunk_order() {
+        for workers in [1usize, 2, 3, 8] {
+            let parts = map_ranges(100, workers, 1, |i, r| (i, r.start, r.end));
+            for (k, &(i, _, _)) in parts.iter().enumerate() {
+                assert_eq!(i, k, "results out of chunk order");
+            }
+            let sum: usize = parts.iter().map(|&(_, s, e)| e - s).sum();
+            assert_eq!(sum, 100);
+        }
+    }
+
+    #[test]
+    fn partial_sums_match_any_worker_count() {
+        let data: Vec<u64> = (0..1000).map(|i| i * 7 + 3).collect();
+        let serial: u64 = data.iter().sum();
+        for workers in [1usize, 2, 5, 8, 16] {
+            let total: u64 = map_ranges(data.len(), workers, 1, |_, r| {
+                data[r].iter().sum::<u64>()
+            })
+            .into_iter()
+            .sum();
+            assert_eq!(total, serial, "workers {workers}");
+        }
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        // The global is shared with every other test in this binary
+        // (`PreparedEngine::prepare` resets it from config), so only the
+        // race-free invariant is asserted: whatever is configured, the
+        // resolved width is at least 1.
+        set_default_workers(0);
+        assert!(default_workers() >= 1);
+        set_default_workers(3);
+        assert!(default_workers() >= 1);
+        set_default_workers(0);
+    }
+
+    #[test]
+    fn empty_input_spawns_nothing() {
+        let parts: Vec<u32> = map_ranges(0, 8, 1, |_, _| unreachable!());
+        assert!(parts.is_empty());
+    }
+}

@@ -224,3 +224,82 @@ fn incremental_work_scales_with_delta_not_table() {
     // The untouched tail keeps its layout bit-identically.
     assert!(report.ids_moved < report.ids_total / 8);
 }
+
+/// Determinism under parallelism: every parallel fan-out in the offline
+/// phase (co-graph pair counting, component-parallel Algorithm 1,
+/// marginal-gain scoring for replication) merges per-worker partials in
+/// fixed worker order, so the result is bit-identical for ANY worker
+/// count — the thread count is a throughput knob, never a semantics knob.
+///
+/// 50 seeded drifting-Zipf configs, each run at 1, 2, and 8 workers.
+/// These entry points do not reset the global worker count (unlike
+/// `PreparedEngine::prepare`, which re-shapes the substrate from
+/// `cfg.offline.workers`), so sweeping `par::set_default_workers` here
+/// drives every width through the same code paths.
+#[test]
+fn offline_phase_is_bit_identical_across_worker_counts() {
+    use recross::allocation::{group_frequencies, plan_replication, Replication};
+    use recross::grouping::{regroup_subset, GroupingDelta, Mapping};
+    use recross::util::par;
+
+    for seed in 0..50u64 {
+        let mut rng = seed.wrapping_mul(0xA076_1D64_78BD_642F).wrapping_add(1);
+        let n_emb = 24 + (split(&mut rng) % 41) as u32; // 24..=64
+        let group_size = [2usize, 4, 8][(split(&mut rng) % 3) as usize];
+        let window_len = 60 + (split(&mut rng) % 81) as usize; // 60..=140
+        let alpha = 1.5 + 1.5 * unit(&mut rng);
+        let scheme = SCHEMES[(split(&mut rng) % 3) as usize];
+        let cfg = fuzz_cfg(group_size);
+
+        // Base traffic plus a drifted tail, so the regroup below sees a
+        // dirty set with real affinity changes behind it.
+        let mut window = zipf_trace(&mut rng, n_emb, &rotated(n_emb, 0), alpha, window_len);
+        let drift_perm = rotated(n_emb, n_emb / 3);
+        window.queries.extend(zipf_trace(&mut rng, n_emb, &drift_perm, alpha, 30).queries);
+        // A deterministic third of the catalogue is marked dirty.
+        let dirty: Vec<u32> = (0..n_emb).filter(|v| v % 3 == 0).collect();
+
+        type Snapshot = (CoGraph, Mapping, GroupingDelta, Vec<u64>, Replication);
+        let run = |workers: usize| -> Snapshot {
+            par::set_default_workers(workers);
+            let graph = CoGraph::build(&window);
+            let engine = Engine::prepare(scheme, &graph, &window, &cfg);
+            let (mapping, delta) = regroup_subset(&graph, engine.mapping(), &dirty);
+            let freqs = group_frequencies(&mapping, &window);
+            let plan = plan_replication(&freqs, cfg.scheme.batch_size, cfg.scheme.dup_ratio);
+            (graph, mapping, delta, freqs, plan)
+        };
+
+        let serial = run(1);
+        for workers in [2usize, 8] {
+            let wide = run(workers);
+            assert_eq!(
+                serial.0, wide.0,
+                "config {seed}: CoGraph::build diverges at {workers} workers"
+            );
+            assert_eq!(
+                serial.1.groups, wide.1.groups,
+                "config {seed}: regroup_subset groups diverge at {workers} workers"
+            );
+            assert_eq!(
+                serial.1.slot, wide.1.slot,
+                "config {seed}: regroup_subset slots diverge at {workers} workers"
+            );
+            assert_eq!(
+                (&serial.2.changed_groups, &serial.2.moved_ids),
+                (&wide.2.changed_groups, &wide.2.moved_ids),
+                "config {seed}: grouping delta diverges at {workers} workers"
+            );
+            assert_eq!(
+                serial.3, wide.3,
+                "config {seed}: group_frequencies diverge at {workers} workers"
+            );
+            assert_eq!(
+                serial.4.copies, wide.4.copies,
+                "config {seed}: plan_replication diverges at {workers} workers"
+            );
+        }
+    }
+    // Leave the process-global substrate back at auto for other tests.
+    par::set_default_workers(0);
+}

@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the committed bench baseline.
+
+Compares the freshly produced ``BENCH_offline.json`` / ``BENCH_sched.json``
+(at the repository root) against ``rust/bench_baseline.json`` and fails if
+any tracked ns-scale metric regressed by more than the tolerance band
+(default 15%). Lower is better for every tracked metric, so only slowdowns
+fail; speedups update silently until the baseline is re-blessed.
+
+Usage:
+    python3 rust/tools/perf_gate.py --check            # CI gate (default)
+    python3 rust/tools/perf_gate.py --bless            # rewrite the baseline
+    python3 rust/tools/perf_gate.py --check --tolerance 0.25
+
+The baseline records the bench ``mode`` (smoke/full) it was blessed from;
+a mode mismatch, a missing bench file, or an unblessed/empty baseline all
+*pass with a notice* — the gate only ever compares like with like, and the
+first run on a real toolchain blesses the starting point.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", ".."))
+BASELINE_PATH = os.path.join(REPO_ROOT, "rust", "bench_baseline.json")
+
+# name -> (bench file, extractor of {metric_key: ns_value}); every tracked
+# metric is "lower is better".
+def _offline_metrics(doc):
+    out = {}
+    for c in doc.get("configs", []):
+        name = c["name"]
+        out[f"offline/{name}/full_ns"] = c["full"]["ns_per_rebuild"]
+        out[f"offline/{name}/inc_ns"] = c["incremental"]["ns_per_refresh"]
+        if "full_parallel" in c:
+            out[f"offline/{name}/full_par_ns"] = c["full_parallel"]["ns_per_rebuild"]
+        if "incremental_parallel" in c:
+            out[f"offline/{name}/inc_par_ns"] = c["incremental_parallel"]["ns_per_refresh"]
+    return out
+
+
+def _sched_metrics(doc):
+    out = {}
+    for c in doc.get("configs", []):
+        name = c["name"]
+        out[f"sched/{name}/opt_ns"] = c["optimized"]["ns_per_batch"]
+    for r in doc.get("reduce", []):
+        out[f"reduce/{r['name']}/simd_ns"] = r["simd"]["ns_per_reduce"]
+    return out
+
+
+BENCHES = {
+    "offline": ("BENCH_offline.json", _offline_metrics),
+    "sched": ("BENCH_sched.json", _sched_metrics),
+}
+
+
+def load_fresh():
+    """Fresh bench results: {bench: (mode, {metric: ns})}; missing files skip."""
+    fresh = {}
+    for bench, (fname, extract) in BENCHES.items():
+        path = os.path.join(REPO_ROOT, fname)
+        if not os.path.exists(path):
+            print(f"perf_gate: {fname} not found - skipping {bench} (notice)")
+            continue
+        with open(path) as f:
+            doc = json.load(f)
+        fresh[bench] = (doc.get("mode", "unknown"), extract(doc))
+    return fresh
+
+
+def cmd_bless(fresh):
+    entries = {}
+    for bench, (mode, metrics) in fresh.items():
+        entries[bench] = {"mode": mode, "metrics": metrics}
+    doc = {
+        "schema": "recross.bench_baseline",
+        "version": 1,
+        "blessed": bool(entries),
+        "entries": entries,
+    }
+    with open(BASELINE_PATH, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    n = sum(len(e["metrics"]) for e in entries.values())
+    print(f"perf_gate: blessed {n} metrics from {len(entries)} bench(es) -> {BASELINE_PATH}")
+    return 0
+
+
+def cmd_check(fresh, tolerance):
+    if not os.path.exists(BASELINE_PATH):
+        print("perf_gate: no baseline committed - passing with notice (run --bless)")
+        return 0
+    with open(BASELINE_PATH) as f:
+        base = json.load(f)
+    if base.get("schema") != "recross.bench_baseline":
+        print("perf_gate: baseline schema mismatch - passing with notice")
+        return 0
+    if not base.get("blessed") or not base.get("entries"):
+        print("perf_gate: baseline not blessed yet - passing with notice (run --bless)")
+        return 0
+
+    failures = []
+    compared = 0
+    for bench, entry in base["entries"].items():
+        if bench not in fresh:
+            print(f"perf_gate: no fresh results for {bench} - skipping (notice)")
+            continue
+        mode, metrics = fresh[bench]
+        if entry.get("mode") != mode:
+            print(
+                f"perf_gate: {bench} mode mismatch (baseline {entry.get('mode')!r} "
+                f"vs fresh {mode!r}) - skipping (notice)"
+            )
+            continue
+        for key, base_ns in entry.get("metrics", {}).items():
+            if key not in metrics or base_ns <= 0:
+                continue
+            fresh_ns = metrics[key]
+            compared += 1
+            ratio = fresh_ns / base_ns
+            marker = "FAIL" if ratio > 1.0 + tolerance else "ok"
+            print(f"  {marker:>4}  {key:<40} {base_ns:>14.1f} -> {fresh_ns:>14.1f}  ({ratio:.3f}x)")
+            if ratio > 1.0 + tolerance:
+                failures.append((key, base_ns, fresh_ns, ratio))
+
+    if failures:
+        print(f"\nperf_gate: {len(failures)} metric(s) regressed past {tolerance:.0%}:")
+        for key, base_ns, fresh_ns, ratio in failures:
+            print(f"  {key}: {base_ns:.1f} ns -> {fresh_ns:.1f} ns ({ratio:.3f}x)")
+        return 1
+    print(f"perf_gate: {compared} metric(s) within the {tolerance:.0%} band")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true", help="compare fresh results (default)")
+    ap.add_argument("--bless", action="store_true", help="rewrite the baseline from fresh results")
+    ap.add_argument("--tolerance", type=float, default=0.15, help="allowed slowdown fraction")
+    args = ap.parse_args()
+    if args.bless and args.check:
+        ap.error("--bless and --check are mutually exclusive")
+    fresh = load_fresh()
+    if args.bless:
+        return cmd_bless(fresh)
+    return cmd_check(fresh, args.tolerance)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
