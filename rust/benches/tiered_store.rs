@@ -1,0 +1,301 @@
+//! Tiered-store capacity sweep: tail latency and hit rate as the hot
+//! tier shrinks under the crossbars.
+//!
+//! Builds a ReCross offline phase over a synthetic Zipf window, then
+//! serves two open-loop workloads through the [`Tiered`] backend — a
+//! *steady* Zipf(1.1) stream matching the offline history, and a
+//! *drifting* stream whose popularity order rotates mid-drive (the tier
+//! replanner has to chase it) — across a sweep of hot-tier capacities
+//! from everything-fits down to 5% of the groups. Each point gates on
+//! the bit-identity contract (the tiered reduction equals the flat
+//! store's reference reduction) before any timing is trusted, and
+//! records the tier hit mix plus p50/p99 sojourn from `loadgen::drive`.
+//!
+//! Writes **`BENCH_tier.json`** (schema `recross.bench_tier` v1) at the
+//! repository root: the acceptance artifact showing p99 degrading
+//! *gracefully* — not cliff-like — as capacity shrinks. CI runs
+//! `--smoke`, validates the schema, gates tracked p99 metrics through
+//! `tools/perf_gate.py`, and uploads the file as an artifact.
+
+use recross::allocation::group_frequencies;
+use recross::config::Config;
+use recross::coordinator::{BatchPolicy, EmbeddingStore};
+use recross::deploy::{SimBackend, Tiered};
+use recross::engine::{Engine, Scheme};
+use recross::graph::CoGraph;
+use recross::loadgen::{drive, Arrivals};
+use recross::store::{TierCostModel, TierPolicy, TieredStore};
+use recross::util::{Rng, Zipf};
+use recross::workload::{Query, Trace};
+use std::time::Duration;
+
+/// Hot-tier capacities swept, as fractions of the group count, largest
+/// first so the JSON reads as a degradation curve.
+const HOT_FRACTIONS: [f64; 5] = [1.0, 0.5, 0.25, 0.1, 0.05];
+
+struct Shape {
+    embeddings: usize,
+    group_size: usize,
+    window_queries: usize,
+    drive_queries: usize,
+    pooling: usize,
+    rate_qps: f64,
+}
+
+fn shape(smoke: bool) -> Shape {
+    if smoke {
+        Shape {
+            embeddings: 1024,
+            group_size: 16,
+            window_queries: 512,
+            drive_queries: 256,
+            pooling: 8,
+            rate_qps: 150_000.0,
+        }
+    } else {
+        Shape {
+            embeddings: 8192,
+            group_size: 32,
+            window_queries: 4096,
+            drive_queries: 2048,
+            pooling: 16,
+            rate_qps: 150_000.0,
+        }
+    }
+}
+
+fn zipf_queries(
+    rng: &mut Rng,
+    zipf: &Zipf,
+    perm: &[u32],
+    queries: usize,
+    pooling: usize,
+) -> Vec<Query> {
+    (0..queries)
+        .map(|_| Query::new((0..pooling).map(|_| perm[zipf.sample(rng)]).collect()))
+        .collect()
+}
+
+struct Point {
+    label: String,
+    workload: &'static str,
+    hot_frac: f64,
+    hot_tiles: usize,
+    groups: usize,
+    hit_rate: f64,
+    hot_hits: u64,
+    dram_hits: u64,
+    cold_hits: u64,
+    promotions: u64,
+    evictions: u64,
+    p50_ns: f64,
+    p99_ns: f64,
+    throughput_qps: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_point(
+    engine: &Engine,
+    store: &EmbeddingStore,
+    freqs: &[u64],
+    workload: &'static str,
+    queries: &[Query],
+    hot_frac: f64,
+    rate_qps: f64,
+    seed: u64,
+) -> Point {
+    let mapping = engine.mapping();
+    let groups = mapping.num_groups();
+    let hot_tiles = ((groups as f64 * hot_frac).round() as usize).max(1);
+    let policy = TierPolicy::new(hot_tiles, 0, 2);
+    let cost = TierCostModel::new(120.0, 2_500.0);
+    let tiered = TieredStore::build(store, freqs, policy, cost);
+
+    // Correctness gate: a latency curve over wrong reductions is
+    // worthless. Bitwise equality against the flat reference walk.
+    for q in queries.iter().take(16) {
+        let got = tiered.reduce(mapping, &q.items);
+        let want = store.reduce_reference(&q.items);
+        assert!(
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{workload} hot={hot_frac}: tiered reduction diverged from flat store"
+        );
+    }
+
+    let backend = Tiered::new(SimBackend::of_engine(engine), mapping, tiered, 8);
+    let arrivals = Arrivals::poisson(rate_qps, seed).take(queries.len());
+    let batch = BatchPolicy {
+        max_batch: 16,
+        max_wait: Duration::from_micros(5),
+    };
+    let report = drive(&backend, queries, &arrivals, &batch);
+    let access = backend.access();
+    let (promotions, evictions) = backend.moves();
+    Point {
+        label: format!("{workload}/hot-{}pct", (hot_frac * 100.0).round() as u32),
+        workload,
+        hot_frac,
+        hot_tiles,
+        groups,
+        hit_rate: access.hit_rate(),
+        hot_hits: access.hot_hits,
+        dram_hits: access.dram_hits,
+        cold_hits: access.cold_hits,
+        promotions,
+        evictions,
+        p50_ns: report.percentile_ns(50.0),
+        p99_ns: report.percentile_ns(99.0),
+        throughput_qps: report.throughput_qps(),
+    }
+}
+
+fn json(points: &[Point], smoke: bool) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"recross.bench_tier\",\n");
+    out.push_str("  \"version\": 1,\n");
+    out.push_str("  \"bench\": \"tiered_store\",\n");
+    out.push_str(&format!(
+        "  \"mode\": \"{}\",\n",
+        if smoke { "smoke" } else { "full" }
+    ));
+    out.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!(
+            "      \"label\": \"{}\", \"workload\": \"{}\",\n",
+            p.label, p.workload
+        ));
+        out.push_str(&format!(
+            "      \"hot_frac\": {:.2}, \"hot_tiles\": {}, \"groups\": {},\n",
+            p.hot_frac, p.hot_tiles, p.groups
+        ));
+        out.push_str(&format!(
+            "      \"hit_rate\": {:.4}, \"hot_hits\": {}, \"dram_hits\": {}, \
+             \"cold_hits\": {},\n",
+            p.hit_rate, p.hot_hits, p.dram_hits, p.cold_hits
+        ));
+        out.push_str(&format!(
+            "      \"promotions\": {}, \"evictions\": {},\n",
+            p.promotions, p.evictions
+        ));
+        out.push_str(&format!(
+            "      \"p50_ns\": {:.1}, \"p99_ns\": {:.1}, \"throughput_qps\": {:.1}\n",
+            p.p50_ns, p.p99_ns, p.throughput_qps
+        ));
+        out.push_str(if i + 1 == points.len() {
+            "    }\n"
+        } else {
+            "    },\n"
+        });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let sh = shape(smoke);
+    let mut cfg = Config::paper_default();
+    cfg.scheme.group_size = sh.group_size;
+    cfg.scheme.batch_size = 256;
+
+    let mut rng = Rng::new(0x71E7_ED);
+    let zipf = Zipf::new(sh.embeddings, 1.1);
+    let base: Vec<u32> = (0..sh.embeddings as u32).collect();
+    // The drifted order rotates popularity by a third of the catalogue:
+    // yesterday's torso becomes today's head.
+    let drifted: Vec<u32> = (0..sh.embeddings as u32)
+        .map(|i| (i + sh.embeddings as u32 / 3) % sh.embeddings as u32)
+        .collect();
+
+    let window = Trace {
+        num_embeddings: sh.embeddings as u32,
+        queries: zipf_queries(&mut rng, &zipf, &base, sh.window_queries, sh.pooling),
+    };
+    let engine = Engine::prepare(Scheme::ReCross, &CoGraph::build(&window), &window, &cfg);
+    let mapping = engine.mapping();
+    let store = EmbeddingStore::random(
+        mapping,
+        cfg.hardware.embedding_dim,
+        cfg.hardware.xbar_rows,
+        42,
+    );
+    let freqs = group_frequencies(mapping, &window);
+
+    // Steady: the offline distribution continues. Drifting: halfway
+    // through the drive the popularity order rotates out from under the
+    // hot set and the replanner has to chase it.
+    let steady = zipf_queries(&mut rng, &zipf, &base, sh.drive_queries, sh.pooling);
+    let mut drifting = zipf_queries(&mut rng, &zipf, &base, sh.drive_queries / 2, sh.pooling);
+    drifting.extend(zipf_queries(
+        &mut rng,
+        &zipf,
+        &drifted,
+        sh.drive_queries - sh.drive_queries / 2,
+        sh.pooling,
+    ));
+
+    println!(
+        "== tiered store: capacity sweep, {} mode, {} groups ==\n",
+        if smoke { "smoke" } else { "full" },
+        mapping.num_groups()
+    );
+    println!(
+        "{:<22} {:>6} {:>9} {:>12} {:>12} {:>8} {:>8}",
+        "point", "tiles", "hit rate", "p50 ns", "p99 ns", "promote", "evict"
+    );
+
+    let mut points = Vec::new();
+    for (workload, queries) in [("zipf", &steady), ("drifting-zipf", &drifting)] {
+        for (i, &frac) in HOT_FRACTIONS.iter().enumerate() {
+            let p = run_point(
+                &engine,
+                &store,
+                &freqs,
+                workload,
+                queries,
+                frac,
+                sh.rate_qps,
+                0xA11 + i as u64,
+            );
+            println!(
+                "{:<22} {:>6} {:>8.1}% {:>12.0} {:>12.0} {:>8} {:>8}",
+                p.label,
+                p.hot_tiles,
+                100.0 * p.hit_rate,
+                p.p50_ns,
+                p.p99_ns,
+                p.promotions,
+                p.evictions
+            );
+            points.push(p);
+        }
+    }
+
+    // Graceful-degradation gate on the steady sweep: with everything
+    // hot, misses must cost nothing; as capacity shrinks the tail may
+    // only grow (monotone within measurement noise — 2x headroom).
+    let steady_p99: Vec<f64> = points
+        .iter()
+        .filter(|p| p.workload == "zipf")
+        .map(|p| p.p99_ns)
+        .collect();
+    assert!(
+        points[0].hit_rate > 0.999,
+        "everything-fits point recorded tier misses (hit rate {})",
+        points[0].hit_rate
+    );
+    for w in steady_p99.windows(2) {
+        assert!(
+            w[1] >= w[0] / 2.0,
+            "p99 fell off a cliff between adjacent capacities: {} -> {}",
+            w[0],
+            w[1]
+        );
+    }
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_tier.json");
+    std::fs::write(&path, json(&points, smoke)).expect("writing BENCH_tier.json");
+    println!("\nwrote {}", path.display());
+}

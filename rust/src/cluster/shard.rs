@@ -24,6 +24,7 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::EmbeddingStore;
 use crate::grouping::Mapping;
 use crate::sched::{ExecStats, Scheduler, Scratch};
+use crate::store::{TierCostModel, TierMap};
 use crate::util::FxHashMap;
 use crate::workload::{EmbeddingId, Query};
 use crate::xbar::CrossbarModel;
@@ -66,6 +67,11 @@ pub struct ShardStore {
     /// Flat `[owned_groups, R, D]` tile data.
     tiles: Vec<f32>,
     local_of_group: FxHashMap<u32, u32>,
+    /// Optional tier placement consulted before scheduling: hosted groups
+    /// outside the crossbar-resident hot tier pay a modeled fetch before
+    /// their tiles can serve. Reduction values are unaffected — tiering
+    /// prices the walk, it never changes what the walk computes.
+    tiers: Option<(TierMap, TierCostModel)>,
 }
 
 impl ShardStore {
@@ -84,7 +90,44 @@ impl ShardStore {
             rows,
             tiles,
             local_of_group,
+            tiers: None,
         }
+    }
+
+    /// Attach a tier placement + cost model. Sub-batches served by this
+    /// shard then stretch by the modeled fetch cost of their non-hot
+    /// tiles (the deploy layer's [`crate::deploy::Tiered`] model, applied
+    /// per shard).
+    pub fn with_tiers(mut self, map: TierMap, cost: TierCostModel) -> Self {
+        self.tiers = Some((map, cost));
+        self
+    }
+
+    /// Modeled tile-fetch cost of one sub-query under the attached tier
+    /// placement: each *distinct* hosted group outside the hot tier pays
+    /// its tier's fetch latency once. Zero when no tiers are attached
+    /// (everything crossbar-resident — the classic fully-hot pool).
+    pub fn fetch_ns(
+        &self,
+        mapping: &Mapping,
+        items: &[EmbeddingId],
+        gscratch: &mut Vec<u32>,
+    ) -> f64 {
+        let Some((map, cost)) = &self.tiers else {
+            return 0.0;
+        };
+        gscratch.clear();
+        for &e in items {
+            // slot_of routes out-of-catalogue ids to the overflow group,
+            // so cold-start traffic is priced like any other tile touch.
+            let group = mapping.slot_of(e).group;
+            if self.owns(group) {
+                gscratch.push(group);
+            }
+        }
+        gscratch.sort_unstable();
+        gscratch.dedup();
+        gscratch.iter().map(|&g| cost.fetch_ns(map.tier(g))).sum()
     }
 
     pub fn dim(&self) -> usize {
@@ -345,6 +388,16 @@ fn serve_shard_batch(
     // can absorb its traffic.
     let sim = sched.run_batch(&queries, &mut state.scratch);
     state.sim.accumulate(&sim);
+    // Tiered shards consult the tier map before the crossbars can serve:
+    // non-hot tiles must be fetched first. Fetches across the sub-batch
+    // overlap (DRAM/file reads pipeline against crossbar service), so
+    // completion stretches by the worst single sub-query's fetch, not
+    // the sum — the same composition the deploy-layer tiered twin uses.
+    let mut max_fetch = 0.0f64;
+    for q in &queries {
+        max_fetch = max_fetch.max(store.fetch_ns(&shared.mapping, &q.items, &mut state.gscratch));
+    }
+    state.sim.completion_ns += max_fetch;
     state.batches += 1;
 
     for ((id, reply), q) in replies.into_iter().zip(queries.iter()) {
@@ -433,6 +486,32 @@ mod tests {
         let s = ShardStore::from_store(&full, &[0]);
         let mut out = vec![0.0f32; 2];
         assert!(!s.reduce_into(&m, &[0, 7], &mut out));
+    }
+
+    #[test]
+    fn tiered_shard_prices_cold_fetches_without_changing_values() {
+        use crate::store::Tier;
+        let (m, full) = fixture();
+        let flat = ShardStore::from_store(&full, &[0, 1]);
+        // Group 0 hot, group 1 cold; foreign groups irrelevant.
+        let tiered = flat.clone().with_tiers(
+            TierMap::new(vec![Tier::Hot, Tier::Cold, Tier::Hot, Tier::Hot]),
+            TierCostModel::new(100.0, 2_000.0),
+        );
+        let mut g = Vec::new();
+        // All-hot query is free; the cold tile prices once however many
+        // lookups land on it; foreign groups (2, 3) are not this shard's
+        // fetches to make.
+        assert_eq!(tiered.fetch_ns(&m, &[0, 1], &mut g), 0.0);
+        assert_eq!(tiered.fetch_ns(&m, &[0, 2, 3], &mut g), 2_000.0);
+        assert_eq!(tiered.fetch_ns(&m, &[2, 2, 3], &mut g), 2_000.0);
+        assert_eq!(tiered.fetch_ns(&m, &[4, 6], &mut g), 0.0);
+        assert_eq!(flat.fetch_ns(&m, &[0, 2, 3], &mut g), 0.0);
+        // Values are placement-independent.
+        let (mut a, mut b) = (vec![0.0f32; 2], vec![0.0f32; 2]);
+        assert!(flat.reduce_into(&m, &[0, 2], &mut a));
+        assert!(tiered.reduce_into(&m, &[0, 2], &mut b));
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -344,6 +344,58 @@ impl Default for OfflineConfig {
     }
 }
 
+/// Tiered embedding storage configuration (see [`crate::store`]).
+/// Capacities are in tiles (one tile = one group's crossbar-resident
+/// rows); costs are the deterministic modeled fetch latencies the
+/// timing twin folds into query finish times.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreConfig {
+    /// Hot-tier capacity in tiles (crossbar-resident groups).
+    pub hot_tiles: usize,
+    /// DRAM-tier capacity in tiles; `0` means unbounded (nothing is
+    /// forced cold by DRAM pressure), matching `offline.workers`'s
+    /// "0 = no limit" convention.
+    pub dram_tiles: usize,
+    /// Modeled ns to fetch one DRAM-resident tile.
+    pub dram_ns: f64,
+    /// Modeled ns to fetch one cold (file-resident) tile.
+    pub cold_ns: f64,
+    /// Recent-window hits required before a group may be promoted into
+    /// the hot tier (admission hysteresis; values below 1 behave as 1).
+    pub promote_hits: u64,
+    /// Batches between tier replans in the `Tiered` backend.
+    pub replan_batches: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        Self {
+            hot_tiles: 64,
+            dram_tiles: 0,
+            dram_ns: 120.0,
+            cold_ns: 2_500.0,
+            promote_hits: 2,
+            replan_batches: 8,
+        }
+    }
+}
+
+impl StoreConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.dram_ns >= 0.0 && self.cold_ns >= 0.0,
+            "store tier costs must be non-negative (dram_ns {}, cold_ns {})",
+            self.dram_ns,
+            self.cold_ns
+        );
+        anyhow::ensure!(
+            self.replan_batches >= 1,
+            "store.replan_batches must be >= 1"
+        );
+        Ok(())
+    }
+}
+
 /// Top-level configuration bundle.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
@@ -354,6 +406,7 @@ pub struct Config {
     pub slo: SloConfig,
     pub watch: WatchConfig,
     pub offline: OfflineConfig,
+    pub store: StoreConfig,
     /// Directory with AOT artifacts for the PJRT runtime.
     pub artifacts_dir: String,
 }
@@ -461,6 +514,14 @@ impl Config {
 
         cfg.offline.workers = doc.usize_or("offline.workers", cfg.offline.workers);
 
+        let st = &mut cfg.store;
+        st.hot_tiles = doc.usize_or("store.hot_tiles", st.hot_tiles);
+        st.dram_tiles = doc.usize_or("store.dram_tiles", st.dram_tiles);
+        st.dram_ns = doc.f64_or("store.dram_ns", st.dram_ns);
+        st.cold_ns = doc.f64_or("store.cold_ns", st.cold_ns);
+        st.promote_hits = doc.i64_or("store.promote_hits", st.promote_hits as i64).max(0) as u64;
+        st.replan_batches = doc.usize_or("store.replan_batches", st.replan_batches);
+
         cfg.artifacts_dir = doc.str_or("artifacts_dir", &cfg.artifacts_dir);
         cfg.validate()?;
         Ok(cfg)
@@ -525,6 +586,25 @@ impl Config {
         if args.provided("workers") {
             self.offline.workers = parse(args, "workers")?;
         }
+        if args.provided("store-hot") {
+            self.store.hot_tiles = parse(args, "store-hot")?;
+        }
+        // 0 is legal (= unbounded DRAM), so this parses as a plain usize.
+        if args.provided("store-dram") {
+            self.store.dram_tiles = parse(args, "store-dram")?;
+        }
+        if args.provided("store-dram-ns") {
+            self.store.dram_ns = parse(args, "store-dram-ns")?;
+        }
+        if args.provided("store-cold-ns") {
+            self.store.cold_ns = parse(args, "store-cold-ns")?;
+        }
+        if args.provided("store-promote-hits") {
+            self.store.promote_hits = parse(args, "store-promote-hits")?;
+        }
+        if args.provided("store-replan") {
+            self.store.replan_batches = parse(args, "store-replan")?;
+        }
         self.validate()
     }
 
@@ -535,6 +615,7 @@ impl Config {
         self.obs.validate()?;
         self.slo.validate()?;
         self.watch.validate()?;
+        self.store.validate()?;
         anyhow::ensure!(self.workload.history_queries > 0, "empty history");
         anyhow::ensure!(self.workload.dense_features > 0, "zero dense features");
         Ok(())
@@ -772,6 +853,51 @@ mod tests {
         .unwrap();
         cfg.overlay_cli(&none).unwrap();
         assert_eq!(cfg.offline.workers, 8);
+    }
+
+    #[test]
+    fn store_defaults_toml_and_cli() {
+        use crate::util::cli::ArgSpec;
+        let c = Config::paper_default();
+        assert_eq!(c.store.hot_tiles, 64);
+        assert_eq!(c.store.dram_tiles, 0);
+        assert_eq!(c.store.dram_ns, 120.0);
+        assert_eq!(c.store.cold_ns, 2_500.0);
+        assert_eq!(c.store.promote_hits, 2);
+        assert_eq!(c.store.replan_batches, 8);
+        let c = Config::from_toml(
+            "[store]\nhot_tiles = 16\ndram_tiles = 32\ndram_ns = 90.0\ncold_ns = 4000.0\n\
+             promote_hits = 5\nreplan_batches = 4",
+        )
+        .unwrap();
+        assert_eq!(c.store.hot_tiles, 16);
+        assert_eq!(c.store.dram_tiles, 32);
+        assert_eq!(c.store.dram_ns, 90.0);
+        assert_eq!(c.store.cold_ns, 4_000.0);
+        assert_eq!(c.store.promote_hits, 5);
+        assert_eq!(c.store.replan_batches, 4);
+        // Degenerate values rejected through the one validate chain.
+        assert!(Config::from_toml("[store]\ndram_ns = -1.0").is_err());
+        assert!(Config::from_toml("[store]\nreplan_batches = 0").is_err());
+        // Explicit CLI beats TOML; declared defaults do not clobber it.
+        let spec = ArgSpec::new("t")
+            .opt("store-hot", "64", "")
+            .opt("store-dram", "0", "")
+            .opt("store-cold-ns", "2500", "");
+        let argv: Vec<String> = ["--store-hot", "8", "--store-cold-ns", "9000"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = spec.parse(&argv).unwrap();
+        let mut cfg = Config::from_toml_with_base(
+            "[store]\nhot_tiles = 16\ndram_tiles = 2",
+            Config::serving_default(),
+        )
+        .unwrap();
+        cfg.overlay_cli(&args).unwrap();
+        assert_eq!(cfg.store.hot_tiles, 8);
+        assert_eq!(cfg.store.cold_ns, 9_000.0);
+        assert_eq!(cfg.store.dram_tiles, 2);
     }
 
     #[test]

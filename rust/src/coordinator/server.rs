@@ -32,6 +32,13 @@ use anyhow::anyhow;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
+/// Recent-query ring capacity on the pipeline's drift monitor. Feeding
+/// the ring here (not just the drift counters) is what lets downstream
+/// consumers — incremental regrouping and tier admission — see the
+/// traffic this pipeline actually served, overflow-group cold starts
+/// included.
+const DRIFT_RING_CAPACITY: usize = 2_048;
+
 /// One inference request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -138,8 +145,10 @@ impl Pipeline {
             // Baseline = the mapping's ideal activations-per-lookup is not
             // known until traffic flows; seed with 1 activation per ~8
             // lookups (a healthy grouped mapping) and let rebaseline()
-            // correct it after the offline validation run.
-            drift: DriftMonitor::with_baseline(0.125),
+            // correct it after the offline validation run. The ring
+            // window feeds regroup/tier-admission stats (the cluster
+            // drift loop uses the same capacity).
+            drift: DriftMonitor::with_baseline(0.125).with_window(DRIFT_RING_CAPACITY),
             obs: Obs::disabled(),
         })
     }
@@ -177,7 +186,8 @@ impl Pipeline {
     /// Re-arm the drift monitor with a measured baseline
     /// (activations per lookup from an offline validation run).
     pub fn set_drift_baseline(&mut self, activations_per_lookup: f64) {
-        self.drift = DriftMonitor::with_baseline(activations_per_lookup);
+        self.drift =
+            DriftMonitor::with_baseline(activations_per_lookup).with_window(DRIFT_RING_CAPACITY);
     }
 
     pub fn runtime(&self) -> &Runtime {
@@ -255,7 +265,11 @@ impl Pipeline {
                 .engine
                 .mapping()
                 .groups_touched(&q.items, &mut drift_scratch) as u64;
-            self.drift.observe(acts, q.len());
+            // Ring-feeding observe: cold-start ids route to the overflow
+            // group via slot_of, so previously-unseen traffic is counted
+            // in the recent window (and thus in tier-admission stats)
+            // instead of being invisible to the policy.
+            self.drift.observe_query(q, acts, q.len());
         }
         self.obs
             .gauge_set(names::DRIFT_DEGRADATION, self.drift.degradation());

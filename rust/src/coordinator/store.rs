@@ -93,6 +93,14 @@ impl EmbeddingStore {
         &self.tiles[off..off + self.rows * self.dim]
     }
 
+    /// Iterate `(group, tile)` pairs in group order — the extraction seam
+    /// the tiered store pulls from: `crate::store::ColdTileFile` encodes
+    /// these tiles into its persistent image, and the hot/DRAM caches are
+    /// filled from the same walk.
+    pub fn tiles(&self) -> impl Iterator<Item = (u32, &[f32])> + '_ {
+        (0..self.num_groups as u32).map(move |g| (g, self.tile(g)))
+    }
+
     /// Reference reduction: plain sum of the queried embeddings from the
     /// master table (bypasses the crossbar layout entirely). Cold-start
     /// ids beyond the catalogue contribute zero, matching the serving

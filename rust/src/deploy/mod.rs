@@ -46,9 +46,11 @@
 //! ```
 
 pub mod backend;
+pub mod tiered;
 
 pub use backend::{Backend, BackendStatus, Reduction, Sharded, SimBackend, SinglePool};
 pub use crate::cluster::ShardingMode;
+pub use tiered::Tiered;
 
 use crate::cluster::ShardPlan;
 use crate::config::{Config, WorkloadConfig};
@@ -256,6 +258,30 @@ impl Prepared {
         Ok(SimBackend::of_engine(&self.offline.engine).into_sharded(plan))
     }
 
+    /// The deterministic tiered backend ([`Tiered`]): the
+    /// single-executor simulator over a [`crate::store::TieredStore`]
+    /// sized by `config.store`, with the hot tier seeded from Algorithm
+    /// 1's group frequencies over the offline history and per-tier miss
+    /// costs folded into the timing twin. Reductions stay bit-identical
+    /// to [`Prepared::sim`]'s; only costs change.
+    pub fn sim_tiered(&self) -> Result<Tiered<'_>> {
+        self.ensure_mac("the open-loop driver")?;
+        let mapping = self.offline.engine.mapping();
+        let freqs = crate::allocation::group_frequencies(mapping, &self.offline.history);
+        let store = crate::store::TieredStore::build(
+            self.store(),
+            &freqs,
+            crate::store::TierPolicy::from_config(&self.cfg.store),
+            crate::store::TierCostModel::from_config(&self.cfg.store),
+        );
+        Ok(Tiered::new(
+            SimBackend::of_engine(&self.offline.engine),
+            mapping,
+            store,
+            self.cfg.store.replan_batches,
+        ))
+    }
+
     fn ensure_mac(&self, who: &str) -> Result<()> {
         anyhow::ensure!(
             self.scheme() != Scheme::Nmars,
@@ -352,6 +378,41 @@ mod tests {
         let mut cfg = tiny_cfg();
         cfg.workload.dataset = "books".into();
         assert!(Deployment::of(cfg).scale(0.02).build().is_err());
+    }
+
+    #[test]
+    fn tiered_backend_matches_flat_values_and_prices_misses() {
+        let mut cfg = tiny_cfg();
+        cfg.store.hot_tiles = 1;
+        cfg.store.dram_tiles = 1;
+        let prepared = Deployment::of(cfg).scale(0.02).build().unwrap();
+        let tiered = prepared.sim_tiered().unwrap();
+        let flat = prepared.sim().unwrap().with_store(prepared.store());
+        let queries = &prepared.eval().queries[..16];
+        let a = tiered.reduce_many(queries).unwrap();
+        let b = flat.reduce_many(queries).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.reduced.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y.reduced.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "tiering changed values"
+            );
+        }
+        // With a 1-tile hot tier the timed batch pays modeled fetches on
+        // top of the identical crossbar schedule.
+        let mut scratch = crate::sched::Scratch::default();
+        let (mut f1, mut f2) = (Vec::new(), Vec::new());
+        let st_flat = flat.run_batch_timed(0, queries, &mut scratch, &mut f1);
+        let st_tier = tiered.run_batch_timed(0, queries, &mut scratch, &mut f2);
+        assert!(st_tier.completion_ns >= st_flat.completion_ns);
+        assert!(tiered.access().total() > 0);
+        // Nmars is refused like every other sim constructor.
+        let nm = Deployment::of(tiny_cfg())
+            .scheme(Scheme::Nmars)
+            .scale(0.02)
+            .build()
+            .unwrap();
+        assert!(nm.sim_tiered().is_err());
     }
 
     #[test]

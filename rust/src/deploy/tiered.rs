@@ -1,0 +1,253 @@
+//! The [`Tiered`] backend: the deterministic simulator over a
+//! [`TieredStore`] — capacity-constrained serving where misses cost
+//! modeled time.
+//!
+//! Timing composes, it is not forked: the inner single-executor
+//! [`SimBackend`] prices the crossbar schedule exactly as the untiered
+//! path does, then each query's *distinct-tile* fetch cost
+//! ([`TieredStore::charge_query`]) is added to its finish offset. The
+//! batch's completion stretches by the **maximum** per-query fetch cost,
+//! not the sum — tile fetches for different queries overlap (DRAM and
+//! file reads pipeline against crossbar service), but a query cannot
+//! finish before its own tiles arrived. With every touched group hot,
+//! both adjustments are zero and the backend is ns-for-ns identical to
+//! [`super::Prepared::sim`].
+//!
+//! Every served query also lands in a `DriftMonitor` recent-query ring —
+//! including cold-start ids that `Mapping::slot_of` routes to the
+//! overflow group, so a flood of previously-unseen traffic is *visible*
+//! to admission instead of silently thrashing the cold tier. Every
+//! `replan_batches` batches the ring is histogrammed
+//! (`allocation::group_frequencies`) and [`TieredStore::adapt`] applies
+//! its deterministic promotion/eviction pass.
+//!
+//! Values are the tiered store's reductions — bit-identical to the flat
+//! store by the [`crate::store`] contract — so `reduce_many` agrees with
+//! every other backend while the timing twin prices the tier walk.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::backend::{Backend, BackendStatus, Reduction};
+use super::SimBackend;
+use crate::coordinator::DriftMonitor;
+use crate::grouping::Mapping;
+use crate::obs::{names, Obs};
+use crate::sched::{ExecStats, Scratch};
+use crate::store::{Tier, TierAccess, TieredStore};
+use crate::workload::{EmbeddingId, Query};
+use crate::Result;
+
+/// Recent-query ring capacity backing tier admission — the same window
+/// the cluster's drift loop uses.
+const TIER_RING_CAPACITY: usize = 2_048;
+
+/// Mutable serving state behind the `&self` backend surface (the
+/// [`super::Sharded`] twin-snapshot `Mutex` precedent): the tier map and
+/// caches evolve as batches are served, but `run_batch_timed` is `&self`
+/// by trait contract.
+struct TierState {
+    store: TieredStore,
+    /// Ring provider only — replans consume `recent_window`; drift
+    /// *detection* stays the pipeline/cluster monitors' business.
+    monitor: DriftMonitor,
+    batches_since_replan: usize,
+    gscratch: Vec<u32>,
+}
+
+/// The tiered deterministic backend. Build via
+/// [`super::Prepared::sim_tiered`] or [`Tiered::new`].
+pub struct Tiered<'a> {
+    inner: SimBackend<'a>,
+    mapping: &'a Mapping,
+    replan_batches: usize,
+    label: String,
+    state: Mutex<TierState>,
+    obs: Option<Arc<Obs>>,
+}
+
+impl<'a> Tiered<'a> {
+    /// Wrap a single-executor simulator with a tiered store. `inner`
+    /// must be the unsharded twin (one executor): the tier walk prices
+    /// whole-query tile traffic, which a sharded scatter would split.
+    pub fn new(
+        inner: SimBackend<'a>,
+        mapping: &'a Mapping,
+        store: TieredStore,
+        replan_batches: usize,
+    ) -> Self {
+        assert_eq!(inner.executors(), 1, "Tiered wraps the single-executor twin");
+        assert_eq!(
+            store.num_groups(),
+            mapping.num_groups(),
+            "tiered store covers {} groups, mapping has {}",
+            store.num_groups(),
+            mapping.num_groups()
+        );
+        let label = format!("tiered(hot={})", store.policy().hot_capacity);
+        // Baseline/threshold are irrelevant here (no rebaseline, no
+        // regroup signal consumed) — the monitor is the ring.
+        let monitor = DriftMonitor::with_baseline(0.125).with_window(TIER_RING_CAPACITY);
+        Self {
+            inner,
+            mapping,
+            replan_batches: replan_batches.max(1),
+            label,
+            state: Mutex::new(TierState {
+                store,
+                monitor,
+                batches_since_replan: 0,
+                gscratch: Vec::new(),
+            }),
+            obs: None,
+        }
+    }
+
+    /// Attach an observability handle to both the tier walk (the
+    /// `store.*` family) and the inner scheduler harvest.
+    pub fn with_obs(mut self, obs: Arc<Obs>) -> Self {
+        self.inner = self.inner.with_obs(Arc::clone(&obs));
+        self.obs = Some(obs);
+        self
+    }
+
+    /// Current tier of one group.
+    pub fn tier_of(&self, group: u32) -> Tier {
+        self.state.lock().expect("tier state lock poisoned").store.tier_of(group)
+    }
+
+    /// `(hot, dram, cold)` tile occupancy.
+    pub fn occupancy(&self) -> (usize, usize, usize) {
+        self.state.lock().expect("tier state lock poisoned").store.occupancy()
+    }
+
+    /// Hot-tier groups, ascending by id.
+    pub fn hot_groups(&self) -> Vec<u32> {
+        self.state.lock().expect("tier state lock poisoned").store.hot_groups()
+    }
+
+    /// Cumulative tile-touch stats since construction.
+    pub fn access(&self) -> TierAccess {
+        *self.state.lock().expect("tier state lock poisoned").store.access()
+    }
+
+    /// `(promotions, evictions)` applied since construction.
+    pub fn moves(&self) -> (u64, u64) {
+        let st = self.state.lock().expect("tier state lock poisoned");
+        (st.store.promotions(), st.store.evictions())
+    }
+}
+
+impl Backend for Tiered<'_> {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn executors(&self) -> usize {
+        1
+    }
+
+    fn scatter(&self, items: &[EmbeddingId]) -> Vec<Vec<EmbeddingId>> {
+        vec![items.to_vec()]
+    }
+
+    fn run_batch_timed(
+        &self,
+        executor: usize,
+        queries: &[Query],
+        scratch: &mut Scratch,
+        finish_rel: &mut Vec<f64>,
+    ) -> ExecStats {
+        let mut st = self.inner.run_batch_timed(executor, queries, scratch, finish_rel);
+        let state = &mut *self.state.lock().expect("tier state lock poisoned");
+        let base = finish_rel.len() - queries.len();
+        let mut batch = TierAccess::default();
+        let mut max_fetch_ns = 0.0f64;
+        for (i, q) in queries.iter().enumerate() {
+            let acc = state.store.charge_query(self.mapping, &q.items, &mut state.gscratch);
+            // A query's tiles must arrive before it can finish...
+            finish_rel[base + i] += acc.miss_ns;
+            // ...but fetches for different queries overlap, so the batch
+            // stretches by the worst single query's fetch, not the sum.
+            max_fetch_ns = max_fetch_ns.max(acc.miss_ns);
+            batch.accumulate(&acc);
+            // Feed the admission ring — including cold-start ids the
+            // mapping routes to the overflow group, which charge_query
+            // already counted as a touch of that group's tile.
+            state.monitor.observe_query(q, acc.total(), q.len());
+        }
+        st.completion_ns += max_fetch_ns;
+        state.batches_since_replan += 1;
+        let mut replanned = None;
+        if state.batches_since_replan >= self.replan_batches {
+            state.batches_since_replan = 0;
+            if let Some(window) = state.monitor.recent_window(self.mapping.num_embeddings() as u32)
+            {
+                let freqs = crate::allocation::group_frequencies(self.mapping, &window);
+                replanned = Some(state.store.adapt(&freqs));
+            }
+        }
+        if let Some(obs) = &self.obs {
+            obs.incr(names::STORE_HOT_HITS, batch.hot_hits);
+            obs.incr(names::STORE_DRAM_HITS, batch.dram_hits);
+            obs.incr(names::STORE_COLD_HITS, batch.cold_hits);
+            obs.observe(names::STORE_MISS_NS, batch.miss_ns);
+            if let Some(step) = &replanned {
+                obs.incr(names::STORE_REPLANS, 1);
+                obs.incr(names::STORE_PROMOTIONS, step.promoted.len() as u64);
+                obs.incr(names::STORE_EVICTIONS, step.evicted.len() as u64);
+            }
+            let (hot, dram, cold) = state.store.occupancy();
+            obs.gauge_set(names::STORE_HOT_TILES, hot as f64);
+            obs.gauge_set(names::STORE_DRAM_TILES, dram as f64);
+            obs.gauge_set(names::STORE_COLD_TILES, cold as f64);
+        }
+        st
+    }
+
+    fn merge_cost(&self) -> (f64, f64) {
+        self.inner.merge_cost()
+    }
+
+    fn reduce_many(&self, queries: &[Query]) -> Result<Vec<Reduction>> {
+        let state = &mut *self.state.lock().expect("tier state lock poisoned");
+        let mut out = Vec::with_capacity(queries.len());
+        let mut scratch = Vec::with_capacity(state.store.dim());
+        for (i, q) in queries.iter().enumerate() {
+            let mut reduced = vec![0.0f32; state.store.dim()];
+            state
+                .store
+                .reduce_into(self.mapping, &q.items, &mut reduced, &mut scratch);
+            let activations = self.mapping.groups_touched(&q.items, &mut state.gscratch) as u64;
+            out.push(Reduction {
+                id: i as u64,
+                reduced,
+                activations,
+                fanout: 1,
+                latency: Duration::ZERO,
+            });
+        }
+        Ok(out)
+    }
+
+    fn status(&self) -> Result<Vec<BackendStatus>> {
+        // One executor; "hosted" = crossbar-resident (hot) tiles. Serve
+        // counters stay zero like every simulator backend — a drive's
+        // accounting is its OpenLoopReport, and the tier counters live
+        // in the store.* metrics family.
+        let hot = self.occupancy().0;
+        Ok(vec![BackendStatus {
+            executor: 0,
+            hosted_groups: hot,
+            epoch: 0,
+            queries: 0,
+            lookups: 0,
+            batches: 0,
+            sim: ExecStats::default(),
+        }])
+    }
+
+    fn obs(&self) -> Option<&Arc<Obs>> {
+        self.obs.as_ref()
+    }
+}

@@ -56,6 +56,15 @@
 //! offline phase once, and the resulting [`deploy::Prepared`] bundle
 //! backs every [`deploy::Backend`] — the live single pool, the sharded
 //! pool, or the deterministic simulator — behind one object-safe trait.
+//!
+//! Beneath the serving tiers sits **tiered embedding storage**
+//! ([`store`]): tables too large for the crossbars (or for DRAM) split
+//! into a crossbar-resident hot tier chosen by Algorithm 1's frequency
+//! stats, a DRAM tile cache, and a persistent cold tile image — with
+//! deterministic admission/eviction driven by the drift monitor's
+//! recent-query ring, modeled per-tier miss costs folded into the
+//! timing twin, and reductions bit-identical to the flat store no
+//! matter where a group lives.
 
 pub mod allocation;
 pub mod cluster;
@@ -72,6 +81,7 @@ pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sched;
+pub mod store;
 pub mod util;
 pub mod workload;
 pub mod xbar;

@@ -77,6 +77,24 @@ fn main() {
         .opt("slo-p99-ns", "5000000", "SLO: per-window p99 sojourn ceiling, ns")
         .opt("slo-depth", "64", "SLO: per-window mean queue-depth ceiling")
         .opt("alerts", "", "write the recross.alerts v1 JSON-lines stream here (watch mode)")
+        .opt("store-hot", "64", "tiered store: crossbar-resident hot tiles (store.hot_tiles)")
+        .opt(
+            "store-dram",
+            "0",
+            "tiered store: DRAM-tier tile capacity, 0 = unbounded (store.dram_tiles)",
+        )
+        .opt("store-dram-ns", "120", "tiered store: DRAM tile-fetch latency, ns (store.dram_ns)")
+        .opt("store-cold-ns", "2500", "tiered store: cold tile-fetch latency, ns (store.cold_ns)")
+        .opt(
+            "store-promote-hits",
+            "2",
+            "tiered store: window hits before promotion (store.promote_hits)",
+        )
+        .opt(
+            "store-replan",
+            "8",
+            "tiered store: batches between tier replans (store.replan_batches)",
+        )
         .flag("obs", "enable the observability plane (metrics + flight recorder)")
         .flag("json", "machine-readable metrics snapshot (status mode)")
         .flag(
@@ -90,6 +108,10 @@ fn main() {
         .flag(
             "rebalance",
             "arm the drift monitor and remap placement online (epoch swaps)",
+        )
+        .flag(
+            "tiered",
+            "serve from the capacity-constrained tiered store (status mode)",
         )
         .flag("verbose", "extra logging");
 
@@ -507,9 +529,19 @@ fn cmd_status(args: &recross::util::cli::Args) -> anyhow::Result<()> {
         );
     }
     let prepared = Deployment::of(cfg).scheme(scheme).scale(scale).build()?;
-    let backend = prepared
-        .sim_sharded(shards, slack)?
-        .with_obs(Arc::clone(&obs));
+    // `--tiered` swaps the sharded pool for the capacity-constrained
+    // tiered twin: one executor serving through hot/DRAM/cold placement,
+    // so the store.* family below carries real traffic.
+    let backend: Box<dyn Backend + '_> = if args.flag("tiered") {
+        Box::new(prepared.sim_tiered()?.with_obs(Arc::clone(&obs)))
+    } else {
+        Box::new(
+            prepared
+                .sim_sharded(shards, slack)?
+                .with_obs(Arc::clone(&obs)),
+        )
+    };
+    let backend = backend.as_ref();
     // The host-baseline comparison gauge (DDR-fetch energy per lookup).
     obs.gauge_set(
         names::ENERGY_HOST_PJ_PER_LOOKUP,
@@ -523,12 +555,12 @@ fn cmd_status(args: &recross::util::cli::Args) -> anyhow::Result<()> {
     let policy = BatchPolicy::from_config(prepared.config(), max_batch);
 
     if args.flag("watch") {
-        return run_watch(args, &prepared, &backend, &obs, &gen, kind, rate, json, &policy);
+        return run_watch(args, &prepared, backend, &obs, &gen, kind, rate, json, &policy);
     }
 
     let trace = gen.trace(n_requests, seed.wrapping_add(3));
     let arrivals = Arrivals::from_kind(kind, rate, seed).take(trace.queries.len());
-    let report = drive(&backend, &trace.queries, &arrivals, &policy);
+    let report = drive(backend, &trace.queries, &arrivals, &policy);
     let snap = backend.metrics()?;
 
     if json {
@@ -612,6 +644,48 @@ fn cmd_status(args: &recross::util::cli::Args) -> anyhow::Result<()> {
             gauge(names::OFFLINE_TILES_TOTAL),
             pct(ctr(names::OFFLINE_TILES_INSTALLED), gauge(names::OFFLINE_TILES_TOTAL))
         );
+        // The PR 10 tiered-store family, same zero-filled treatment: live
+        // numbers under --tiered, a discoverable all-zero section under
+        // the default fully-hot sharded pool.
+        let store_hits = ctr(names::STORE_HOT_HITS)
+            + ctr(names::STORE_DRAM_HITS)
+            + ctr(names::STORE_COLD_HITS);
+        println!("tiered store (zeros unless --tiered):");
+        println!(
+            "  {:<28} {} / {} / {}",
+            "hot / dram / cold hits",
+            ctr(names::STORE_HOT_HITS),
+            ctr(names::STORE_DRAM_HITS),
+            ctr(names::STORE_COLD_HITS)
+        );
+        println!(
+            "  {:<28} {:.1}%",
+            "hot hit rate",
+            pct(ctr(names::STORE_HOT_HITS), store_hits as f64)
+        );
+        println!(
+            "  {:<28} {:.0} / {:.0} / {:.0}",
+            "hot / dram / cold tiles",
+            gauge(names::STORE_HOT_TILES),
+            gauge(names::STORE_DRAM_TILES),
+            gauge(names::STORE_COLD_TILES)
+        );
+        println!(
+            "  {:<28} {} / {} / {}",
+            "replans / promoted / evicted",
+            ctr(names::STORE_REPLANS),
+            ctr(names::STORE_PROMOTIONS),
+            ctr(names::STORE_EVICTIONS)
+        );
+        if let Some(s) = snap.summaries.get(names::STORE_MISS_NS) {
+            println!(
+                "  {:<28} {} (mean {:.1} ns, max {:.1} ns)",
+                "miss charges",
+                s.count(),
+                s.mean(),
+                s.max()
+            );
+        }
         println!(
             "flight recorder: {} spans held ({} recorded, {} dropped)",
             obs.recorder().len(),

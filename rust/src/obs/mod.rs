@@ -127,6 +127,27 @@ pub mod names {
     /// Shard tiles across the cluster after the last rebalance — gauge.
     pub const OFFLINE_TILES_TOTAL: &str = "offline.tiles_total";
 
+    /// Distinct tile touches served crossbar-resident — counter.
+    pub const STORE_HOT_HITS: &str = "store.hot_hits";
+    /// Distinct tile touches served from the DRAM tier — counter.
+    pub const STORE_DRAM_HITS: &str = "store.dram_hits";
+    /// Distinct tile touches served from the cold tier — counter.
+    pub const STORE_COLD_HITS: &str = "store.cold_hits";
+    /// Groups promoted into the hot tier — counter.
+    pub const STORE_PROMOTIONS: &str = "store.promotions";
+    /// Groups evicted from the hot tier — counter.
+    pub const STORE_EVICTIONS: &str = "store.evictions";
+    /// Tier replans applied by the `Tiered` backend — counter.
+    pub const STORE_REPLANS: &str = "store.replans";
+    /// Modeled per-batch miss-fetch cost (ns) — summary.
+    pub const STORE_MISS_NS: &str = "store.miss_ns";
+    /// Hot-tier tile occupancy — gauge.
+    pub const STORE_HOT_TILES: &str = "store.hot_tiles";
+    /// DRAM-tier tile occupancy — gauge.
+    pub const STORE_DRAM_TILES: &str = "store.dram_tiles";
+    /// Cold-tier tile count — gauge.
+    pub const STORE_COLD_TILES: &str = "store.cold_tiles";
+
     /// Watch-loop p50 sojourn of the last drive window (ns) — gauge.
     pub const LOADGEN_SOJOURN_P50_NS: &str = "loadgen.sojourn_p50_ns";
     /// Watch-loop p99 sojourn of the last drive window (ns) — gauge.

@@ -1,0 +1,283 @@
+//! The cold tier's persistent tile format: header + per-group extents +
+//! raw tile data, with a clean in-memory façade.
+//!
+//! The cold tier is the **canonical, complete** copy of the table: every
+//! group's tile is written once at build time, and the hot/DRAM tiers
+//! are caches over it — eviction never writes back (embedding tables
+//! are read-only at serve time), promotion decodes straight out of the
+//! image. The layout is deliberately mmap-friendly (fixed header, then
+//! a flat extent table, then page-aligned-in-spirit raw data) in the
+//! style of codanna's persistent index segments: a reader can locate
+//! any tile with two bounded lookups and no parsing beyond the header.
+//!
+//! Layout, all integers little-endian:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "RXTC"
+//! 4       4     version (u32, currently 1)
+//! 8       4     num_groups (u32)
+//! 12      4     rows per tile (u32)
+//! 16      4     embedding dim (u32)
+//! 20      16*G  extent table: per group { offset: u64, len: u64 },
+//!               byte offsets relative to the data section
+//! 20+16G  ...   data section: f32 little-endian tile contents
+//! ```
+//!
+//! Extents are stored per group (not derived from a uniform stride) so a
+//! future compressed or quantized tile encoding changes only the writer;
+//! the reader already honors variable-length extents. Values round-trip
+//! via `f32::to_le_bytes`/`from_le_bytes`, which is exact — reductions
+//! over cold-resident groups stay **bit-identical** to the flat store.
+
+use crate::coordinator::EmbeddingStore;
+use crate::Result;
+
+/// File magic for the cold tile format.
+pub const COLD_MAGIC: [u8; 4] = *b"RXTC";
+/// Current format version.
+pub const COLD_VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 20;
+const EXTENT_LEN: usize = 16;
+
+/// In-memory façade over one encoded cold-tier image. Holds the parsed
+/// extent table plus the raw data section; rows decode on demand.
+#[derive(Debug, Clone)]
+pub struct ColdTileFile {
+    rows: usize,
+    dim: usize,
+    /// Per-group `(offset, len)` into `data`, in group order.
+    extents: Vec<(u64, u64)>,
+    /// The image's data section (raw little-endian f32 bytes).
+    data: Vec<u8>,
+}
+
+impl ColdTileFile {
+    /// Encode every tile of `store` into one image (header + extents +
+    /// data). The image is self-describing; [`ColdTileFile::from_bytes`]
+    /// round-trips it exactly.
+    pub fn encode(store: &EmbeddingStore) -> Vec<u8> {
+        let groups = store.num_groups();
+        let tile_bytes = store.rows() * store.dim() * 4;
+        let mut out = Vec::with_capacity(HEADER_LEN + groups * (EXTENT_LEN + tile_bytes));
+        out.extend_from_slice(&COLD_MAGIC);
+        out.extend_from_slice(&COLD_VERSION.to_le_bytes());
+        out.extend_from_slice(&(groups as u32).to_le_bytes());
+        out.extend_from_slice(&(store.rows() as u32).to_le_bytes());
+        out.extend_from_slice(&(store.dim() as u32).to_le_bytes());
+        for g in 0..groups {
+            let off = (g * tile_bytes) as u64;
+            out.extend_from_slice(&off.to_le_bytes());
+            out.extend_from_slice(&(tile_bytes as u64).to_le_bytes());
+        }
+        for (_, tile) in store.tiles() {
+            for &v in tile {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Build the façade directly from a flat store (encode + parse; the
+    /// canonical in-process construction).
+    pub fn from_store(store: &EmbeddingStore) -> Self {
+        Self::from_bytes(Self::encode(store)).expect("self-encoded image must parse")
+    }
+
+    /// Parse an encoded image. Validates magic, version, and that every
+    /// extent lies inside the data section.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        anyhow::ensure!(bytes.len() >= HEADER_LEN, "cold image truncated at header");
+        anyhow::ensure!(bytes[0..4] == COLD_MAGIC, "bad cold image magic");
+        let u32_at = |off: usize| -> u32 {
+            u32::from_le_bytes(bytes[off..off + 4].try_into().expect("4 bytes"))
+        };
+        let version = u32_at(4);
+        anyhow::ensure!(
+            version == COLD_VERSION,
+            "cold image version {version} != supported {COLD_VERSION}"
+        );
+        let groups = u32_at(8) as usize;
+        let rows = u32_at(12) as usize;
+        let dim = u32_at(16) as usize;
+        let table_end = HEADER_LEN + groups * EXTENT_LEN;
+        anyhow::ensure!(bytes.len() >= table_end, "cold image truncated at extent table");
+        let mut extents = Vec::with_capacity(groups);
+        for g in 0..groups {
+            let base = HEADER_LEN + g * EXTENT_LEN;
+            let off = u64::from_le_bytes(bytes[base..base + 8].try_into().expect("8 bytes"));
+            let len = u64::from_le_bytes(bytes[base + 8..base + 16].try_into().expect("8 bytes"));
+            extents.push((off, len));
+        }
+        let data = bytes[table_end..].to_vec();
+        for (g, &(off, len)) in extents.iter().enumerate() {
+            let end = off.checked_add(len);
+            anyhow::ensure!(
+                end.is_some_and(|e| e as usize <= data.len()),
+                "group {g} extent ({off}+{len}) outside data section ({} bytes)",
+                data.len()
+            );
+            anyhow::ensure!(
+                len as usize == rows * dim * 4,
+                "group {g} extent len {len} != tile size {}",
+                rows * dim * 4
+            );
+        }
+        Ok(Self {
+            rows,
+            dim,
+            extents,
+            data,
+        })
+    }
+
+    /// Persist the image to `path`.
+    pub fn write(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| anyhow::anyhow!("writing cold image {}: {e}", path.display()))
+    }
+
+    /// Open a persisted image.
+    pub fn open(path: &std::path::Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading cold image {}: {e}", path.display()))?;
+        Self::from_bytes(bytes)
+    }
+
+    /// Re-encode the façade into image bytes (header + extents + data).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(HEADER_LEN + self.extents.len() * EXTENT_LEN + self.data.len());
+        out.extend_from_slice(&COLD_MAGIC);
+        out.extend_from_slice(&COLD_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.extents.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.rows as u32).to_le_bytes());
+        out.extend_from_slice(&(self.dim as u32).to_le_bytes());
+        for &(off, len) in &self.extents {
+            out.extend_from_slice(&off.to_le_bytes());
+            out.extend_from_slice(&len.to_le_bytes());
+        }
+        out.extend_from_slice(&self.data);
+        out
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.extents.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Decode one row of one group's tile into `out` (cleared first).
+    pub fn read_row(&self, group: u32, row: usize, out: &mut Vec<f32>) {
+        out.clear();
+        let (off, _) = self.extents[group as usize];
+        let base = off as usize + row * self.dim * 4;
+        out.extend(
+            self.data[base..base + self.dim * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes"))),
+        );
+    }
+
+    /// Decode one whole tile (`rows * dim` values) into `out` (cleared
+    /// first) — the promotion path's fetch.
+    pub fn read_tile(&self, group: u32, out: &mut Vec<f32>) {
+        out.clear();
+        let (off, len) = self.extents[group as usize];
+        let base = off as usize;
+        out.extend(
+            self.data[base..base + len as usize]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes"))),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grouping::Mapping;
+
+    fn store() -> EmbeddingStore {
+        let m = Mapping::from_groups(vec![vec![2, 0], vec![1, 3]], 2, 4);
+        EmbeddingStore::random(&m, 3, 2, 11)
+    }
+
+    #[test]
+    fn round_trips_bit_identically() {
+        let s = store();
+        let img = ColdTileFile::from_bytes(ColdTileFile::encode(&s)).unwrap();
+        assert_eq!(img.num_groups(), s.num_groups());
+        assert_eq!(img.rows(), s.rows());
+        assert_eq!(img.dim(), s.dim());
+        let mut row = Vec::new();
+        for g in 0..s.num_groups() as u32 {
+            let tile = s.tile(g);
+            for r in 0..s.rows() {
+                img.read_row(g, r, &mut row);
+                let want = &tile[r * s.dim()..(r + 1) * s.dim()];
+                let got_bits: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+                let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "group {g} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn read_tile_matches_rows() {
+        let s = store();
+        let img = ColdTileFile::from_store(&s);
+        let mut tile = Vec::new();
+        img.read_tile(1, &mut tile);
+        assert_eq!(tile.len(), s.rows() * s.dim());
+        assert_eq!(
+            tile.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            s.tile(1).iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn to_bytes_is_the_identity_on_parse() {
+        let s = store();
+        let bytes = ColdTileFile::encode(&s);
+        let img = ColdTileFile::from_bytes(bytes.clone()).unwrap();
+        assert_eq!(img.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn corrupt_images_rejected() {
+        let s = store();
+        let mut bytes = ColdTileFile::encode(&s);
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(ColdTileFile::from_bytes(bad).is_err());
+        // Bad version.
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(ColdTileFile::from_bytes(bad).is_err());
+        // Truncated data section.
+        bytes.truncate(bytes.len() - 1);
+        assert!(ColdTileFile::from_bytes(bytes).is_err());
+        // Truncated header.
+        assert!(ColdTileFile::from_bytes(vec![0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn persists_to_disk() {
+        let s = store();
+        let img = ColdTileFile::from_store(&s);
+        let path = std::env::temp_dir().join("recross_cold_tile_test.rxtc");
+        img.write(&path).unwrap();
+        let back = ColdTileFile::open(&path).unwrap();
+        assert_eq!(back.to_bytes(), img.to_bytes());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,67 @@
+//! Modeled per-tier access costs.
+//!
+//! The timing twin prices everything deterministically (PR 5's
+//! contract), so tier misses are priced the same way: a fixed modeled
+//! fetch latency per tile touched, by tier. Hot tiles are
+//! crossbar-resident — their service cost is already what the scheduler
+//! computes, so the hot fetch cost is zero by construction. DRAM and
+//! cold fetches add modeled nanoseconds that the `Tiered` backend folds
+//! into each query's finish time, which is how misses surface in
+//! sojourn/p99 exactly like crossbar service does.
+//!
+//! Defaults are order-of-magnitude figures from the tiered-DLRM
+//! literature (Software Defined Memory, UpDLRM): ~100 ns for a DRAM
+//! tile touch, a few µs for a cold (file/SSD-class) touch. They are
+//! config knobs (`store.dram_ns` / `store.cold_ns`), not constants.
+
+use super::Tier;
+use crate::config::StoreConfig;
+
+/// Deterministic modeled fetch cost per tile touch, by tier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierCostModel {
+    /// Modeled ns to touch a DRAM-resident tile.
+    pub dram_ns: f64,
+    /// Modeled ns to touch a cold (file-resident) tile.
+    pub cold_ns: f64,
+}
+
+impl TierCostModel {
+    pub fn new(dram_ns: f64, cold_ns: f64) -> Self {
+        assert!(dram_ns >= 0.0 && cold_ns >= 0.0, "tier costs must be non-negative");
+        Self { dram_ns, cold_ns }
+    }
+
+    pub fn from_config(cfg: &StoreConfig) -> Self {
+        Self::new(cfg.dram_ns, cfg.cold_ns)
+    }
+
+    /// Modeled ns to fetch one tile from `tier`. Hot is free: the
+    /// crossbar schedule already prices its service.
+    pub fn fetch_ns(&self, tier: Tier) -> f64 {
+        match tier {
+            Tier::Hot => 0.0,
+            Tier::Dram => self.dram_ns,
+            Tier::Cold => self.cold_ns,
+        }
+    }
+}
+
+impl Default for TierCostModel {
+    fn default() -> Self {
+        Self::from_config(&StoreConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_is_free_and_cold_dominates() {
+        let m = TierCostModel::default();
+        assert_eq!(m.fetch_ns(Tier::Hot), 0.0);
+        assert!(m.fetch_ns(Tier::Dram) > 0.0);
+        assert!(m.fetch_ns(Tier::Cold) > m.fetch_ns(Tier::Dram));
+    }
+}

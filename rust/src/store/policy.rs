@@ -1,0 +1,138 @@
+//! Admission/eviction policy: which groups live in which tier.
+//!
+//! Placement is a pure function of group frequencies — Algorithm 1's
+//! offline counts for the initial plan, the `DriftMonitor` recent-query
+//! ring for online replans. The ordering contract (property-tested in
+//! `tests/tiered_store.rs`) is:
+//!
+//! > the hot set at capacity `k` is exactly the top-`k` prefix of the
+//! > global frequency order, descending by frequency with ties broken
+//! > by ascending group id.
+//!
+//! Online, `promote_min_hits` adds hysteresis: a group must be seen at
+//! least that many times in the recent window before it may displace a
+//! hot resident, and it only displaces a resident that is strictly
+//! colder under the same `(frequency, id)` key. Every decision is
+//! integer-keyed and input-deterministic — same window, same moves.
+
+use std::cmp::Reverse;
+
+use super::{Tier, TierMap};
+use crate::config::StoreConfig;
+
+/// Capacity and hysteresis knobs for tier placement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierPolicy {
+    /// Hot-tier capacity in tiles (crossbar-resident groups).
+    pub hot_capacity: usize,
+    /// DRAM-tier capacity in tiles; `0` means unbounded (no group is
+    /// forced cold by DRAM pressure), matching `offline.workers = 0`'s
+    /// "no limit" convention.
+    pub dram_capacity: usize,
+    /// Minimum recent-window hits before a group qualifies for
+    /// promotion into the hot tier.
+    pub promote_min_hits: u64,
+}
+
+impl TierPolicy {
+    pub fn new(hot_capacity: usize, dram_capacity: usize, promote_min_hits: u64) -> Self {
+        Self {
+            hot_capacity,
+            dram_capacity,
+            promote_min_hits,
+        }
+    }
+
+    pub fn from_config(cfg: &StoreConfig) -> Self {
+        Self::new(cfg.hot_tiles, cfg.dram_tiles, cfg.promote_hits)
+    }
+
+    /// Group ids ordered by `(frequency desc, id asc)` — the global
+    /// frequency order every placement decision keys on.
+    pub fn frequency_order(freqs: &[u64]) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..freqs.len() as u32).collect();
+        order.sort_by_key(|&g| (Reverse(freqs[g as usize]), g));
+        order
+    }
+
+    /// Initial placement from global frequencies: the top
+    /// `hot_capacity` prefix of [`Self::frequency_order`] goes hot, the
+    /// next `dram_capacity` (or everything remaining when unbounded)
+    /// goes to DRAM, the rest stays cold.
+    pub fn plan(&self, freqs: &[u64]) -> TierMap {
+        let order = Self::frequency_order(freqs);
+        let mut tiers = vec![Tier::Cold; freqs.len()];
+        let hot_end = self.hot_capacity.min(order.len());
+        let dram_end = if self.dram_capacity == 0 {
+            order.len()
+        } else {
+            (hot_end + self.dram_capacity).min(order.len())
+        };
+        for &g in &order[..hot_end] {
+            tiers[g as usize] = Tier::Hot;
+        }
+        for &g in &order[hot_end..dram_end] {
+            tiers[g as usize] = Tier::Dram;
+        }
+        TierMap::new(tiers)
+    }
+
+    /// The promotion comparison key: a candidate displaces a resident
+    /// iff `key(candidate) > key(resident)` — i.e. strictly hotter, or
+    /// equally hot with a smaller group id.
+    pub fn key(freqs: &[u64], group: u32) -> (u64, Reverse<u32>) {
+        (freqs[group as usize], Reverse(group))
+    }
+}
+
+impl Default for TierPolicy {
+    fn default() -> Self {
+        Self::from_config(&StoreConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequency_order_breaks_ties_by_id() {
+        let freqs = vec![5, 9, 5, 0, 9];
+        assert_eq!(TierPolicy::frequency_order(&freqs), vec![1, 4, 0, 2, 3]);
+    }
+
+    #[test]
+    fn plan_is_the_top_prefix() {
+        let freqs = vec![5, 9, 5, 0, 9];
+        let map = TierPolicy::new(2, 2, 1).plan(&freqs);
+        assert_eq!(map.tier(1), Tier::Hot);
+        assert_eq!(map.tier(4), Tier::Hot);
+        assert_eq!(map.tier(0), Tier::Dram);
+        assert_eq!(map.tier(2), Tier::Dram);
+        assert_eq!(map.tier(3), Tier::Cold);
+    }
+
+    #[test]
+    fn unbounded_dram_leaves_nothing_cold() {
+        let freqs = vec![5, 9, 5, 0, 9];
+        let map = TierPolicy::new(1, 0, 1).plan(&freqs);
+        assert_eq!(map.count(Tier::Hot), 1);
+        assert_eq!(map.count(Tier::Dram), 4);
+        assert_eq!(map.count(Tier::Cold), 0);
+    }
+
+    #[test]
+    fn zero_hot_capacity_plans_no_hot_tiles() {
+        let map = TierPolicy::new(0, 1, 1).plan(&[3, 1]);
+        assert_eq!(map.count(Tier::Hot), 0);
+        assert_eq!(map.tier(0), Tier::Dram);
+        assert_eq!(map.tier(1), Tier::Cold);
+    }
+
+    #[test]
+    fn key_prefers_hotter_then_smaller_id() {
+        let freqs = vec![4, 7, 7];
+        assert!(TierPolicy::key(&freqs, 1) > TierPolicy::key(&freqs, 0));
+        assert!(TierPolicy::key(&freqs, 1) > TierPolicy::key(&freqs, 2));
+    }
+}

@@ -1,0 +1,161 @@
+//! Tiered-store integration properties (PR 10):
+//!
+//! 1. **Bit-identity**: a [`TieredStore`]'s reductions are *bit-identical*
+//!    to the flat [`EmbeddingStore`]'s reference reduction for every hot-set
+//!    size — zero, one, half, everything-fits — and every DRAM capacity.
+//!    Placement prices the walk; it must never change what the walk
+//!    computes, and on the real (non-integer) random table bit-equality is
+//!    only possible if the tiered walk visits the same rows in the same
+//!    order with the same kernel.
+//! 2. **Hot set = Algorithm 1 prefix**: the planned hot tier is exactly
+//!    the top-`hot_capacity` prefix of the global frequency order from the
+//!    offline phase's group frequencies, ties broken by ascending group id.
+//! 3. **Cold-start visibility** (regression): a flood of ids the offline
+//!    phase never saw routes to the overflow group, lands in the drift
+//!    ring, and must eventually *promote* the overflow group out of the
+//!    cold tier — before PR 10 that traffic was invisible to admission.
+
+use recross::allocation::group_frequencies;
+use recross::config::Config;
+use recross::deploy::{Backend, Deployment, Prepared};
+use recross::engine::Scheme;
+use recross::sched::Scratch;
+use recross::store::{Tier, TierCostModel, TierPolicy, TieredStore};
+use recross::workload::Query;
+
+const SCALE: f64 = 0.02;
+
+fn cfg_small() -> Config {
+    let mut cfg = Config::paper_default();
+    cfg.workload.dataset = "software".into();
+    cfg.workload.history_queries = 500;
+    cfg.workload.eval_queries = 96;
+    cfg.scheme.batch_size = 32;
+    cfg
+}
+
+fn build() -> Prepared {
+    Deployment::of(cfg_small())
+        .scheme(Scheme::ReCross)
+        .scale(SCALE)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn reductions_are_bit_identical_to_flat_at_every_capacity() {
+    let prepared = build();
+    let mapping = prepared.engine().mapping();
+    let store = prepared.store();
+    let freqs = group_frequencies(mapping, prepared.history());
+    let groups = mapping.num_groups();
+    let cost = TierCostModel::new(120.0, 2_500.0);
+    // Hot sizes: nothing resident, one tile, half, everything fits (and
+    // over-provisioned); DRAM: unbounded and a 1-tile squeeze that forces
+    // evictions to fall through to the cold file.
+    for hot in [0, 1, groups / 2, groups, groups + 7] {
+        for dram in [0, 1] {
+            let tiered = TieredStore::build(store, &freqs, TierPolicy::new(hot, dram, 2), cost);
+            for q in prepared.eval().queries.iter().take(32) {
+                let got = tiered.reduce(mapping, &q.items);
+                let want = store.reduce_reference(&q.items);
+                // Bitwise, not approximate: compare the raw f32 words.
+                let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    got_bits, want_bits,
+                    "hot={hot} dram={dram}: tiered reduction diverged from flat"
+                );
+            }
+            // Cold-start ids beyond the catalogue contribute zero in both.
+            let ghost = Query::new(vec![mapping.num_embeddings() as u32 + 1]);
+            assert_eq!(
+                tiered.reduce(mapping, &ghost.items),
+                store.reduce_reference(&ghost.items),
+                "hot={hot} dram={dram}: ghost-id handling diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn hot_set_is_the_top_frequency_prefix_of_the_global_order() {
+    let prepared = build();
+    let mapping = prepared.engine().mapping();
+    let freqs = group_frequencies(mapping, prepared.history());
+    let groups = mapping.num_groups();
+    let order = TierPolicy::frequency_order(&freqs);
+    // The order itself is (frequency desc, group id asc) — ties must fall
+    // to the smaller id for determinism.
+    for w in order.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        assert!(
+            freqs[a as usize] > freqs[b as usize]
+                || (freqs[a as usize] == freqs[b as usize] && a < b),
+            "frequency order violated at ({a}, {b})"
+        );
+    }
+    for hot in [0, 1, 3, groups / 2, groups, groups + 9] {
+        let tiered = TieredStore::build(
+            prepared.store(),
+            &freqs,
+            TierPolicy::new(hot, 0, 2),
+            TierCostModel::default(),
+        );
+        let mut expect: Vec<u32> = order.iter().copied().take(hot).collect();
+        expect.sort_unstable();
+        assert_eq!(
+            tiered.hot_groups(),
+            expect,
+            "hot={hot}: hot set is not the top-frequency prefix"
+        );
+        assert_eq!(tiered.occupancy().0, hot.min(groups));
+    }
+}
+
+#[test]
+fn cold_start_flood_promotes_the_overflow_group() {
+    let mut cfg = cfg_small();
+    // One hot tile, fast replans, single-hit admission: the smallest
+    // configuration where a sustained flood must flip the placement.
+    cfg.store.hot_tiles = 1;
+    cfg.store.replan_batches = 2;
+    cfg.store.promote_hits = 1;
+    let prepared = Deployment::of(cfg)
+        .scheme(Scheme::ReCross)
+        .scale(SCALE)
+        .build()
+        .unwrap();
+    let mapping = prepared.engine().mapping();
+    let overflow = mapping.overflow_group();
+    let backend = prepared.sim_tiered().unwrap();
+    assert_ne!(
+        backend.tier_of(overflow),
+        Tier::Hot,
+        "fixture precondition: the overflow group must start outside the hot tier"
+    );
+
+    // A flood of ids the offline phase never saw: every lookup routes to
+    // the overflow group's crossbar.
+    let base = mapping.num_embeddings() as u32;
+    let flood: Vec<Query> = (0..8u32)
+        .map(|i| Query::new(vec![base + 2 * i, base + 2 * i + 1]))
+        .collect();
+    let mut scratch = Scratch::default();
+    let mut finish = Vec::new();
+    for _ in 0..6 {
+        finish.clear();
+        backend.run_batch_timed(0, &flood, &mut scratch, &mut finish);
+        assert_eq!(finish.len(), flood.len());
+    }
+    assert_eq!(
+        backend.tier_of(overflow),
+        Tier::Hot,
+        "a sustained cold-start flood never promoted the overflow group"
+    );
+    let (promotions, _) = backend.moves();
+    assert!(promotions >= 1, "no promotions recorded during the flood");
+    // The flood was priced: misses were charged before the promotion.
+    assert!(backend.access().total() > 0);
+    assert!(backend.access().miss_ns > 0.0);
+}

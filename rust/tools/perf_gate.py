@@ -51,9 +51,18 @@ def _sched_metrics(doc):
     return out
 
 
+def _tier_metrics(doc):
+    out = {}
+    for p in doc.get("points", []):
+        out[f"tier/{p['label']}/p99_ns"] = p["p99_ns"]
+        out[f"tier/{p['label']}/p50_ns"] = p["p50_ns"]
+    return out
+
+
 BENCHES = {
     "offline": ("BENCH_offline.json", _offline_metrics),
     "sched": ("BENCH_sched.json", _sched_metrics),
+    "tier": ("BENCH_tier.json", _tier_metrics),
 }
 
 
